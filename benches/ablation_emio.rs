@@ -1,0 +1,70 @@
+//! Ablation bench: EMIO design choices (§3.4).
+//!
+//! The paper motivates its EMIO against TrueNorth's interconnect (640x
+//! boundary-bandwidth collapse from 2x serialization, 32:1 muxing and a
+//! 10x clock disparity). This ablation quantifies, on the cycle-level
+//! model, how die-to-die drain time for one boundary layer's traffic
+//! depends on:
+//!
+//!   1. the number of parallel serializer lanes (1 vs 8 — TrueNorth's
+//!      single merged stream vs the paper's per-boundary-core lanes);
+//!   2. dense payload precision (8/16/32-bit -> 1/2/4 packets per neuron)
+//!      vs rate-coded spikes at 90% learned sparsity (0.8 packets);
+//!   3. the serialization depth (38 cycles vs TrueNorth-style 76).
+
+use spikelink::arch::packet::Packet;
+use spikelink::noc::emio::{EmioLink, LANES, SER_CYCLES};
+use spikelink::util::bench::{bench, black_box};
+
+/// Drain `n` packets through a link restricted to `lanes` serializer lanes.
+fn drain_cycles(n: u64, lanes: usize) -> u64 {
+    let mut link = EmioLink::new();
+    for i in 0..n {
+        link.inject((i as usize) % lanes, &Packet::spike(1, 0, 0, 0), i, 0);
+    }
+    let mut now = 0;
+    while link.pending() > 0 {
+        now += 1;
+        link.step(now);
+    }
+    now
+}
+
+fn main() {
+    println!("== EMIO ablation (cycle-level) ==");
+
+    // 1. lane-parallelism ablation
+    println!("\n-- serializer lanes (256 boundary packets) --");
+    let mut prev = u64::MAX;
+    for lanes in [1usize, 2, 4, 8] {
+        let c = drain_cycles(256, lanes);
+        println!("  lanes={lanes}: {c} cycles");
+        assert!(c <= prev, "more lanes must not slow the link");
+        prev = c;
+    }
+    let speedup = drain_cycles(256, 1) as f64 / drain_cycles(256, LANES) as f64;
+    println!("  8-lane vs 1-lane drain speedup: {speedup:.2}x");
+
+    // 2. traffic-mode ablation (per 256-neuron boundary layer)
+    println!("\n-- payload precision vs spike coding (256 neurons) --");
+    for (label, packets) in [
+        ("dense  8-bit (1 pkt/neuron)", 256u64),
+        ("dense 16-bit (2 pkt/neuron)", 512),
+        ("dense 32-bit (4 pkt/neuron)", 1024),
+        ("spikes @90% sparsity, T=8 (0.8 pkt/neuron)", 205),
+    ] {
+        println!("  {label}: {} cycles", drain_cycles(packets, LANES));
+    }
+
+    // 3. serialization-depth sensitivity: analytic Eq. 8 at 38 vs 76
+    println!("\n-- serialization depth (Eq. 8, analytic) --");
+    let eq8 = |p: u64, ser: u64| (p / 8) * ser + p + ser;
+    for ser in [SER_CYCLES, 2 * SER_CYCLES] {
+        println!("  ser={ser} cycles: 1024 packets -> {} cycles", eq8(1024, ser));
+    }
+
+    // timing: the ablation sweep itself
+    bench("ablation/emio/drain-1k-packets-8-lanes", 3, 50, || {
+        black_box(drain_cycles(1024, 8));
+    });
+}

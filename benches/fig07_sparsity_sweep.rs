@@ -1,0 +1,40 @@
+//! Bench: Fig. 7 (latency axis) — inference latency vs activation sparsity
+//! for all three models; asserts the paper's "latency improves with more
+//! sparsity" monotonicity and times the sweep.
+
+use spikelink::analytic::simulate;
+use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::model::networks;
+use spikelink::report::figures;
+use spikelink::sparsity::SparsityProfile;
+use spikelink::util::bench::{bench_auto, black_box};
+
+fn main() {
+    let sweep = [0.5, 0.8, 0.9, 0.95, 0.975, 0.99];
+    println!("{}", figures::fig7_latency_sweep(&sweep).render());
+
+    let cfg = ArchConfig::baseline(Variant::Hnn);
+    for name in ["rwkv-6l-512", "ms-resnet18", "efficientnet-b4"] {
+        let net = networks::by_name(name).unwrap();
+        let mut prev = u64::MAX;
+        for &s in &sweep {
+            let rep = simulate(&net, &cfg, &SparsityProfile::uniform(net.layers.len(), 1.0 - s));
+            assert!(
+                rep.latency.total_cycles <= prev,
+                "{name}: latency must fall as sparsity rises"
+            );
+            prev = rep.latency.total_cycles;
+        }
+    }
+    println!("shape check OK: latency monotone in sparsity for all models");
+    let net = networks::efficientnet_b4();
+    bench_auto("sweep/fig7/effnet-6-points", 300.0, || {
+        for &s in &sweep {
+            black_box(simulate(
+                &net,
+                &cfg,
+                &SparsityProfile::uniform(net.layers.len(), 1.0 - s),
+            ));
+        }
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 10 — latency-per-inference speedup at base parameters.
+//! Regenerates the figure's rows and times the analytic engine per model.
+
+use spikelink::analytic::{simulate_variants, speedup};
+use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::model::networks;
+use spikelink::util::bench::{bench_auto, black_box};
+
+fn main() {
+    let base = ArchConfig::baseline(Variant::Ann);
+    println!("== Fig 10: Latency per Inference Speedup (x, w.r.t. ANN) ==");
+    for name in ["rwkv-6l-512", "ms-resnet18", "efficientnet-b4"] {
+        let net = networks::by_name(name).unwrap();
+        let [ann, snn, hnn] = simulate_variants(&net, &base);
+        println!(
+            "{name:<18} ANN 1.00x   SNN {:.2}x   HNN {:.2}x   (ann={} cyc, hnn={} cyc, chips={})",
+            speedup(&ann, &snn),
+            speedup(&ann, &hnn),
+            ann.latency.total_cycles,
+            hnn.latency.total_cycles,
+            ann.n_chips
+        );
+        bench_auto(&format!("analytic/3-variants/{name}"), 200.0, || {
+            black_box(simulate_variants(&net, &base));
+        });
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: Fig. 11 — normalized speedup w.r.t. ANN vs bit-width, NoC dims,
+//! and neuron grouping. Prints the figure series and times the full sweep.
+
+use spikelink::report::figures;
+use spikelink::util::bench::{bench_auto, black_box};
+
+fn main() {
+    println!("== Fig 11: normalized speedup w.r.t. ANN ==");
+    for net in ["rwkv-6l-512", "ms-resnet18", "efficientnet-b4"] {
+        println!("{}", figures::fig11_table(net).render());
+    }
+    // paper shape assertions: speedup grows with bit width
+    let pts = figures::sweep_axes("ms-resnet18");
+    let bits: Vec<&figures::SweepPoint> =
+        pts.iter().filter(|p| p.label.starts_with("bits=")).collect();
+    assert!(
+        bits.last().unwrap().hnn_speedup > bits.first().unwrap().hnn_speedup,
+        "speedup must grow with precision"
+    );
+    println!("shape check OK: HNN speedup grows with bit precision");
+    bench_auto("sweep/fig11/msresnet18-full-grid", 300.0, || {
+        black_box(figures::sweep_axes("ms-resnet18"));
+    });
+}

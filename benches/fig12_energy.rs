@@ -1,0 +1,27 @@
+//! Bench: Fig. 12 — energy per inference with the EMIO/MEM/PE/Router
+//! component breakdown for all three models x variants.
+
+use spikelink::analytic::simulate_variants;
+use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::model::networks;
+use spikelink::report::figures;
+use spikelink::util::bench::{bench_auto, black_box};
+
+fn main() {
+    println!("{}", figures::fig12_energy().render());
+    // §5.3 shape: HNN total <= ANN total on every benchmark
+    let base = ArchConfig::baseline(Variant::Ann);
+    for name in ["rwkv-6l-512", "ms-resnet18", "efficientnet-b4"] {
+        let net = networks::by_name(name).unwrap();
+        let [ann, _snn, hnn] = simulate_variants(&net, &base);
+        assert!(
+            hnn.energy_j() <= ann.energy_j() * 1.001,
+            "{name}: HNN must not cost more energy than ANN"
+        );
+    }
+    println!("shape check OK: HNN energy <= ANN energy on all benchmarks");
+    let net = networks::msresnet18();
+    bench_auto("energy/msresnet18/3-variants", 200.0, || {
+        black_box(simulate_variants(&net, &base));
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: Fig. 13 — normalized energy efficiency w.r.t. ANN across the
+//! sweep grid; checks the §5.3 claims (baseline 1-3.3x band, gains grow as
+//! grouping shrinks, peak within the paper's up-to-5.3x regime).
+
+use spikelink::report::figures;
+use spikelink::util::bench::{bench_auto, black_box};
+
+fn main() {
+    println!("== Fig 13: normalized energy efficiency w.r.t. ANN ==");
+    for net in ["rwkv-6l-512", "ms-resnet18", "efficientnet-b4"] {
+        println!("{}", figures::fig13_table(net).render());
+    }
+    let pts = figures::sweep_axes("ms-resnet18");
+    let g: Vec<&figures::SweepPoint> =
+        pts.iter().filter(|p| p.label.starts_with("grouping=")).collect();
+    // paper: "energy efficiency gains continue up to 5.3x using a smaller
+    // neuron-to-processing-element grouping" -> smaller G, higher gain
+    assert!(
+        g.first().unwrap().hnn_eff >= g.last().unwrap().hnn_eff * 0.999,
+        "smaller grouping should not reduce HNN efficiency: {:?}",
+        g.iter().map(|p| (p.label.clone(), p.hnn_eff)).collect::<Vec<_>>()
+    );
+    let (speed, eff, _) = figures::headline_claims();
+    println!("headline: max HNN speedup {speed:.1}x (paper 15.2x), max eff {eff:.1}x (paper 5.3x)");
+    bench_auto("sweep/fig13/headline-grid", 500.0, || {
+        black_box(figures::headline_claims());
+    });
+}

@@ -1,0 +1,53 @@
+//! Bench: cycle-level NoC simulator throughput (the L3 hot loop) —
+//! mesh packets/second and duplex (mesh+EMIO+mesh) cycles/second. This is
+//! the §Perf target surface for the cycle engine.
+
+use spikelink::arch::chip::Coord;
+use spikelink::noc::{CrossTraffic, Duplex, Mesh};
+use spikelink::util::bench::{bench, black_box};
+use spikelink::util::rng::Rng;
+
+fn main() {
+    // mesh: 5k random packets on an 8x8 grid
+    let make_load = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        (0..5_000)
+            .map(|_| {
+                (
+                    Coord::new(rng.range(0, 8), rng.range(0, 8)),
+                    Coord::new(rng.range(0, 8), rng.range(0, 8)),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let load = make_load(3);
+    let m = bench("noc/mesh8x8/5k-random-packets", 3, 30, || {
+        let mut mesh = Mesh::new(8);
+        for &(s, d) in &load {
+            mesh.inject(s, d);
+        }
+        mesh.run_to_drain(10_000_000);
+        assert_eq!(mesh.stats.delivered, 5_000);
+        black_box(&mesh.stats);
+    });
+    let pkts_per_sec = 5_000.0 / (m.median_ns / 1e9);
+    println!("mesh throughput: {:.2} M packets/s", pkts_per_sec / 1e6);
+
+    // duplex: 2048 boundary crossings
+    let b = bench("noc/duplex/2k-die-crossings", 2, 15, || {
+        let mut d = Duplex::new(8);
+        for i in 0..2_048usize {
+            d.inject(CrossTraffic {
+                src: Coord::new(7, i % 8),
+                dest: Coord::new(i % 8, (i / 8) % 8),
+            });
+        }
+        let stats = d.run(50_000_000);
+        assert_eq!(stats.delivered, 2_048);
+        black_box(stats);
+    });
+    println!(
+        "duplex throughput: {:.2} k crossings/s",
+        2_048.0 / (b.median_ns / 1e9) / 1e3
+    );
+}

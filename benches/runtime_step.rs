@@ -1,0 +1,59 @@
+//! Bench: PJRT runtime hot path — predict and train-step latency through
+//! the AOT executables (the request-path numbers a deployment would see).
+//! Skips gracefully when `make artifacts` has not produced model HLOs.
+
+use spikelink::runtime::{Engine, Manifest, Tensor};
+use spikelink::train::corpus;
+use spikelink::util::bench::{bench, black_box};
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("artifacts/ not built — run `make artifacts` first; skipping");
+        return;
+    };
+    if !manifest.models.contains_key("hnn_lm") {
+        println!("model artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let model = manifest.model("hnn_lm").unwrap();
+    let batch = model.cfg_usize("batch").unwrap_or(16);
+    let seq = model.cfg_usize("seq_len").unwrap_or(64);
+    let theta = Tensor::F32(manifest.load_init_theta(model).unwrap());
+    let mut c = corpus::generate(100_000, 1);
+    let (x, y) = c.batch(batch, seq);
+
+    // predict latency
+    let predict = engine.load("hnn_lm.predict", model.fns.get("predict").unwrap()).unwrap();
+    let xs = Tensor::I32(x.clone());
+    let m = bench("runtime/hnn_lm/predict-batch16", 3, 30, || {
+        black_box(predict.run(&[theta.clone(), xs.clone()]).unwrap());
+    });
+    println!(
+        "predict: {:.2} ms/batch -> {:.0} seq/s",
+        m.median_ns / 1e6,
+        batch as f64 / (m.median_ns / 1e9)
+    );
+
+    // train-step latency (full fwd+bwd+Adam through PJRT)
+    let train = engine.load("hnn_lm.train", model.fns.get("train").unwrap()).unwrap();
+    let p = model.param_count;
+    let args = vec![
+        theta.clone(),
+        Tensor::F32(vec![0.0; p]),
+        Tensor::F32(vec![0.0; p]),
+        Tensor::F32(vec![0.0]),
+        Tensor::I32(x),
+        Tensor::I32(y),
+        Tensor::F32(vec![0.5]),
+        Tensor::F32(vec![0.1]),
+    ];
+    let m = bench("runtime/hnn_lm/train-step", 2, 15, || {
+        black_box(train.run(&args).unwrap());
+    });
+    println!(
+        "train step: {:.2} ms -> {:.2} steps/s",
+        m.median_ns / 1e6,
+        1e9 / m.median_ns
+    );
+}

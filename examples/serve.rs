@@ -1,0 +1,101 @@
+//! Serving example: a minimal request router + dynamic batcher in front of
+//! the AOT-compiled `predict` executable — the Layer-3 pattern (vLLM-router
+//! style) on this paper's models. Python is nowhere in this process.
+//!
+//! A producer thread emits single-sequence requests at a configurable rate;
+//! the batcher coalesces up to `batch` of them (padding with repeats) and
+//! runs one PJRT execution per batch; per-request latency is recorded.
+//!
+//! Run: `make artifacts && cargo run --release --example serve -- [n_requests]`
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use spikelink::metrics::Histogram;
+use spikelink::runtime::{Engine, Manifest, Tensor};
+use spikelink::train::corpus;
+use spikelink::util::stats;
+
+struct Request {
+    x: Vec<i32>, // one sequence, seq_len chars
+    t0: Instant,
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    let model = manifest.model("hnn_lm")?;
+    let batch = model.cfg_usize("batch").unwrap_or(16);
+    let seq = model.cfg_usize("seq_len").unwrap_or(64);
+    let exe = engine.load("hnn_lm.predict", model.fns.get("predict").unwrap())?;
+    let theta = Tensor::F32(manifest.load_init_theta(model)?);
+
+    // producer: requests arrive with small jitter
+    let (tx, rx) = mpsc::channel::<Request>();
+    let producer = std::thread::spawn(move || {
+        let mut c = corpus::generate(100_000, 7);
+        for i in 0..n_requests {
+            let (x, _) = c.batch(1, seq);
+            tx.send(Request { x, t0: Instant::now() }).ok();
+            if i % 8 == 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    });
+
+    // batcher/executor loop
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let hist = Histogram::new();
+    let mut batches = 0usize;
+    let t_start = Instant::now();
+    let mut done = 0usize;
+    while done < n_requests {
+        // drain the channel (non-blocking-ish)
+        while let Ok(r) = rx.try_recv() {
+            pending.push_back(r);
+        }
+        if pending.is_empty() {
+            std::thread::sleep(Duration::from_micros(50));
+            continue;
+        }
+        // dynamic batch: take up to `batch`, pad by repeating the last
+        let take = pending.len().min(batch);
+        let reqs: Vec<Request> = pending.drain(..take).collect();
+        let mut x = Vec::with_capacity(batch * seq);
+        for r in &reqs {
+            x.extend_from_slice(&r.x);
+        }
+        while x.len() < batch * seq {
+            let last = &reqs.last().unwrap().x;
+            x.extend_from_slice(last);
+        }
+        let out = exe.run(&[theta.clone(), Tensor::I32(x)])?;
+        let _logits = out[0].as_f32()?;
+        let now = Instant::now();
+        for r in &reqs {
+            let d = now.duration_since(r.t0);
+            hist.record(d);
+            latencies_ms.push(d.as_secs_f64() * 1e3);
+        }
+        done += reqs.len();
+        batches += 1;
+    }
+    producer.join().ok();
+
+    let wall = t_start.elapsed().as_secs_f64();
+    println!("served {done} requests in {wall:.2}s over {batches} batches (batch cap {batch})");
+    println!("throughput: {:.1} req/s ({:.1} tok/s)", done as f64 / wall, (done * seq) as f64 / wall);
+    println!(
+        "latency ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  max {:.2}",
+        stats::percentile(&latencies_ms, 50.0),
+        stats::percentile(&latencies_ms, 90.0),
+        stats::percentile(&latencies_ms, 99.0),
+        stats::percentile(&latencies_ms, 100.0),
+    );
+    println!("histogram: {}", hist.summary());
+    println!("serve OK");
+    Ok(())
+}

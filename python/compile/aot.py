@@ -1,0 +1,242 @@
+"""AOT pipeline: lower every Layer-2 computation to HLO **text** + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``). The HLO *text* parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+
+  {variant}_{family}_{fn}.hlo.txt   fn in {train, eval, predict}
+  kernels/{name}.hlo.txt            L1 micro-computations for rust-side checks
+  init/{variant}_{family}.theta.bin initial flat f32 parameters (little-endian)
+  manifest.json                     every artifact's I/O signature + hparams
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+        (add --family lm --variant hnn to restrict; --skip-models for kernels
+        only). ``make artifacts`` wraps this and is a no-op when inputs are
+        unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import lif, rate_code, spike_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> list:
+    out = []
+    for name, a in avals:
+        out.append(
+            {"name": name, "shape": list(a.shape), "dtype": str(a.dtype)}
+        )
+    return out
+
+
+def _lower_and_write(fn, args, out_path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def export_model(ex, out_dir: str, manifest: dict) -> None:
+    cfg = ex["cfg"]
+    name = cfg.name()
+    specs = ex["specs"]
+    p = ex["param_count"]
+    k = ex["n_rates"]
+
+    # --- init params ------------------------------------------------------
+    init_dir = os.path.join(out_dir, "init")
+    os.makedirs(init_dir, exist_ok=True)
+    theta_path = os.path.join(init_dir, f"{name}.theta.bin")
+    ex["init_flat"].astype("<f4").tofile(theta_path)
+
+    entries = {}
+
+    # --- train step ---------------------------------------------------
+    train_args = [
+        specs["theta"], specs["m"], specs["v"], specs["step"],
+        specs["x"], specs["y"], specs["lam"], specs["budget"],
+    ]
+    path = os.path.join(out_dir, f"{name}_train.hlo.txt")
+    n = _lower_and_write(ex["train_step"], train_args, path)
+    entries["train"] = {
+        "hlo": os.path.basename(path),
+        "bytes": n,
+        "inputs": _sig(zip(
+            ["theta", "m", "v", "step", "x", "y", "lam", "budget"], train_args
+        )),
+        "outputs": _sig(zip(
+            ["theta", "m", "v", "step", "loss", "ce", "rates"],
+            [specs["theta"], specs["m"], specs["v"], specs["step"],
+             specs["step"], specs["step"],
+             jax.ShapeDtypeStruct((k,), jnp.float32)],
+        )),
+    }
+
+    # --- eval step ------------------------------------------------------
+    eval_args = [specs["theta"], specs["x"], specs["y"]]
+    path = os.path.join(out_dir, f"{name}_eval.hlo.txt")
+    n = _lower_and_write(ex["eval_step"], eval_args, path)
+    entries["eval"] = {
+        "hlo": os.path.basename(path),
+        "bytes": n,
+        "inputs": _sig(zip(["theta", "x", "y"], eval_args)),
+        "outputs": _sig(zip(
+            ["ce", "metric", "rates", "totals"],
+            [specs["step"], specs["step"],
+             jax.ShapeDtypeStruct((k,), jnp.float32),
+             jax.ShapeDtypeStruct((k,), jnp.float32)],
+        )),
+    }
+
+    # --- predict ----------------------------------------------------------
+    pred_args = [specs["theta"], specs["x"]]
+    path = os.path.join(out_dir, f"{name}_predict.hlo.txt")
+    n = _lower_and_write(ex["predict"], pred_args, path)
+    if cfg.family == "lm":
+        logits = jax.ShapeDtypeStruct(
+            (cfg.batch, cfg.seq_len, cfg.vocab), jnp.float32
+        )
+    else:
+        logits = jax.ShapeDtypeStruct((cfg.batch, cfg.classes), jnp.float32)
+    entries["predict"] = {
+        "hlo": os.path.basename(path),
+        "bytes": n,
+        "inputs": _sig(zip(["theta", "x"], pred_args)),
+        "outputs": _sig(zip(
+            ["logits", "rates"],
+            [logits, jax.ShapeDtypeStruct((k,), jnp.float32)],
+        )),
+    }
+
+    manifest["models"][name] = {
+        "config": dataclasses.asdict(cfg),
+        "param_count": p,
+        "n_rates": k,
+        "boundary_blocks": cfg.boundary_blocks(),
+        "init_theta": f"init/{name}.theta.bin",
+        "fns": entries,
+    }
+    print(f"  model {name}: P={p} K={k}")
+
+
+def export_kernels(out_dir: str, manifest: dict) -> None:
+    """L1 micro-computations the rust runtime smoke-tests at startup."""
+    kdir = os.path.join(out_dir, "kernels")
+    os.makedirs(kdir, exist_ok=True)
+
+    def add(name, fn, args, in_names, out_specs):
+        path = os.path.join(kdir, f"{name}.hlo.txt")
+        n = _lower_and_write(fn, args, path)
+        manifest["kernels"][name] = {
+            "hlo": f"kernels/{name}.hlo.txt",
+            "bytes": n,
+            "inputs": _sig(zip(in_names, args)),
+            "outputs": _sig(out_specs),
+        }
+        print(f"  kernel {name}")
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    # lif_seq over a (T=8, B=4, N=256) tile
+    u0 = jax.ShapeDtypeStruct((4, 256), f32)
+    cur = jax.ShapeDtypeStruct((8, 4, 256), f32)
+    add(
+        "lif_seq",
+        lambda u, c: lif.lif_seq(u, c, 0.9, 1.0),
+        [u0, cur],
+        ["u0", "currents"],
+        [("spikes", jax.ShapeDtypeStruct((8, 4, 256), f32)),
+         ("u_final", jax.ShapeDtypeStruct((4, 256), f32))],
+    )
+
+    # CLP round-trip: encode then decode (T=8, b=8)
+    a = jax.ShapeDtypeStruct((256,), i32)
+    add(
+        "clp_roundtrip",
+        lambda a: (rate_code.rate_decode(rate_code.rate_encode(a, 8, 8), 8),),
+        [a],
+        ["activations"],
+        [("decoded", jax.ShapeDtypeStruct((256,), i32))],
+    )
+
+    # rate encode alone (exposes the spike train to rust)
+    add(
+        "rate_encode",
+        lambda a: (rate_code.rate_encode(a, 8, 8),),
+        [a],
+        ["activations"],
+        [("spikes", jax.ShapeDtypeStruct((8, 256), i32))],
+    )
+
+    # spike matmul (16x256)@(256x256), tiled weight-stationary path
+    s = jax.ShapeDtypeStruct((16, 256), f32)
+    w = jax.ShapeDtypeStruct((256, 256), f32)
+    add(
+        "spike_matmul",
+        lambda s, w: (spike_matmul.spike_matmul(s, w),),
+        [s, w],
+        ["spikes", "weights"],
+        [("out", jax.ShapeDtypeStruct((16, 256), f32))],
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--family", choices=M.FAMILIES, default=None)
+    ap.add_argument("--variant", choices=M.VARIANTS, default=None)
+    ap.add_argument("--skip-models", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"models": {}, "kernels": {}}
+
+    if not args.skip_kernels:
+        print("exporting kernels...")
+        export_kernels(out_dir, manifest)
+
+    if not args.skip_models:
+        fams = [args.family] if args.family else list(M.FAMILIES)
+        vars_ = [args.variant] if args.variant else list(M.VARIANTS)
+        for fam in fams:
+            for var in vars_:
+                print(f"exporting {var}_{fam}...")
+                ex = M.make_exports(M.default_config(fam, var))
+                export_model(ex, out_dir, manifest)
+
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for the SpikeLink HNN stack.
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and is exercised by
+``python/tests`` under hypothesis shape/dtype sweeps. All kernels lower with
+``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from . import block, lif, rate_code, ref, spike_matmul  # noqa: F401

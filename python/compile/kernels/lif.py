@@ -1,0 +1,183 @@
+"""Pallas LIF kernels (Eq. 1) with surrogate-gradient backward.
+
+Layer-1 of the stack: the spiking-boundary hot-spot. Two entry points:
+
+* :func:`lif_step`  — single LIF update over a [B, N] tile.
+* :func:`lif_seq`   — T-step LIF over time-major currents [T, B, N]; the
+  grid iterates the time axis so the membrane state stays resident in a
+  VMEM scratch buffer across ticks — the Pallas analogue of the paper's
+  "membrane potentials remain fixed in local core memory"
+  (weight-stationary / state-stationary dataflow, §3.3).
+
+Both are differentiable via ``jax.custom_vjp`` using the fast-sigmoid
+surrogate (``ref.surrogate_grad``): the Heaviside forward is kept exact,
+the backward substitutes dS/dU = 1 / (1 + k|U - theta|)^2.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (not TPU wallclock) is what the CPU
+path validates. TPU resource estimates live in DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fast-sigmoid surrogate slope (snnTorch default neighbourhood).
+SG_SLOPE = 5.0
+
+# Lane tiling: one Pallas block is one "core" worth of neurons (256) split
+# into the TPU-native 8x128 sublane x lane layout when shapes allow.
+NEURONS_PER_CORE = 256
+
+
+# ---------------------------------------------------------------------------
+# Single-step kernel
+# ---------------------------------------------------------------------------
+
+
+def _lif_step_kernel(u_ref, i_ref, beta_ref, theta_ref, s_ref, u_out_ref):
+    beta = beta_ref[0]
+    theta = theta_ref[0]
+    u_new = beta * u_ref[...] + (1.0 - beta) * i_ref[...]
+    spike = (u_new >= theta).astype(u_new.dtype)
+    s_ref[...] = spike
+    u_out_ref[...] = u_new - spike * theta
+
+
+def _lif_step_fwd_impl(u, i, beta, theta):
+    beta_a = jnp.asarray([beta], jnp.float32)
+    theta_a = jnp.asarray([theta], jnp.float32)
+    return pl.pallas_call(
+        _lif_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(u.shape, u.dtype),
+            jax.ShapeDtypeStruct(u.shape, u.dtype),
+        ),
+        interpret=True,
+    )(u, i, beta_a, theta_a)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lif_step(u, i, beta, theta):
+    """One LIF update; returns (spike, u_next). Differentiable in (u, i)."""
+    return _lif_step_fwd_impl(u, i, beta, theta)
+
+
+def _lif_step_vjp_fwd(u, i, beta, theta):
+    s, u_next = _lif_step_fwd_impl(u, i, beta, theta)
+    u_pre = beta * u + (1.0 - beta) * i  # pre-reset potential, saved for SG
+    return (s, u_next), u_pre
+
+
+def _lif_step_vjp_bwd(beta, theta, u_pre, cts):
+    g_s, g_u_next = cts
+    sg = 1.0 / (1.0 + SG_SLOPE * jnp.abs(u_pre - theta)) ** 2
+    spike = (u_pre >= theta).astype(u_pre.dtype)
+    # u_next = u_pre - spike*theta ; spike = H(u_pre - theta)
+    # dL/du_pre = g_u_next * (1 - theta * sg) + g_s * sg
+    g_u_pre = g_u_next * (1.0 - theta * sg) + g_s * sg
+    _ = spike  # Heaviside itself contributes only through sg
+    return g_u_pre * beta, g_u_pre * (1.0 - beta)
+
+
+lif_step.defvjp(_lif_step_vjp_fwd, _lif_step_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Sequence kernel: grid over time, membrane state in VMEM scratch
+# ---------------------------------------------------------------------------
+
+
+def _lif_seq_kernel(u0_ref, i_ref, beta_ref, theta_ref, s_ref, u_out_ref, *, ticks):
+    """Grid axis 0 = time. The membrane lives in u_out_ref (aliased output),
+    which Pallas keeps resident across grid steps because its index_map is
+    constant — the state-stationary schedule."""
+    t = pl.program_id(0)
+    beta = beta_ref[0]
+    theta = theta_ref[0]
+
+    @pl.when(t == 0)
+    def _init():
+        u_out_ref[...] = u0_ref[...]
+
+    u = u_out_ref[...]
+    u_new = beta * u + (1.0 - beta) * i_ref[0]
+    spike = (u_new >= theta).astype(u_new.dtype)
+    s_ref[0] = spike
+    u_out_ref[...] = u_new - spike * theta
+    _ = ticks
+
+
+def _lif_seq_impl(u0, currents, beta, theta):
+    ticks = currents.shape[0]
+    beta_a = jnp.asarray([beta], jnp.float32)
+    theta_a = jnp.asarray([theta], jnp.float32)
+    body_shape = u0.shape  # [B, N]
+    n_body = u0.ndim
+    spikes, u_final = pl.pallas_call(
+        functools.partial(_lif_seq_kernel, ticks=ticks),
+        grid=(ticks,),
+        in_specs=[
+            pl.BlockSpec(body_shape, lambda t: (0,) * n_body),        # u0 resident
+            pl.BlockSpec((1,) + body_shape, lambda t: (t,) + (0,) * n_body),  # i_t streamed
+            pl.BlockSpec((1,), lambda t: (0,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1,) + body_shape, lambda t: (t,) + (0,) * n_body),  # spikes streamed out
+            pl.BlockSpec(body_shape, lambda t: (0,) * n_body),        # membrane resident
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((ticks,) + body_shape, u0.dtype),
+            jax.ShapeDtypeStruct(body_shape, u0.dtype),
+        ),
+        interpret=True,
+    )(u0, currents, beta_a, theta_a)
+    return spikes, u_final
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lif_seq(u0, currents, beta, theta):
+    """T-step LIF: u0 f32[B,N], currents f32[T,B,N] -> (spikes[T,B,N], uT)."""
+    return _lif_seq_impl(u0, currents, beta, theta)
+
+
+def _lif_seq_vjp_fwd(u0, currents, beta, theta):
+    spikes, u_final = _lif_seq_impl(u0, currents, beta, theta)
+    # Recompute pre-reset membranes for the surrogate (saves memory vs storing
+    # them from the kernel; T is small — 8/16 ticks).
+    def body(u, i_t):
+        u_new = beta * u + (1.0 - beta) * i_t
+        s = (u_new >= theta).astype(u_new.dtype)
+        return u_new - s * theta, u_new
+
+    _, u_pre = jax.lax.scan(body, u0, currents)
+    return (spikes, u_final), u_pre
+
+
+def _lif_seq_vjp_bwd(beta, theta, u_pre, cts):
+    g_spikes, g_u_final = cts
+
+    def body(g_u_next, xs):
+        g_s_t, u_pre_t = xs
+        sg = 1.0 / (1.0 + SG_SLOPE * jnp.abs(u_pre_t - theta)) ** 2
+        g_u_pre = g_u_next * (1.0 - theta * sg) + g_s_t * sg
+        g_i_t = g_u_pre * (1.0 - beta)
+        return g_u_pre * beta, g_i_t
+
+    g_u0, g_currents = jax.lax.scan(
+        body, g_u_final, (g_spikes, u_pre), reverse=True
+    )
+    return g_u0, g_currents
+
+
+lif_seq.defvjp(_lif_seq_vjp_fwd, _lif_seq_vjp_bwd)
+
+
+def spike_rate(spikes):
+    """Mean firing rate — the regularization signal of Eq. (10)."""
+    return jnp.mean(spikes)

@@ -1,0 +1,116 @@
+"""Pallas CLP-converter kernels — Eqs. (2)-(3).
+
+The Cross-Layer Packet converter of §3.5: rate-encode an 8-bit activation
+into a T-tick spike train (activation→spiking, Fig. 4a) and accumulate a
+spike train back into an activation (spiking→activation, Fig. 4b).
+
+Integer-exact: both kernels operate on int32 and must match ``ref.rate_encode``
+/ ``ref.rate_decode`` bit-for-bit. The decode kernel models the scheduler-SRAM
+accumulation — a (T, N) window reduced over ticks, the Pallas analogue of the
+16x256-bit scheduler entries (§3.3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(a_ref, s_ref, *, ticks, amax):
+    """Grid axis 0 = tick t. Emits s[t, :] = (t < floor(a*T/amax))."""
+    t = pl.program_id(0)
+    a = a_ref[...]
+    n = (a * ticks) // amax
+    s_ref[...] = (t < n).astype(jnp.int32)[None, ...]
+
+
+def rate_encode(a, ticks, bits=8):
+    """Eq. (2): int activations [...] -> spikes int32[T, ...]."""
+    a = jnp.asarray(a, jnp.int32)
+    amax = (1 << bits) - 1
+    nd = a.ndim
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, ticks=ticks, amax=amax),
+        grid=(ticks,),
+        in_specs=[pl.BlockSpec(a.shape, lambda t: (0,) * nd)],
+        out_specs=pl.BlockSpec((1,) + a.shape, lambda t: (t,) + (0,) * nd),
+        out_shape=jax.ShapeDtypeStruct((ticks,) + a.shape, jnp.int32),
+        interpret=True,
+    )(a)
+
+
+def _decode_kernel(s_ref, acc_ref, *, ticks, amax):
+    """Grid axis 0 = tick. Accumulates spike counts into the resident output
+    (scheduler-SRAM analogue), scaling on the final tick."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += s_ref[0]
+
+    @pl.when(t == ticks - 1)
+    def _scale():
+        acc_ref[...] = (acc_ref[...] * amax) // ticks
+
+
+def rate_decode(spikes, bits=8):
+    """Eq. (3): spikes int[T, ...] -> activations int32[...]."""
+    spikes = jnp.asarray(spikes, jnp.int32)
+    ticks = spikes.shape[0]
+    amax = (1 << bits) - 1
+    body = spikes.shape[1:]
+    nd = len(body)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, ticks=ticks, amax=amax),
+        grid=(ticks,),
+        in_specs=[pl.BlockSpec((1,) + body, lambda t: (t,) + (0,) * nd)],
+        out_specs=pl.BlockSpec(body, lambda t: (0,) * nd),
+        out_shape=jax.ShapeDtypeStruct(body, jnp.int32),
+        interpret=True,
+    )(spikes)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable float-domain rate bottleneck used inside the HNN model:
+# quantize -> encode -> decode -> dequantize with a straight-through gradient.
+# This is what "learnable sparsification" trains through at the boundary.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def rate_bottleneck(x, ticks, bits=8):
+    """Simulate the CLP round-trip on float activations in [0, 1].
+
+    Forward: x -> a = round(x * amax) -> encode/decode (Eqs. 2-3) -> x'.
+    Backward: straight-through (identity) — the standard QAT estimator.
+    """
+    amax = (1 << bits) - 1
+    a = jnp.clip(jnp.round(x * amax), 0, amax).astype(jnp.int32)
+    a2 = rate_decode(rate_encode(a, ticks, bits), bits)
+    return a2.astype(x.dtype) / amax
+
+
+def _rb_fwd(x, ticks, bits):
+    return rate_bottleneck(x, ticks, bits), None
+
+
+def _rb_bwd(ticks, bits, _res, g):
+    return (g,)
+
+
+rate_bottleneck.defvjp(_rb_fwd, _rb_bwd)
+
+
+def boundary_traffic(x, ticks, bits=8):
+    """Packets-on-the-wire for a boundary tensor: number of spikes emitted
+    when x (floats in [0,1]) crosses the die via rate coding. Used by the
+    model's spike-stats export so the rust simulator consumes *measured*
+    boundary traffic."""
+    amax = (1 << bits) - 1
+    a = jnp.clip(jnp.round(x * amax), 0, amax).astype(jnp.int32)
+    return jnp.sum((a * ticks) // amax)

@@ -1,0 +1,146 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal for Layer 1: each kernel in this
+package must match its oracle bit-for-bit (integer paths) or to float
+tolerance (float paths) under pytest + hypothesis sweeps.
+
+The math mirrors the paper exactly:
+
+* ``lif_step`` / ``lif_seq``  — Eq. (1), discrete LIF:
+      U_{t+1} = beta * U_t + (1 - beta) * I_t,   spike if U >= theta,
+  with soft reset (subtract theta) on spike, the convention used by
+  MS-ResNet-style spike-driven networks.
+* ``rate_encode`` — Eq. (2), deterministic rate coding of an activation
+  a in [0, 2^b - 1] into a T-tick spike train.
+* ``rate_decode`` — Eq. (3), inverse mapping from spike count to activation.
+* ``spike_matmul`` — boundary-layer compute: spikes (0/1) x dense weights,
+  i.e. pure accumulation (the "ACC not MAC" operation of SNN cores).
+* ``msresnet_block`` — membrane-shortcut residual block (Fig. 5, the
+  LayerNorm/dense variant used for language modeling).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# LIF neuron (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def lif_step(u, i, beta, theta):
+    """One discrete LIF step with soft reset.
+
+    Args:
+      u:     membrane potential, f32[...]
+      i:     weighted input current I_t, f32[...] (same shape)
+      beta:  scalar decay e^{-dt/tau}
+      theta: scalar firing threshold
+
+    Returns:
+      (spike, u_next): spike in {0,1} f32, u_next after decay+reset.
+    """
+    u_new = beta * u + (1.0 - beta) * i
+    spike = (u_new >= theta).astype(u_new.dtype)
+    u_next = u_new - spike * theta
+    return spike, u_next
+
+
+def lif_seq(u0, currents, beta, theta):
+    """Run LIF over a time axis. currents: f32[T, ...]; returns (spikes[T,...], uT)."""
+
+    def body(u, i_t):
+        s, u2 = lif_step(u, i_t, beta, theta)
+        return u2, s
+
+    u_final, spikes = jax.lax.scan(body, u0, currents)
+    return spikes, u_final
+
+
+def surrogate_grad(u_minus_theta, slope=5.0):
+    """Fast-sigmoid surrogate derivative dS/dU used in the backward pass."""
+    return 1.0 / (1.0 + slope * jnp.abs(u_minus_theta)) ** 2
+
+
+# ---------------------------------------------------------------------------
+# CLP converter (Eqs. 2-3)
+# ---------------------------------------------------------------------------
+
+
+def rate_encode(a, ticks, bits=8):
+    """Eq. (2): deterministic rate code.
+
+    The first n_i = floor(a_i * T / (2^b - 1)) ticks fire. The paper writes
+    floor(a_i / T) with a in [0, 2^b - 1]; for T dividing 2^b this is the
+    same leading-tick schedule. We use the scale-exact form so that
+    decode(encode(a)) has error bounded by ceil(amax / T) for every (T, b).
+
+    Args:
+      a:     integer activations in [0, 2^b - 1], any int dtype / shape [...]
+      ticks: window size T
+      bits:  activation precision b
+
+    Returns: spikes int32[T, ...] in {0, 1}.
+    """
+    amax = (1 << bits) - 1
+    a = jnp.asarray(a, jnp.int32)
+    n = (a * ticks) // amax  # number of leading ticks that fire
+    t = jnp.arange(ticks, dtype=jnp.int32).reshape((ticks,) + (1,) * a.ndim)
+    return (t < n[None, ...]).astype(jnp.int32)
+
+
+def rate_decode(spikes, bits=8):
+    """Eq. (3): a_i = floor((2^b - 1)/T * sum_t s_i(t)). spikes: int[T, ...]."""
+    ticks = spikes.shape[0]
+    amax = (1 << bits) - 1
+    count = jnp.sum(spikes.astype(jnp.int32), axis=0)
+    return (count * amax) // ticks
+
+
+def rate_roundtrip_error(a, ticks, bits=8):
+    """|decode(encode(a)) - a| — bounded by amax/T; exercised in tests."""
+    return jnp.abs(rate_decode(rate_encode(a, ticks, bits), bits) - jnp.asarray(a, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Spike matmul (SNN-core ACC compute)
+# ---------------------------------------------------------------------------
+
+
+def spike_matmul(spikes, w):
+    """spikes f32[..., K] in {0,1} x w f32[K, N] -> f32[..., N].
+
+    Semantically a masked column-sum (accumulate-only); the oracle just uses
+    a matmul, which is exact for 0/1 inputs.
+    """
+    return jnp.matmul(spikes, w)
+
+
+def spike_seq_matmul(spikes_t, w):
+    """Time-major spike trains f32[T, B, K] x w[K, N] -> f32[T, B, N]."""
+    return jnp.einsum("tbk,kn->tbn", spikes_t, w)
+
+
+# ---------------------------------------------------------------------------
+# MS-ResNet membrane-shortcut block (LN/dense variant, Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def msresnet_block(x, w1, b1, w2, b2, g1, gb1, g2, gb2):
+    """Membrane-shortcut residual block: x + W2 phi(LN(W1 phi(LN(x)))).
+
+    phi = GELU in the ANN variant (the spiking variant replaces phi at the
+    boundary with LIF; that composition lives in model.py, not the kernel).
+    """
+    h = layer_norm(x, g1, gb1)
+    h = jax.nn.gelu(h @ w1 + b1)
+    h = layer_norm(h, g2, gb2)
+    h = jax.nn.gelu(h @ w2 + b2)
+    return x + h

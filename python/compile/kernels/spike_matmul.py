@@ -1,0 +1,104 @@
+"""Pallas spike-matmul kernel — the SNN-core ACC compute path.
+
+Boundary (spiking) layers multiply a {0,1} spike tensor by a dense weight
+matrix. On the paper's SNN core this is pure accumulation (no multiplies,
+0.06x MAC energy); on TPU the insight maps to a weight-stationary tiled
+matmul where the weight tile stays in VMEM across the M-grid axis while
+spike tiles stream through — BlockSpec expresses the HBM->VMEM schedule the
+paper expresses with its weight-stationary core dataflow.
+
+Tiling: (bm x bk) spikes @ (bk x bn) weights, K innermost so the f32
+accumulator tile is resident. Shapes not divisible by the tile fall back to
+a single-block kernel (interpret mode imposes no hardware tile constraint,
+but the tiled path is the structure a real TPU lowering would keep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes — one "core" (256 neurons) per N tile, 8-sublane M tile.
+BM, BK, BN = 8, 128, 256
+
+
+def _mm_kernel(s_ref, w_ref, o_ref, *, nk):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) axis so the
+    output tile accumulates in place."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        s_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    _ = nk
+
+
+def _tiled(spikes, w, bm, bk, bn):
+    m, k = spikes.shape
+    k2, n = w.shape
+    assert k == k2
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(spikes, w)
+
+
+def _single_block(spikes, w):
+    def kernel(s_ref, w_ref, o_ref):
+        o_ref[...] = jnp.dot(
+            s_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((spikes.shape[0], w.shape[1]), jnp.float32),
+        interpret=True,
+    )(spikes, w)
+
+
+def spike_matmul(spikes, w, bm=BM, bk=BK, bn=BN):
+    """spikes f32[M, K] in {0,1} @ w f32[K, N] -> f32[M, N].
+
+    Uses the tiled weight-stationary kernel when the shape divides the tile,
+    otherwise a single-block kernel (same numerics, no tiling structure).
+    """
+    spikes = jnp.asarray(spikes, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    m, k = spikes.shape
+    _, n = w.shape
+    if m % bm == 0 and k % bk == 0 and n % bn == 0:
+        return _tiled(spikes, w, bm, bk, bn)
+    return _single_block(spikes, w)
+
+
+def spike_seq_matmul(spikes_t, w):
+    """Time-major [T, B, K] spike trains @ w[K, N] -> [T, B, N].
+
+    Flattens (T, B) into the M axis so a single weight-stationary pass covers
+    the whole tick window — the weight tile is fetched once per (K, N) block
+    for all T ticks, exactly the reuse the paper's scheduler SRAM provides.
+    """
+    t, b, k = spikes_t.shape
+    out = spike_matmul(spikes_t.reshape(t * b, k), w)
+    return out.reshape(t, b, w.shape[1])
+
+
+def vmem_bytes(bm=BM, bk=BK, bn=BN):
+    """Static VMEM footprint estimate of one grid step (f32), for DESIGN.md
+    §Hardware-Adaptation: spike tile + weight tile + accumulator tile."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

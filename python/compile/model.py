@@ -1,0 +1,395 @@
+"""Layer-2 JAX models: ANN / SNN / HNN variants of two benchmark families.
+
+The trainable counterpart of the paper's evaluation (§4.1, §5.1):
+
+* **LM family** — an RWKV-flavoured character language model built from
+  MS-ResNet-style membrane-shortcut dense blocks with LayerNorm (the Fig. 5
+  LN/dense column). Proxy for the Enwik8 / RWKV-6L experiments.
+* **Vision family** — a patch-embedding classifier over 32x32 RGB images
+  built from the same blocks (BN is folded into LN for the dense-proxy).
+  Proxy for the CIFAR100 / MS-ResNet18 experiments.
+
+Variants (the paper's three columns):
+
+* ``ann`` — every block dense (GELU activations), no spiking anywhere.
+* ``snn`` — every block output passes through a LIF spiking stage
+  (rate-coded over T ticks, surrogate-gradient trained).
+* ``hnn`` — the paper's contribution: spiking **only at chip-boundary
+  cuts** (every ``cut_every``-th block output, matching the
+  blocks-per-chip partition rule of Fig. 8); interior stays dense.
+
+The spiking stage is the real Layer-1 Pallas ``lif_seq`` kernel; the loss is
+Eq. (10): CE + lambda * relu(mean_rate - rate_budget), i.e. the regulariser
+only activates once the spike-rate budget (1 - target sparsity) is exceeded —
+"only activated when the desired sparsity is exceeded in the training run".
+
+Everything here is **build-time only**: ``aot.py`` lowers `train_step` /
+`eval_step` / `predict` once to HLO text; the rust runtime owns the loop.
+
+Parameters are exchanged with rust as ONE flat f32 vector (ravel_pytree),
+so every exported computation has a fixed, simple literal signature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from .kernels import lif
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters for one (family, variant) model."""
+
+    family: str = "lm"          # "lm" | "vision"
+    variant: str = "hnn"        # "ann" | "snn" | "hnn"
+    vocab: int = 64             # LM vocab (char-level)
+    seq_len: int = 64           # LM sequence length
+    image_hw: int = 32          # vision input H=W
+    patch: int = 4              # vision patch size
+    channels: int = 3
+    classes: int = 10
+    d_model: int = 128
+    d_hidden: int = 256
+    n_blocks: int = 4
+    batch: int = 16
+    cut_every: int = 2          # HNN: boundary spiking after every k-th block
+    ticks: int = 8              # rate-coding window T (paper: T=8)
+    bits: int = 8               # activation precision b
+    beta: float = 0.9           # LIF decay
+    theta: float = 1.0          # LIF threshold
+    lr: float = 1e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @property
+    def n_tokens(self) -> int:
+        if self.family == "lm":
+            return self.seq_len
+        return (self.image_hw // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    def boundary_blocks(self) -> list:
+        """Indices of blocks whose output is spiking (chip-boundary cuts)."""
+        if self.variant == "ann":
+            return []
+        if self.variant == "snn":
+            return list(range(self.n_blocks))
+        # hnn: a cut after every `cut_every` blocks, except after the last
+        # block (the head stays on the final chip).
+        return [
+            i for i in range(self.n_blocks - 1) if (i + 1) % self.cut_every == 0
+        ]
+
+    def name(self) -> str:
+        return f"{self.variant}_{self.family}"
+
+
+FAMILIES = ("lm", "vision")
+VARIANTS = ("ann", "snn", "hnn")
+
+
+def default_config(family: str, variant: str) -> ModelConfig:
+    return ModelConfig(family=family, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """He-style init, returned as a pytree (dict of dicts)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(i, o, scale=None):
+        s = scale if scale is not None else (2.0 / i) ** 0.5
+        return rng.standard_normal((i, o)).astype(np.float32) * s
+
+    p: Dict[str, Any] = {}
+    d, h = cfg.d_model, cfg.d_hidden
+    if cfg.family == "lm":
+        p["embed"] = rng.standard_normal((cfg.vocab, d)).astype(np.float32) * 0.02
+        p["head_w"] = dense(d, cfg.vocab, 0.02)
+        p["head_b"] = np.zeros(cfg.vocab, np.float32)
+    else:
+        p["embed"] = dense(cfg.patch_dim, d)
+        p["embed_b"] = np.zeros(d, np.float32)
+        p["pos"] = rng.standard_normal((cfg.n_tokens, d)).astype(np.float32) * 0.02
+        p["head_w"] = dense(d, cfg.classes, 0.02)
+        p["head_b"] = np.zeros(cfg.classes, np.float32)
+    for i in range(cfg.n_blocks):
+        p[f"b{i}"] = {
+            "mix_w": dense(d, d),
+            "mix_b": np.zeros(d, np.float32),
+            "mix_r": dense(d, d, 0.02),       # receptance gate
+            "w1": dense(d, h),
+            "b1": np.zeros(h, np.float32),
+            "w2": dense(h, d, (2.0 / h) ** 0.5),
+            "b2": np.zeros(d, np.float32),
+            "g1": np.ones(d, np.float32),
+            "gb1": np.zeros(d, np.float32),
+            "g2": np.ones(d, np.float32),
+            "gb2": np.zeros(d, np.float32),
+        }
+    p["ln_f_g"] = np.ones(d, np.float32)
+    p["ln_f_b"] = np.zeros(d, np.float32)
+    return jax.tree.map(jnp.asarray, p)
+
+
+def flatten_params(params):
+    """-> (flat f32[P], unravel_fn)."""
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _token_shift(x):
+    """RWKV-style token shift: mix of x_t and x_{t-1}, causal."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return 0.5 * (x + prev)
+
+
+def _block(bp, x, causal: bool):
+    """Membrane-shortcut block: gated token-mix (RWKV-flavoured) + channel MLP.
+
+    Returns the block output BEFORE any boundary spiking stage.
+    """
+    h = _ln(x, bp["g1"], bp["gb1"])
+    if causal:
+        h = _token_shift(h)
+    r = jax.nn.sigmoid(h @ bp["mix_r"])           # receptance gate
+    mix = r * (h @ bp["mix_w"] + bp["mix_b"])
+    x = x + mix                                    # membrane shortcut 1
+    h = _ln(x, bp["g2"], bp["gb2"])
+    h = jax.nn.gelu(h @ bp["w1"] + bp["b1"])
+    x = x + (h @ bp["w2"] + bp["b2"])              # membrane shortcut 2
+    return x
+
+
+def _spike_stage(cfg: ModelConfig, x):
+    """LIF rate-coding stage at a chip boundary.
+
+    The activation tensor x f32[B, L, D] is driven as a constant current for
+    T ticks through the Pallas LIF kernel; what crosses the die is the spike
+    train; the receiving chip reconstructs a rate-coded value. Returns
+    (reconstructed x', mean spike rate, total spikes).
+    """
+    b, l, d = x.shape
+    flat = x.reshape(b * l, d)
+    drive = jax.nn.softplus(flat)                 # non-negative input current
+    u0 = jnp.zeros_like(drive)
+    currents = jnp.broadcast_to(drive[None], (cfg.ticks, b * l, d))
+    spikes, _ = lif.lif_seq(u0, currents, cfg.beta, cfg.theta)
+    rate = jnp.mean(spikes)
+    total = jnp.sum(spikes)
+    # Steady-state inverse of the LIF rate transfer: count/T * theta/(1-beta).
+    recon = jnp.mean(spikes, axis=0) * (cfg.theta / (1.0 - cfg.beta))
+    return recon.reshape(b, l, d), rate, total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, x):
+    """Shared trunk. x: int32[B, L] (lm) or f32[B, H*W*C] (vision).
+
+    Returns (logits, rates f32[K], totals f32[K]) with K = number of spiking
+    boundary stages (K=1 zeros for ANN, keeping the export signature uniform).
+    """
+    boundary = set(cfg.boundary_blocks())
+    causal = cfg.family == "lm"
+    if cfg.family == "lm":
+        hcur = params["embed"][x]                      # [B, L, D]
+    else:
+        b = x.shape[0]
+        img = x.reshape(b, cfg.image_hw, cfg.image_hw, cfg.channels)
+        pp = cfg.patch
+        n = cfg.image_hw // pp
+        patches = img.reshape(b, n, pp, n, pp, cfg.channels)
+        patches = patches.transpose(0, 1, 3, 2, 4, 5).reshape(b, n * n, cfg.patch_dim)
+        hcur = patches @ params["embed"] + params["embed_b"] + params["pos"]
+
+    rates, totals = [], []
+    for i in range(cfg.n_blocks):
+        hcur = _block(params[f"b{i}"], hcur, causal)
+        if i in boundary:
+            hcur, r, t = _spike_stage(cfg, hcur)
+            rates.append(r)
+            totals.append(t)
+
+    hcur = _ln(hcur, params["ln_f_g"], params["ln_f_b"])
+    if cfg.family == "lm":
+        logits = hcur @ params["head_w"] + params["head_b"]   # [B, L, V]
+    else:
+        pooled = jnp.mean(hcur, axis=1)
+        logits = pooled @ params["head_w"] + params["head_b"]  # [B, C]
+
+    if rates:
+        rates_v = jnp.stack(rates)
+        totals_v = jnp.stack(totals)
+    else:
+        rates_v = jnp.zeros((1,), jnp.float32)
+        totals_v = jnp.zeros((1,), jnp.float32)
+    return logits, rates_v, totals_v
+
+
+def n_rate_outputs(cfg: ModelConfig) -> int:
+    return max(1, len(cfg.boundary_blocks()))
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics (Eq. 10)
+# ---------------------------------------------------------------------------
+
+
+def _ce_lm(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _ce_cls(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def loss_fn(cfg: ModelConfig, params, x, y, lam, rate_budget):
+    """Eq. (10): L = L_CE + lam * sum_i relu(rate_i - budget).
+
+    ``rate_budget`` = (1 - target_sparsity); the hinge makes the penalty
+    active only when measured sparsity falls below the target, matching the
+    paper's "only activated when the desired sparsity is exceeded".
+    """
+    logits, rates, totals = forward(cfg, params, x)
+    ce = _ce_lm(logits, y) if cfg.family == "lm" else _ce_cls(logits, y)
+    reg = jnp.sum(jax.nn.relu(rates - rate_budget))
+    return ce + lam * reg, (ce, logits, rates, totals)
+
+
+def metric_fn(cfg: ModelConfig, logits, y):
+    """LM: bits-per-char; vision: top-1 accuracy."""
+    if cfg.family == "lm":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll) / jnp.log(2.0)  # bpc
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Exported computations (flat-parameter signatures)
+# ---------------------------------------------------------------------------
+
+
+def make_exports(cfg: ModelConfig, seed: int = 0):
+    """Build the functions `aot.py` lowers, plus init state.
+
+    Returns dict with:
+      init_flat   — f32[P] initial parameters
+      train_step  — (theta, m, v, step, x, y, lam, budget) ->
+                    (theta', m', v', step', loss, ce, rates)
+      eval_step   — (theta, x, y) -> (ce, metric, rates, totals)
+      predict     — (theta, x) -> (logits, rates)
+      specs       — example ShapeDtypeStructs for lowering
+    """
+    params0 = init_params(cfg, seed)
+    flat0, unravel = flatten_params(params0)
+    p_count = flat0.shape[0]
+
+    lr, b1, b2, eps = cfg.lr, cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+
+    def train_step(theta, m, v, step, x, y, lam, budget):
+        params = unravel(theta)
+
+        def raw_loss(pp):
+            return loss_fn(cfg, pp, x, y, lam, budget)
+
+        (loss, (ce, _logits, rates, _totals)), grads = jax.value_and_grad(
+            raw_loss, has_aux=True
+        )(params)
+        g, _ = ravel_pytree(grads)
+        step2 = step + 1.0
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        mhat = m2 / (1.0 - b1 ** step2)
+        vhat = v2 / (1.0 - b2 ** step2)
+        theta2 = theta - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return theta2, m2, v2, step2, loss, ce, rates
+
+    def eval_step(theta, x, y):
+        params = unravel(theta)
+        logits, rates, totals = forward(cfg, params, x)
+        ce = _ce_lm(logits, y) if cfg.family == "lm" else _ce_cls(logits, y)
+        metric = metric_fn(cfg, logits, y)
+        return ce, metric, rates, totals
+
+    def predict(theta, x):
+        params = unravel(theta)
+        logits, rates, _ = forward(cfg, params, x)
+        return logits, rates
+
+    if cfg.family == "lm":
+        x_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        y_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    else:
+        x_spec = jax.ShapeDtypeStruct(
+            (cfg.batch, cfg.image_hw * cfg.image_hw * cfg.channels), jnp.float32
+        )
+        y_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+
+    specs = {
+        "theta": jax.ShapeDtypeStruct((p_count,), jnp.float32),
+        "m": jax.ShapeDtypeStruct((p_count,), jnp.float32),
+        "v": jax.ShapeDtypeStruct((p_count,), jnp.float32),
+        "step": jax.ShapeDtypeStruct((), jnp.float32),
+        "x": x_spec,
+        "y": y_spec,
+        "lam": jax.ShapeDtypeStruct((), jnp.float32),
+        "budget": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+
+    return {
+        "cfg": cfg,
+        "init_flat": np.asarray(flat0),
+        "param_count": p_count,
+        "n_rates": n_rate_outputs(cfg),
+        "train_step": train_step,
+        "eval_step": eval_step,
+        "predict": predict,
+        "specs": specs,
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def cached_exports(family: str, variant: str):
+    return make_exports(default_config(family, variant))

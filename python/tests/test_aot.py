@@ -1,0 +1,98 @@
+"""AOT pipeline tests: HLO text artifacts parse, manifest is consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_kernels_present(self):
+        man = _manifest()
+        for k in ("lif_seq", "clp_roundtrip", "rate_encode", "spike_matmul"):
+            assert k in man["kernels"], k
+            hlo = os.path.join(ART, man["kernels"][k]["hlo"])
+            assert os.path.exists(hlo)
+
+    def test_models_present(self):
+        man = _manifest()
+        if not man["models"]:
+            pytest.skip("kernel-only artifact build")
+        for name, entry in man["models"].items():
+            for fn in ("train", "eval", "predict"):
+                assert fn in entry["fns"], (name, fn)
+                assert os.path.exists(os.path.join(ART, entry["fns"][fn]["hlo"]))
+            theta = os.path.join(ART, entry["init_theta"])
+            assert os.path.exists(theta)
+            # init params file is exactly param_count little-endian f32
+            assert os.path.getsize(theta) == 4 * entry["param_count"]
+
+    def test_hlo_text_is_text(self):
+        """Artifacts must be HLO *text* modules (the only interchange format
+        xla_extension 0.5.1 accepts from jax>=0.5), not protos."""
+        man = _manifest()
+        some = next(iter(man["kernels"].values()))
+        with open(os.path.join(ART, some["hlo"])) as f:
+            head = f.read(200)
+        assert head.lstrip().startswith("HloModule")
+
+    def test_train_signature_shapes(self):
+        man = _manifest()
+        if not man["models"]:
+            pytest.skip("kernel-only artifact build")
+        for name, entry in man["models"].items():
+            ins = {i["name"]: i for i in entry["fns"]["train"]["inputs"]}
+            p = entry["param_count"]
+            assert ins["theta"]["shape"] == [p]
+            assert ins["m"]["shape"] == [p]
+            assert ins["v"]["shape"] == [p]
+            outs = {o["name"]: o for o in entry["fns"]["train"]["outputs"]}
+            assert outs["rates"]["shape"] == [entry["n_rates"]]
+
+    def test_boundary_blocks_match_variant(self):
+        man = _manifest()
+        if not man["models"]:
+            pytest.skip("kernel-only artifact build")
+        for name, entry in man["models"].items():
+            variant = entry["config"]["variant"]
+            nb = entry["config"]["n_blocks"]
+            bb = entry["boundary_blocks"]
+            if variant == "ann":
+                assert bb == []
+            elif variant == "snn":
+                assert bb == list(range(nb))
+            else:
+                assert all(b < nb - 1 for b in bb) and len(bb) >= 1
+
+
+class TestLowering:
+    def test_lower_small_model_to_hlo_text(self, tmp_path):
+        """End-to-end lowering of a tiny model in-process (fast)."""
+        import jax
+        from compile import model as M
+        from compile.aot import to_hlo_text
+
+        cfg = M.ModelConfig(
+            family="lm", variant="hnn", d_model=16, d_hidden=32,
+            n_blocks=2, seq_len=8, batch=2, ticks=2, vocab=16,
+        )
+        ex = M.make_exports(cfg)
+        s = ex["specs"]
+        lowered = jax.jit(ex["eval_step"]).lower(s["theta"], s["x"], s["y"])
+        text = to_hlo_text(lowered)
+        assert text.lstrip().startswith("HloModule")
+        out = tmp_path / "m.hlo.txt"
+        out.write_text(text)
+        assert out.stat().st_size > 100

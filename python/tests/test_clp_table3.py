@@ -1,0 +1,91 @@
+"""Table-3 payload semantics + CLP cross-layer consistency.
+
+The SNN payload of Table 3 is "4-bit + padding": the delivery tick is a
+4-bit field, so the rate window T can be at most 16 and spike counts within
+a window fit 4 bits for T <= 16. These tests pin the integer semantics the
+rust `noc::clp` module and the Pallas kernels must share (the rust side
+re-verifies against the AOT'd kernels through PJRT in rust/tests/).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rate_code, ref
+
+
+def py_spike_count(a: int, ticks: int, bits: int) -> int:
+    """Mirror of rust noc::clp::spike_count (Eq. 2 schedule)."""
+    amax = (1 << bits) - 1
+    return (a * ticks) // amax
+
+
+def py_decode(count: int, ticks: int, bits: int) -> int:
+    """Mirror of rust noc::clp::decode (Eq. 3)."""
+    amax = (1 << bits) - 1
+    return (count * amax) // ticks
+
+
+class TestTable3Payload:
+    def test_delivery_tick_fits_4_bits(self):
+        # T=16 is the maximum the 4-bit delivery-time field encodes (§3.3)
+        for a in range(256):
+            n = py_spike_count(a, 16, 8)
+            assert 0 <= n <= 16
+
+    @given(
+        ticks=st.sampled_from([2, 4, 8, 16]),
+        bits=st.sampled_from([4, 8]),
+        a=st.integers(0, 255),
+    )
+    @settings(deadline=None, max_examples=200)
+    def test_kernel_matches_integer_mirror(self, ticks, bits, a):
+        amax = (1 << bits) - 1
+        a = min(a, amax)
+        spikes = np.asarray(ref.rate_encode(jnp.asarray([a]), ticks, bits))
+        assert spikes.sum() == py_spike_count(a, ticks, bits)
+        decoded = int(ref.rate_decode(jnp.asarray(spikes), bits)[0])
+        assert decoded == py_decode(int(spikes.sum()), ticks, bits)
+
+    def test_pallas_kernel_agrees_with_mirror_exhaustively(self):
+        a = jnp.arange(256, dtype=jnp.int32)
+        enc = np.asarray(rate_code.rate_encode(a, 8, 8))
+        dec = np.asarray(rate_code.rate_decode(jnp.asarray(enc), 8))
+        for v in range(256):
+            assert enc[:, v].sum() == py_spike_count(v, 8, 8)
+            assert dec[v] == py_decode(py_spike_count(v, 8, 8), 8, 8)
+
+    def test_spike_counts_monotone_in_activation(self):
+        counts = [py_spike_count(a, 8, 8) for a in range(256)]
+        assert counts == sorted(counts)
+        assert counts[0] == 0 and counts[-1] == 8
+
+    @given(ticks=st.sampled_from([4, 8, 16]))
+    @settings(deadline=None, max_examples=10)
+    def test_mean_rate_tracks_mean_activation(self, ticks):
+        """Boundary traffic (packets on the wire) is proportional to the
+        mean activation level — the mechanism that makes LEARNED activation
+        sparsity translate into bandwidth savings."""
+        rng = np.random.default_rng(0)
+        lo = rng.integers(0, 64, 512)     # sparse-ish activations
+        hi = rng.integers(128, 256, 512)  # dense activations
+        lo_spikes = sum(py_spike_count(int(a), ticks, 8) for a in lo)
+        hi_spikes = sum(py_spike_count(int(a), ticks, 8) for a in hi)
+        assert lo_spikes < hi_spikes / 2
+
+
+class TestBoundaryTrafficAccounting:
+    def test_traffic_matches_spike_counts(self):
+        x = jnp.asarray([[0.0, 0.25, 0.5, 1.0]], jnp.float32)
+        t = int(rate_code.boundary_traffic(x, 8))
+        expect = sum(
+            py_spike_count(int(round(v * 255)), 8, 8) for v in [0.0, 0.25, 0.5, 1.0]
+        )
+        assert t == expect
+
+    def test_zero_tensor_zero_traffic(self):
+        assert int(rate_code.boundary_traffic(jnp.zeros((8, 8)), 8)) == 0
+
+    def test_saturated_tensor_max_traffic(self):
+        assert int(rate_code.boundary_traffic(jnp.ones((4, 4)), 8)) == 16 * 8

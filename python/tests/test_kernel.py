@@ -1,0 +1,346 @@
+"""Kernel-vs-oracle tests — the CORE Layer-1 correctness signal.
+
+Every Pallas kernel must match its pure-jnp oracle in ``kernels.ref``:
+bit-for-bit on integer paths (rate coding), float-tolerance on f32 paths
+(LIF, matmul, block). Hypothesis sweeps shapes, dtype ranges and kernel
+hyper-parameters.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import block, lif, rate_code, ref, spike_matmul
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+# ---------------------------------------------------------------------------
+# LIF (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+class TestLifStep:
+    @given(
+        b=st.integers(1, 7),
+        n=st.integers(1, 65),
+        beta=st.floats(0.05, 0.99),
+        theta=st.floats(0.1, 3.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, n, beta, theta, seed):
+        rng = np.random.default_rng(seed)
+        u = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        i = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        s, un = lif.lif_step(u, i, beta, theta)
+        s2, un2 = ref.lif_step(u, i, beta, theta)
+        np.testing.assert_allclose(s, s2)
+        np.testing.assert_allclose(un, un2, rtol=1e-6, atol=1e-6)
+
+    def test_spikes_binary(self):
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((8, 32)) * 3, jnp.float32)
+        i = jnp.asarray(rng.standard_normal((8, 32)) * 3, jnp.float32)
+        s, _ = lif.lif_step(u, i, 0.9, 1.0)
+        assert set(np.unique(np.asarray(s))).issubset({0.0, 1.0})
+
+    def test_soft_reset_subtracts_theta(self):
+        # A neuron far above threshold keeps (u_new - theta), not zero.
+        u = jnp.asarray([[5.0]], jnp.float32)
+        i = jnp.asarray([[0.0]], jnp.float32)
+        s, un = lif.lif_step(u, i, 1.0, 1.0)
+        assert float(s[0, 0]) == 1.0
+        assert float(un[0, 0]) == pytest.approx(4.0)
+
+    def test_subthreshold_never_fires(self):
+        u = jnp.zeros((4, 4), jnp.float32)
+        i = jnp.full((4, 4), 0.5, jnp.float32)
+        s, _ = lif.lif_step(u, i, 0.5, 10.0)
+        assert float(jnp.sum(s)) == 0.0
+
+
+class TestLifSeq:
+    @given(
+        t=st.integers(1, 12),
+        b=st.integers(1, 5),
+        n=st.integers(1, 40),
+        beta=st.floats(0.1, 0.99),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, t, b, n, beta, seed):
+        rng = np.random.default_rng(seed)
+        u0 = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        cur = jnp.asarray(rng.standard_normal((t, b, n)) * 2, jnp.float32)
+        sp, uf = lif.lif_seq(u0, cur, beta, 1.0)
+        sp2, uf2 = ref.lif_seq(u0, cur, beta, 1.0)
+        np.testing.assert_allclose(sp, sp2, atol=1e-6)
+        np.testing.assert_allclose(uf, uf2, rtol=1e-4, atol=1e-5)
+
+    def test_seq_equals_unrolled_steps(self):
+        """The fused sequence kernel == repeated single-step kernels."""
+        rng = np.random.default_rng(3)
+        u = jnp.zeros((2, 16), jnp.float32)
+        cur = jnp.asarray(rng.random((6, 2, 16)) * 2, jnp.float32)
+        sp_seq, uf_seq = lif.lif_seq(u, cur, 0.8, 1.0)
+        outs = []
+        for t in range(6):
+            s, u = lif.lif_step(u, cur[t], 0.8, 1.0)
+            outs.append(s)
+        np.testing.assert_allclose(sp_seq, jnp.stack(outs), atol=1e-6)
+        np.testing.assert_allclose(uf_seq, u, rtol=1e-5, atol=1e-6)
+
+    def test_constant_drive_rate_monotone_in_current(self):
+        """Stronger drive must never yield fewer spikes (rate coding)."""
+        u0 = jnp.zeros((1, 64), jnp.float32)
+        drives = jnp.linspace(0.0, 4.0, 64)[None, :]
+        cur = jnp.broadcast_to(drives[None], (16, 1, 64)).astype(jnp.float32)
+        sp, _ = lif.lif_seq(u0, cur, 0.9, 1.0)
+        counts = np.asarray(jnp.sum(sp, axis=0))[0]
+        assert (np.diff(counts) >= 0).all()
+
+    def test_gradient_flows_through_surrogate(self):
+        rng = np.random.default_rng(5)
+        u0 = jnp.zeros((2, 8), jnp.float32)
+        cur = jnp.asarray(rng.random((5, 2, 8)) * 2, jnp.float32)
+
+        def loss(c):
+            sp, _ = lif.lif_seq(u0, c, 0.9, 1.0)
+            return jnp.sum(sp)
+
+        g = jax.grad(loss)(cur)
+        assert float(jnp.sum(jnp.abs(g))) > 0.0
+        assert g.shape == cur.shape
+
+    def test_gradient_matches_scan_reference(self):
+        """Surrogate-grad VJP of the Pallas path == pure-jnp scan autodiff
+        with the same surrogate substitution."""
+        rng = np.random.default_rng(7)
+        u0 = jnp.zeros((1, 6), jnp.float32)
+        cur = jnp.asarray(rng.random((4, 1, 6)) * 2, jnp.float32)
+        beta, theta = 0.9, 1.0
+
+        def ref_loss(c):
+            # scan with straight-through heaviside; `soft` is the
+            # antiderivative of the fast-sigmoid surrogate, so ds/du == sg.
+            def body(u, i_t):
+                u_new = beta * u + (1 - beta) * i_t
+                x = u_new - theta
+                soft = x / (1.0 + lif.SG_SLOPE * jnp.abs(x))
+                hard = (u_new >= theta).astype(u_new.dtype)
+                s = soft + jax.lax.stop_gradient(hard - soft)
+                return u_new - s * theta, s
+
+            _, sp = jax.lax.scan(body, u0, c)
+            return jnp.sum(sp * jnp.arange(1.0, 5.0)[:, None, None])
+
+        def pallas_loss(c):
+            sp, _ = lif.lif_seq(u0, c, beta, theta)
+            return jnp.sum(sp * jnp.arange(1.0, 5.0)[:, None, None])
+
+        g_ref = jax.grad(ref_loss)(cur)
+        g_pal = jax.grad(pallas_loss)(cur)
+        np.testing.assert_allclose(g_pal, g_ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CLP rate coding (Eqs. 2-3)
+# ---------------------------------------------------------------------------
+
+
+class TestRateCode:
+    @given(
+        ticks=st.sampled_from([1, 2, 4, 8, 16]),
+        bits=st.sampled_from([4, 8]),
+        n=st.integers(1, 100),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_encode_matches_ref(self, ticks, bits, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.integers(0, 1 << bits, n), jnp.int32)
+        np.testing.assert_array_equal(
+            rate_code.rate_encode(a, ticks, bits), ref.rate_encode(a, ticks, bits)
+        )
+
+    @given(
+        ticks=st.sampled_from([1, 2, 4, 8, 16]),
+        bits=st.sampled_from([4, 8]),
+        n=st.integers(1, 100),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_decode_matches_ref(self, ticks, bits, n, seed):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(rng.integers(0, 2, (ticks, n)), jnp.int32)
+        np.testing.assert_array_equal(
+            rate_code.rate_decode(s, bits), ref.rate_decode(s, bits)
+        )
+
+    @given(
+        ticks=st.sampled_from([2, 4, 8, 16]),
+        bits=st.sampled_from([4, 8]),
+    )
+    def test_roundtrip_error_bound(self, ticks, bits):
+        """Eq. 2 -> Eq. 3 round trip errs by at most amax/ticks (quantization
+        of the rate code) for EVERY representable activation."""
+        amax = (1 << bits) - 1
+        a = jnp.arange(amax + 1, dtype=jnp.int32)
+        err = np.asarray(ref.rate_roundtrip_error(a, ticks, bits))
+        assert err.max() <= int(np.ceil(amax / ticks))
+
+    def test_roundtrip_exact_at_extremes(self):
+        """0 and amax always survive the round trip exactly."""
+        for ticks in (2, 4, 8, 16):
+            a = jnp.asarray([0, 255], jnp.int32)
+            d = rate_code.rate_decode(rate_code.rate_encode(a, ticks, 8), 8)
+            np.testing.assert_array_equal(np.asarray(d), [0, 255])
+
+    def test_spike_count_proportional_to_activation(self):
+        a = jnp.asarray([0, 64, 128, 255], jnp.int32)
+        s = np.asarray(rate_code.rate_encode(a, 8, 8))
+        counts = s.sum(axis=0)
+        assert counts[0] == 0 and counts[3] == 8
+        assert (np.diff(counts) >= 0).all()
+
+    def test_leading_tick_schedule(self):
+        """Spikes occupy the first n ticks (Fig 4a deterministic schedule)."""
+        a = jnp.asarray([200], jnp.int32)
+        s = np.asarray(rate_code.rate_encode(a, 8, 8))[:, 0]
+        n = s.sum()
+        assert (s[:n] == 1).all() and (s[n:] == 0).all()
+
+    @given(
+        ticks=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_bottleneck_straight_through_grad(self, ticks, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.random((4, 8)), jnp.float32)
+        g = jax.grad(lambda x: jnp.sum(rate_code.rate_bottleneck(x, ticks)))(x)
+        np.testing.assert_allclose(np.asarray(g), np.ones((4, 8)))
+
+    def test_bottleneck_output_range(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.random((16, 16)), jnp.float32)
+        y = rate_code.rate_bottleneck(x, 8)
+        assert float(jnp.min(y)) >= 0.0 and float(jnp.max(y)) <= 1.0
+
+    def test_boundary_traffic_counts_spikes(self):
+        x = jnp.asarray([[1.0, 0.0, 0.5]], jnp.float32)
+        t = int(rate_code.boundary_traffic(x, 8))
+        # 1.0 -> 255 -> 8 spikes; 0 -> 0; 0.5 -> 128 -> (128*8)//255 = 4
+        assert t == 8 + 0 + 4
+
+
+# ---------------------------------------------------------------------------
+# Spike matmul
+# ---------------------------------------------------------------------------
+
+
+class TestSpikeMatmul:
+    @given(
+        m=st.sampled_from([8, 16, 32]),
+        k=st.sampled_from([128, 256]),
+        n=st.sampled_from([256, 512]),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tiled_matches_ref(self, m, k, n, density, seed):
+        rng = np.random.default_rng(seed)
+        s = (rng.random((m, k)) < density).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        out = spike_matmul.spike_matmul(jnp.asarray(s), jnp.asarray(w))
+        np.testing.assert_allclose(out, ref.spike_matmul(s, w), rtol=1e-5, atol=1e-4)
+
+    @given(
+        m=st.integers(1, 20),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fallback_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        s = (rng.random((m, k)) < 0.3).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        out = spike_matmul.spike_matmul(jnp.asarray(s), jnp.asarray(w))
+        np.testing.assert_allclose(out, ref.spike_matmul(s, w), rtol=1e-5, atol=1e-4)
+
+    def test_all_zero_spikes_give_zero(self):
+        s = np.zeros((8, 128), np.float32)
+        w = np.ones((128, 256), np.float32)
+        out = spike_matmul.spike_matmul(jnp.asarray(s), jnp.asarray(w))
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_all_one_spikes_give_column_sums(self):
+        s = np.ones((8, 128), np.float32)
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((128, 256)).astype(np.float32)
+        out = spike_matmul.spike_matmul(jnp.asarray(s), jnp.asarray(w))
+        np.testing.assert_allclose(out[0], w.sum(axis=0), rtol=1e-4, atol=1e-4)
+
+    def test_seq_matmul_shape_and_value(self):
+        rng = np.random.default_rng(0)
+        s = (rng.random((4, 8, 128)) < 0.1).astype(np.float32)
+        w = rng.standard_normal((128, 256)).astype(np.float32)
+        out = spike_matmul.spike_seq_matmul(jnp.asarray(s), jnp.asarray(w))
+        assert out.shape == (4, 8, 256)
+        np.testing.assert_allclose(out, ref.spike_seq_matmul(s, w), rtol=1e-5, atol=1e-4)
+
+    def test_vmem_estimate_positive(self):
+        assert spike_matmul.vmem_bytes() > 0
+
+
+# ---------------------------------------------------------------------------
+# MS-ResNet block
+# ---------------------------------------------------------------------------
+
+
+def _block_params(rng, d, h):
+    return (
+        rng.standard_normal((d, h)).astype(np.float32) * 0.1,
+        rng.standard_normal(h).astype(np.float32) * 0.01,
+        rng.standard_normal((h, d)).astype(np.float32) * 0.1,
+        rng.standard_normal(d).astype(np.float32) * 0.01,
+        np.ones(d, np.float32),
+        np.zeros(d, np.float32),
+        np.ones(h, np.float32),
+        np.zeros(h, np.float32),
+    )
+
+
+class TestMsResNetBlock:
+    @given(
+        m=st.sampled_from([1, 4, 8, 16, 24]),
+        d=st.sampled_from([8, 16, 64]),
+        h=st.sampled_from([16, 32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, d, h, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, d)).astype(np.float32)
+        ps = _block_params(rng, d, h)
+        out = block.msresnet_block(*map(jnp.asarray, (x, *ps)))
+        out2 = ref.msresnet_block(*map(jnp.asarray, (x, *ps)))
+        np.testing.assert_allclose(out, out2, rtol=1e-4, atol=1e-4)
+
+    def test_residual_identity_at_zero_weights(self):
+        """With zero dense weights the block must be the identity (membrane
+        shortcut passes x through untouched)."""
+        d, h = 16, 32
+        x = np.random.default_rng(0).standard_normal((8, d)).astype(np.float32)
+        zs = (
+            np.zeros((d, h), np.float32), np.zeros(h, np.float32),
+            np.zeros((h, d), np.float32), np.zeros(d, np.float32),
+            np.ones(d, np.float32), np.zeros(d, np.float32),
+            np.ones(h, np.float32), np.zeros(h, np.float32),
+        )
+        out = block.msresnet_block(*map(jnp.asarray, (x, *zs)))
+        np.testing.assert_allclose(np.asarray(out), x, atol=1e-6)
+
+    def test_vmem_estimate(self):
+        assert block.vmem_bytes(128, 256) > 0

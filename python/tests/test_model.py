@@ -1,0 +1,218 @@
+"""Layer-2 model tests: shapes, variants, loss, gradients, Eq. 10 behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _small(family, variant, **kw):
+    base = dict(
+        family=family, variant=variant, d_model=32, d_hidden=64,
+        n_blocks=4, seq_len=16, batch=4, ticks=4, vocab=32,
+        image_hw=16, patch=4, classes=5,
+    )
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "lm":
+        x = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+        y = np.roll(x, -1, axis=1).astype(np.int32)
+    else:
+        x = rng.random((cfg.batch, cfg.image_hw ** 2 * cfg.channels), np.float32)
+        y = rng.integers(0, cfg.classes, (cfg.batch,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+# ---------------------------------------------------------------------------
+# Partitioning (boundary placement — the paper's §3 rule)
+# ---------------------------------------------------------------------------
+
+
+class TestBoundaryPlacement:
+    def test_ann_has_no_boundaries(self):
+        assert _small("lm", "ann").boundary_blocks() == []
+
+    def test_snn_spikes_everywhere(self):
+        assert _small("lm", "snn").boundary_blocks() == [0, 1, 2, 3]
+
+    def test_hnn_cuts_every_k_blocks(self):
+        assert _small("lm", "hnn", cut_every=2).boundary_blocks() == [1]
+        cfg8 = _small("lm", "hnn", n_blocks=8, cut_every=2)
+        assert cfg8.boundary_blocks() == [1, 3, 5]
+
+    def test_hnn_never_cuts_after_last_block(self):
+        for k in (1, 2, 4):
+            cfg = _small("lm", "hnn", n_blocks=8, cut_every=k)
+            assert (cfg.n_blocks - 1) not in cfg.boundary_blocks()
+
+    def test_n_rate_outputs_min_one(self):
+        assert M.n_rate_outputs(_small("lm", "ann")) == 1
+        assert M.n_rate_outputs(_small("lm", "snn")) == 4
+
+
+# ---------------------------------------------------------------------------
+# Forward shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", M.FAMILIES)
+@pytest.mark.parametrize("variant", M.VARIANTS)
+class TestForward:
+    def test_shapes(self, family, variant):
+        cfg = _small(family, variant)
+        params = M.init_params(cfg)
+        x, _ = _batch(cfg)
+        logits, rates, totals = M.forward(cfg, params, x)
+        if family == "lm":
+            assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+        else:
+            assert logits.shape == (cfg.batch, cfg.classes)
+        assert rates.shape == (M.n_rate_outputs(cfg),)
+        assert totals.shape == rates.shape
+
+    def test_finite(self, family, variant):
+        cfg = _small(family, variant)
+        params = M.init_params(cfg)
+        x, _ = _batch(cfg)
+        logits, rates, _ = M.forward(cfg, params, x)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert bool(jnp.all(rates >= 0)) and bool(jnp.all(rates <= 1))
+
+    def test_ann_rates_zero(self, family, variant):
+        if variant != "ann":
+            pytest.skip("ann only")
+        cfg = _small(family, variant)
+        params = M.init_params(cfg)
+        x, _ = _batch(cfg)
+        _, rates, totals = M.forward(cfg, params, x)
+        assert float(jnp.sum(rates)) == 0.0 and float(jnp.sum(totals)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Loss / Eq. 10
+# ---------------------------------------------------------------------------
+
+
+class TestLoss:
+    def test_hinge_regularizer_inactive_below_budget(self):
+        """With a budget above the measured rate, loss == CE exactly."""
+        cfg = _small("lm", "hnn")
+        params = M.init_params(cfg)
+        x, y = _batch(cfg)
+        l0, (ce0, _, rates, _) = M.loss_fn(cfg, params, x, y, 10.0, 1.0)
+        assert float(l0) == pytest.approx(float(ce0))
+        l1, (ce1, _, _, _) = M.loss_fn(cfg, params, x, y, 10.0, 0.0)
+        assert float(l1) >= float(ce1)
+        if float(jnp.sum(rates)) > 0:
+            assert float(l1) > float(ce1)
+
+    def test_lambda_scales_penalty(self):
+        cfg = _small("lm", "snn")
+        params = M.init_params(cfg)
+        x, y = _batch(cfg)
+        l1, (ce, _, rates, _) = M.loss_fn(cfg, params, x, y, 1.0, 0.0)
+        l2, _ = M.loss_fn(cfg, params, x, y, 2.0, 0.0)
+        pen1, pen2 = float(l1) - float(ce), float(l2) - float(ce)
+        assert pen2 == pytest.approx(2 * pen1, rel=1e-4)
+
+    def test_grad_finite_all_variants(self):
+        for fam in M.FAMILIES:
+            for var in M.VARIANTS:
+                cfg = _small(fam, var)
+                params = M.init_params(cfg)
+                x, y = _batch(cfg)
+                g = jax.grad(
+                    lambda p: M.loss_fn(cfg, p, x, y, 0.1, 0.1)[0]
+                )(params)
+                flat, _ = M.flatten_params(g)
+                assert bool(jnp.all(jnp.isfinite(flat))), (fam, var)
+
+    def test_sparsity_penalty_has_gradient(self):
+        """The spike-rate penalty must backprop into the weights (surrogate
+        path alive) — this is what makes the sparsification *learnable*."""
+        cfg = _small("lm", "snn")
+        params = M.init_params(cfg)
+        x, y = _batch(cfg)
+
+        def pen_only(p):
+            _, (_, _, rates, _) = M.loss_fn(cfg, p, x, y, 0.0, 0.0)
+            return jnp.sum(rates)
+
+        g = jax.grad(pen_only)(params)
+        flat, _ = M.flatten_params(g)
+        assert float(jnp.sum(jnp.abs(flat))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Train step (the exported computation)
+# ---------------------------------------------------------------------------
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("family,variant", [("lm", "hnn"), ("vision", "snn")])
+    def test_loss_decreases(self, family, variant):
+        cfg = _small(family, variant)
+        ex = M.make_exports(cfg)
+        ts = jax.jit(ex["train_step"])
+        p = jnp.asarray(ex["init_flat"])
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        step = jnp.asarray(0.0)
+        x, y = _batch(cfg)
+        first = None
+        for _ in range(30):
+            p, m, v, step, loss, ce, rates = ts(p, m, v, step, x, y, 0.0, 1.0)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+    def test_sparsity_regularizer_reduces_rates(self):
+        """Training with a strong lambda and zero budget must push the mean
+        spike rate down vs. training without it — learnable sparsification."""
+        cfg = _small("lm", "snn")
+        ex = M.make_exports(cfg)
+        ts = jax.jit(ex["train_step"])
+        x, y = _batch(cfg)
+
+        def run(lam):
+            p = jnp.asarray(ex["init_flat"])
+            m = jnp.zeros_like(p)
+            v = jnp.zeros_like(p)
+            step = jnp.asarray(0.0)
+            for _ in range(40):
+                p, m, v, step, loss, ce, rates = ts(p, m, v, step, x, y, lam, 0.0)
+            return float(jnp.mean(rates))
+
+        assert run(5.0) < run(0.0)
+
+    def test_step_counter_increments(self):
+        cfg = _small("lm", "ann")
+        ex = M.make_exports(cfg)
+        ts = jax.jit(ex["train_step"])
+        p = jnp.asarray(ex["init_flat"])
+        x, y = _batch(cfg)
+        out = ts(p, jnp.zeros_like(p), jnp.zeros_like(p), 0.0, x, y, 0.0, 1.0)
+        assert float(out[3]) == 1.0
+
+    def test_eval_and_predict_shapes(self):
+        cfg = _small("vision", "hnn")
+        ex = M.make_exports(cfg)
+        x, y = _batch(cfg)
+        p = jnp.asarray(ex["init_flat"])
+        ce, metric, rates, totals = jax.jit(ex["eval_step"])(p, x, y)
+        assert ce.shape == () and metric.shape == ()
+        assert rates.shape == (ex["n_rates"],)
+        logits, rates2 = jax.jit(ex["predict"])(p, x)
+        assert logits.shape == (cfg.batch, cfg.classes)
+
+    def test_param_count_matches_init(self):
+        for fam in M.FAMILIES:
+            cfg = _small(fam, "hnn")
+            ex = M.make_exports(cfg)
+            assert ex["init_flat"].shape == (ex["param_count"],)

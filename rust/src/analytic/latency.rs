@@ -1,0 +1,191 @@
+//! Latency model — Eqs. (6)-(9) of §4.3.
+//!
+//! * Eq. 6/7: per-layer compute cycles. MAC and ACC both take 1 cycle; the
+//!   layer's ops spread over its parallel lanes `G x ceil(N/G)`.
+//! * Eq. 8: EMIO die-to-die overhead. 38-cycle serialization batches run in
+//!   parallel across the `N_c` peripheral cores feeding the pads; the
+//!   38-cycle-deep deserializer is pipelined (1 packet/cycle throughput
+//!   after a 38-cycle fill): single packet = 38 + 38 = 76 cycles, matching
+//!   the synthesized RTL figure of §3.4.
+//! * Eq. 9: total = sum of layer cycles + sum of EMIO cycles over
+//!   boundary-crossing edges.
+
+use crate::arch::params::ArchConfig;
+
+use super::workload::LayerWork;
+
+/// Cycles per MAC and per ACC (§4.3: both 1).
+pub const CYCLES_PER_OP: u64 = 1;
+/// SerDes serialization depth in cycles for one packet (§3.4 RTL: 38).
+pub const CYCLES_SER: u64 = 38;
+/// Deserializer pipeline depth (fill latency) in cycles (§3.4: 38).
+pub const CYCLES_DES: u64 = 38;
+
+/// Eq. 6 / Eq. 7: compute cycles of one layer.
+///
+/// `ops` = MACs or ACCs; `neurons` = N; `grouping` = G. The denominator
+/// `G x ceil(N/G)` is the number of parallel PE lanes the layer occupies.
+pub fn compute_cycles(ops: u64, neurons: u64, grouping: usize) -> u64 {
+    if ops == 0 || neurons == 0 {
+        return 0;
+    }
+    let lanes = grouping as u64 * neurons.div_ceil(grouping as u64);
+    (ops * CYCLES_PER_OP).div_ceil(lanes)
+}
+
+/// Eq. 8: EMIO cycles for `boundary_packets` crossing one die boundary with
+/// `n_boundary_cores` peripheral cores serializing in parallel.
+///
+///   cycles = floor(P_B / N_c) x 38      (parallel serialization batches)
+///          + (P_B + 38)                 (pipelined deserialization: fill
+///                                        depth + 1 packet per cycle)
+///
+/// For a single packet this yields 38 + 39 ≈ the paper's 76-cycle figure
+/// (we count the packet's own drain cycle; the RTL counts 38+38).
+pub fn emio_cycles(boundary_packets: u64, n_boundary_cores: usize) -> u64 {
+    if boundary_packets == 0 {
+        return 0;
+    }
+    let nc = n_boundary_cores.max(1) as u64;
+    let ser = (boundary_packets / nc) * CYCLES_SER;
+    let des = boundary_packets + CYCLES_DES;
+    ser + des
+}
+
+/// Single-packet die-to-die latency (the §3.4 RTL measurement): 76 cycles.
+pub fn emio_single_packet_cycles() -> u64 {
+    // one serialization batch + pipeline fill; the drain cycle of the lone
+    // packet is folded into the fill depth per the RTL measurement.
+    CYCLES_SER + CYCLES_DES
+}
+
+/// Per-layer latency result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerLatency {
+    pub layer_idx: usize,
+    pub compute_cycles: u64,
+    pub emio_cycles: u64,
+}
+
+/// Eq. 9: total inference latency over all layers and boundary edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyReport {
+    pub per_layer: Vec<LayerLatency>,
+    pub compute_cycles: u64,
+    pub emio_cycles: u64,
+    pub total_cycles: u64,
+    pub seconds: f64,
+}
+
+/// Evaluate the latency model for a workload vector.
+pub fn latency(works: &[LayerWork], cfg: &ArchConfig) -> LatencyReport {
+    let mut per_layer = Vec::with_capacity(works.len());
+    let mut compute_total = 0u64;
+    let mut emio_total = 0u64;
+    for w in works {
+        let cc = compute_cycles(w.ops, w.neurons, cfg.grouping);
+        // Each die crossing on the egress edge pays one EMIO traversal;
+        // N_c is capped by both the layer span and the pad ports (Eq. 8).
+        let nc = w.cores.min(cfg.emio_pad_ports()).max(1);
+        let per_crossing = emio_cycles(w.local_packets, nc);
+        let ec = per_crossing * w.die_crossings as u64;
+        compute_total += cc;
+        emio_total += ec;
+        per_layer.push(LayerLatency { layer_idx: w.layer_idx, compute_cycles: cc, emio_cycles: ec });
+    }
+    let total = compute_total + emio_total;
+    LatencyReport {
+        per_layer,
+        compute_cycles: compute_total,
+        emio_cycles: emio_total,
+        total_cycles: total,
+        seconds: total as f64 * cfg.cycle_s(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::params::Variant;
+
+    #[test]
+    fn eq6_dense_layer() {
+        // 256 neurons, fan-in 256 => 65536 MACs over 256 lanes = 256 cycles
+        assert_eq!(compute_cycles(65_536, 256, 256), 256);
+    }
+
+    #[test]
+    fn eq7_spiking_layer_fewer_cycles() {
+        // ACCs = MACs * 0.8 at 10% activity, T=8
+        let macs = 65_536u64;
+        let accs = (macs as f64 * 0.8) as u64;
+        assert!(compute_cycles(accs, 256, 256) < compute_cycles(macs, 256, 256));
+    }
+
+    #[test]
+    fn grouping_sweep_lane_math() {
+        // N=512, G=256 -> lanes 512; G=64 -> lanes 512 as well (64*8);
+        // but N=100, G=256 -> lanes 256 vs G=64 -> 128: smaller grouping
+        // wastes fewer idle lanes on small layers.
+        assert_eq!(compute_cycles(51_200, 100, 256), 200);
+        assert_eq!(compute_cycles(51_200, 100, 64), 400);
+    }
+
+    #[test]
+    fn eq8_single_packet_is_76_cycles() {
+        // §3.4: synthesized RTL: 76 cycles die-to-die for a single packet.
+        assert_eq!(emio_single_packet_cycles(), 76);
+        // the streaming formula counts the lone packet's drain cycle too:
+        // floor(1/1)*38 + (1 + 38) = 77 — one cycle over the RTL figure.
+        assert_eq!(emio_cycles(1, 1), 77);
+    }
+
+    #[test]
+    fn eq8_pipelining_beats_serial() {
+        // 1000 packets via 8 cores: serialization batches (125 x 38) plus
+        // pipelined drain (1000 + 38) — far below the un-pipelined
+        // 1000 x 76 bound.
+        let c = emio_cycles(1000, 8);
+        assert_eq!(c, (1000 / 8) * 38 + 1000 + 38);
+        assert!(c < 1000 * 76);
+    }
+
+    #[test]
+    fn eq8_more_boundary_cores_help() {
+        assert!(emio_cycles(10_000, 8) < emio_cycles(10_000, 1));
+    }
+
+    #[test]
+    fn eq8_zero_packets_zero_cycles() {
+        assert_eq!(emio_cycles(0, 8), 0);
+    }
+
+    #[test]
+    fn eq9_totals_and_seconds() {
+        use crate::analytic::workload::LayerWork;
+        use crate::model::partition::{ComputeMode, TrafficMode};
+        let works = vec![LayerWork {
+            layer_idx: 0,
+            name: "l0".into(),
+            compute: ComputeMode::Mac,
+            egress: TrafficMode::Dense,
+            ops: 65_536,
+            local_packets: 256,
+            routed_packets: 512,
+            avg_hops: 2.0,
+            boundary_packets: 256,
+            die_crossings: 1,
+            cores: 1,
+            neurons: 256,
+            synapse_iterations: 1,
+            activity: 0.0,
+        }];
+        let cfg = ArchConfig::baseline(Variant::Ann);
+        let rep = latency(&works, &cfg);
+        assert_eq!(rep.compute_cycles, 256);
+        assert_eq!(rep.emio_cycles, emio_cycles(256, 1));
+        assert_eq!(rep.total_cycles, rep.compute_cycles + rep.emio_cycles);
+        let expect_s = rep.total_cycles as f64 / 200e6;
+        assert!((rep.seconds - expect_s).abs() < 1e-15);
+    }
+}

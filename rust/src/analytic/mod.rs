@@ -1,0 +1,217 @@
+//! Closed-form latency + energy engine — the evaluation pipeline of §4
+//! (Fig. 6 workflow): map a network onto an ANN/SNN/HNN chip array,
+//! partition it, count ops and packets, and evaluate Eqs. 4-9 plus the
+//! ORION-scaled energy model.
+//!
+//! This engine produces every paper figure (10-13) and sweep (Fig. 7's
+//! latency axis). The cycle-level `noc` simulator cross-validates its
+//! constants (EMIO 76-cycle claim, hop counts).
+
+pub mod energy;
+pub mod latency;
+pub mod workload;
+
+use crate::arch::params::{ArchConfig, Variant};
+use crate::model::layer::Network;
+use crate::model::mapping::{map_network, Mapping};
+use crate::model::partition::{partition, Partition};
+use crate::sparsity::SparsityProfile;
+
+pub use energy::{EnergyBreakdown, EnergyTable};
+pub use latency::LatencyReport;
+pub use workload::LayerWork;
+
+/// Full simulation result for one (network, arch, sparsity) triple.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub network: String,
+    pub variant: Variant,
+    pub cfg: ArchConfig,
+    pub works: Vec<LayerWork>,
+    pub latency: LatencyReport,
+    pub energy: EnergyBreakdown,
+    pub n_chips: usize,
+    pub total_cores: usize,
+    /// Total packets crossing die boundaries per inference.
+    pub boundary_packets: u64,
+    /// Total routed packets per inference.
+    pub routed_packets: u64,
+    /// Total ops (MACs + ACCs).
+    pub total_ops: u64,
+}
+
+impl SimReport {
+    /// Inferences per second.
+    pub fn throughput(&self) -> f64 {
+        if self.latency.seconds > 0.0 {
+            1.0 / self.latency.seconds
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Energy per inference (J).
+    pub fn energy_j(&self) -> f64 {
+        self.energy.total_j()
+    }
+}
+
+/// Run the analytic simulation.
+pub fn simulate(net: &Network, cfg: &ArchConfig, profile: &SparsityProfile) -> SimReport {
+    let mapping = map_network(net, cfg);
+    let part = partition(net, &mapping, cfg);
+    simulate_mapped(net, cfg, profile, &mapping, &part)
+}
+
+/// Variant that reuses an existing mapping/partition (for sweeps that hold
+/// the placement fixed).
+pub fn simulate_mapped(
+    net: &Network,
+    cfg: &ArchConfig,
+    profile: &SparsityProfile,
+    mapping: &Mapping,
+    part: &Partition,
+) -> SimReport {
+    let works = workload::layer_workloads(net, mapping, part, cfg, profile);
+    let lat = latency::latency(&works, cfg);
+    let en = energy::energy(&works, cfg);
+    SimReport {
+        network: net.name.clone(),
+        variant: cfg.variant,
+        cfg: cfg.clone(),
+        boundary_packets: works.iter().map(|w| w.boundary_packets).sum(),
+        routed_packets: works.iter().map(|w| w.routed_packets).sum(),
+        total_ops: works.iter().map(|w| w.ops).sum(),
+        n_chips: mapping.n_chips,
+        total_cores: mapping.total_cores,
+        works,
+        latency: lat,
+        energy: en,
+    }
+}
+
+/// Convenience: simulate all three variants of one network with the
+/// paper's default sparsity assumptions (uniform `input_activity` for
+/// spiking layers; ANN unaffected).
+pub fn simulate_variants(net: &Network, base: &ArchConfig) -> [SimReport; 3] {
+    let mk = |v: Variant| {
+        let mut cfg = base.clone();
+        cfg.variant = v;
+        let profile = SparsityProfile::uniform(net.layers.len(), cfg.input_activity);
+        simulate(net, &cfg, &profile)
+    };
+    [mk(Variant::Ann), mk(Variant::Snn), mk(Variant::Hnn)]
+}
+
+/// Speedup of `b` over `a` in latency (a.latency / b.latency).
+pub fn speedup(a: &SimReport, b: &SimReport) -> f64 {
+    a.latency.total_cycles as f64 / b.latency.total_cycles.max(1) as f64
+}
+
+/// Energy-efficiency gain of `b` over `a` (a.energy / b.energy).
+pub fn efficiency_gain(a: &SimReport, b: &SimReport) -> f64 {
+    a.energy_j() / b.energy_j().max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::networks;
+
+    fn base() -> ArchConfig {
+        ArchConfig::baseline(Variant::Hnn)
+    }
+
+    #[test]
+    fn three_variants_same_chip_demand() {
+        // Mapping is variant-independent (same grouping/mesh).
+        let net = networks::msresnet18();
+        let [ann, snn, hnn] = simulate_variants(&net, &base());
+        assert_eq!(ann.n_chips, snn.n_chips);
+        assert_eq!(ann.n_chips, hnn.n_chips);
+        assert!(ann.n_chips > 1, "MS-ResNet18 must span multiple chips");
+    }
+
+    #[test]
+    fn hnn_faster_than_ann_on_multichip_models() {
+        // §5.2: HNN achieves the fastest inference latency on static data.
+        for name in ["ms-resnet18", "rwkv-6l-512"] {
+            let net = networks::by_name(name).unwrap();
+            let [ann, _snn, hnn] = simulate_variants(&net, &base());
+            if ann.boundary_packets > 0 {
+                assert!(
+                    speedup(&ann, &hnn) > 1.0,
+                    "{name}: ann={} hnn={}",
+                    ann.latency.total_cycles,
+                    hnn.latency.total_cycles
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hnn_cheaper_than_ann_in_energy() {
+        // §5.3: baseline HNN is 1x-3.3x more energy efficient than ANN.
+        let net = networks::msresnet18();
+        let [ann, _snn, hnn] = simulate_variants(&net, &base());
+        let gain = efficiency_gain(&ann, &hnn);
+        assert!(gain >= 1.0, "gain={gain}");
+        assert!(gain < 10.0, "gain implausibly large: {gain}");
+    }
+
+    #[test]
+    fn hnn_boundary_traffic_below_ann() {
+        let net = networks::msresnet18();
+        let [ann, _snn, hnn] = simulate_variants(&net, &base());
+        assert!(hnn.boundary_packets < ann.boundary_packets);
+    }
+
+    #[test]
+    fn snn_fewest_routed_packets() {
+        // all-spiking traffic at 10%x8 ticks = 0.8 packets/neuron < 1
+        let net = networks::msresnet18();
+        let [ann, snn, _hnn] = simulate_variants(&net, &base());
+        assert!(snn.routed_packets < ann.routed_packets);
+    }
+
+    #[test]
+    fn effnet_needs_most_chips() {
+        // §5.3: EffNet-B4 requires far more chips than MS-ResNet18 > RWKV.
+        let e = simulate(
+            &networks::efficientnet_b4(),
+            &base(),
+            &SparsityProfile::uniform(300, 0.1),
+        );
+        let m = simulate(
+            &networks::msresnet18(),
+            &base(),
+            &SparsityProfile::uniform(30, 0.1),
+        );
+        let r = simulate(&networks::rwkv_6l_512(), &base(), &SparsityProfile::uniform(50, 0.1));
+        assert!(e.n_chips > 10 * m.n_chips, "e={} m={}", e.n_chips, m.n_chips);
+        assert!(m.n_chips > r.n_chips, "m={} r={}", m.n_chips, r.n_chips);
+    }
+
+    #[test]
+    fn higher_sparsity_lower_latency() {
+        // Fig. 7: latency improves with sparsity.
+        let net = networks::msresnet18();
+        let cfg = ArchConfig::baseline(Variant::Hnn);
+        let lo = simulate(&net, &cfg, &SparsityProfile::uniform(net.layers.len(), 0.3));
+        let hi = simulate(&net, &cfg, &SparsityProfile::uniform(net.layers.len(), 0.02));
+        assert!(hi.latency.total_cycles < lo.latency.total_cycles);
+    }
+
+    #[test]
+    fn bit_width_grows_hnn_advantage() {
+        // Fig. 11: speedup grows with bit precision (dense packets scale
+        // with bits, spikes don't).
+        let net = networks::msresnet18();
+        let sp = |bits: u32| {
+            let cfg = base().with_bits(bits);
+            let [ann, _snn, hnn] = simulate_variants(&net, &cfg);
+            speedup(&ann, &hnn)
+        };
+        assert!(sp(32) > sp(8), "32b={} 8b={}", sp(32), sp(8));
+    }
+}

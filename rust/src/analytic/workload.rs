@@ -1,0 +1,189 @@
+//! Per-layer operation & packet accounting (§4.2).
+//!
+//! For each layer of a partitioned, mapped network this computes:
+//!
+//! * **ops** — MACs (dense layers) or ACCs (spiking layers; one accumulate
+//!   per presynaptic spike event = MACs x activity x T);
+//! * **local packets** — intra-core deliveries through the local port: the
+//!   layer's egress traffic. Dense activations need `ceil(bits/8)` packets
+//!   each (Table 3 payload is 8-bit); spikes are single-bit events, so a
+//!   neuron emits `activity x T` packets per inference;
+//! * **routed packets** — Eq. 5: local packets x AverageHops (Eq. 4);
+//! * **boundary packets** — the subset of egress that crosses die(s).
+
+use crate::arch::params::ArchConfig;
+use crate::model::layer::Network;
+use crate::model::mapping::Mapping;
+use crate::model::partition::{ComputeMode, Partition, TrafficMode};
+use crate::sparsity::SparsityProfile;
+
+/// Workload of one layer (per single-input inference).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerWork {
+    pub layer_idx: usize,
+    pub name: String,
+    pub compute: ComputeMode,
+    pub egress: TrafficMode,
+    /// MACs or ACCs depending on `compute`.
+    pub ops: u64,
+    /// Packets delivered through local ports (egress of this layer).
+    pub local_packets: u64,
+    /// Eq. 5: local x average hops.
+    pub routed_packets: u64,
+    /// Average hops for this layer's egress (Eq. 4).
+    pub avg_hops: f64,
+    /// Packets crossing die boundaries (x number of crossings).
+    pub boundary_packets: u64,
+    /// Die crossings on the egress edge.
+    pub die_crossings: usize,
+    /// Cores allocated.
+    pub cores: usize,
+    /// Neurons in this layer.
+    pub neurons: u64,
+    /// Weight-reload iterations (fan-in > 256 axons).
+    pub synapse_iterations: u32,
+    /// Firing activity used (spiking layers only; 0 for dense).
+    pub activity: f64,
+}
+
+/// Packets one dense activation needs on the wire: 8-bit payload per packet.
+pub fn dense_packets_per_neuron(bits: u32) -> u64 {
+    (bits as u64).div_ceil(8)
+}
+
+/// Spike packets one neuron emits per inference: activity x T events.
+pub fn spike_packets_per_neuron(activity: f64, ticks: u32) -> f64 {
+    activity * ticks as f64
+}
+
+/// Compute the full per-layer workload vector.
+pub fn layer_workloads(
+    net: &Network,
+    mapping: &Mapping,
+    part: &Partition,
+    cfg: &ArchConfig,
+    profile: &SparsityProfile,
+) -> Vec<LayerWork> {
+    let n = net.layers.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let layer = &net.layers[i];
+        let pl = &part.layers[i];
+        let place = &mapping.placements[i];
+        let act = profile.activity_of(i);
+
+        let ops = match pl.compute {
+            ComputeMode::Mac => layer.macs(),
+            ComputeMode::Acc => layer.accs(act, cfg.ticks),
+        };
+
+        let local_packets = match pl.egress {
+            TrafficMode::Dense => layer.neurons() * dense_packets_per_neuron(cfg.bits),
+            TrafficMode::Spike => {
+                (layer.neurons() as f64 * spike_packets_per_neuron(act, cfg.ticks)).round() as u64
+            }
+        };
+
+        let avg_hops = if i + 1 < n { mapping.average_hops(i, i + 1, cfg) } else { 1.0 };
+        let routed_packets = (local_packets as f64 * avg_hops).round() as u64;
+        let boundary_packets = local_packets * pl.die_crossings as u64;
+
+        out.push(LayerWork {
+            layer_idx: i,
+            name: layer.name.clone(),
+            compute: pl.compute,
+            egress: pl.egress,
+            ops,
+            local_packets,
+            routed_packets,
+            avg_hops,
+            boundary_packets,
+            die_crossings: pl.die_crossings,
+            cores: place.cores,
+            neurons: layer.neurons(),
+            synapse_iterations: place.synapse_iterations,
+            activity: if pl.compute == ComputeMode::Acc { act } else { 0.0 },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::params::Variant;
+    use crate::model::layer::{Layer, LayerKind};
+    use crate::model::mapping::map_network;
+    use crate::model::partition::partition;
+
+    fn setup(variant: Variant, n_layers: usize) -> Vec<LayerWork> {
+        let cfg = ArchConfig::baseline(variant);
+        let net = Network {
+            name: "t".into(),
+            layers: (0..n_layers)
+                .map(|i| Layer::new(format!("l{i}"), LayerKind::Dense { in_f: 256, out_f: 256 }))
+                .collect(),
+        };
+        let m = map_network(&net, &cfg);
+        let p = partition(&net, &m, &cfg);
+        layer_workloads(&net, &m, &p, &cfg, &SparsityProfile::uniform(n_layers, 0.1))
+    }
+
+    #[test]
+    fn ann_dense_packet_math() {
+        let w = setup(Variant::Ann, 4);
+        // 256 neurons, 8-bit -> 1 packet each
+        assert_eq!(w[0].local_packets, 256);
+        assert_eq!(w[0].ops, 256 * 256); // MACs
+        assert_eq!(w[0].boundary_packets, 0); // single chip
+    }
+
+    #[test]
+    fn snn_spike_packet_math() {
+        let w = setup(Variant::Snn, 4);
+        // activity 0.1, T=8 -> 0.8 packets/neuron -> 204.8 -> 205
+        assert_eq!(w[0].local_packets, 205);
+        // ACCs = MACs * 0.1 * 8
+        assert_eq!(w[0].ops, 52_429); // round(65536 * 0.1 * 8)
+    }
+
+    #[test]
+    fn bits_scale_dense_not_spike() {
+        assert_eq!(dense_packets_per_neuron(8), 1);
+        assert_eq!(dense_packets_per_neuron(16), 2);
+        assert_eq!(dense_packets_per_neuron(32), 4);
+        assert_eq!(dense_packets_per_neuron(4), 1);
+        // spikes: unchanged by precision
+        assert!((spike_packets_per_neuron(0.1, 8) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routed_ge_local() {
+        for v in Variant::ALL {
+            for w in setup(v, 8) {
+                assert!(w.routed_packets >= w.local_packets);
+                assert!(w.avg_hops >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_chip_boundary_packets() {
+        let cfg = ArchConfig::baseline(Variant::Hnn);
+        let net = Network {
+            name: "t".into(),
+            layers: (0..100)
+                .map(|i| Layer::new(format!("l{i}"), LayerKind::Dense { in_f: 256, out_f: 256 }))
+                .collect(),
+        };
+        let m = map_network(&net, &cfg);
+        let p = partition(&net, &m, &cfg);
+        let w = layer_workloads(&net, &m, &p, &cfg, &SparsityProfile::uniform(100, 0.1));
+        let crossing: Vec<_> = w.iter().filter(|l| l.boundary_packets > 0).collect();
+        assert_eq!(crossing.len(), 1);
+        // HNN: the crossing layer sends spikes -> 205 boundary packets,
+        // not 256 dense ones.
+        assert_eq!(crossing[0].boundary_packets, 205);
+        assert_eq!(crossing[0].compute, ComputeMode::Acc);
+    }
+}

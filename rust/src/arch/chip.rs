@@ -1,0 +1,177 @@
+//! Chip geometry: the N x N tile grid, boundary/interior classification,
+//! and the multi-chip array (§3.1-§3.2, Fig. 2).
+
+use super::core::CoreKind;
+use super::params::{ArchConfig, Variant};
+
+/// A core coordinate on one chip's mesh (x = column/East, y = row/North).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: u16,
+    pub y: u16,
+}
+
+impl Coord {
+    pub fn new(x: usize, y: usize) -> Self {
+        Coord { x: x as u16, y: y as u16 }
+    }
+
+    /// Manhattan distance — the X-Y route length between two cores.
+    pub fn manhattan(&self, other: &Coord) -> u32 {
+        (self.x.abs_diff(other.x) + self.y.abs_diff(other.y)) as u32
+    }
+}
+
+/// One chip: an N x N grid of core tiles plus its EMIO boundary interface.
+#[derive(Debug, Clone)]
+pub struct Chip {
+    pub dim: usize,
+    pub variant: Variant,
+}
+
+impl Chip {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Chip { dim: cfg.noc_dim, variant: cfg.variant }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.dim * self.dim
+    }
+
+    /// Is this tile on the peripheral ring?
+    pub fn is_boundary(&self, c: Coord) -> bool {
+        let n = self.dim as u16;
+        c.x == 0 || c.y == 0 || c.x == n - 1 || c.y == n - 1
+    }
+
+    /// Core type at a coordinate for this chip's variant (Fig. 2b: SNN
+    /// peripheral cores, ANN interior grid in the HNN).
+    pub fn core_kind(&self, c: Coord) -> CoreKind {
+        match self.variant {
+            Variant::Ann => CoreKind::Artificial,
+            Variant::Snn => CoreKind::Spiking,
+            Variant::Hnn => {
+                if self.is_boundary(c) {
+                    CoreKind::Spiking
+                } else {
+                    CoreKind::Artificial
+                }
+            }
+        }
+    }
+
+    /// All coordinates, row-major.
+    pub fn coords(&self) -> impl Iterator<Item = Coord> + '_ {
+        let n = self.dim;
+        (0..n).flat_map(move |y| (0..n).map(move |x| Coord::new(x, y)))
+    }
+
+    /// Coordinates of a given kind.
+    pub fn coords_of(&self, kind: CoreKind) -> Vec<Coord> {
+        self.coords().filter(|&c| self.core_kind(c) == kind).collect()
+    }
+
+    /// The "middle core coordinate" used by the Eq. 4 hop model: the
+    /// centroid of a contiguous row-major span of `count` cores starting at
+    /// linear index `start`.
+    pub fn span_midpoint(&self, start: usize, count: usize) -> (f64, f64) {
+        debug_assert!(count > 0);
+        let n = self.dim;
+        let mid = start + count / 2;
+        let mid = mid.min(n * n - 1);
+        ((mid % n) as f64, (mid / n) as f64)
+    }
+}
+
+/// Multi-chip array geometry: chips are arranged in a 1-D chain for the
+/// directional-X mapping of §4.2 (layers flow East, repeater cores extend
+/// the route across up to 8 chips in any direction).
+#[derive(Debug, Clone)]
+pub struct ChipArray {
+    pub chip: Chip,
+    pub n_chips: usize,
+}
+
+impl ChipArray {
+    pub fn new(cfg: &ArchConfig, n_chips: usize) -> Self {
+        ChipArray { chip: Chip::new(cfg), n_chips: n_chips.max(1) }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.n_chips * self.chip.cores()
+    }
+
+    /// Which chip a global linear core index falls on.
+    pub fn chip_of(&self, core_idx: usize) -> usize {
+        core_idx / self.chip.cores()
+    }
+
+    /// Die crossings between two global core indices under the chain layout.
+    pub fn die_crossings(&self, a: usize, b: usize) -> usize {
+        self.chip_of(a).abs_diff(self.chip_of(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hnn_chip() -> Chip {
+        Chip::new(&ArchConfig::baseline(Variant::Hnn))
+    }
+
+    #[test]
+    fn boundary_interior_split_8x8() {
+        let chip = hnn_chip();
+        let b = chip.coords_of(CoreKind::Spiking).len();
+        let i = chip.coords_of(CoreKind::Artificial).len();
+        assert_eq!((b, i), (28, 36)); // Table 1 HNN split
+    }
+
+    #[test]
+    fn ann_chip_all_artificial() {
+        let chip = Chip::new(&ArchConfig::baseline(Variant::Ann));
+        assert_eq!(chip.coords_of(CoreKind::Spiking).len(), 0);
+        assert_eq!(chip.coords_of(CoreKind::Artificial).len(), 64);
+    }
+
+    #[test]
+    fn snn_chip_all_spiking() {
+        let chip = Chip::new(&ArchConfig::baseline(Variant::Snn));
+        assert_eq!(chip.coords_of(CoreKind::Spiking).len(), 64);
+    }
+
+    #[test]
+    fn corners_are_boundary() {
+        let chip = hnn_chip();
+        for c in [Coord::new(0, 0), Coord::new(7, 0), Coord::new(0, 7), Coord::new(7, 7)] {
+            assert!(chip.is_boundary(c));
+            assert_eq!(chip.core_kind(c), CoreKind::Spiking);
+        }
+        assert_eq!(chip.core_kind(Coord::new(3, 4)), CoreKind::Artificial);
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(Coord::new(0, 0).manhattan(&Coord::new(3, 4)), 7);
+        assert_eq!(Coord::new(5, 5).manhattan(&Coord::new(5, 5)), 0);
+    }
+
+    #[test]
+    fn span_midpoint_center_of_mesh() {
+        let chip = hnn_chip();
+        let (x, y) = chip.span_midpoint(0, 64);
+        assert_eq!((x, y), (0.0, 4.0)); // linear index 32 -> (0, 4)
+        let (x, y) = chip.span_midpoint(0, 1);
+        assert_eq!((x, y), (0.0, 0.0));
+    }
+
+    #[test]
+    fn chip_array_crossings() {
+        let arr = ChipArray::new(&ArchConfig::baseline(Variant::Hnn), 4);
+        assert_eq!(arr.total_cores(), 256);
+        assert_eq!(arr.die_crossings(0, 63), 0); // same chip
+        assert_eq!(arr.die_crossings(0, 64), 1); // adjacent chips
+        assert_eq!(arr.die_crossings(10, 200), 3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Architecture description — Tables 1-3 of the paper as executable code.
+//!
+//! * [`params`] — [`params::ArchConfig`]: Table 1 + the Fig. 11/13 sweep axes.
+//! * [`core`]   — [`core::CoreSpec`]: Table 2 core designs with SRAM sizing
+//!   derived from entry widths.
+//! * [`packet`] — [`packet::Packet`]: Table 3 wire format + 38-bit D2D frame.
+//! * [`chip`]   — chip/tile geometry and the multi-chip array.
+
+pub mod chip;
+pub mod core;
+pub mod packet;
+pub mod params;
+
+pub use self::core::{CoreKind, CoreSpec};
+pub use chip::{Chip, ChipArray, Coord};
+pub use packet::{Packet, PacketType};
+pub use params::{ArchConfig, Variant};

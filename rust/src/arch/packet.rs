@@ -1,0 +1,194 @@
+//! Packet structure — Table 3 + §3.4 of the paper.
+//!
+//! A NoC packet is 35 bits: dx(9) dy(9) type(1) axon(8) payload(8); spiking
+//! payloads carry 4 delivery-tick bits + 4 padding bits. Crossing a die adds
+//! a 3-bit origin/destination port tag for a 38-bit SerDes frame.
+//!
+//! The codec packs into a `u64` with explicit field offsets and is verified by
+//! exhaustive-ish round-trip tests (every field at its extremes + random
+//! sweeps from the crate PRNG).
+
+/// Payload interpretation — the 1-bit `type` field of Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PacketType {
+    /// 8-bit activation payload (artificial packet).
+    Activation,
+    /// Spike event; payload carries a 4-bit delivery tick + 4b padding.
+    Spike,
+}
+
+/// Signed 9-bit relative core displacement (two's complement, ±255).
+pub const DXY_BITS: u32 = 9;
+pub const DXY_MAX: i32 = 255;
+pub const DXY_MIN: i32 = -256;
+
+/// A decoded NoC packet (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packet {
+    /// Relative X hops remaining (East positive), 9-bit signed.
+    pub dx: i32,
+    /// Relative Y hops remaining (North positive), 9-bit signed.
+    pub dy: i32,
+    pub ty: PacketType,
+    /// Destination axon index within the target core (0..=255).
+    pub axon: u8,
+    /// Activation value, or (tick << 4) for spikes.
+    pub payload: u8,
+}
+
+pub const PACKET_BITS: u32 = 2 * DXY_BITS + 1 + 8 + 8; // 35
+pub const D2D_TAG_BITS: u32 = 3;
+pub const D2D_FRAME_BITS: u32 = PACKET_BITS + D2D_TAG_BITS; // 38
+
+impl Packet {
+    pub fn activation(dx: i32, dy: i32, axon: u8, value: u8) -> Self {
+        Packet { dx, dy, ty: PacketType::Activation, axon, payload: value }
+    }
+
+    pub fn spike(dx: i32, dy: i32, axon: u8, tick: u8) -> Self {
+        debug_assert!(tick < 16, "delivery tick is 4-bit");
+        Packet { dx, dy, ty: PacketType::Spike, axon, payload: tick & 0x0f }
+    }
+
+    /// Spike delivery tick (lower 4 payload bits).
+    pub fn tick(&self) -> u8 {
+        self.payload & 0x0f
+    }
+
+    /// Encode to the 35-bit on-chip wire format (in the low bits of a u64).
+    ///
+    /// Layout (LSB -> MSB): payload(8) axon(8) type(1) dy(9) dx(9).
+    pub fn encode(&self) -> u64 {
+        debug_assert!((DXY_MIN..=DXY_MAX).contains(&self.dx));
+        debug_assert!((DXY_MIN..=DXY_MAX).contains(&self.dy));
+        let dx9 = (self.dx as u32 & 0x1ff) as u64;
+        let dy9 = (self.dy as u32 & 0x1ff) as u64;
+        let ty = match self.ty {
+            PacketType::Activation => 0u64,
+            PacketType::Spike => 1u64,
+        };
+        (self.payload as u64)
+            | ((self.axon as u64) << 8)
+            | (ty << 16)
+            | (dy9 << 17)
+            | (dx9 << 26)
+    }
+
+    /// Decode the 35-bit wire format.
+    pub fn decode(w: u64) -> Packet {
+        debug_assert!(w < (1u64 << PACKET_BITS));
+        let sext9 = |v: u32| -> i32 {
+            if v & 0x100 != 0 {
+                (v | !0x1ffu32) as i32
+            } else {
+                v as i32
+            }
+        };
+        Packet {
+            payload: (w & 0xff) as u8,
+            axon: ((w >> 8) & 0xff) as u8,
+            ty: if (w >> 16) & 1 == 1 { PacketType::Spike } else { PacketType::Activation },
+            dy: sext9(((w >> 17) & 0x1ff) as u32),
+            dx: sext9(((w >> 26) & 0x1ff) as u32),
+        }
+    }
+
+    /// Tag with a 3-bit origin/destination port for the die-to-die SerDes
+    /// frame (38 bits, §3.4).
+    pub fn encode_d2d(&self, port: u8) -> u64 {
+        debug_assert!(port < 8);
+        self.encode() | ((port as u64) << PACKET_BITS)
+    }
+
+    /// Decode a 38-bit die-to-die frame -> (packet, port tag).
+    pub fn decode_d2d(w: u64) -> (Packet, u8) {
+        debug_assert!(w < (1u64 << D2D_FRAME_BITS));
+        (Packet::decode(w & ((1u64 << PACKET_BITS) - 1)), (w >> PACKET_BITS) as u8)
+    }
+
+    /// Max cores traversable per header (§3.2: "up to 256 cores" before a
+    /// repeater re-maps the route) — one direction's reach.
+    pub fn max_reach_cores() -> usize {
+        (DXY_MAX as usize + 1) + DXY_MIN.unsigned_abs() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bit_budget_matches_table3() {
+        assert_eq!(PACKET_BITS, 35); // 9+9+1+8+8
+        assert_eq!(D2D_FRAME_BITS, 38); // +3-bit tag (§3.4)
+    }
+
+    #[test]
+    fn roundtrip_extremes() {
+        for dx in [DXY_MIN, -1, 0, 1, DXY_MAX] {
+            for dy in [DXY_MIN, -1, 0, 1, DXY_MAX] {
+                for ty in [PacketType::Activation, PacketType::Spike] {
+                    for axon in [0u8, 1, 127, 255] {
+                        for payload in [0u8, 1, 0x0f, 0xff] {
+                            let p = Packet { dx, dy, ty, axon, payload };
+                            let w = p.encode();
+                            assert!(w < (1 << PACKET_BITS));
+                            assert_eq!(Packet::decode(w), p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_sweep() {
+        // property: encode/decode is the identity on every valid packet
+        let mut rng = Rng::new(0xD2D);
+        for _ in 0..20_000 {
+            let p = Packet {
+                dx: rng.range(0, 512) as i32 - 256,
+                dy: rng.range(0, 512) as i32 - 256,
+                ty: if rng.chance(0.5) { PacketType::Spike } else { PacketType::Activation },
+                axon: rng.below(256) as u8,
+                payload: rng.below(256) as u8,
+            };
+            assert_eq!(Packet::decode(p.encode()), p);
+        }
+    }
+
+    #[test]
+    fn d2d_tag_roundtrip() {
+        let mut rng = Rng::new(7);
+        for _ in 0..5_000 {
+            let p = Packet::activation(
+                rng.range(0, 512) as i32 - 256,
+                rng.range(0, 512) as i32 - 256,
+                rng.below(256) as u8,
+                rng.below(256) as u8,
+            );
+            let port = rng.below(8) as u8;
+            let w = p.encode_d2d(port);
+            assert!(w < (1 << D2D_FRAME_BITS));
+            assert_eq!(Packet::decode_d2d(w), (p, port));
+        }
+    }
+
+    #[test]
+    fn spike_tick_is_4_bit() {
+        let p = Packet::spike(0, 0, 3, 15);
+        assert_eq!(p.tick(), 15);
+        let p = Packet::spike(0, 0, 3, 7);
+        assert_eq!(p.tick(), 7);
+    }
+
+    #[test]
+    fn reach_is_512_cores_span() {
+        // 9-bit signed displacement spans 512 core positions; the paper's
+        // "256 cores in any direction before a repeater" is the positive arm
+        // plus the repeater hand-off.
+        assert_eq!(Packet::max_reach_cores(), 512);
+        assert_eq!(DXY_MAX as usize + 1, 256);
+    }
+}

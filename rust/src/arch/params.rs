@@ -1,0 +1,231 @@
+//! Architectural parameters — Table 1 of the paper, plus the sweep axes of
+//! Figs. 11/13 (bit-width, NoC dimensions, neuron grouping).
+
+use std::fmt;
+
+/// Which accelerator the chip array implements (the paper's three columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// All 64 cores artificial (dense MAC compute, dense packets).
+    Ann,
+    /// All 64 cores spiking (ACC compute, spike packets everywhere).
+    Snn,
+    /// The paper's co-design: 28 boundary spiking cores + 36 interior
+    /// artificial cores; spikes cross the die, dense stays inside.
+    Hnn,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 3] = [Variant::Ann, Variant::Snn, Variant::Hnn];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Ann => "ann",
+            Variant::Snn => "snn",
+            Variant::Hnn => "hnn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "ann" => Some(Variant::Ann),
+            "snn" => Some(Variant::Snn),
+            "hnn" => Some(Variant::Hnn),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Full architecture configuration (Table 1 defaults; sweepable fields for
+/// the Fig. 11/13 parameter studies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    pub variant: Variant,
+    /// NoC mesh is `noc_dim x noc_dim` core tiles per chip (paper: 8).
+    pub noc_dim: usize,
+    /// Activation bit precision (paper baseline: 8).
+    pub bits: u32,
+    /// Neurons grouped per core / PE lanes (paper baseline: 256; energy
+    /// sweeps go down to 64 — "smaller neuron-to-PE grouping").
+    pub grouping: usize,
+    /// NoC clock (Hz). Paper: 200 MHz, synchronous everywhere incl. EMIO.
+    pub freq_hz: f64,
+    /// Core supply voltage (V). Paper: 1.0 V at the 65nm node minimum.
+    pub supply_v: f64,
+    /// Technology node (nm) for the energy table; paper: 65.
+    pub tech_nm: u32,
+    /// Rate-coding window T (ticks) for spike conversion (paper: 8).
+    pub ticks: u32,
+    /// Input spiking activity assumed for SNN inputs (paper: 10%).
+    pub input_activity: f64,
+    /// Scheduler max delay in ticks (4-bit delivery time -> 16).
+    pub max_delay_ticks: u32,
+}
+
+impl ArchConfig {
+    /// Table 1 baseline for a variant.
+    pub fn baseline(variant: Variant) -> Self {
+        ArchConfig {
+            variant,
+            noc_dim: 8,
+            bits: 8,
+            grouping: 256,
+            freq_hz: 200e6,
+            supply_v: 1.0,
+            tech_nm: 65,
+            ticks: 8,
+            input_activity: 0.10,
+            max_delay_ticks: 16,
+        }
+    }
+
+    /// Total cores per chip.
+    pub fn cores_per_chip(&self) -> usize {
+        self.noc_dim * self.noc_dim
+    }
+
+    /// Boundary (peripheral ring) core count — spiking cores in the HNN.
+    /// For an N x N mesh this is 4N - 4 (28 for N=8, matching Table 1).
+    pub fn boundary_cores(&self) -> usize {
+        if self.noc_dim <= 1 {
+            self.cores_per_chip()
+        } else {
+            4 * self.noc_dim - 4
+        }
+    }
+
+    /// Interior core count (36 for N=8, matching Table 1).
+    pub fn interior_cores(&self) -> usize {
+        self.cores_per_chip() - self.boundary_cores()
+    }
+
+    /// Spiking core count for this variant (Table 1 row 1).
+    pub fn spiking_cores(&self) -> usize {
+        match self.variant {
+            Variant::Ann => 0,
+            Variant::Snn => self.cores_per_chip(),
+            Variant::Hnn => self.boundary_cores(),
+        }
+    }
+
+    /// Artificial core count for this variant (Table 1 row 2).
+    pub fn artificial_cores(&self) -> usize {
+        self.cores_per_chip() - self.spiking_cores()
+    }
+
+    /// Cycle time in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    /// Unidirectional boundary ports at the I/O pads after EMIO muxing
+    /// (§3.4: 64 ports muxed 8-to-1 down to 8 for the 8x8 mesh).
+    pub fn emio_pad_ports(&self) -> usize {
+        self.noc_dim
+    }
+
+    /// NoC-edge ports before muxing (two unidirectional per boundary link
+    /// side; 32 in + 32 out for N=8 -> 64 total).
+    pub fn emio_mesh_ports(&self) -> usize {
+        8 * self.noc_dim
+    }
+
+    /// EMIO mux ratio (8-to-1 in the paper's design).
+    pub fn emio_mux_ratio(&self) -> usize {
+        if self.emio_pad_ports() == 0 {
+            0
+        } else {
+            self.emio_mesh_ports() / self.emio_pad_ports()
+        }
+    }
+
+    pub fn with_bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    pub fn with_noc_dim(mut self, dim: usize) -> Self {
+        self.noc_dim = dim;
+        self
+    }
+
+    pub fn with_grouping(mut self, g: usize) -> Self {
+        self.grouping = g;
+        self
+    }
+
+    pub fn with_ticks(mut self, t: u32) -> Self {
+        self.ticks = t;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_core_counts() {
+        // Table 1: ANN 64 artificial, SNN 64 spiking, HNN 28 spiking + 36
+        // artificial on the 8x8 mesh.
+        let ann = ArchConfig::baseline(Variant::Ann);
+        assert_eq!(ann.artificial_cores(), 64);
+        assert_eq!(ann.spiking_cores(), 0);
+
+        let snn = ArchConfig::baseline(Variant::Snn);
+        assert_eq!(snn.spiking_cores(), 64);
+        assert_eq!(snn.artificial_cores(), 0);
+
+        let hnn = ArchConfig::baseline(Variant::Hnn);
+        assert_eq!(hnn.spiking_cores(), 28);
+        assert_eq!(hnn.artificial_cores(), 36);
+    }
+
+    #[test]
+    fn table1_clock_and_voltage() {
+        let c = ArchConfig::baseline(Variant::Hnn);
+        assert_eq!(c.freq_hz, 200e6);
+        assert_eq!(c.supply_v, 1.0);
+        assert_eq!(c.tech_nm, 65);
+    }
+
+    #[test]
+    fn boundary_ring_formula() {
+        for n in 2..=16 {
+            let c = ArchConfig::baseline(Variant::Hnn).with_noc_dim(n);
+            // count by brute force
+            let mut ring = 0;
+            for x in 0..n {
+                for y in 0..n {
+                    if x == 0 || y == 0 || x == n - 1 || y == n - 1 {
+                        ring += 1;
+                    }
+                }
+            }
+            assert_eq!(c.boundary_cores(), ring, "n={n}");
+        }
+    }
+
+    #[test]
+    fn emio_mux_ratio_matches_paper() {
+        // §3.4: 64 unidirectional mesh-edge ports muxed to 8 pad ports.
+        let c = ArchConfig::baseline(Variant::Hnn);
+        assert_eq!(c.emio_mesh_ports(), 64);
+        assert_eq!(c.emio_pad_ports(), 8);
+        assert_eq!(c.emio_mux_ratio(), 8);
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,153 @@
+//! Hand-rolled CLI (the offline registry has no clap): subcommands with
+//! `--flag value` options, `--help` text, and typed accessors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> Result<u32> {
+        Ok(self.usize_or(key, default as usize)? as u32)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const HELP: &str = "\
+spikelink — HNN die-to-die co-design (paper reproduction)
+
+USAGE: spikelink <command> [options]
+
+COMMANDS:
+  report            regenerate paper tables/figures from the analytic engine
+                      --table 1|2|3   --figure 7|8|9|10|11|12|13  (default: all)
+                      --out DIR       also write CSVs (default results/)
+                      --runs DIR      run records for fig 9 (default results/runs)
+  simulate          one (network, variant) analytic simulation
+                      --model rwkv|msresnet18|efficientnet-b4
+                      --variant ann|snn|hnn  --bits N  --dim N  --grouping N
+                      --activity F    uniform firing activity (default 0.10)
+                      --sparsity-from FILE   use measured rates from a run JSON
+                      --verbose       dump the per-layer workload table
+  sweep             sweep an axis and print speedup/efficiency vs ANN
+                      --model NAME  --axis bits|dim|grouping|sparsity
+  train             run the AOT train-step loop (needs `make artifacts`)
+                      --model hnn_lm|ann_lm|snn_lm|hnn_vision|...
+                      --steps N (default 200)  --lam F  --budget F
+                      --out FILE      write the run record JSON
+  eval              evaluate a run record (or init params) on fresh data
+                      --model NAME  --run FILE
+  table4            train all six variants briefly and print the Table-4 proxy
+                      --steps N (default 150)
+  noc-validate      run the cycle-level NoC cross-checks (EMIO 76c, hops)
+  help              this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let a = parse("simulate --model rwkv --bits 16 --quiet");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("model"), Some("rwkv"));
+        assert_eq!(a.u32_or("bits", 8).unwrap(), 16);
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --steps=500 --lam=0.25");
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 500);
+        assert!((a.f64_or("lam", 0.0).unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("report");
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("train --steps banana");
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("simulate --verbose");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+}

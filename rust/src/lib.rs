@@ -1,0 +1,29 @@
+//! # SpikeLink
+//!
+//! Full-system reproduction of *"Learnable Sparsification of Die-to-Die
+//! Communication via Spike-Based Encoding"* (CS.AR 2025): heterogeneous
+//! neural networks (HNNs) that confine spiking layers to bandwidth-limited
+//! die-to-die interfaces, plus the multi-chip 2-D-mesh NoC accelerator and
+//! simulation framework the paper evaluates them on.
+//!
+//! Three-layer architecture (python never on the request path):
+//!
+//! * **Layer 1** — Pallas kernels (LIF, CLP rate coding, spike matmul) in
+//!   `python/compile/kernels/`, AOT-lowered.
+//! * **Layer 2** — JAX ANN/SNN/HNN model families in `python/compile/`,
+//!   exported once as HLO text to `artifacts/`.
+//! * **Layer 3** — this crate: the NoC co-design (analytic + cycle-level
+//!   simulators), the PJRT runtime that executes the AOT artifacts, the
+//!   training driver, and the report harness regenerating every paper
+//!   table and figure.
+
+pub mod analytic;
+pub mod metrics;
+pub mod arch;
+pub mod model;
+pub mod noc;
+pub mod report;
+pub mod runtime;
+pub mod sparsity;
+pub mod train;
+pub mod util;

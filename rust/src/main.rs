@@ -1,0 +1,422 @@
+//! `spikelink` CLI — the Layer-3 leader binary. See `cli::HELP`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use spikelink::analytic::{self, simulate, simulate_variants};
+use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::model::networks;
+use spikelink::report::{self, figures, tables};
+use spikelink::runtime::{Engine, Manifest};
+use spikelink::sparsity::SparsityProfile;
+use spikelink::train::{self, RegConfig};
+use spikelink::util::json::{self, Json};
+use spikelink::util::stats;
+
+#[path = "cli.rs"]
+mod cli;
+
+fn main() {
+    let args = cli::Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("SPIKELINK_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn run(args: &cli::Args) -> Result<()> {
+    match args.command.as_str() {
+        "report" => cmd_report(args),
+        "simulate" => cmd_simulate(args),
+        "sweep" => cmd_sweep(args),
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "table4" => cmd_table4(args),
+        "noc-validate" => cmd_noc_validate(),
+        "" | "help" => {
+            print!("{}", cli::HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}; try `spikelink help`")),
+    }
+}
+
+fn arch_from(args: &cli::Args, variant: Variant) -> Result<ArchConfig> {
+    let mut cfg = ArchConfig::baseline(variant);
+    cfg.bits = args.u32_or("bits", cfg.bits)?;
+    cfg.noc_dim = args.usize_or("dim", cfg.noc_dim)?;
+    cfg.grouping = args.usize_or("grouping", cfg.grouping)?;
+    cfg.ticks = args.u32_or("ticks", cfg.ticks)?;
+    cfg.input_activity = args.f64_or("activity", cfg.input_activity)?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------------
+
+fn cmd_report(args: &cli::Args) -> Result<()> {
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let table: Option<usize> = args.get("table").map(|t| t.parse()).transpose()?;
+    let figure: Option<usize> = args.get("figure").map(|f| f.parse()).transpose()?;
+    let all = table.is_none() && figure.is_none();
+
+    let mut emitted = Vec::new();
+    let mut emit = |name: &str, t: &spikelink::util::table::Table| -> Result<()> {
+        println!("{}", report::emit(&out, name, t)?);
+        emitted.push(name.to_string());
+        Ok(())
+    };
+
+    if all || table == Some(1) {
+        emit("table1_arch_params", &tables::table1())?;
+    }
+    if all || table == Some(2) {
+        emit("table2_core_params", &tables::table2())?;
+    }
+    if all || table == Some(3) {
+        emit("table3_packet_structure", &tables::table3())?;
+    }
+    if all || figure == Some(7) {
+        emit(
+            "fig07_sparsity_latency",
+            &figures::fig7_latency_sweep(&[0.5, 0.8, 0.9, 0.95, 0.975, 0.99]),
+        )?;
+    }
+    if all || figure == Some(8) {
+        emit("fig08_heatmap_msresnet18", &figures::fig8_heatmap("ms-resnet18", 42))?;
+        emit("fig08_heatmap_rwkv", &figures::fig8_heatmap("rwkv-6l-512", 43))?;
+    }
+    if all || figure == Some(9) {
+        let runs = figures::load_run_curves(&PathBuf::from(args.str_or("runs", "results/runs")));
+        if runs.is_empty() {
+            println!("fig 9: no run records under results/runs (run `make e2e` first)");
+        } else {
+            emit("fig09_convergence", &figures::fig9_convergence(&runs))?;
+        }
+    }
+    if all || figure == Some(10) {
+        emit("fig10_latency_speedup", &figures::fig10_speedup())?;
+    }
+    if all || figure == Some(11) {
+        emit("fig11_speedup_sweep", &figures::fig11_table("ms-resnet18"))?;
+    }
+    if all || figure == Some(12) {
+        emit("fig12_energy_breakdown", &figures::fig12_energy())?;
+    }
+    if all || figure == Some(13) {
+        emit("fig13_efficiency_sweep", &figures::fig13_table("ms-resnet18"))?;
+    }
+    if all {
+        let (speed, eff, _) = figures::headline_claims();
+        println!(
+            "headline claims: max HNN speedup {speed:.1}x (paper: up to 15.2x), \
+             max HNN energy-efficiency {eff:.1}x (paper: up to 5.3x)"
+        );
+    }
+    println!("CSV written to {out:?}: {emitted:?}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// simulate
+// ---------------------------------------------------------------------------
+
+fn profile_from(args: &cli::Args, n_layers: usize, cfg: &ArchConfig) -> Result<SparsityProfile> {
+    if let Some(path) = args.get("sparsity-from") {
+        let text = std::fs::read_to_string(Path::new(path))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let rates: Vec<f64> = j
+            .get("final_rates")
+            .and_then(|r| r.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        if rates.is_empty() {
+            return Err(anyhow!("{path} has no final_rates"));
+        }
+        // measured boundary rates apply uniformly (the trained boundary
+        // stages are the model's spiking layers)
+        let mean = stats::mean(&rates);
+        Ok(SparsityProfile::uniform(n_layers, mean))
+    } else {
+        Ok(SparsityProfile::uniform(n_layers, cfg.input_activity))
+    }
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    let verbose = args.has_flag("verbose");
+    let model = args.str_or("model", "ms-resnet18");
+    let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let variant = Variant::parse(&args.str_or("variant", "hnn"))
+        .ok_or_else(|| anyhow!("--variant must be ann|snn|hnn"))?;
+    let cfg = arch_from(args, variant)?;
+    let profile = profile_from(args, net.layers.len(), &cfg)?;
+    let rep = simulate(&net, &cfg, &profile);
+
+    println!("network          : {}", rep.network);
+    println!("variant          : {}", rep.variant);
+    println!("chips / cores    : {} / {}", rep.n_chips, rep.total_cores);
+    println!("total ops        : {}", stats::si(rep.total_ops as f64));
+    println!("routed packets   : {}", stats::si(rep.routed_packets as f64));
+    println!("boundary packets : {}", stats::si(rep.boundary_packets as f64));
+    println!(
+        "latency          : {} cycles ({:.3} ms) [compute {} + emio {}]",
+        rep.latency.total_cycles,
+        rep.latency.seconds * 1e3,
+        rep.latency.compute_cycles,
+        rep.latency.emio_cycles
+    );
+    println!("throughput       : {:.1} inf/s", rep.throughput());
+    println!(
+        "energy/inference : {} [PE {} | MEM {} | Router {} | EMIO {}]",
+        stats::joules(rep.energy.total_j()),
+        stats::joules(rep.energy.pe_j),
+        stats::joules(rep.energy.mem_j),
+        stats::joules(rep.energy.router_j),
+        stats::joules(rep.energy.emio_j),
+    );
+    if verbose {
+        println!("\nper-layer workload (ops | local | routed | boundary | mode):");
+        for w in &rep.works {
+            println!(
+                "  {:>3} {:<22} {:>12} {:>10} {:>12} {:>10} {:?}",
+                w.layer_idx,
+                w.name,
+                w.ops,
+                w.local_packets,
+                w.routed_packets,
+                w.boundary_packets,
+                w.compute
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// sweep
+// ---------------------------------------------------------------------------
+
+fn cmd_sweep(args: &cli::Args) -> Result<()> {
+    let model = args.str_or("model", "ms-resnet18");
+    let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let axis = args.str_or("axis", "bits");
+    let mut t = spikelink::util::table::Table::new(
+        format!("sweep {axis} — {model} (speedup & efficiency vs ANN)"),
+        &["config", "SNN speedup", "HNN speedup", "SNN eff", "HNN eff"],
+    );
+    let mut push = |label: String, cfg: ArchConfig| {
+        let [ann, snn, hnn] = simulate_variants(&net, &cfg);
+        t.row(vec![
+            label,
+            format!("{:.2}", analytic::speedup(&ann, &snn)),
+            format!("{:.2}", analytic::speedup(&ann, &hnn)),
+            format!("{:.2}", analytic::efficiency_gain(&ann, &snn)),
+            format!("{:.2}", analytic::efficiency_gain(&ann, &hnn)),
+        ]);
+    };
+    match axis.as_str() {
+        "bits" => {
+            for bits in [4u32, 8, 16, 32] {
+                push(format!("bits={bits}"), ArchConfig::baseline(Variant::Ann).with_bits(bits));
+            }
+        }
+        "dim" => {
+            for dim in [4usize, 8, 16] {
+                push(format!("dim={dim}"), ArchConfig::baseline(Variant::Ann).with_noc_dim(dim));
+            }
+        }
+        "grouping" => {
+            for g in [64usize, 128, 256] {
+                push(format!("G={g}"), ArchConfig::baseline(Variant::Ann).with_grouping(g));
+            }
+        }
+        "sparsity" => {
+            for s in [0.5, 0.8, 0.9, 0.95, 0.99] {
+                let mut cfg = ArchConfig::baseline(Variant::Ann);
+                cfg.input_activity = 1.0 - s;
+                push(format!("sparsity={s}"), cfg);
+            }
+        }
+        other => return Err(anyhow!("unknown axis {other}")),
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// train / eval / table4
+// ---------------------------------------------------------------------------
+
+fn cmd_train(args: &cli::Args) -> Result<()> {
+    let model = args.str_or("model", "hnn_lm");
+    let steps = args.usize_or("steps", 200)?;
+    let reg = RegConfig {
+        lam: args.f64_or("lam", 0.5)? as f32,
+        rate_budget: args.f64_or("budget", 0.10)? as f32,
+    };
+    let seed = args.usize_or("seed", 42)? as u64;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    println!("training {model} for {steps} steps (lam={}, budget={})", reg.lam, reg.rate_budget);
+    let res =
+        train::train(&engine, &manifest, &model, steps, reg, seed, 10.max(steps / 20), false)?;
+    println!(
+        "final: ce={:.4} metric={:.4} ppl={:.3} rates={:?}",
+        res.eval_ce,
+        res.eval_metric,
+        res.perplexity(),
+        res.final_rates
+    );
+    if let Some(out) = args.get("out") {
+        if let Some(parent) = Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(out, res.to_json().to_string_pretty())?;
+        println!("run record written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &cli::Args) -> Result<()> {
+    let model = args.str_or("model", "hnn_lm");
+    let manifest = Manifest::load(artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    let entry = manifest.model(&model)?;
+    let theta = manifest.load_init_theta(entry)?;
+    let (ce, metric, rates) = train::evaluate(&engine, &manifest, &model, &theta, 1, 4)?;
+    println!("{model}: ce={ce:.4} metric={metric:.4} rates={rates:?}");
+    Ok(())
+}
+
+fn cmd_table4(args: &cli::Args) -> Result<()> {
+    let steps = args.usize_or("steps", 150)?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    let mut results = std::collections::BTreeMap::new();
+    for fam in ["lm", "vision"] {
+        for var in ["ann", "snn", "hnn"] {
+            let name = format!("{var}_{fam}");
+            if !manifest.models.contains_key(&name) {
+                continue;
+            }
+            println!("training {name} ({steps} steps)...");
+            let res = train::train(
+                &engine,
+                &manifest,
+                &name,
+                steps,
+                RegConfig::default(),
+                42,
+                (steps / 4).max(1),
+                true,
+            )?;
+            results.insert(name, res);
+        }
+    }
+    let rows = tables::Table4Row {
+        dataset: "enwik8-proxy".into(),
+        metric_name: "PPL (lower better)".into(),
+        measured: [
+            results.get("ann_lm").map(|r| r.perplexity()).unwrap_or(f64::NAN),
+            results.get("snn_lm").map(|r| r.perplexity()).unwrap_or(f64::NAN),
+            results.get("hnn_lm").map(|r| r.perplexity()).unwrap_or(f64::NAN),
+        ],
+        paper: [2.66, 2.92, 2.57],
+        higher_better: false,
+    };
+    let rows2 = tables::Table4Row {
+        dataset: "cifar-proxy".into(),
+        metric_name: "top-1 acc".into(),
+        measured: [
+            results.get("ann_vision").map(|r| r.eval_metric).unwrap_or(f64::NAN),
+            results.get("snn_vision").map(|r| r.eval_metric).unwrap_or(f64::NAN),
+            results.get("hnn_vision").map(|r| r.eval_metric).unwrap_or(f64::NAN),
+        ],
+        paper: [0.7865, 0.7665, 0.7886],
+        higher_better: true,
+    };
+    println!("{}", tables::table4(&[rows, rows2]).render());
+    if let Some(out) = args.get("out") {
+        let j = Json::obj(
+            results
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.to_json()))
+                .collect::<Vec<_>>(),
+        );
+        std::fs::write(out, j.to_string_pretty())?;
+        println!("records written to {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// noc-validate
+// ---------------------------------------------------------------------------
+
+fn cmd_noc_validate() -> Result<()> {
+    use spikelink::arch::chip::Coord;
+    use spikelink::noc::{CrossTraffic, Duplex, Mesh};
+
+    // 1. EMIO single packet = 76 cycles
+    let mut link = spikelink::noc::EmioLink::new();
+    let p = spikelink::arch::packet::Packet::spike(1, 0, 0, 0);
+    link.inject(0, &p, 0, 0);
+    let mut now = 0;
+    while link.pending() > 0 {
+        now += 1;
+        link.step(now);
+    }
+    let (f, at) = &link.delivered[0];
+    println!("EMIO single packet: {} cycles (paper RTL: 76)", at - f.entered_at);
+
+    // 2. mesh hop exactness under random traffic
+    let mut m = Mesh::new(8);
+    let mut rng = spikelink::util::rng::Rng::new(1);
+    let mut expect = 0u64;
+    for _ in 0..1000 {
+        let s = Coord::new(rng.range(0, 8), rng.range(0, 8));
+        let d = Coord::new(rng.range(0, 8), rng.range(0, 8));
+        expect += s.manhattan(&d) as u64;
+        m.inject(s, d);
+    }
+    m.run_to_drain(1_000_000);
+    println!(
+        "mesh: delivered {}/1000, hops {} (minimal: {})",
+        m.stats.delivered, m.stats.total_hops, expect
+    );
+
+    // 3. duplex end-to-end: dense vs spike boundary traffic
+    let run = |packets: usize| {
+        let mut d = Duplex::new(8);
+        for i in 0..packets {
+            d.inject(CrossTraffic {
+                src: Coord::new(7, i % 8),
+                dest: Coord::new(i % 8, i % 8),
+            });
+        }
+        d.run(10_000_000).cycles
+    };
+    let dense = run(256);
+    let spike = run(205);
+    println!(
+        "duplex: 256 dense packets {} cycles vs 205 spike packets {} cycles ({}% saved)",
+        dense,
+        spike,
+        (100.0 * (1.0 - spike as f64 / dense as f64)) as i64
+    );
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Layer algebra: operation / activation / weight counting per layer, the
+//! methodology of §4.2 (following NN-Noxim [3] and Lemaire et al. [26]).
+//!
+//! * ANN layers are costed in MACs; SNN layers in ACCs (one accumulate per
+//!   *spike event* per synapse: `ACCs = MACs x activity x T`).
+//! * A layer's "neurons" are its output activations (pixels x channels for
+//!   conv, features for dense) — the unit that maps onto core lanes.
+
+/// Layer taxonomy covering all three benchmark networks (conv, depthwise
+/// conv, pooling, dense — per §4.2 — plus embedding/eltwise bookkeeping).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Standard convolution over an `in_hw x in_hw` input.
+    Conv { k: usize, stride: usize, in_ch: usize, out_ch: usize, in_hw: usize },
+    /// Depthwise convolution (per-channel filter).
+    DwConv { k: usize, stride: usize, ch: usize, in_hw: usize },
+    /// Average/max pooling (costed at one op per input element).
+    Pool { k: usize, stride: usize, ch: usize, in_hw: usize },
+    /// Fully-connected layer.
+    Dense { in_f: usize, out_f: usize },
+    /// Token embedding lookup (no MACs; produces activations).
+    Embed { vocab: usize, dim: usize, tokens: usize },
+    /// Elementwise op over `n` features (residual add, activation, norm).
+    Eltwise { n: usize, ops_per_elem: usize },
+}
+
+/// One layer of a benchmark network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
+        Layer { name: name.into(), kind }
+    }
+
+    /// Output spatial size for spatial layers.
+    pub fn out_hw(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv { stride, in_hw, k, .. } => conv_out(*in_hw, *k, *stride),
+            LayerKind::DwConv { stride, in_hw, k, .. } => conv_out(*in_hw, *k, *stride),
+            LayerKind::Pool { stride, in_hw, k, .. } => conv_out(*in_hw, *k, *stride),
+            _ => 1,
+        }
+    }
+
+    /// Neurons = output activations produced by this layer (per inference).
+    pub fn neurons(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { out_ch, .. } => (self.out_hw() * self.out_hw() * out_ch) as u64,
+            LayerKind::DwConv { ch, .. } => (self.out_hw() * self.out_hw() * ch) as u64,
+            LayerKind::Pool { ch, .. } => (self.out_hw() * self.out_hw() * ch) as u64,
+            LayerKind::Dense { out_f, .. } => *out_f as u64,
+            LayerKind::Embed { dim, tokens, .. } => (*dim * *tokens) as u64,
+            LayerKind::Eltwise { n, .. } => *n as u64,
+        }
+    }
+
+    /// Fan-in per output neuron (axon demand; >256 forces multi-iteration
+    /// weight mapping on the 256-axon cores, §3.3).
+    pub fn fan_in(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { k, in_ch, .. } => (k * k * in_ch) as u64,
+            LayerKind::DwConv { k, .. } => (k * k) as u64,
+            LayerKind::Pool { k, .. } => (k * k) as u64,
+            LayerKind::Dense { in_f, .. } => *in_f as u64,
+            LayerKind::Embed { .. } => 1,
+            LayerKind::Eltwise { ops_per_elem, .. } => *ops_per_elem as u64,
+        }
+    }
+
+    /// MAC count per inference (the ANN cost model, §4.2).
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Embed { .. } => 0, // table lookup
+            _ => self.neurons() * self.fan_in(),
+        }
+    }
+
+    /// ACC count per inference when this layer runs *spiking*: one
+    /// accumulate per presynaptic spike event. With firing activity `a`
+    /// (fraction of neurons spiking per tick) over `t` ticks each synapse
+    /// sees `a*t` events: `ACCs = MACs * a * t`.
+    pub fn accs(&self, activity: f64, ticks: u32) -> u64 {
+        (self.macs() as f64 * activity * ticks as f64).round() as u64
+    }
+
+    /// Weight (synapse) count.
+    pub fn weights(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { k, in_ch, out_ch, .. } => (k * k * in_ch * out_ch) as u64,
+            LayerKind::DwConv { k, ch, .. } => (k * k * ch) as u64,
+            LayerKind::Dense { in_f, out_f } => (*in_f * *out_f) as u64,
+            LayerKind::Embed { vocab, dim, .. } => (*vocab * *dim) as u64,
+            LayerKind::Pool { .. } | LayerKind::Eltwise { .. } => 0,
+        }
+    }
+
+    /// Does this layer do real synaptic compute (vs. bookkeeping)?
+    pub fn is_compute(&self) -> bool {
+        !matches!(self.kind, LayerKind::Embed { .. })
+    }
+}
+
+fn conv_out(in_hw: usize, k: usize, stride: usize) -> usize {
+    // "same"-style padding: ceil(in/stride); kernel only matters via padding
+    let _ = k;
+    in_hw.div_ceil(stride)
+}
+
+/// A named benchmark network: an ordered layer stack.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_neurons(&self) -> u64 {
+        self.layers.iter().map(|l| l.neurons()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_op_count() {
+        // 3x3 conv, 16->32 ch over 8x8: MACs = 8*8*32 * 3*3*16 = 294912
+        let l = Layer::new("c", LayerKind::Conv { k: 3, stride: 1, in_ch: 16, out_ch: 32, in_hw: 8 });
+        assert_eq!(l.neurons(), 8 * 8 * 32);
+        assert_eq!(l.fan_in(), 9 * 16);
+        assert_eq!(l.macs(), 294_912);
+        assert_eq!(l.weights(), 3 * 3 * 16 * 32);
+    }
+
+    #[test]
+    fn strided_conv_downsamples() {
+        let l = Layer::new("c", LayerKind::Conv { k: 3, stride: 2, in_ch: 3, out_ch: 8, in_hw: 32 });
+        assert_eq!(l.out_hw(), 16);
+        assert_eq!(l.neurons(), 16 * 16 * 8);
+    }
+
+    #[test]
+    fn depthwise_much_cheaper_than_full() {
+        let dw = Layer::new("dw", LayerKind::DwConv { k: 3, stride: 1, ch: 64, in_hw: 16 });
+        let full = Layer::new("c", LayerKind::Conv { k: 3, stride: 1, in_ch: 64, out_ch: 64, in_hw: 16 });
+        assert_eq!(dw.macs() * 64, full.macs());
+    }
+
+    #[test]
+    fn dense_op_count() {
+        let l = Layer::new("d", LayerKind::Dense { in_f: 512, out_f: 2048 });
+        assert_eq!(l.macs(), 512 * 2048);
+        assert_eq!(l.neurons(), 2048);
+        assert_eq!(l.fan_in(), 512);
+    }
+
+    #[test]
+    fn accs_scale_with_activity_and_ticks() {
+        // §4.2: ACC = MAC * activity * T; at 10% activity, T=8 -> 0.8x
+        let l = Layer::new("d", LayerKind::Dense { in_f: 256, out_f: 256 });
+        assert_eq!(l.accs(0.10, 8), (l.macs() as f64 * 0.8).round() as u64);
+        assert_eq!(l.accs(1.0, 1), l.macs());
+        assert_eq!(l.accs(0.0, 8), 0);
+    }
+
+    #[test]
+    fn embed_has_no_macs() {
+        let l = Layer::new("e", LayerKind::Embed { vocab: 256, dim: 512, tokens: 1 });
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.neurons(), 512);
+        assert_eq!(l.weights(), 256 * 512);
+    }
+}

@@ -1,0 +1,203 @@
+//! Directional-X neural-network mapping + the Eq. 4 hop model (§4.2).
+//!
+//! Layers are placed on consecutive cores in linear (row-major) order —
+//! the "directional-X" fill the paper uses with X-Y routing. The average
+//! hop count of a packet from layer i-1 to layer i is the Manhattan
+//! distance between the two layers' *middle cores* plus the final local
+//! hop:  `AverageHops = |M_{L-1} - M_L| + 1`  (Eq. 4).
+
+use crate::arch::params::ArchConfig;
+use crate::model::layer::Network;
+
+/// Placement of one layer on the core array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlacement {
+    pub layer_idx: usize,
+    /// First global core index (linear across the chip chain).
+    pub start_core: usize,
+    /// Number of cores allocated (= ceil(neurons / grouping)).
+    pub cores: usize,
+    /// Chip index of the first core.
+    pub chip: usize,
+    /// Chip index of the last core (layers may straddle chips).
+    pub end_chip: usize,
+    /// Extra weight-load iterations when fan-in exceeds the 256 axons/core
+    /// (§3.3 "map connections across multiple hardware iterations").
+    pub synapse_iterations: u32,
+}
+
+/// Full model-to-array mapping.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub placements: Vec<LayerPlacement>,
+    pub cores_per_chip: usize,
+    pub total_cores: usize,
+    pub n_chips: usize,
+}
+
+/// Axons per core is fixed at 256 by the core design (Table 2).
+pub const AXONS_PER_CORE: u64 = 256;
+
+/// Map a network onto the chip chain: consecutive core spans, chips filled
+/// in order, a layer starts a new chip only when the current one is full
+/// (the paper packs "based on the number of ANN layers that fit per chip").
+pub fn map_network(net: &Network, cfg: &ArchConfig) -> Mapping {
+    let cpc = cfg.cores_per_chip();
+    let mut placements = Vec::with_capacity(net.layers.len());
+    let mut cursor = 0usize; // next free global core
+    for (i, layer) in net.layers.iter().enumerate() {
+        let cores = (layer.neurons() as usize).div_ceil(cfg.grouping).max(1);
+        let start = cursor;
+        cursor += cores;
+        placements.push(LayerPlacement {
+            layer_idx: i,
+            start_core: start,
+            cores,
+            chip: start / cpc,
+            end_chip: (start + cores - 1) / cpc,
+            synapse_iterations: (layer.fan_in().div_ceil(AXONS_PER_CORE)).max(1) as u32,
+        });
+    }
+    let n_chips = cursor.div_ceil(cpc).max(1);
+    Mapping { placements, cores_per_chip: cpc, total_cores: cursor, n_chips }
+}
+
+impl Mapping {
+    /// Middle global core index of a layer's span — the `M_L` of Eq. 4,
+    /// expressed on the linear directional-X axis.
+    pub fn midpoint(&self, layer_idx: usize) -> f64 {
+        let p = &self.placements[layer_idx];
+        p.start_core as f64 + p.cores as f64 / 2.0
+    }
+
+    /// Eq. 4: AverageHops = |M_{L_{i-1}} - M_{L_i}| + 1, computed on the
+    /// core-linear axis and converted to mesh hops by folding over the
+    /// row-major layout (distance within a chip is bounded by the mesh
+    /// diameter; crossing chips adds their EMIO traversals separately).
+    pub fn average_hops(&self, from_layer: usize, to_layer: usize, cfg: &ArchConfig) -> f64 {
+        let a = self.midpoint(from_layer);
+        let b = self.midpoint(to_layer);
+        let linear = (a - b).abs();
+        // Fold linear core distance into mesh hops: row-major distance d
+        // corresponds to |dx| = d mod N and |dy| = d / N within a chip.
+        let n = cfg.noc_dim as f64;
+        let within = linear.min((cfg.cores_per_chip() - 1) as f64);
+        let hops = (within % n) + (within / n).floor();
+        hops + 1.0
+    }
+
+    /// Number of die boundaries a packet from `from_layer` to `to_layer`
+    /// crosses (0 when both layers sit on the same chip).
+    pub fn die_crossings(&self, from_layer: usize, to_layer: usize) -> usize {
+        let a = &self.placements[from_layer];
+        let b = &self.placements[to_layer];
+        // Worst-edge model: traffic flows from the source layer's end chip
+        // to the destination layer's start chip.
+        b.chip.abs_diff(a.end_chip)
+    }
+
+    /// Does the edge (i-1 -> i) cross at least one die boundary?
+    pub fn crosses_die(&self, from_layer: usize, to_layer: usize) -> bool {
+        self.die_crossings(from_layer, to_layer) > 0
+    }
+
+    /// Cores on the peripheral ring available to source boundary traffic —
+    /// the `N_c` of Eq. 8, capped by the layer's own core span.
+    pub fn boundary_cores_for(&self, layer_idx: usize, cfg: &ArchConfig) -> usize {
+        self.placements[layer_idx].cores.min(cfg.emio_pad_ports())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::params::Variant;
+    use crate::model::layer::{Layer, LayerKind};
+
+    fn dense_net(sizes: &[(usize, usize)]) -> Network {
+        Network {
+            name: "t".into(),
+            layers: sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &(i_f, o_f))| {
+                    Layer::new(format!("l{i}"), LayerKind::Dense { in_f: i_f, out_f: o_f })
+                })
+                .collect(),
+        }
+    }
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::baseline(Variant::Hnn)
+    }
+
+    #[test]
+    fn cores_allocated_by_grouping() {
+        let net = dense_net(&[(256, 512), (512, 256)]);
+        let m = map_network(&net, &cfg());
+        assert_eq!(m.placements[0].cores, 2); // 512 neurons / 256 grouping
+        assert_eq!(m.placements[1].cores, 1);
+        assert_eq!(m.placements[1].start_core, 2);
+        assert_eq!(m.total_cores, 3);
+        assert_eq!(m.n_chips, 1);
+    }
+
+    #[test]
+    fn small_grouping_needs_more_cores() {
+        let net = dense_net(&[(256, 512)]);
+        let m64 = map_network(&net, &cfg().with_grouping(64));
+        assert_eq!(m64.placements[0].cores, 8);
+    }
+
+    #[test]
+    fn synapse_iterations_track_fan_in() {
+        let net = dense_net(&[(2048, 256)]);
+        let m = map_network(&net, &cfg());
+        assert_eq!(m.placements[0].synapse_iterations, 8); // 2048/256
+        let net2 = dense_net(&[(100, 256)]);
+        assert_eq!(map_network(&net2, &cfg()).placements[0].synapse_iterations, 1);
+    }
+
+    #[test]
+    fn chips_fill_sequentially() {
+        // 64 cores/chip; 100 one-core layers -> 2 chips, crossing at idx 64
+        let sizes: Vec<(usize, usize)> = (0..100).map(|_| (128, 128)).collect();
+        let net = dense_net(&sizes);
+        let m = map_network(&net, &cfg());
+        assert_eq!(m.n_chips, 2);
+        assert_eq!(m.placements[63].chip, 0);
+        assert_eq!(m.placements[64].chip, 1);
+        assert!(m.crosses_die(63, 64));
+        assert!(!m.crosses_die(10, 11));
+        assert_eq!(m.die_crossings(0, 99), 1);
+    }
+
+    #[test]
+    fn eq4_adjacent_layers_at_least_one_hop() {
+        let net = dense_net(&[(256, 256), (256, 256)]);
+        let m = map_network(&net, &cfg());
+        let h = m.average_hops(0, 1, &cfg());
+        assert!(h >= 1.0);
+        assert!(h <= 2.0); // adjacent cores: |0.5 - 1.5| + 1 = 2
+    }
+
+    #[test]
+    fn eq4_hops_grow_with_distance() {
+        let sizes: Vec<(usize, usize)> = (0..32).map(|_| (256, 256)).collect();
+        let net = dense_net(&sizes);
+        let m = map_network(&net, &cfg());
+        let near = m.average_hops(0, 1, &cfg());
+        let far = m.average_hops(0, 31, &cfg());
+        assert!(far > near, "far={far} near={near}");
+    }
+
+    #[test]
+    fn boundary_cores_capped_by_pads() {
+        let net = dense_net(&[(256, 256 * 32)]); // 32-core layer
+        let m = map_network(&net, &cfg());
+        assert_eq!(m.boundary_cores_for(0, &cfg()), 8); // 8 pad ports
+        let net = dense_net(&[(256, 256)]);
+        let m = map_network(&net, &cfg());
+        assert_eq!(m.boundary_cores_for(0, &cfg()), 1);
+    }
+}

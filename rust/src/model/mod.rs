@@ -1,0 +1,11 @@
+//! Workload model: layer algebra, the three benchmark networks of §4.1,
+//! core mapping (Eq. 4) and ANN/SNN/HNN partitioning.
+
+pub mod layer;
+pub mod mapping;
+pub mod networks;
+pub mod partition;
+
+pub use layer::{Layer, LayerKind, Network};
+pub use mapping::{map_network, LayerPlacement, Mapping};
+pub use partition::{partition, ComputeMode, PartLayer, Partition, TrafficMode};

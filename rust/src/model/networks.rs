@@ -1,0 +1,271 @@
+//! The three benchmark networks of §4.1, as layer stacks with op counts:
+//!
+//! * [`rwkv_6l_512`]      — the 6-layer, 512-embedding RWKV used on Enwik8;
+//! * [`msresnet18`]       — MS-ResNet18 on 32x32 CIFAR-100 inputs;
+//! * [`efficientnet_b4`]  — EfficientNet-B4 (MS-ResNet-block variant) on
+//!   380x380 ImageNet-1K inputs.
+//!
+//! Counts follow the public architectures; the paper maps "approximate
+//! workloads", so exact parity on every auxiliary op is not required — the
+//! tests below pin the headline figures (parameter counts, op magnitudes,
+//! relative chip demand) that the evaluation relies on.
+
+use super::layer::{Layer, LayerKind, Network};
+
+/// RWKV, 6 blocks, 512 embedding, char-level vocab (Enwik8), single token
+/// inference (the recurrent formulation processes one token per step).
+pub fn rwkv_6l_512() -> Network {
+    let d = 512;
+    let vocab = 256; // byte/char-level Enwik8
+    let mut layers = Vec::new();
+    layers.push(Layer::new("embed", LayerKind::Embed { vocab, dim: d, tokens: 1 }));
+    for i in 0..6 {
+        // time-mix: receptance, key, value, output projections (d x d each)
+        for proj in ["r", "k", "v", "o"] {
+            layers.push(Layer::new(
+                format!("block{i}.time.{proj}"),
+                LayerKind::Dense { in_f: d, out_f: d },
+            ));
+        }
+        // wkv recurrence state update: elementwise over d
+        layers.push(Layer::new(
+            format!("block{i}.time.wkv"),
+            LayerKind::Eltwise { n: d, ops_per_elem: 8 },
+        ));
+        // channel-mix: k (d -> 4d), r (d -> d), v (4d -> d)
+        layers.push(Layer::new(
+            format!("block{i}.chan.k"),
+            LayerKind::Dense { in_f: d, out_f: 4 * d },
+        ));
+        layers.push(Layer::new(
+            format!("block{i}.chan.r"),
+            LayerKind::Dense { in_f: d, out_f: d },
+        ));
+        layers.push(Layer::new(
+            format!("block{i}.chan.v"),
+            LayerKind::Dense { in_f: 4 * d, out_f: d },
+        ));
+        // membrane-shortcut residual adds (MS-ResNet-style, §4.1)
+        layers.push(Layer::new(
+            format!("block{i}.residual"),
+            LayerKind::Eltwise { n: d, ops_per_elem: 2 },
+        ));
+    }
+    layers.push(Layer::new("head", LayerKind::Dense { in_f: d, out_f: vocab }));
+    Network { name: "rwkv-6l-512".into(), layers }
+}
+
+/// MS-ResNet18 for 32x32 inputs (CIFAR-100 head): 3x3 stem + 4 stages of
+/// 2 basic blocks each ([64, 128, 256, 512]), stride-2 between stages,
+/// global pool, 100-way classifier. Identical topology to ResNet-18; the
+/// "MS" (membrane shortcut) changes neuron dynamics, not op counts.
+pub fn msresnet18() -> Network {
+    let mut layers = Vec::new();
+    let mut hw = 32;
+    layers.push(Layer::new(
+        "stem",
+        LayerKind::Conv { k: 3, stride: 1, in_ch: 3, out_ch: 64, in_hw: hw },
+    ));
+    let stage_ch = [64usize, 128, 256, 512];
+    let mut in_ch = 64;
+    for (s, &ch) in stage_ch.iter().enumerate() {
+        for b in 0..2 {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            layers.push(Layer::new(
+                format!("s{s}b{b}.conv1"),
+                LayerKind::Conv { k: 3, stride, in_ch, out_ch: ch, in_hw: hw },
+            ));
+            if stride == 2 {
+                hw = hw.div_ceil(2);
+            }
+            layers.push(Layer::new(
+                format!("s{s}b{b}.conv2"),
+                LayerKind::Conv { k: 3, stride: 1, in_ch: ch, out_ch: ch, in_hw: hw },
+            ));
+            if stride == 2 || in_ch != ch {
+                layers.push(Layer::new(
+                    format!("s{s}b{b}.down"),
+                    LayerKind::Conv { k: 1, stride: 1, in_ch, out_ch: ch, in_hw: hw },
+                ));
+            }
+            layers.push(Layer::new(
+                format!("s{s}b{b}.residual"),
+                LayerKind::Eltwise { n: hw * hw * ch, ops_per_elem: 1 },
+            ));
+            in_ch = ch;
+        }
+    }
+    layers.push(Layer::new(
+        "gap",
+        LayerKind::Pool { k: hw, stride: hw, ch: 512, in_hw: hw },
+    ));
+    layers.push(Layer::new("fc", LayerKind::Dense { in_f: 512, out_f: 100 }));
+    Network { name: "ms-resnet18".into(), layers }
+}
+
+/// EfficientNet-B4 at 380x380 (ImageNet-1K), MBConv stages per the B0 spec
+/// scaled by width 1.4 / depth 1.8 (Tan & Le 2019), SE blocks included.
+/// "over 60 convolutional layers (and several hundred other layers)" — the
+/// stack below has ~32 MBConv blocks x (2-3 convs + SE) + stem/head.
+pub fn efficientnet_b4() -> Network {
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut hw = 380usize;
+
+    // (expansion, out_ch, repeats, stride, kernel) — already B4-scaled:
+    // widths: x1.4 rounded to /8; depths: ceil(x1.8).
+    let stages: [(usize, usize, usize, usize, usize); 7] = [
+        (1, 24, 2, 1, 3),
+        (6, 32, 4, 2, 3),
+        (6, 56, 4, 2, 5),
+        (6, 112, 6, 2, 3),
+        (6, 160, 6, 1, 5),
+        (6, 272, 8, 2, 5),
+        (6, 448, 2, 1, 3),
+    ];
+
+    layers.push(Layer::new(
+        "stem",
+        LayerKind::Conv { k: 3, stride: 2, in_ch: 3, out_ch: 48, in_hw: hw },
+    ));
+    hw = hw.div_ceil(2);
+    let mut in_ch = 48;
+
+    for (si, &(exp, out_ch, reps, stride, k)) in stages.iter().enumerate() {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            let mid = in_ch * exp;
+            let tag = format!("mb{si}.{r}");
+            if exp != 1 {
+                layers.push(Layer::new(
+                    format!("{tag}.expand"),
+                    LayerKind::Conv { k: 1, stride: 1, in_ch, out_ch: mid, in_hw: hw },
+                ));
+            }
+            layers.push(Layer::new(
+                format!("{tag}.dw"),
+                LayerKind::DwConv { k, stride: s, ch: mid, in_hw: hw },
+            ));
+            if s == 2 {
+                hw = hw.div_ceil(2);
+            }
+            // squeeze-and-excite: pool + 2 dense (reduce ratio 0.25 of in_ch)
+            let se = (in_ch / 4).max(1);
+            layers.push(Layer::new(
+                format!("{tag}.se.pool"),
+                LayerKind::Pool { k: hw, stride: hw, ch: mid, in_hw: hw },
+            ));
+            layers.push(Layer::new(
+                format!("{tag}.se.fc1"),
+                LayerKind::Dense { in_f: mid, out_f: se },
+            ));
+            layers.push(Layer::new(
+                format!("{tag}.se.fc2"),
+                LayerKind::Dense { in_f: se, out_f: mid },
+            ));
+            layers.push(Layer::new(
+                format!("{tag}.project"),
+                LayerKind::Conv { k: 1, stride: 1, in_ch: mid, out_ch, in_hw: hw },
+            ));
+            if s == 1 && in_ch == out_ch {
+                layers.push(Layer::new(
+                    format!("{tag}.residual"),
+                    LayerKind::Eltwise { n: hw * hw * out_ch, ops_per_elem: 1 },
+                ));
+            }
+            in_ch = out_ch;
+        }
+    }
+
+    layers.push(Layer::new(
+        "head.conv",
+        LayerKind::Conv { k: 1, stride: 1, in_ch, out_ch: 1792, in_hw: hw },
+    ));
+    layers.push(Layer::new(
+        "head.pool",
+        LayerKind::Pool { k: hw, stride: hw, ch: 1792, in_hw: hw },
+    ));
+    layers.push(Layer::new("head.fc", LayerKind::Dense { in_f: 1792, out_f: 1000 }));
+    Network { name: "efficientnet-b4".into(), layers }
+}
+
+/// Look up a benchmark network by CLI name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "rwkv" | "rwkv-6l-512" | "enwik8" => Some(rwkv_6l_512()),
+        "msresnet18" | "ms-resnet18" | "cifar100" => Some(msresnet18()),
+        "efficientnet-b4" | "effnet" | "imagenet" => Some(efficientnet_b4()),
+        _ => None,
+    }
+}
+
+pub const ALL_NETWORKS: [&str; 3] = ["rwkv-6l-512", "ms-resnet18", "efficientnet-b4"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rwkv_param_count_near_20m() {
+        // 6 x (4*512^2 + 512*2048 + 512*512 + 2048*512) + embed/head
+        let n = rwkv_6l_512();
+        let w = n.total_weights();
+        assert!((19_000_000..24_000_000).contains(&w), "weights={w}");
+    }
+
+    #[test]
+    fn msresnet18_param_count_near_11m() {
+        let n = msresnet18();
+        let w = n.total_weights();
+        assert!((10_500_000..12_500_000).contains(&w), "weights={w}");
+    }
+
+    #[test]
+    fn efficientnet_b4_param_count_near_19m() {
+        let n = efficientnet_b4();
+        let w = n.total_weights();
+        // B4 is ~19M params; our stack omits BN affine params (negligible)
+        assert!((15_000_000..23_000_000).contains(&w), "weights={w}");
+    }
+
+    #[test]
+    fn efficientnet_has_over_60_convs() {
+        let n = efficientnet_b4();
+        let convs = n
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. } | LayerKind::DwConv { .. }))
+            .count();
+        assert!(convs > 60, "convs={convs}");
+        assert!(n.n_layers() > 150, "layers={}", n.n_layers());
+    }
+
+    #[test]
+    fn op_count_ordering_matches_workload_scale() {
+        // EffNet-B4 @380 >> MS-ResNet18 @32 >> RWKV single-token
+        let e = efficientnet_b4().total_macs();
+        let m = msresnet18().total_macs();
+        let r = rwkv_6l_512().total_macs();
+        assert!(e > 5 * m, "e={e} m={m}");
+        assert!(m > 10 * r, "m={m} r={r}");
+    }
+
+    #[test]
+    fn msresnet_final_spatial_is_4x4() {
+        let n = msresnet18();
+        let last_conv = n
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .next_back()
+            .unwrap();
+        assert_eq!(last_conv.out_hw(), 4);
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        assert!(by_name("rwkv").is_some());
+        assert!(by_name("cifar100").is_some());
+        assert!(by_name("imagenet").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

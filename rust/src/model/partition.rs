@@ -1,0 +1,177 @@
+//! ANN / SNN / HNN partitioning of a mapped network (§3, §4.2).
+//!
+//! Decides, per layer, the *compute mode* (MAC vs ACC) and, per layer edge,
+//! the *traffic mode* (dense activation packets vs spike packets):
+//!
+//! * **ANN**  — every layer MAC; every edge dense.
+//! * **SNN**  — every layer ACC; every edge spiking.
+//! * **HNN**  — interior layers MAC with dense on-chip edges; edges that
+//!   cross a die boundary are *spiking* (the boundary layer runs on the
+//!   peripheral spiking cores, its traffic is rate-coded spike packets).
+
+use crate::arch::params::{ArchConfig, Variant};
+use crate::model::layer::Network;
+use crate::model::mapping::Mapping;
+
+/// Compute mode of one layer after partitioning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Dense multiply-accumulate on artificial cores.
+    Mac,
+    /// Event-driven accumulate on spiking cores.
+    Acc,
+}
+
+/// Traffic mode of the edge *leaving* a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficMode {
+    /// One packet per activation (8-bit payload), no zero-skipping
+    /// ("zero-skipping is not implemented in the ANN cores", §5.1).
+    Dense,
+    /// Rate-coded spike events: packets = neurons x rate x T.
+    Spike,
+}
+
+/// Partitioned view of one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartLayer {
+    pub layer_idx: usize,
+    pub compute: ComputeMode,
+    /// Traffic on the edge from this layer to the next.
+    pub egress: TrafficMode,
+    /// Whether that edge crosses >= 1 die boundary.
+    pub crosses_die: bool,
+    /// Number of die boundaries crossed.
+    pub die_crossings: usize,
+}
+
+/// The partition of a whole network.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub variant: Variant,
+    pub layers: Vec<PartLayer>,
+}
+
+/// Build the partition for a mapped network under a variant config.
+pub fn partition(net: &Network, mapping: &Mapping, cfg: &ArchConfig) -> Partition {
+    let n = net.layers.len();
+    let mut layers = Vec::with_capacity(n);
+    for i in 0..n {
+        let (crosses, crossings) = if i + 1 < n {
+            (mapping.crosses_die(i, i + 1), mapping.die_crossings(i, i + 1))
+        } else {
+            (false, 0)
+        };
+        let (compute, egress) = match cfg.variant {
+            Variant::Ann => (ComputeMode::Mac, TrafficMode::Dense),
+            Variant::Snn => (ComputeMode::Acc, TrafficMode::Spike),
+            Variant::Hnn => {
+                // A layer computes on spiking cores when its egress crosses
+                // the die (it lives on the peripheral ring feeding the EMIO);
+                // all other layers stay dense on interior cores.
+                if crosses {
+                    (ComputeMode::Acc, TrafficMode::Spike)
+                } else {
+                    (ComputeMode::Mac, TrafficMode::Dense)
+                }
+            }
+        };
+        layers.push(PartLayer {
+            layer_idx: i,
+            compute,
+            egress,
+            crosses_die: crosses,
+            die_crossings: crossings,
+        });
+    }
+    Partition { variant: cfg.variant, layers }
+}
+
+impl Partition {
+    /// Indices of layers whose egress crosses a die (the HNN spiking cuts —
+    /// what Fig. 8 plots for the HNN row).
+    pub fn boundary_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| l.crosses_die)
+            .map(|l| l.layer_idx)
+            .collect()
+    }
+
+    /// Count of spiking-compute layers.
+    pub fn spiking_layer_count(&self) -> usize {
+        self.layers.iter().filter(|l| l.compute == ComputeMode::Acc).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::params::Variant;
+    use crate::model::layer::{Layer, LayerKind};
+    use crate::model::mapping::map_network;
+
+    fn big_net() -> Network {
+        // 100 one-core layers -> 2 chips at 64 cores/chip
+        Network {
+            name: "t".into(),
+            layers: (0..100)
+                .map(|i| Layer::new(format!("l{i}"), LayerKind::Dense { in_f: 128, out_f: 128 }))
+                .collect(),
+        }
+    }
+
+    fn part(variant: Variant) -> Partition {
+        let cfg = ArchConfig::baseline(variant);
+        let net = big_net();
+        let m = map_network(&net, &cfg);
+        partition(&net, &m, &cfg)
+    }
+
+    #[test]
+    fn ann_all_dense_mac() {
+        let p = part(Variant::Ann);
+        assert!(p.layers.iter().all(|l| l.compute == ComputeMode::Mac));
+        assert!(p.layers.iter().all(|l| l.egress == TrafficMode::Dense));
+        assert_eq!(p.spiking_layer_count(), 0);
+    }
+
+    #[test]
+    fn snn_all_spike_acc() {
+        let p = part(Variant::Snn);
+        assert!(p.layers.iter().all(|l| l.compute == ComputeMode::Acc));
+        assert!(p.layers.iter().all(|l| l.egress == TrafficMode::Spike));
+    }
+
+    #[test]
+    fn hnn_spikes_only_at_die_crossings() {
+        let p = part(Variant::Hnn);
+        let boundary = p.boundary_layers();
+        assert_eq!(boundary, vec![63]); // edge 63 -> 64 crosses chips
+        for l in &p.layers {
+            if l.crosses_die {
+                assert_eq!(l.compute, ComputeMode::Acc);
+                assert_eq!(l.egress, TrafficMode::Spike);
+            } else {
+                assert_eq!(l.compute, ComputeMode::Mac);
+                assert_eq!(l.egress, TrafficMode::Dense);
+            }
+        }
+        assert_eq!(p.spiking_layer_count(), 1);
+    }
+
+    #[test]
+    fn hnn_single_chip_model_is_pure_ann() {
+        // A model that fits one chip has no die crossings -> HNN == ANN
+        let cfg = ArchConfig::baseline(Variant::Hnn);
+        let net = Network {
+            name: "small".into(),
+            layers: (0..4)
+                .map(|i| Layer::new(format!("l{i}"), LayerKind::Dense { in_f: 128, out_f: 128 }))
+                .collect(),
+        };
+        let m = map_network(&net, &cfg);
+        let p = partition(&net, &m, &cfg);
+        assert_eq!(p.spiking_layer_count(), 0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Multi-chip chain simulator — the full §3.2 topology: C chips in a
+//! directional-X chain, one EMIO link between consecutive dies, and
+//! **repeater** behaviour at intermediate chips ("packets traverse up to
+//! 256 cores before reaching a network-mapping repeater core for further
+//! routing... supporting communication across up to eight chips").
+//!
+//! A packet whose destination lies k chips East crosses k EMIO links; at
+//! every intermediate chip the West-edge split block re-injects it heading
+//! straight East (the repeater re-maps the route), so end-to-end latency
+//! composes as `sum(mesh hops) + k x SerDes + queueing` — exactly what
+//! Eq. 9 sums analytically.
+
+use std::collections::HashMap;
+
+use crate::arch::chip::Coord;
+use crate::arch::packet::Packet;
+
+use super::emio::{EmioLink, LANES};
+use super::mesh::Mesh;
+use super::router::Flit;
+
+/// A cross-chain transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct ChainTraffic {
+    pub src_chip: usize,
+    pub src: Coord,
+    pub dest_chip: usize,
+    pub dest: Coord,
+}
+
+/// Delivery record.
+#[derive(Debug, Clone, Copy)]
+pub struct Delivery {
+    pub id: u64,
+    pub latency: u64,
+    pub crossings: usize,
+}
+
+/// Chain-level statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ChainStats {
+    pub injected: u64,
+    pub delivered: u64,
+    pub cycles: u64,
+    pub total_latency: u64,
+    pub max_latency: u64,
+}
+
+impl ChainStats {
+    pub fn avg_latency(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_latency as f64 / self.delivered as f64
+        }
+    }
+}
+
+/// C chips + C-1 eastward EMIO links.
+pub struct Chain {
+    pub chips: Vec<Mesh>,
+    links: Vec<EmioLink>,
+    dim: usize,
+    now: u64,
+    next_id: u64,
+    /// id -> (inject cycle, dest chip, dest coord, crossings so far)
+    tracked: HashMap<u64, (u64, usize, Coord, usize)>,
+    pub stats: ChainStats,
+    pub deliveries: Vec<Delivery>,
+    /// per-chip delivered counts already accounted
+    accounted: Vec<u64>,
+    egress_buf: Vec<(usize, Flit)>,
+    /// per-chip mesh-local flit id -> chain id
+    local_map: HashMap<usize, HashMap<u64, u64>>,
+}
+
+impl Chain {
+    pub fn new(n_chips: usize, dim: usize) -> Self {
+        assert!(n_chips >= 1);
+        Chain {
+            chips: (0..n_chips).map(|_| Mesh::new(dim)).collect(),
+            links: (0..n_chips.saturating_sub(1)).map(|_| EmioLink::new()).collect(),
+            dim,
+            now: 0,
+            next_id: 0,
+            tracked: HashMap::new(),
+            stats: ChainStats::default(),
+            deliveries: Vec::new(),
+            accounted: vec![0; n_chips],
+            egress_buf: Vec::new(),
+            local_map: HashMap::new(),
+        }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Inject a transfer (destination chip must be >= source chip — the
+    /// directional-X mapping flows East).
+    pub fn inject(&mut self, t: ChainTraffic) -> u64 {
+        assert!(t.dest_chip >= t.src_chip, "directional-X: eastward only");
+        assert!(t.dest_chip < self.n_chips());
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tracked.insert(id, (self.now, t.dest_chip, t.dest, 0));
+        if t.dest_chip == t.src_chip {
+            let flit_id = self.chips[t.src_chip].inject(t.src, t.dest);
+            // same-chip: mesh handles it; remap the mesh-local id
+            self.remap_local(t.src_chip, flit_id, id);
+        } else {
+            // head for the East edge of the source row
+            let exit = Coord::new(self.dim, t.src.y as usize);
+            let flit_id = self.chips[t.src_chip].inject(t.src, exit);
+            self.remap_local(t.src_chip, flit_id, id);
+        }
+        self.stats.injected += 1;
+        id
+    }
+
+    /// Mesh::inject assigns mesh-local ids; we keep a parallel chain-id by
+    /// re-tagging in the tracked table (mesh ids are only unique per chip,
+    /// so the chain tracks by (chip-local id at inject time) -> chain id).
+    /// Simpler: meshes share the chain's id-space via offsetting — here we
+    /// instead record the mapping.
+    fn remap_local(&mut self, chip: usize, mesh_id: u64, chain_id: u64) {
+        // mesh ids increase monotonically per chip; store reverse map
+        self.local_map.entry(chip).or_default().insert(mesh_id, chain_id);
+    }
+
+    /// One global clock.
+    pub fn step(&mut self) {
+        self.now += 1;
+        let n = self.n_chips();
+        for c in 0..n {
+            self.chips[c].step();
+            // east egress -> link c (if any)
+            self.egress_buf.clear();
+            self.egress_buf.append(&mut self.chips[c].east_egress);
+            if c + 1 < n {
+                for (row, flit) in self.egress_buf.drain(..) {
+                    let chain_id = self
+                        .local_map
+                        .get(&c)
+                        .and_then(|m| m.get(&flit.id))
+                        .copied()
+                        .unwrap_or(flit.id);
+                    let pkt = Packet::spike(0, 0, 0, 0);
+                    self.links[c].inject(row % LANES, &pkt, chain_id, self.now);
+                }
+            } else {
+                self.egress_buf.clear(); // nothing East of the last chip
+            }
+        }
+        // links advance; arrivals enter the next chip
+        for c in 0..self.links.len() {
+            self.links[c].step(self.now);
+            let arrivals: Vec<(super::emio::Frame, u64)> =
+                self.links[c].delivered.drain(..).collect();
+            for (frame, _) in arrivals {
+                let Some(&(inj, dest_chip, dest, crossings)) = self.tracked.get(&frame.id)
+                else {
+                    continue;
+                };
+                self.tracked.insert(frame.id, (inj, dest_chip, dest, crossings + 1));
+                let arriving_chip = c + 1;
+                let (_, port) = Packet::decode_d2d(frame.wire);
+                let row = port as usize % self.dim;
+                let target = if dest_chip == arriving_chip {
+                    dest
+                } else {
+                    // repeater: keep heading East
+                    Coord::new(self.dim, row)
+                };
+                let flit = Flit {
+                    id: frame.id,
+                    dest: target,
+                    wire: frame.wire,
+                    injected_at: inj,
+                    hops: 0,
+                };
+                // chain ids are globally unique; record identity mapping so
+                // subsequent egress lookups resolve
+                self.local_map.entry(arriving_chip).or_default().insert(frame.id, frame.id);
+                self.chips[arriving_chip].inject_west_edge(row, flit);
+            }
+        }
+        // account deliveries
+        for c in 0..n {
+            let delivered = self.chips[c].stats.delivered;
+            if delivered > self.accounted[c] {
+                // latencies are tracked inside the mesh stats; per-packet
+                // records come from tracked-table lookups at ejection time.
+                self.accounted[c] = delivered;
+            }
+        }
+        self.stats.cycles = self.now;
+    }
+
+    /// Total work left anywhere in the chain.
+    pub fn pending(&self) -> usize {
+        self.chips.iter().map(|m| m.backlog()).sum::<usize>()
+            + self.links.iter().map(|l| l.pending()).sum::<usize>()
+    }
+
+    /// Run to drain (bounded); returns aggregate stats. Per-packet
+    /// end-to-end latency is read from the destination meshes' totals
+    /// (flits carry their original inject cycle across links).
+    pub fn run(&mut self, max_cycles: u64) -> ChainStats {
+        let mut idle = 0;
+        while idle < 4 && self.now < max_cycles {
+            let before: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
+            self.step();
+            let after: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
+            let busy = self.pending() > 0 || after != before;
+            idle = if busy { 0 } else { idle + 1 };
+        }
+        self.stats.delivered = self.chips.iter().map(|m| m.stats.delivered).sum();
+        self.stats.total_latency = self.chips.iter().map(|m| m.stats.total_latency).sum();
+        self.stats.cycles = self.now;
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_chip_traffic_stays_local() {
+        let mut ch = Chain::new(3, 8);
+        ch.inject(ChainTraffic {
+            src_chip: 1,
+            src: Coord::new(0, 0),
+            dest_chip: 1,
+            dest: Coord::new(5, 5),
+        });
+        let stats = ch.run(10_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.links[0].accepted + ch.links[1].accepted, 0);
+    }
+
+    #[test]
+    fn one_crossing_pays_one_serdes() {
+        let mut ch = Chain::new(2, 8);
+        ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 3),
+            dest_chip: 1,
+            dest: Coord::new(0, 3),
+        });
+        let stats = ch.run(10_000);
+        assert_eq!(stats.delivered, 1);
+        let lat = stats.avg_latency();
+        assert!(lat >= 76.0 && lat <= 76.0 + 8.0, "lat={lat}");
+    }
+
+    #[test]
+    fn multi_chip_crossing_composes_serdes() {
+        // 0 -> 3: three crossings, each >= 76 cycles of SerDes
+        let mut ch = Chain::new(4, 8);
+        ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 0),
+            dest_chip: 3,
+            dest: Coord::new(0, 0),
+        });
+        let stats = ch.run(100_000);
+        assert_eq!(stats.delivered, 1);
+        let lat = stats.avg_latency();
+        assert!(lat >= 3.0 * 76.0, "lat={lat}");
+        assert!(lat <= 3.0 * 76.0 + 3.0 * 16.0, "lat={lat}");
+    }
+
+    #[test]
+    fn repeater_chip_passes_through() {
+        // destination on chip 2; chip 1 must relay without ejecting
+        let mut ch = Chain::new(3, 8);
+        ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 4),
+            dest_chip: 2,
+            dest: Coord::new(3, 2),
+        });
+        let stats = ch.run(100_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.chips[1].stats.delivered, 0, "repeater must not eject");
+        assert_eq!(ch.chips[2].stats.delivered, 1);
+    }
+
+    #[test]
+    fn eight_chip_chain_delivers_all() {
+        // the paper's "up to eight chips" reach, loaded with mixed traffic
+        let mut ch = Chain::new(8, 8);
+        for i in 0..200usize {
+            ch.inject(ChainTraffic {
+                src_chip: i % 4,
+                src: Coord::new(7, i % 8),
+                dest_chip: (i % 4) + (i % 5).min(4).min(7 - i % 4),
+                dest: Coord::new(i % 8, (i / 8) % 8),
+            });
+        }
+        let stats = ch.run(10_000_000);
+        assert_eq!(stats.delivered, 200, "all packets must arrive");
+    }
+
+    #[test]
+    fn farther_destinations_take_longer() {
+        let lat_for = |dest_chip: usize| {
+            let mut ch = Chain::new(4, 8);
+            ch.inject(ChainTraffic {
+                src_chip: 0,
+                src: Coord::new(7, 0),
+                dest_chip,
+                dest: Coord::new(0, 0),
+            });
+            ch.run(1_000_000).avg_latency()
+        };
+        assert!(lat_for(1) < lat_for(2));
+        assert!(lat_for(2) < lat_for(3));
+    }
+}

@@ -1,0 +1,227 @@
+//! CLP converter state machines — §3.5, Fig. 4, Eqs. (2)-(3).
+//!
+//! Integer-exact mirrors of the Pallas `rate_code` kernels (the same math
+//! must hold in all three layers of the stack; `tests/` cross-checks this
+//! module against the AOT'd kernel artifacts through the PJRT runtime).
+//!
+//! * [`ActivationToSpikes`] — Fig. 4a: an incoming activation is accumulated
+//!   onto the spiking neuron's potential and drained as a deterministic
+//!   rate-coded spike train over the T-tick window (Eq. 2).
+//! * [`SpikesToActivation`] — Fig. 4b: incoming spikes accumulate in the
+//!   scheduler for up to `max_delay` ticks, then scale into an activation
+//!   via the inverse mapping (Eq. 3).
+
+/// Eq. 2 schedule: how many leading ticks fire for activation `a`.
+pub fn spike_count(a: u32, ticks: u32, bits: u32) -> u32 {
+    let amax = (1u64 << bits) - 1;
+    ((a as u64 * ticks as u64) / amax) as u32
+}
+
+/// Eq. 2: the full deterministic spike train (leading-tick schedule).
+pub fn encode(a: u32, ticks: u32, bits: u32) -> Vec<bool> {
+    let n = spike_count(a, ticks, bits);
+    (0..ticks).map(|t| t < n).collect()
+}
+
+/// Eq. 3: spike count -> activation.
+pub fn decode(count: u32, ticks: u32, bits: u32) -> u32 {
+    let amax = (1u64 << bits) - 1;
+    ((count as u64 * amax) / ticks as u64) as u32
+}
+
+/// Fig. 4a converter: activation packet -> rate-coded spike emission.
+#[derive(Debug, Clone)]
+pub struct ActivationToSpikes {
+    ticks: u32,
+    bits: u32,
+    /// Remaining spikes to emit in the current window, per axon.
+    budget: Vec<u32>,
+    /// Current tick within the window.
+    tick: u32,
+}
+
+impl ActivationToSpikes {
+    pub fn new(axons: usize, ticks: u32, bits: u32) -> Self {
+        ActivationToSpikes { ticks, bits, budget: vec![0; axons], tick: 0 }
+    }
+
+    /// Accept an activation packet for `axon` (loads the window budget —
+    /// "the CLP converter accesses the spiking neuron's potential and
+    /// directly accumulates the activation value").
+    pub fn accept(&mut self, axon: usize, activation: u32) {
+        self.budget[axon] = spike_count(activation, self.ticks, self.bits);
+    }
+
+    /// Advance one tick; returns the axons that spike this tick.
+    pub fn tick(&mut self) -> Vec<usize> {
+        let mut fired = Vec::new();
+        for (axon, b) in self.budget.iter_mut().enumerate() {
+            if *b > 0 {
+                fired.push(axon);
+                *b -= 1;
+            }
+        }
+        self.tick = (self.tick + 1) % self.ticks;
+        fired
+    }
+}
+
+/// Fig. 4b converter: spike accumulation -> activation packet.
+#[derive(Debug, Clone)]
+pub struct SpikesToActivation {
+    ticks: u32,
+    bits: u32,
+    /// 8-bit spike counters per axon ("the number of spikes is stored
+    /// within the scheduler as an 8-bit value").
+    counters: Vec<u8>,
+    tick: u32,
+}
+
+impl SpikesToActivation {
+    pub fn new(axons: usize, ticks: u32, bits: u32) -> Self {
+        SpikesToActivation { ticks, bits, counters: vec![0; axons], tick: 0 }
+    }
+
+    /// Record a spike on `axon` in the current window.
+    pub fn spike(&mut self, axon: usize) {
+        self.counters[axon] = self.counters[axon].saturating_add(1);
+    }
+
+    /// Advance one tick; at the end of the window, emit the decoded
+    /// activations (axon, value) and reset.
+    pub fn tick(&mut self) -> Option<Vec<(usize, u32)>> {
+        self.tick += 1;
+        if self.tick < self.ticks {
+            return None;
+        }
+        self.tick = 0;
+        let out = self
+            .counters
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(axon, &c)| (axon, decode(c as u32, self.ticks, self.bits)))
+            .collect();
+        for c in self.counters.iter_mut() {
+            *c = 0;
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_extremes() {
+        assert_eq!(spike_count(0, 8, 8), 0);
+        assert_eq!(spike_count(255, 8, 8), 8);
+        assert_eq!(spike_count(128, 8, 8), 4); // 128*8/255 = 4.01 -> 4
+    }
+
+    #[test]
+    fn eq3_inverse_of_eq2_within_quantum() {
+        for bits in [4u32, 8] {
+            for ticks in [2u32, 4, 8, 16] {
+                let amax = (1u32 << bits) - 1;
+                for a in 0..=amax {
+                    let n = spike_count(a, ticks, bits);
+                    let a2 = decode(n, ticks, bits);
+                    let err = a.abs_diff(a2);
+                    assert!(
+                        err <= amax.div_ceil(ticks),
+                        "bits={bits} ticks={ticks} a={a} a2={a2}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_monotone() {
+        // decode(encode()) is monotone non-decreasing in a
+        let mut prev = 0;
+        for a in 0..=255u32 {
+            let v = decode(spike_count(a, 8, 8), 8, 8);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn a2s_emits_leading_ticks() {
+        let mut c = ActivationToSpikes::new(4, 8, 8);
+        c.accept(0, 255); // 8 spikes
+        c.accept(1, 96); // 3 spikes
+        c.accept(2, 0); // none
+        let mut per_axon = [0u32; 4];
+        for _ in 0..8 {
+            for a in c.tick() {
+                per_axon[a] += 1;
+            }
+        }
+        assert_eq!(per_axon, [8, 3, 0, 0]);
+    }
+
+    #[test]
+    fn s2a_accumulates_window_then_emits() {
+        let mut c = SpikesToActivation::new(4, 8, 8);
+        for _ in 0..5 {
+            c.spike(1);
+        }
+        c.spike(3);
+        let mut result = None;
+        for _ in 0..8 {
+            if let Some(r) = c.tick() {
+                result = Some(r);
+            }
+        }
+        let r = result.expect("window must close");
+        assert_eq!(r, vec![(1, decode(5, 8, 8)), (3, decode(1, 8, 8))]);
+    }
+
+    #[test]
+    fn s2a_resets_after_window() {
+        let mut c = SpikesToActivation::new(2, 4, 8);
+        c.spike(0);
+        for _ in 0..4 {
+            c.tick();
+        }
+        // second window with no spikes -> empty emission
+        let mut last = None;
+        for _ in 0..4 {
+            if let Some(r) = c.tick() {
+                last = Some(r);
+            }
+        }
+        assert_eq!(last.unwrap(), vec![]);
+    }
+
+    #[test]
+    fn full_a2s_to_s2a_pipeline_matches_direct_roundtrip() {
+        // Fig. 4a feeding Fig. 4b across a simulated die must equal the
+        // pure Eq.2 -> Eq.3 computation.
+        for a in [0u32, 7, 64, 128, 200, 255] {
+            let mut tx = ActivationToSpikes::new(1, 8, 8);
+            let mut rx = SpikesToActivation::new(1, 8, 8);
+            tx.accept(0, a);
+            let mut emitted = None;
+            for _ in 0..8 {
+                for axon in tx.tick() {
+                    rx.spike(axon);
+                }
+                if let Some(r) = rx.tick() {
+                    emitted = Some(r);
+                }
+            }
+            let direct = decode(spike_count(a, 8, 8), 8, 8);
+            let got = emitted
+                .unwrap()
+                .first()
+                .map(|&(_, v)| v)
+                .unwrap_or(0);
+            assert_eq!(got, direct, "a={a}");
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Core microarchitecture simulator — §3.3's synchronous, clock-driven
+//! core executing one layer slice under the weight-stationary dataflow.
+//!
+//! Models, per clock cycle:
+//!
+//! * the **packet scheduler**: incoming spike/activation packets land in
+//!   the scheduler SRAM at `now + delivery_tick` (the 4-bit delay field,
+//!   up to 16 ticks); one SRAM row (all 256 axons of one tick) is drained
+//!   into the PE pipeline per tick boundary;
+//! * the **PE**: `grouping` parallel lanes, one MAC/ACC per lane per
+//!   cycle; weights stay resident (weight-stationary — reloads only when
+//!   fan-in exceeds the 256 axons, counted as stall cycles);
+//! * **zero-skipping on the spiking path only**: the SNN PE consumes only
+//!   the axons that actually spiked; the ANN PE walks all axons ("zero-
+//!   skipping is not implemented in the ANN cores", §5.1).
+//!
+//! The simulator cross-validates Eq. 6/7: for a fully-utilized core the
+//! measured busy cycles approach `ops / lanes`.
+
+use crate::arch::core::CoreKind;
+
+/// One incoming packet for the core.
+#[derive(Debug, Clone, Copy)]
+pub struct CorePacket {
+    pub axon: u16,
+    /// Delivery delay in ticks (4-bit field, 0..16).
+    pub delay: u8,
+    /// Activation value (dense) or 1 (spike).
+    pub value: u8,
+}
+
+/// Result of simulating one layer slice on a core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreRun {
+    /// Total cycles from first packet to last op retired.
+    pub cycles: u64,
+    /// Cycles the PE actually computed (busy).
+    pub busy_cycles: u64,
+    /// MAC or ACC operations performed.
+    pub ops: u64,
+    /// Cycles stalled reloading weights (multi-iteration mapping).
+    pub reload_cycles: u64,
+    /// PE utilization in [0, 1].
+    pub utilization: f64,
+}
+
+/// Weight-stationary core executing `neurons` output neurons with the
+/// given fan-in over a window of scheduler ticks.
+#[derive(Debug, Clone)]
+pub struct CoreSim {
+    pub kind: CoreKind,
+    /// Output neurons resident on this core (<= 256).
+    pub neurons: usize,
+    /// PE lanes (= grouping; one op per lane per cycle).
+    pub lanes: usize,
+    /// Axons (input ports) — fixed at 256 by Table 2.
+    pub axons: usize,
+    /// Scheduler window in ticks.
+    pub window: usize,
+    /// Cycles to reload one weight row when fan-in spills the crossbar.
+    pub reload_penalty: u64,
+}
+
+pub const AXONS: usize = 256;
+pub const WINDOW: usize = 16;
+
+impl CoreSim {
+    pub fn new(kind: CoreKind, neurons: usize, lanes: usize) -> Self {
+        CoreSim {
+            kind,
+            neurons: neurons.min(AXONS),
+            lanes: lanes.max(1),
+            axons: AXONS,
+            window: WINDOW,
+            reload_penalty: AXONS as u64, // one SRAM row per axon group
+        }
+    }
+
+    /// Execute one scheduler window of packets; `fan_in` is the layer's
+    /// full fan-in (drives weight-reload iterations).
+    pub fn run(&self, packets: &[CorePacket], fan_in: usize) -> CoreRun {
+        // scheduler SRAM: window x axons occupancy bitmap/value store
+        let mut sched: Vec<Vec<u8>> = vec![vec![0; self.axons]; self.window];
+        for p in packets {
+            let t = (p.delay as usize).min(self.window - 1);
+            let a = (p.axon as usize).min(self.axons - 1);
+            // dense packets overwrite (activation value); spikes accumulate
+            match self.kind {
+                CoreKind::Artificial => sched[t][a] = p.value,
+                CoreKind::Spiking => sched[t][a] = sched[t][a].saturating_add(1),
+            }
+        }
+
+        // weight-reload iterations: fan-in beyond the crossbar re-streams
+        // the weight SRAM once per extra iteration (§3.3).
+        let iterations = fan_in.div_ceil(self.axons).max(1) as u64;
+        let reload_cycles = (iterations - 1) * self.reload_penalty;
+
+        let mut busy = 0u64;
+        let mut ops = 0u64;
+        for tick in sched.iter() {
+            // active axons this tick
+            let active = match self.kind {
+                // ANN: a tick with any delivery walks EVERY fan-in axon
+                // (no zero-skipping); quiet ticks cost nothing.
+                CoreKind::Artificial => {
+                    if tick.iter().any(|&v| v > 0) {
+                        tick.len().min(fan_in)
+                    } else {
+                        0
+                    }
+                }
+                // SNN: event-driven — only spiking axons are consumed
+                CoreKind::Spiking => tick.iter().filter(|&&v| v > 0).count(),
+            };
+            if active == 0 {
+                continue;
+            }
+            // each active axon contributes one op per resident neuron,
+            // spread over `lanes` parallel lanes
+            let tick_ops = (active * self.neurons) as u64 * iterations;
+            ops += tick_ops;
+            busy += tick_ops.div_ceil(self.lanes as u64);
+        }
+
+        let cycles = busy + reload_cycles + self.window as u64; // +drain
+        CoreRun {
+            cycles,
+            busy_cycles: busy,
+            ops,
+            reload_cycles,
+            utilization: if cycles == 0 {
+                0.0
+            } else {
+                ops as f64 / (cycles as f64 * self.lanes as f64)
+            },
+        }
+    }
+}
+
+/// Build a dense-activation packet window (every axon once, tick 0).
+pub fn dense_window(fan_in: usize) -> Vec<CorePacket> {
+    (0..fan_in.min(AXONS))
+        .map(|a| CorePacket { axon: a as u16, delay: 0, value: 128 })
+        .collect()
+}
+
+/// Build a rate-coded spike window at `activity` over `ticks`.
+pub fn spike_window(fan_in: usize, activity: f64, ticks: usize, seed: u64) -> Vec<CorePacket> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut out = Vec::new();
+    for a in 0..fan_in.min(AXONS) {
+        for t in 0..ticks.min(WINDOW) {
+            if rng.chance(activity) {
+                out.push(CorePacket { axon: a as u16, delay: t as u8, value: 1 });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ann_core_matches_eq6_at_full_load() {
+        // 256 neurons, fan-in 256, G=256 lanes: Eq. 6 says
+        // cycles = MACs / (G*ceil(N/G)) = 65536/256 = 256.
+        let core = CoreSim::new(CoreKind::Artificial, 256, 256);
+        let run = core.run(&dense_window(256), 256);
+        assert_eq!(run.ops, 256 * 256);
+        assert_eq!(run.busy_cycles, 256);
+        assert!(run.utilization > 0.9, "util={}", run.utilization);
+    }
+
+    #[test]
+    fn snn_core_event_driven_scales_with_activity() {
+        let core = CoreSim::new(CoreKind::Spiking, 256, 256);
+        let lo = core.run(&spike_window(256, 0.05, 8, 1), 256);
+        let hi = core.run(&spike_window(256, 0.5, 8, 1), 256);
+        assert!(lo.ops < hi.ops);
+        assert!(lo.busy_cycles < hi.busy_cycles);
+    }
+
+    #[test]
+    fn snn_ops_approximate_acc_model() {
+        // ACCs ~ fan_in * neurons * activity * T (the Eq. 7 numerator)
+        let core = CoreSim::new(CoreKind::Spiking, 256, 256);
+        let run = core.run(&spike_window(256, 0.1, 8, 7), 256);
+        let expect = 256.0 * 256.0 * 0.1 * 8.0;
+        let ratio = run.ops as f64 / expect;
+        assert!((0.8..1.2).contains(&ratio), "ops={} expect={expect}", run.ops);
+    }
+
+    #[test]
+    fn weight_reload_iterations_stall() {
+        let core = CoreSim::new(CoreKind::Artificial, 256, 256);
+        let near = core.run(&dense_window(256), 256);
+        let far = core.run(&dense_window(256), 1024); // 4 iterations
+        assert_eq!(near.reload_cycles, 0);
+        assert_eq!(far.reload_cycles, 3 * 256);
+        assert!(far.cycles > near.cycles);
+        assert_eq!(far.ops, near.ops * 4);
+    }
+
+    #[test]
+    fn fewer_lanes_more_cycles_same_ops() {
+        let wide = CoreSim::new(CoreKind::Artificial, 256, 256);
+        let narrow = CoreSim::new(CoreKind::Artificial, 256, 64);
+        let w = wide.run(&dense_window(256), 256);
+        let n = narrow.run(&dense_window(256), 256);
+        assert_eq!(w.ops, n.ops);
+        assert!(n.busy_cycles > w.busy_cycles);
+        assert_eq!(n.busy_cycles, 4 * w.busy_cycles);
+    }
+
+    #[test]
+    fn ann_ignores_sparsity_snn_exploits_it() {
+        // identical spike pattern: the ANN core walks all fan-in axons,
+        // the SNN core only the active ones (§5.1 zero-skipping note).
+        let pkts = spike_window(256, 0.1, 1, 3);
+        let ann = CoreSim::new(CoreKind::Artificial, 256, 256).run(&pkts, 256);
+        let snn = CoreSim::new(CoreKind::Spiking, 256, 256).run(&pkts, 256);
+        assert!(snn.ops < ann.ops);
+    }
+
+    #[test]
+    fn empty_window_only_drain() {
+        let core = CoreSim::new(CoreKind::Spiking, 256, 256);
+        let run = core.run(&[], 256);
+        assert_eq!(run.ops, 0);
+        assert_eq!(run.busy_cycles, 0);
+        assert_eq!(run.cycles, WINDOW as u64);
+    }
+
+    #[test]
+    fn delayed_spikes_land_in_later_ticks() {
+        let core = CoreSim::new(CoreKind::Spiking, 16, 256);
+        let pkts = [
+            CorePacket { axon: 0, delay: 0, value: 1 },
+            CorePacket { axon: 0, delay: 15, value: 1 },
+        ];
+        let run = core.run(&pkts, 256);
+        assert_eq!(run.ops, 2 * 16); // two ticks x 16 neurons
+    }
+}

@@ -1,0 +1,226 @@
+//! EMIO cycle-level model (§3.4, Fig. 3): merge block -> SerDes -> pad ->
+//! (die gap) -> deserializer -> split block.
+//!
+//! One [`EmioLink`] models one chip side's unidirectional egress:
+//!
+//! * 8 **serializer** lanes (one per boundary core feeding the side), each
+//!   shifting one 38-bit frame out over [`SER_CYCLES`] cycles — they run in
+//!   parallel, matching "the serialization process occurs in parallel
+//!   across the 8 peripheral ports";
+//! * an 8-to-1 **merge/mux** onto the pad, draining one completed frame per
+//!   cycle (round-robin over ready lanes, asynchronous-FIFO-buffered in the
+//!   RTL — a queue here);
+//! * a pipelined **deserializer**: a frame entering the pad appears at the
+//!   split block [`DES_CYCLES`] cycles later; throughput one frame/cycle.
+//!
+//! A lone frame therefore crosses in `38 + 38 = 76` cycles — the synthesized
+//! RTL figure the paper reports.
+
+use std::collections::VecDeque;
+
+use crate::arch::packet::Packet;
+
+/// SerDes serialization depth (cycles per frame in a lane).
+pub const SER_CYCLES: u64 = 38;
+/// Deserializer pipeline depth (cycles from pad to split block).
+pub const DES_CYCLES: u64 = 38;
+/// Serializer lanes per chip side (8 boundary cores feed one pad).
+pub const LANES: usize = 8;
+
+/// A frame in flight across the die gap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Tagged 38-bit word (packet + 3-bit origin port).
+    pub wire: u64,
+    /// Opaque payload id for tracking.
+    pub id: u64,
+    /// Cycle the frame entered a serializer lane.
+    pub entered_at: u64,
+}
+
+#[derive(Debug, Clone)]
+struct SerLane {
+    /// Frame being shifted out and the cycle it completes.
+    busy_until: u64,
+    current: Option<Frame>,
+    queue: VecDeque<Frame>,
+}
+
+/// One unidirectional die-to-die link.
+#[derive(Debug, Clone)]
+pub struct EmioLink {
+    lanes: Vec<SerLane>,
+    /// Merge FIFO of fully-serialized frames waiting for the pad.
+    merge: VecDeque<Frame>,
+    /// (frame, cycle it exits the deserializer).
+    in_flight: VecDeque<(Frame, u64)>,
+    /// Frames delivered to the split block on the far die.
+    pub delivered: Vec<(Frame, u64)>,
+    /// Round-robin pointer over lanes for merge arbitration.
+    rr: usize,
+    /// Total frames accepted.
+    pub accepted: u64,
+}
+
+impl Default for EmioLink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EmioLink {
+    pub fn new() -> Self {
+        EmioLink {
+            lanes: (0..LANES)
+                .map(|_| SerLane { busy_until: 0, current: None, queue: VecDeque::new() })
+                .collect(),
+            merge: VecDeque::new(),
+            in_flight: VecDeque::new(),
+            delivered: Vec::new(),
+            rr: 0,
+            accepted: 0,
+        }
+    }
+
+    /// Offer a packet to boundary lane `lane` (the source boundary core's
+    /// port index, 0..8) at cycle `now`.
+    pub fn inject(&mut self, lane: usize, pkt: &Packet, id: u64, now: u64) {
+        let lane = lane % LANES;
+        self.lanes[lane].queue.push_back(Frame {
+            wire: pkt.encode_d2d(lane as u8),
+            id,
+            entered_at: now,
+        });
+        self.accepted += 1;
+    }
+
+    /// Advance one clock cycle.
+    pub fn step(&mut self, now: u64) {
+        // 1. serializer lanes: start a new frame when idle; finish shifts.
+        for lane in self.lanes.iter_mut() {
+            if lane.current.is_none() {
+                if let Some(f) = lane.queue.pop_front() {
+                    // the shift occupies SER_CYCLES clocks including this one
+                    lane.busy_until = now + SER_CYCLES - 1;
+                    lane.current = Some(f);
+                }
+            }
+        }
+        // completed serializations move to the merge FIFO
+        for lane in self.lanes.iter_mut() {
+            if lane.current.is_some() && now >= lane.busy_until {
+                self.merge.push_back(lane.current.take().unwrap());
+            }
+        }
+        // 2. pad: one frame per cycle leaves the merge FIFO and enters the
+        //    deserializer pipeline (round-robin is inherent in FIFO order;
+        //    rr retained for lane fairness bookkeeping).
+        self.rr = (self.rr + 1) % LANES;
+        if let Some(f) = self.merge.pop_front() {
+            self.in_flight.push_back((f, now + DES_CYCLES));
+        }
+        // 3. deserializer exit: deliver everything whose pipeline time is up
+        while let Some((_, t)) = self.in_flight.front() {
+            if *t <= now {
+                let (f, _) = self.in_flight.pop_front().unwrap();
+                self.delivered.push((f, now));
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Frames still inside the link.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.len() + l.current.is_some() as usize).sum::<usize>()
+            + self.merge.len()
+            + self.in_flight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::packet::Packet;
+
+    fn run_until_empty(link: &mut EmioLink, start: u64) -> u64 {
+        let mut now = start;
+        while link.pending() > 0 {
+            now += 1;
+            link.step(now);
+            assert!(now < start + 1_000_000, "link wedged");
+        }
+        now
+    }
+
+    #[test]
+    fn single_packet_crosses_in_76_cycles() {
+        // The §3.4 RTL claim: one packet, die-to-die, 76 cycles.
+        let mut link = EmioLink::new();
+        let p = Packet::spike(1, 0, 7, 3);
+        link.inject(0, &p, 42, 0);
+        let done = run_until_empty(&mut link, 0);
+        assert_eq!(link.delivered.len(), 1);
+        let (frame, at) = &link.delivered[0];
+        assert_eq!(*at, done);
+        assert_eq!(*at - frame.entered_at, SER_CYCLES + DES_CYCLES); // 76
+        // codec fidelity across the link
+        let (decoded, port) = Packet::decode_d2d(frame.wire);
+        assert_eq!(decoded, p);
+        assert_eq!(port, 0);
+    }
+
+    #[test]
+    fn parallel_lanes_serialize_concurrently() {
+        // 8 packets on 8 lanes: all serialize in parallel; the pad drains
+        // one per cycle; total time ~ 76 + 7, NOT 8 x 76.
+        let mut link = EmioLink::new();
+        for lane in 0..8 {
+            link.inject(lane, &Packet::spike(1, 0, lane as u8, 0), lane as u64, 0);
+        }
+        let done = run_until_empty(&mut link, 0);
+        assert_eq!(link.delivered.len(), 8);
+        assert!(done <= 76 + 8, "done={done}");
+    }
+
+    #[test]
+    fn single_lane_is_serialization_bound() {
+        // 4 packets on ONE lane: each waits a full 38-cycle shift:
+        // last delivery >= 4*38 + 38.
+        let mut link = EmioLink::new();
+        for i in 0..4 {
+            link.inject(0, &Packet::spike(1, 0, 0, 0), i, 0);
+        }
+        let done = run_until_empty(&mut link, 0);
+        assert!(done >= 4 * SER_CYCLES + DES_CYCLES, "done={done}");
+    }
+
+    #[test]
+    fn pipelined_throughput_approaches_one_per_cycle() {
+        // Saturate all lanes with many packets: steady-state throughput is
+        // bounded by the pad at 1 frame/cycle but must beat 1 per 38.
+        let mut link = EmioLink::new();
+        let n = 400u64;
+        for i in 0..n {
+            link.inject((i % 8) as usize, &Packet::spike(1, 0, 0, 0), i, 0);
+        }
+        let done = run_until_empty(&mut link, 0);
+        // lower bound: lanes serialize 50 frames each = 50*38 = 1900;
+        // upper bound must be far below the fully-serial 400*76.
+        assert!(done < n * 40, "done={done}");
+        assert_eq!(link.delivered.len(), n as usize);
+    }
+
+    #[test]
+    fn delivery_preserves_per_lane_order() {
+        let mut link = EmioLink::new();
+        for i in 0..10 {
+            link.inject(3, &Packet::activation(1, 0, i as u8, 0), i, 0);
+        }
+        run_until_empty(&mut link, 0);
+        let ids: Vec<u64> = link.delivered.iter().map(|(f, _)| f.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+    }
+}

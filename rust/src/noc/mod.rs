@@ -1,0 +1,27 @@
+//! Cycle-level NoC simulator (§4.2's "custom simulation framework", the
+//! clocked counterpart of the closed-form `analytic` engine).
+//!
+//! * [`router`] — 5-port X-Y routers with East/West priority;
+//! * [`mesh`]   — a synchronous N x N mesh of routers (one chip);
+//! * [`emio`]   — the §3.4 merge/SerDes/split die-to-die block
+//!   (validates the 76-cycle single-packet RTL figure);
+//! * [`duplex`] — two chips + one EMIO link, end-to-end;
+//! * [`traffic`] — packet-trace generation from layer workloads;
+//! * [`clp`]    — the cross-layer packet converter state machine (Eqs. 2-3,
+//!   integer-exact against the Pallas kernels).
+
+pub mod chain;
+pub mod clp;
+pub mod core_sim;
+pub mod model_sim;
+pub mod duplex;
+pub mod emio;
+pub mod mesh;
+pub mod router;
+pub mod traffic;
+
+pub use chain::{Chain, ChainTraffic};
+pub use duplex::{CrossTraffic, Duplex};
+pub use emio::EmioLink;
+pub use mesh::{Mesh, MeshStats};
+pub use router::{route_xy, Flit, Port, Router};

@@ -1,0 +1,210 @@
+//! Per-tile packet router: deterministic X-Y routing with X (East/West)
+//! priority for deadlock avoidance (§3.2, after TrueNorth [31]).
+//!
+//! The router is a synchronous 5-port switch (N/S/E/W/Local). Each cycle it
+//! arbitrates one packet per *output* port; X-direction traffic wins ties so
+//! a packet never turns from Y back into X (the X-Y turn-model guarantee).
+
+use std::collections::VecDeque;
+
+use crate::arch::chip::Coord;
+
+/// Router ports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Port {
+    North,
+    South,
+    East,
+    West,
+    Local,
+}
+
+pub const IN_PORTS: [Port; 5] = [Port::East, Port::West, Port::North, Port::South, Port::Local];
+
+/// A packet in flight inside one chip's mesh.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Flit {
+    pub id: u64,
+    /// Destination tile on this chip.
+    pub dest: Coord,
+    /// Encoded 35-bit wire word (kept for codec fidelity / EMIO framing).
+    pub wire: u64,
+    /// Cycle the packet was injected into the source router.
+    pub injected_at: u64,
+    /// Hops taken so far (for Eq. 4/5 cross-validation).
+    pub hops: u32,
+}
+
+/// One 5-port router with per-input FIFOs.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub at: Coord,
+    /// Input queues indexed in IN_PORTS order.
+    inq: [VecDeque<Flit>; 5],
+    /// Packets the local port delivered this tile (ejected).
+    pub delivered: Vec<Flit>,
+}
+
+/// Routing decision for a packet at tile `at` heading to `dest`:
+/// X first (East/West), then Y (North/South), then eject locally.
+pub fn route_xy(at: Coord, dest: Coord) -> Port {
+    if dest.x > at.x {
+        Port::East
+    } else if dest.x < at.x {
+        Port::West
+    } else if dest.y > at.y {
+        Port::North
+    } else if dest.y < at.y {
+        Port::South
+    } else {
+        Port::Local
+    }
+}
+
+impl Router {
+    pub fn new(at: Coord) -> Self {
+        Router {
+            at,
+            inq: [
+                VecDeque::new(),
+                VecDeque::new(),
+                VecDeque::new(),
+                VecDeque::new(),
+                VecDeque::new(),
+            ],
+            delivered: Vec::new(),
+        }
+    }
+
+    fn port_idx(p: Port) -> usize {
+        match p {
+            Port::East => 0,
+            Port::West => 1,
+            Port::North => 2,
+            Port::South => 3,
+            Port::Local => 4,
+        }
+    }
+
+    /// Enqueue a packet arriving on input `port`.
+    pub fn push(&mut self, port: Port, flit: Flit) {
+        self.inq[Self::port_idx(port)].push_back(flit);
+    }
+
+    /// Number of queued packets (all inputs).
+    pub fn backlog(&self) -> usize {
+        self.inq.iter().map(|q| q.len()).sum()
+    }
+
+    /// Arbitrate one cycle. For each output direction pick at most one
+    /// packet, scanning inputs in X-priority order (East, West, North,
+    /// South, Local). Returns (out_port, flit) pairs to be delivered to
+    /// neighbours next cycle; locally-destined packets are ejected into
+    /// `delivered`.
+    pub fn step(&mut self) -> Vec<(Port, Flit)> {
+        let mut out = Vec::new();
+        self.step_into(&mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Router::step`]: appends grants to `out`
+    /// (the mesh reuses one scratch buffer across all routers per cycle —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn step_into(&mut self, out: &mut Vec<(Port, Flit)>) {
+        let mut granted = [false; 5]; // output-port grants this cycle
+        for in_p in IN_PORTS {
+            let qi = Self::port_idx(in_p);
+            // peek: decide output for the head packet
+            let Some(head) = self.inq[qi].front() else { continue };
+            let out_p = route_xy(self.at, head.dest);
+            let oi = Self::port_idx(out_p);
+            if granted[oi] {
+                continue; // output busy this cycle; head waits
+            }
+            granted[oi] = true;
+            let mut flit = self.inq[qi].pop_front().unwrap();
+            if out_p == Port::Local {
+                self.delivered.push(flit);
+            } else {
+                flit.hops += 1;
+                out.push((out_p, flit));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flit(dest: Coord) -> Flit {
+        Flit { id: 0, dest, wire: 0, injected_at: 0, hops: 0 }
+    }
+
+    #[test]
+    fn xy_routes_x_first() {
+        let at = Coord::new(3, 3);
+        assert_eq!(route_xy(at, Coord::new(5, 7)), Port::East);
+        assert_eq!(route_xy(at, Coord::new(1, 0)), Port::West);
+        assert_eq!(route_xy(at, Coord::new(3, 7)), Port::North);
+        assert_eq!(route_xy(at, Coord::new(3, 1)), Port::South);
+        assert_eq!(route_xy(at, Coord::new(3, 3)), Port::Local);
+    }
+
+    #[test]
+    fn one_packet_per_output_per_cycle() {
+        let mut r = Router::new(Coord::new(0, 0));
+        // two packets both need East
+        r.push(Port::Local, flit(Coord::new(3, 0)));
+        r.push(Port::West, flit(Coord::new(2, 0)));
+        let out = r.step();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, Port::East);
+        assert_eq!(r.backlog(), 1); // loser waits
+        let out2 = r.step();
+        assert_eq!(out2.len(), 1);
+        assert_eq!(r.backlog(), 0);
+    }
+
+    #[test]
+    fn x_traffic_beats_local_injection() {
+        let mut r = Router::new(Coord::new(1, 1));
+        let mut east = flit(Coord::new(5, 1));
+        east.id = 1;
+        let mut inj = flit(Coord::new(5, 1));
+        inj.id = 2;
+        r.push(Port::Local, inj);
+        r.push(Port::West, east); // through-traffic from the West input
+        let out = r.step();
+        // through-traffic (scanned before Local) wins the East port
+        assert_eq!(out[0].1.id, 1);
+    }
+
+    #[test]
+    fn local_destination_ejects() {
+        let mut r = Router::new(Coord::new(2, 2));
+        r.push(Port::North, flit(Coord::new(2, 2)));
+        let out = r.step();
+        assert!(out.is_empty());
+        assert_eq!(r.delivered.len(), 1);
+    }
+
+    #[test]
+    fn hops_increment_on_forward() {
+        let mut r = Router::new(Coord::new(0, 0));
+        r.push(Port::Local, flit(Coord::new(2, 0)));
+        let out = r.step();
+        assert_eq!(out[0].1.hops, 1);
+    }
+
+    #[test]
+    fn different_outputs_move_in_parallel() {
+        let mut r = Router::new(Coord::new(4, 4));
+        r.push(Port::West, flit(Coord::new(7, 4))); // East
+        r.push(Port::East, flit(Coord::new(0, 4))); // West
+        r.push(Port::South, flit(Coord::new(4, 7))); // North
+        r.push(Port::Local, flit(Coord::new(4, 0))); // South
+        let out = r.step();
+        assert_eq!(out.len(), 4); // all four distinct outputs granted
+    }
+}

@@ -1,0 +1,92 @@
+//! Traffic generation: turn a layer edge's packet counts into concrete
+//! (src, dest) injections for the cycle-level simulators — dense edges emit
+//! one packet per activation slot, spiking edges Bernoulli-sample events at
+//! the layer's firing activity over T ticks (rate coding, Eq. 2).
+
+use crate::arch::chip::Coord;
+use crate::util::rng::Rng;
+
+use super::duplex::CrossTraffic;
+
+/// Generate cross-die traffic for one boundary edge.
+///
+/// * `neurons` — source-layer neuron count mapped on the boundary cores;
+/// * `dense_packets_per_neuron` — ceil(bits/8) for dense, 0 for spiking;
+/// * `activity`, `ticks` — spiking parameters (used when dense == 0);
+/// * neuron i sources from boundary row `i % dim` (the paper's 8 peripheral
+///   ports) and targets the mirrored tile on the far chip.
+pub fn boundary_edge_traffic(
+    neurons: usize,
+    dense_packets_per_neuron: usize,
+    activity: f64,
+    ticks: u32,
+    dim: usize,
+    seed: u64,
+) -> Vec<CrossTraffic> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for i in 0..neurons {
+        let row = i % dim;
+        let src = Coord::new(dim - 1, row);
+        let dest = Coord::new(i / dim % dim, row);
+        if dense_packets_per_neuron > 0 {
+            for _ in 0..dense_packets_per_neuron {
+                out.push(CrossTraffic { src, dest });
+            }
+        } else {
+            // rate-coded: a spike event per tick with probability `activity`
+            for _ in 0..ticks {
+                if rng.chance(activity) {
+                    out.push(CrossTraffic { src, dest });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Expected packet count for a spiking edge (the analytic model's number) —
+/// used to check the sampled traffic converges to it.
+pub fn expected_spike_packets(neurons: usize, activity: f64, ticks: u32) -> f64 {
+    neurons as f64 * activity * ticks as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_edge_exact_count() {
+        let t = boundary_edge_traffic(256, 1, 0.0, 0, 8, 1);
+        assert_eq!(t.len(), 256);
+        let t32 = boundary_edge_traffic(256, 4, 0.0, 0, 8, 1);
+        assert_eq!(t32.len(), 1024); // 32-bit -> 4 packets per neuron
+    }
+
+    #[test]
+    fn spike_edge_statistical_count() {
+        let t = boundary_edge_traffic(4096, 0, 0.1, 8, 8, 42);
+        let expect = expected_spike_packets(4096, 0.1, 8);
+        let got = t.len() as f64;
+        assert!((got - expect).abs() / expect < 0.10, "got={got} expect={expect}");
+    }
+
+    #[test]
+    fn srcs_are_boundary_cores() {
+        let t = boundary_edge_traffic(64, 1, 0.0, 0, 8, 3);
+        assert!(t.iter().all(|c| c.src.x == 7));
+    }
+
+    #[test]
+    fn zero_activity_no_packets() {
+        let t = boundary_edge_traffic(1024, 0, 0.0, 8, 8, 5);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = boundary_edge_traffic(100, 0, 0.3, 8, 8, 11);
+        let b = boundary_edge_traffic(100, 0, 0.3, 8, 8, 11);
+        assert_eq!(a.len(), b.len());
+    }
+}

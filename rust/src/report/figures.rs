@@ -1,0 +1,350 @@
+//! Paper-figure regeneration (Figs. 7, 8, 10-13): each function runs the
+//! relevant sweep through the analytic engine and returns the series the
+//! paper plots, as a [`Table`] (console + CSV).
+
+use crate::analytic::{efficiency_gain, simulate, simulate_variants, speedup, SimReport};
+use crate::arch::params::{ArchConfig, Variant};
+use crate::model::networks;
+use crate::sparsity::SparsityProfile;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// The three benchmark rows of Figs. 10/12: (display name, network).
+pub fn benchmark_names() -> [(&'static str, &'static str); 3] {
+    [
+        ("Enwik8 / RWKV", "rwkv-6l-512"),
+        ("CIFAR100 / MS-ResNet18", "ms-resnet18"),
+        ("ImageNet-1K / EfficientNet-B4", "efficientnet-b4"),
+    ]
+}
+
+/// Fig. 7 (latency axis): activation-sparsity sweep — latency speedup of
+/// the spiking variants relative to their own 90%-sparsity baseline, per
+/// model. (The model-quality axis comes from training runs; see
+/// `examples/sparsity_sweep.rs`.)
+pub fn fig7_latency_sweep(sparsities: &[f64]) -> Table {
+    let mut t = Table::new(
+        "Fig 7 (latency axis): inference latency vs activation sparsity (HNN)",
+        &["sparsity", "rwkv cycles", "msresnet18 cycles", "effnet-b4 cycles"],
+    );
+    let cfg = ArchConfig::baseline(Variant::Hnn);
+    for &s in sparsities {
+        let mut row = vec![format!("{:.3}", s)];
+        for (_, net_name) in benchmark_names() {
+            let net = networks::by_name(net_name).unwrap();
+            let profile = SparsityProfile::uniform(net.layers.len(), 1.0 - s);
+            let rep = simulate(&net, &cfg, &profile);
+            row.push(format!("{}", rep.latency.total_cycles));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 8: per-layer activity heatmaps — SNN (imbalanced) vs HNN (uniform,
+/// boundary layers only). Rendered as ASCII heat rows + the CV uniformity
+/// metric the paper's claim rests on.
+pub fn fig8_heatmap(net_name: &str, seed: u64) -> Table {
+    let net = networks::by_name(net_name).unwrap();
+    let n = net.layers.len();
+    let snn = SparsityProfile::synthetic_imbalanced(n, 0.1, seed);
+    let hnn = SparsityProfile::uniform(n, 0.1);
+    let mut t = Table::new(
+        format!("Fig 8: per-layer spike-activity heatmap — {net_name}"),
+        &["variant", "heat (layer 0 -> n)", "mean act", "imbalance (CV)"],
+    );
+    t.row(vec![
+        "SNN".into(),
+        snn.heat_row(),
+        format!("{:.3}", snn.mean_activity()),
+        format!("{:.3}", snn.imbalance()),
+    ]);
+    t.row(vec![
+        "HNN (boundary only)".into(),
+        hnn.heat_row(),
+        format!("{:.3}", hnn.mean_activity()),
+        format!("{:.3}", hnn.imbalance()),
+    ]);
+    t
+}
+
+/// Fig. 10: latency-per-inference speedup (x) vs ANN at base parameters
+/// (8-bit, 256 grouping, 8-dim NoC).
+pub fn fig10_speedup() -> Table {
+    let mut t = Table::new(
+        "Fig 10: Latency per Inference Speedup (x, w.r.t. ANN) — base parameters",
+        &["Model", "ANN", "SNN", "HNN"],
+    );
+    let base = ArchConfig::baseline(Variant::Ann);
+    for (label, net_name) in benchmark_names() {
+        let net = networks::by_name(net_name).unwrap();
+        let [ann, snn, hnn] = simulate_variants(&net, &base);
+        t.row(vec![
+            label.to_string(),
+            "1.00".into(),
+            format!("{:.2}", speedup(&ann, &snn)),
+            format!("{:.2}", speedup(&ann, &hnn)),
+        ]);
+    }
+    t
+}
+
+/// One sweep point for Figs. 11/13.
+pub struct SweepPoint {
+    pub label: String,
+    pub snn_speedup: f64,
+    pub hnn_speedup: f64,
+    pub snn_eff: f64,
+    pub hnn_eff: f64,
+}
+
+/// Figs. 11 & 13: normalized speedup / energy-efficiency w.r.t. ANN as a
+/// function of bit-width, NoC dimension, and neuron grouping (MS-ResNet18
+/// workload, the paper's centre panel).
+pub fn sweep_axes(net_name: &str) -> Vec<SweepPoint> {
+    let net = networks::by_name(net_name).unwrap();
+    let mut out = Vec::new();
+    let mut push = |label: String, cfg: ArchConfig| {
+        let [ann, snn, hnn] = simulate_variants(&net, &cfg);
+        out.push(SweepPoint {
+            label,
+            snn_speedup: speedup(&ann, &snn),
+            hnn_speedup: speedup(&ann, &hnn),
+            snn_eff: efficiency_gain(&ann, &snn),
+            hnn_eff: efficiency_gain(&ann, &hnn),
+        });
+    };
+    for bits in [4u32, 8, 16, 32] {
+        push(format!("bits={bits}"), ArchConfig::baseline(Variant::Ann).with_bits(bits));
+    }
+    for dim in [4usize, 8, 16] {
+        push(format!("noc={dim}x{dim}"), ArchConfig::baseline(Variant::Ann).with_noc_dim(dim));
+    }
+    for g in [64usize, 128, 256] {
+        push(format!("grouping={g}"), ArchConfig::baseline(Variant::Ann).with_grouping(g));
+    }
+    out
+}
+
+pub fn fig11_table(net_name: &str) -> Table {
+    let mut t = Table::new(
+        format!("Fig 11: normalized speedup w.r.t. ANN — {net_name}"),
+        &["config", "SNN", "HNN"],
+    );
+    for p in sweep_axes(net_name) {
+        t.row(vec![
+            p.label,
+            format!("{:.2}", p.snn_speedup),
+            format!("{:.2}", p.hnn_speedup),
+        ]);
+    }
+    t
+}
+
+pub fn fig13_table(net_name: &str) -> Table {
+    let mut t = Table::new(
+        format!("Fig 13: normalized energy efficiency w.r.t. ANN — {net_name}"),
+        &["config", "SNN", "HNN"],
+    );
+    for p in sweep_axes(net_name) {
+        t.row(vec![p.label, format!("{:.2}", p.snn_eff), format!("{:.2}", p.hnn_eff)]);
+    }
+    t
+}
+
+/// Fig. 12: energy per inference with the EMIO/MEM/PE/Router breakdown.
+pub fn fig12_energy() -> Table {
+    let mut t = Table::new(
+        "Fig 12: Energy (J) per Inference — component breakdown",
+        &["Model", "variant", "PE", "MEM", "Router", "EMIO", "total"],
+    );
+    let base = ArchConfig::baseline(Variant::Ann);
+    for (label, net_name) in benchmark_names() {
+        let net = networks::by_name(net_name).unwrap();
+        for rep in simulate_variants(&net, &base) {
+            t.row(vec![
+                label.to_string(),
+                rep.variant.to_string(),
+                stats::joules(rep.energy.pe_j),
+                stats::joules(rep.energy.mem_j),
+                stats::joules(rep.energy.router_j),
+                stats::joules(rep.energy.emio_j),
+                stats::joules(rep.energy.total_j()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Headline claims check (§5.2/§5.3): returns (max HNN speedup, max HNN
+/// efficiency gain) over the full sweep grid x benchmark set — the paper
+/// reports 1.1-15.2x and up to 5.3x. The grid includes the *learned
+/// sparsity* axis (90/95/97.5% — the Fig. 7 regime the Eq. 10 regulariser
+/// reaches without a model-quality phase transition): the paper's peak
+/// numbers live in the high-precision, high-learned-sparsity corner.
+pub fn headline_claims() -> (f64, f64, Vec<SimReport>) {
+    let mut best_speed: f64 = 0.0;
+    let mut best_eff: f64 = 0.0;
+    let mut reports = Vec::new();
+    for (_, net_name) in benchmark_names() {
+        let net = networks::by_name(net_name).unwrap();
+        for bits in [8u32, 16, 32] {
+            for g in [64usize, 256] {
+                for activity in [0.10, 0.05, 0.025] {
+                    let mut cfg =
+                        ArchConfig::baseline(Variant::Ann).with_bits(bits).with_grouping(g);
+                    cfg.input_activity = activity;
+                    let [ann, _snn, hnn] = simulate_variants(&net, &cfg);
+                    best_speed = best_speed.max(speedup(&ann, &hnn));
+                    best_eff = best_eff.max(efficiency_gain(&ann, &hnn));
+                    reports.push(hnn);
+                }
+            }
+        }
+    }
+    (best_speed, best_eff, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_hnn_fastest_on_multichip() {
+        let t = fig10_speedup();
+        assert_eq!(t.rows.len(), 3);
+        // HNN column >= 1.0 on every benchmark (§5.2 "fastest on static")
+        for row in &t.rows {
+            let hnn: f64 = row[3].parse().unwrap();
+            assert!(hnn >= 1.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig11_speedup_grows_with_bits() {
+        let pts = sweep_axes("ms-resnet18");
+        let bit_pts: Vec<&SweepPoint> =
+            pts.iter().filter(|p| p.label.starts_with("bits=")).collect();
+        assert!(bit_pts.last().unwrap().hnn_speedup > bit_pts.first().unwrap().hnn_speedup);
+    }
+
+    #[test]
+    fn fig13_efficiency_gain_at_least_one() {
+        for p in sweep_axes("ms-resnet18") {
+            assert!(p.hnn_eff >= 0.9, "{}: {}", p.label, p.hnn_eff);
+        }
+    }
+
+    #[test]
+    fn fig7_latency_improves_with_sparsity() {
+        let t = fig7_latency_sweep(&[0.5, 0.9, 0.99]);
+        let first: u64 = t.rows[0][2].parse().unwrap();
+        let last: u64 = t.rows[2][2].parse().unwrap();
+        assert!(last < first);
+    }
+
+    #[test]
+    fn fig8_snn_less_uniform() {
+        let t = fig8_heatmap("ms-resnet18", 42);
+        let snn_cv: f64 = t.rows[0][3].parse().unwrap();
+        let hnn_cv: f64 = t.rows[1][3].parse().unwrap();
+        assert!(snn_cv > hnn_cv);
+    }
+
+    #[test]
+    fn headline_band_is_plausible() {
+        // §5.2/§5.3: speedups in the 1.1-15.2x band, energy up to ~5.3x.
+        let (speed, eff, _) = headline_claims();
+        assert!(speed > 1.1, "max speedup {speed}");
+        assert!(speed < 40.0, "max speedup {speed} absurd");
+        assert!(eff > 1.0, "max efficiency {eff}");
+        // the 97.5%-sparsity corner exceeds the paper's 5.3x (their grid
+        // held 90% for the energy sweeps); cap at an order of magnitude
+        // above their max as the sanity bound.
+        assert!(eff < 53.0, "max efficiency {eff} absurd");
+    }
+}
+
+/// Fig. 9: convergence curves rendered from training-run records
+/// (`results/runs/*.json` written by `spikelink train` / examples). ASCII
+/// sparkline per variant + first/last loss columns.
+pub fn fig9_convergence(runs: &[(String, Vec<f64>)]) -> Table {
+    let mut t = Table::new(
+        "Fig 9: training convergence (loss curve sparklines from run records)",
+        &["run", "curve (start -> end)", "first", "last", "drop %"],
+    );
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    for (name, losses) in runs {
+        if losses.is_empty() {
+            continue;
+        }
+        let lo = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = losses.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        let spark: String = losses
+            .iter()
+            .map(|&l| BARS[(((l - lo) / span) * 7.0).round() as usize])
+            .collect();
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        t.row(vec![
+            name.clone(),
+            spark,
+            format!("{first:.3}"),
+            format!("{last:.3}"),
+            format!("{:.1}", 100.0 * (first - last) / first),
+        ]);
+    }
+    t
+}
+
+/// Load loss curves from a runs directory (`*.json` with a `loss_curve`).
+pub fn load_run_curves(dir: &std::path::Path) -> Vec<(String, Vec<f64>)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for e in entries.flatten() {
+        let path = e.path();
+        if path.extension().and_then(|x| x.to_str()) != Some("json") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let Ok(j) = crate::util::json::parse(&text) else { continue };
+        let name = path.file_stem().unwrap().to_string_lossy().to_string();
+        if let Some(curve) = j.get("loss_curve").and_then(|c| c.as_arr()) {
+            out.push((name, curve.iter().filter_map(|x| x.as_f64()).collect()));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod fig9_tests {
+    use super::*;
+
+    #[test]
+    fn fig9_sparkline_renders() {
+        let runs = vec![("x".to_string(), vec![4.0, 3.0, 2.5, 2.0])];
+        let t = fig9_convergence(&runs);
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.rows[0][4].parse::<f64>().unwrap() > 49.0); // 50% drop
+    }
+
+    #[test]
+    fn fig9_skips_empty_curves() {
+        let runs = vec![("e".to_string(), vec![])];
+        assert!(fig9_convergence(&runs).rows.is_empty());
+    }
+
+    #[test]
+    fn load_run_curves_reads_json() {
+        let dir = std::env::temp_dir().join(format!("slruns-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.json"), r#"{"loss_curve": [3.0, 2.0]}"#).unwrap();
+        std::fs::write(dir.join("skip.txt"), "x").unwrap();
+        let runs = load_run_curves(&dir);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].1, vec![3.0, 2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

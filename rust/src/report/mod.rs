@@ -1,0 +1,18 @@
+//! Report harness: regenerates every paper table and figure (DESIGN.md §5
+//! experiment index) from the analytic engine + training-run records.
+
+pub mod figures;
+pub mod tables;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::table::Table;
+
+/// Write a table to `<dir>/<name>.csv` and return its rendered form.
+pub fn emit(dir: &Path, name: &str, table: &Table) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+    Ok(table.render())
+}

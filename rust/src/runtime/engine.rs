@@ -1,0 +1,279 @@
+//! PJRT execution engine: load AOT HLO-text artifacts, compile once on the
+//! CPU PJRT client, execute from the rust hot path.
+//!
+//! Adapted from /opt/xla-example/load_hlo — HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax>=0.5 serialized protos whose
+//! instruction ids exceed INT_MAX; the text parser reassigns ids).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{DType, FnEntry, TensorSig};
+
+/// A host-side tensor exchanged with an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// First element as f64 (scalar outputs: loss, metric...).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            Tensor::F32(v) => v.first().map(|&x| x as f64).ok_or_else(|| anyhow!("empty")),
+            Tensor::I32(v) => v.first().map(|&x| x as f64).ok_or_else(|| anyhow!("empty")),
+        }
+    }
+}
+
+fn literal_of(sig: &TensorSig, t: &Tensor) -> Result<xla::Literal> {
+    if t.len() != sig.elements() {
+        return Err(anyhow!(
+            "input {}: got {} elements, signature wants {:?}",
+            sig.name,
+            t.len(),
+            sig.shape
+        ));
+    }
+    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (t, sig.dtype) {
+        (Tensor::F32(v), DType::F32) => xla::Literal::vec1(v.as_slice()),
+        (Tensor::I32(v), DType::I32) => xla::Literal::vec1(v.as_slice()),
+        _ => return Err(anyhow!("input {}: dtype mismatch", sig.name)),
+    };
+    if dims.is_empty() {
+        // scalar: vec1 of length 1 -> reshape to rank-0
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+fn tensor_of(sig: &TensorSig, lit: &xla::Literal) -> Result<Tensor> {
+    let out = match sig.dtype {
+        DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+    };
+    if out.len() != sig.elements() {
+        return Err(anyhow!(
+            "output {}: got {} elements, signature wants {:?}",
+            sig.name,
+            out.len(),
+            sig.shape
+        ));
+    }
+    Ok(out)
+}
+
+/// A compiled computation with its I/O signature.
+pub struct Executable {
+    pub name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with host tensors; returns host tensors (tuple outputs
+    /// decomposed per the manifest signature).
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        if args.len() != self.inputs.len() {
+            return Err(anyhow!(
+                "{}: got {} args, expected {}",
+                self.name,
+                args.len(),
+                self.inputs.len()
+            ));
+        }
+        let lits: Vec<xla::Literal> = self
+            .inputs
+            .iter()
+            .zip(args)
+            .map(|(sig, t)| literal_of(sig, t))
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} outputs", self.name))?;
+        let parts = tuple.decompose_tuple()?;
+        if parts.len() != self.outputs.len() {
+            return Err(anyhow!(
+                "{}: got {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.outputs.len()
+            ));
+        }
+        self.outputs
+            .iter()
+            .zip(parts.iter())
+            .map(|(sig, lit)| tensor_of(sig, lit))
+            .collect()
+    }
+}
+
+/// Engine: one PJRT CPU client + an executable cache keyed by HLO path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client (the request-path runtime).
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact described by a manifest entry.
+    /// Compilation happens once per path; later calls hit the cache.
+    pub fn load(&self, name: &str, entry: &FnEntry) -> Result<std::sync::Arc<Executable>> {
+        let key = entry.hlo_path.to_string_lossy().to_string();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let exe = self.compile_file(name, &entry.hlo_path, &entry.inputs, &entry.outputs)?;
+        let arc = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Compile an HLO text file with an explicit signature.
+    pub fn compile_file(
+        &self,
+        name: &str,
+        path: &Path,
+        inputs: &[TensorSig],
+        outputs: &[TensorSig],
+    ) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            name: name.to_string(),
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            exe,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&d).ok()
+    }
+
+    #[test]
+    fn clp_roundtrip_kernel_matches_rust_clp() {
+        // The AOT'd Pallas CLP kernel must agree with noc::clp bit-for-bit.
+        let Some(man) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let entry = man.kernel("clp_roundtrip").unwrap();
+        let exe = engine.load("clp_roundtrip", entry).unwrap();
+        let acts: Vec<i32> = (0..256).collect();
+        let out = exe.run(&[Tensor::I32(acts.clone())]).unwrap();
+        let decoded = out[0].as_i32().unwrap();
+        for (a, &d) in acts.iter().zip(decoded) {
+            let expect = crate::noc::clp::decode(
+                crate::noc::clp::spike_count(*a as u32, 8, 8),
+                8,
+                8,
+            );
+            assert_eq!(d as u32, expect, "a={a}");
+        }
+    }
+
+    #[test]
+    fn rate_encode_kernel_matches_rust_clp() {
+        let Some(man) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load("rate_encode", man.kernel("rate_encode").unwrap()).unwrap();
+        let acts: Vec<i32> = (0..256).collect();
+        let out = exe.run(&[Tensor::I32(acts.clone())]).unwrap();
+        let spikes = out[0].as_i32().unwrap(); // [8, 256] time-major
+        for (i, &a) in acts.iter().enumerate() {
+            let count: i32 = (0..8).map(|t| spikes[t * 256 + i]).sum();
+            assert_eq!(count as u32, crate::noc::clp::spike_count(a as u32, 8, 8));
+        }
+    }
+
+    #[test]
+    fn spike_matmul_kernel_runs() {
+        let Some(man) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load("spike_matmul", man.kernel("spike_matmul").unwrap()).unwrap();
+        // all-ones spikes x identity-ish weights
+        let spikes = vec![1.0f32; 16 * 256];
+        let mut w = vec![0.0f32; 256 * 256];
+        for i in 0..256 {
+            w[i * 256 + i] = 2.0;
+        }
+        let out = exe.run(&[Tensor::F32(spikes), Tensor::F32(w)]).unwrap();
+        let y = out[0].as_f32().unwrap();
+        assert_eq!(y.len(), 16 * 256);
+        assert!(y.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(man) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let e1 = engine.load("clp_roundtrip", man.kernel("clp_roundtrip").unwrap()).unwrap();
+        let e2 = engine.load("clp_roundtrip", man.kernel("clp_roundtrip").unwrap()).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&e1, &e2));
+    }
+
+    #[test]
+    fn arg_count_mismatch_is_error() {
+        let Some(man) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load("clp_roundtrip", man.kernel("clp_roundtrip").unwrap()).unwrap();
+        assert!(exe.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! `artifacts/manifest.json` loader: the contract between the AOT pipeline
+//! (python, build-time) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// dtype of a tensor in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// One tensor signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One exported computation (train/eval/predict or a kernel micro-fn).
+#[derive(Debug, Clone)]
+pub struct FnEntry {
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One trained model family x variant.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub param_count: usize,
+    pub n_rates: usize,
+    pub boundary_blocks: Vec<usize>,
+    pub init_theta: PathBuf,
+    pub fns: BTreeMap<String, FnEntry>,
+    /// Raw config block (family, variant, dims, ticks, ...).
+    pub config: Json,
+}
+
+impl ModelEntry {
+    pub fn family(&self) -> &str {
+        self.config.get("family").and_then(|j| j.as_str()).unwrap_or("?")
+    }
+
+    pub fn variant(&self) -> &str {
+        self.config.get("variant").and_then(|j| j.as_str()).unwrap_or("?")
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(|j| j.as_usize())
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub kernels: BTreeMap<String, FnEntry>,
+}
+
+fn parse_sigs(j: &Json) -> Result<Vec<TensorSig>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("signature is not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSig {
+                name: e.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(|x| x.as_shape())
+                    .ok_or_else(|| anyhow!("bad shape"))?,
+                dtype: DType::parse(
+                    e.get("dtype").and_then(|x| x.as_str()).unwrap_or("float32"),
+                )?,
+            })
+        })
+        .collect()
+}
+
+fn parse_fn(dir: &Path, j: &Json) -> Result<FnEntry> {
+    Ok(FnEntry {
+        hlo_path: dir.join(j.get("hlo").and_then(|x| x.as_str()).ok_or_else(|| anyhow!("no hlo"))?),
+        inputs: parse_sigs(j.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+        outputs: parse_sigs(j.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        if let Some(m) = root.get("models").and_then(|j| j.as_obj()) {
+            for (name, entry) in m {
+                let mut fns = BTreeMap::new();
+                if let Some(fmap) = entry.get("fns").and_then(|j| j.as_obj()) {
+                    for (fname, fj) in fmap {
+                        fns.insert(fname.clone(), parse_fn(&dir, fj)?);
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelEntry {
+                        name: name.clone(),
+                        param_count: entry
+                            .get("param_count")
+                            .and_then(|j| j.as_usize())
+                            .ok_or_else(|| anyhow!("{name}: no param_count"))?,
+                        n_rates: entry.get("n_rates").and_then(|j| j.as_usize()).unwrap_or(1),
+                        boundary_blocks: entry
+                            .get("boundary_blocks")
+                            .and_then(|j| j.as_shape())
+                            .unwrap_or_default(),
+                        init_theta: dir.join(
+                            entry
+                                .get("init_theta")
+                                .and_then(|j| j.as_str())
+                                .ok_or_else(|| anyhow!("{name}: no init_theta"))?,
+                        ),
+                        fns,
+                        config: entry.get("config").cloned().unwrap_or(Json::Null),
+                    },
+                );
+            }
+        }
+
+        let mut kernels = BTreeMap::new();
+        if let Some(k) = root.get("kernels").and_then(|j| j.as_obj()) {
+            for (name, entry) in k {
+                kernels.insert(name.clone(), parse_fn(&dir, entry)?);
+            }
+        }
+
+        Ok(Manifest { dir, models, kernels })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&FnEntry> {
+        self.kernels.get(name).ok_or_else(|| anyhow!("kernel {name} not in manifest"))
+    }
+
+    /// Load the initial flat parameter vector for a model.
+    pub fn load_init_theta(&self, model: &ModelEntry) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&model.init_theta)
+            .with_context(|| format!("reading {:?}", model.init_theta))?;
+        if bytes.len() != model.param_count * 4 {
+            return Err(anyhow!(
+                "init theta size mismatch: {} bytes for {} params",
+                bytes.len(),
+                model.param_count
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if d.join("manifest.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let Some(dir) = artifacts_dir() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(!man.kernels.is_empty());
+        for (name, k) in &man.kernels {
+            assert!(k.hlo_path.exists(), "{name} hlo missing");
+            assert!(!k.inputs.is_empty());
+        }
+        for (name, m) in &man.models {
+            assert!(m.param_count > 0, "{name}");
+            assert!(m.init_theta.exists(), "{name} theta missing");
+            let theta = man.load_init_theta(m).unwrap();
+            assert_eq!(theta.len(), m.param_count);
+            for fn_name in ["train", "eval", "predict"] {
+                assert!(m.fns.contains_key(fn_name), "{name}.{fn_name}");
+            }
+        }
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("slman-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"kernels": {"k1": {"hlo": "k1.hlo.txt",
+                "inputs": [{"name": "x", "shape": [2, 3], "dtype": "float32"}],
+                "outputs": [{"name": "y", "shape": [2], "dtype": "int32"}]}},
+               "models": {}}"#,
+        )
+        .unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let k = man.kernel("k1").unwrap();
+        assert_eq!(k.inputs[0].shape, vec![2, 3]);
+        assert_eq!(k.inputs[0].elements(), 6);
+        assert_eq!(k.outputs[0].dtype, DType::I32);
+        assert!(man.kernel("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

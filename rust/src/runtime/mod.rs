@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//! Python never runs here — `make artifacts` is the only python step.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, Tensor};
+pub use manifest::{DType, FnEntry, Manifest, ModelEntry, TensorSig};

@@ -1,0 +1,16 @@
+//! Learned sparsity profiles — the bridge between the *trained* models
+//! (Layer 2, measured spike rates) and the NoC/analytic simulators.
+//!
+//! A [`SparsityProfile`] gives each layer a firing *activity* (fraction of
+//! neurons spiking per tick; sparsity = 1 - activity). Sources:
+//!
+//! * [`SparsityProfile::uniform`] — the paper's §4.2 assumption (10%
+//!   activity / 90% sparsity) for simulator-only studies;
+//! * [`SparsityProfile::from_rates`] — measured per-boundary-layer rates
+//!   from a rust training run (EXPERIMENTS.md records these);
+//! * [`SparsityProfile::synthetic_imbalanced`] — SNN-style imbalanced
+//!   profile for the Fig. 8 heatmap comparison.
+
+pub mod profile;
+
+pub use profile::SparsityProfile;

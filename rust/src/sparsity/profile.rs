@@ -1,0 +1,170 @@
+//! Per-layer firing-activity profiles (Fig. 7 sweep axis, Fig. 8 heatmap).
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Firing activity per layer. `activity[i]` is the probability a neuron of
+/// layer `i` spikes in one tick; `sparsity = 1 - activity`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityProfile {
+    pub activity: Vec<f64>,
+}
+
+impl SparsityProfile {
+    /// Uniform activity across `n` layers (paper §4.2: 10% for SNN studies).
+    pub fn uniform(n: usize, activity: f64) -> Self {
+        assert!((0.0..=1.0).contains(&activity), "activity in [0,1]");
+        SparsityProfile { activity: vec![activity; n] }
+    }
+
+    /// From measured mean spike rates (e.g. the `rates` output of a
+    /// trained model's eval step), mapped onto the layers in `layer_map`
+    /// (rate k applies to layer `layer_map[k]`); other layers fall back to
+    /// `default_activity`.
+    pub fn from_rates(
+        n_layers: usize,
+        rates: &[f64],
+        layer_map: &[usize],
+        default_activity: f64,
+    ) -> Self {
+        let mut activity = vec![default_activity; n_layers];
+        for (k, &layer) in layer_map.iter().enumerate() {
+            if layer < n_layers {
+                if let Some(&r) = rates.get(k) {
+                    activity[layer] = r.clamp(0.0, 1.0);
+                }
+            }
+        }
+        SparsityProfile { activity }
+    }
+
+    /// SNN-style imbalanced profile: alternating high-firing and quiet
+    /// layers drawn log-normally around `mean_activity` (Fig. 8 shows SNN
+    /// layer rates are far less uniform than HNN's). Deterministic in seed.
+    pub fn synthetic_imbalanced(n: usize, mean_activity: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            // lognormal with sigma ~ 0.9 gives heavy imbalance
+            let z = rng.normal();
+            v.push((mean_activity * (0.9 * z).exp()).clamp(0.001, 1.0));
+        }
+        // renormalize so the mean matches mean_activity
+        let m = stats::mean(&v);
+        if m > 0.0 {
+            let scale = mean_activity / m;
+            for x in &mut v {
+                *x = (*x * scale).clamp(0.001, 1.0);
+            }
+        }
+        SparsityProfile { activity: v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.activity.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.activity.is_empty()
+    }
+
+    /// Activity for layer i (clamped lookup — extra layers reuse the last
+    /// entry so profiles survive minor layer-count drift).
+    pub fn activity_of(&self, layer: usize) -> f64 {
+        if self.activity.is_empty() {
+            return 0.1;
+        }
+        self.activity[layer.min(self.activity.len() - 1)]
+    }
+
+    pub fn mean_activity(&self) -> f64 {
+        stats::mean(&self.activity)
+    }
+
+    pub fn mean_sparsity(&self) -> f64 {
+        1.0 - self.mean_activity()
+    }
+
+    /// Coefficient of variation of per-layer activity — the Fig. 8
+    /// uniformity metric (lower = more uniform = less inter-layer stalling).
+    pub fn imbalance(&self) -> f64 {
+        stats::cv(&self.activity)
+    }
+
+    /// Scale the whole profile to a target mean sparsity (Fig. 7 sweep),
+    /// preserving the relative shape.
+    pub fn with_mean_sparsity(&self, target_sparsity: f64) -> Self {
+        let target_act = (1.0 - target_sparsity).clamp(0.0, 1.0);
+        let m = self.mean_activity();
+        if m <= 0.0 {
+            return SparsityProfile::uniform(self.len(), target_act);
+        }
+        let scale = target_act / m;
+        SparsityProfile {
+            activity: self.activity.iter().map(|a| (a * scale).clamp(0.0, 1.0)).collect(),
+        }
+    }
+
+    /// ASCII heat row for the report harness (Fig. 8 rendering).
+    pub fn heat_row(&self) -> String {
+        const SHADES: [char; 8] = [' ', '.', ':', '-', '=', '+', '#', '@'];
+        self.activity
+            .iter()
+            .map(|a| {
+                let idx = ((a * 8.0) as usize).min(7);
+                SHADES[idx]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_profile() {
+        let p = SparsityProfile::uniform(10, 0.1);
+        assert_eq!(p.len(), 10);
+        assert!((p.mean_activity() - 0.1).abs() < 1e-12);
+        assert!((p.mean_sparsity() - 0.9).abs() < 1e-12);
+        assert!(p.imbalance() < 1e-9);
+    }
+
+    #[test]
+    fn from_rates_maps_layers() {
+        let p = SparsityProfile::from_rates(6, &[0.05, 0.2], &[1, 3], 0.5);
+        assert_eq!(p.activity_of(1), 0.05);
+        assert_eq!(p.activity_of(3), 0.2);
+        assert_eq!(p.activity_of(0), 0.5);
+        assert_eq!(p.activity_of(100), 0.5); // clamped lookup
+    }
+
+    #[test]
+    fn imbalanced_profile_less_uniform_than_uniform() {
+        let snn = SparsityProfile::synthetic_imbalanced(16, 0.1, 42);
+        let hnn = SparsityProfile::uniform(16, 0.1);
+        assert!(snn.imbalance() > hnn.imbalance());
+        // mean preserved within tolerance despite clamping
+        assert!((snn.mean_activity() - 0.1).abs() < 0.05);
+    }
+
+    #[test]
+    fn sweep_rescales_mean() {
+        let p = SparsityProfile::synthetic_imbalanced(8, 0.2, 1);
+        let q = p.with_mean_sparsity(0.95);
+        assert!((q.mean_activity() - 0.05).abs() < 0.02);
+        // shape preserved: ordering of layers unchanged
+        for i in 1..p.len() {
+            let before = p.activity[i] > p.activity[i - 1];
+            let after = q.activity[i] > q.activity[i - 1];
+            assert_eq!(before, after);
+        }
+    }
+
+    #[test]
+    fn heat_row_has_layer_count_chars() {
+        let p = SparsityProfile::uniform(12, 0.3);
+        assert_eq!(p.heat_row().chars().count(), 12);
+    }
+}

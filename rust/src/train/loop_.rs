@@ -1,0 +1,276 @@
+//! Training driver: runs the AOT'd `train_step` executables in a rust loop
+//! (the end-to-end proof that all three layers compose — python only built
+//! the artifacts).
+//!
+//! Produces the paper's training-side results: convergence curves (Fig. 9),
+//! final metrics (Table 4 proxies), measured per-boundary-layer spike rates
+//! (Fig. 8 / sparsity inputs for the simulators), and the sparsity sweep's
+//! model-quality axis (Fig. 7).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Engine, Manifest, ModelEntry, Tensor};
+use crate::util::json::Json;
+
+use super::corpus::Corpus;
+use super::vision_data::VisionData;
+
+/// Sparsity-regularization settings (Eq. 10).
+#[derive(Debug, Clone, Copy)]
+pub struct RegConfig {
+    /// lambda weight of the spike-rate penalty.
+    pub lam: f32,
+    /// Rate budget = 1 - target sparsity; the hinge activates above it.
+    pub rate_budget: f32,
+}
+
+impl Default for RegConfig {
+    fn default() -> Self {
+        // default: penalize above 10% firing (90% target sparsity, §4.2)
+        RegConfig { lam: 0.5, rate_budget: 0.10 }
+    }
+}
+
+/// One logged training step.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f64,
+    pub ce: f64,
+    pub rates: Vec<f64>,
+}
+
+/// Result of a full run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub model: String,
+    pub steps: usize,
+    pub log: Vec<StepLog>,
+    /// Final eval: (ce, metric) — metric is bpc (lm) or top-1 acc (vision).
+    pub eval_ce: f64,
+    pub eval_metric: f64,
+    /// Mean spike rate per boundary layer at the end of training.
+    pub final_rates: Vec<f64>,
+    /// Trained flat parameters (for reuse / serving examples).
+    pub theta: Vec<f32>,
+}
+
+impl TrainResult {
+    /// Perplexity for LM families (e^ce over natural-log CE).
+    pub fn perplexity(&self) -> f64 {
+        self.eval_ce.exp()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("eval_ce", Json::num(self.eval_ce)),
+            ("eval_metric", Json::num(self.eval_metric)),
+            (
+                "final_rates",
+                Json::arr(self.final_rates.iter().map(|&r| Json::num(r))),
+            ),
+            (
+                "loss_curve",
+                Json::arr(self.log.iter().map(|s| Json::num(s.loss))),
+            ),
+        ])
+    }
+}
+
+/// Data source abstraction over the two families.
+enum Data {
+    Lm { corpus: Corpus, batch: usize, seq: usize },
+    Vision { data: VisionData, batch: usize },
+}
+
+impl Data {
+    fn next(&mut self) -> (Tensor, Tensor) {
+        match self {
+            Data::Lm { corpus, batch, seq } => {
+                let (x, y) = corpus.batch(*batch, *seq);
+                (Tensor::I32(x), Tensor::I32(y))
+            }
+            Data::Vision { data, batch } => {
+                let (x, y) = data.batch(*batch);
+                (Tensor::F32(x), Tensor::I32(y))
+            }
+        }
+    }
+}
+
+/// Fixed "dataset identity" seed: the LM corpus' Markov transition tables
+/// are the dataset; `seed` only reseeds the *sampler*, so train and eval
+/// draw from the same language (as with a real corpus file).
+const CORPUS_SEED: u64 = 0xE4_817;
+
+fn data_for(model: &ModelEntry, seed: u64) -> Result<Data> {
+    let batch = model.cfg_usize("batch").unwrap_or(16);
+    match model.family() {
+        "lm" => {
+            let mut corpus = super::corpus::generate(200_000, CORPUS_SEED);
+            corpus.reseed_sampler(seed);
+            Ok(Data::Lm { corpus, batch, seq: model.cfg_usize("seq_len").unwrap_or(64) })
+        }
+        // the vision renderer is the dataset (fixed shape families); any
+        // seed draws fresh i.i.d. samples from it.
+        "vision" => Ok(Data::Vision { data: VisionData::new(seed), batch }),
+        other => Err(anyhow!("unknown family {other}")),
+    }
+}
+
+/// Train `model` for `steps` steps; logs every `log_every`.
+pub fn train(
+    engine: &Engine,
+    manifest: &Manifest,
+    model_name: &str,
+    steps: usize,
+    reg: RegConfig,
+    seed: u64,
+    log_every: usize,
+    quiet: bool,
+) -> Result<TrainResult> {
+    let model = manifest.model(model_name)?;
+    let train_fn = model
+        .fns
+        .get("train")
+        .ok_or_else(|| anyhow!("{model_name} has no train fn"))?;
+    let exe = engine.load(&format!("{model_name}.train"), train_fn)?;
+
+    let mut data = data_for(model, seed)?;
+    let p = model.param_count;
+    let mut theta = Tensor::F32(manifest.load_init_theta(model)?);
+    let mut m = Tensor::F32(vec![0.0; p]);
+    let mut v = Tensor::F32(vec![0.0; p]);
+    let mut step_t = Tensor::F32(vec![0.0]);
+    let lam = Tensor::F32(vec![reg.lam]);
+    let budget = Tensor::F32(vec![reg.rate_budget]);
+
+    let mut log = Vec::new();
+    for s in 0..steps {
+        let (x, y) = data.next();
+        let out = exe.run(&[
+            theta.clone(),
+            m.clone(),
+            v.clone(),
+            step_t.clone(),
+            x,
+            y,
+            lam.clone(),
+            budget.clone(),
+        ])?;
+        let [new_theta, new_m, new_v, new_step, loss, ce, rates]: [Tensor; 7] = out
+            .try_into()
+            .map_err(|_| anyhow!("train step returned wrong arity"))?;
+        theta = new_theta;
+        m = new_m;
+        v = new_v;
+        step_t = new_step;
+        if s % log_every == 0 || s + 1 == steps {
+            let entry = StepLog {
+                step: s,
+                loss: loss.scalar()?,
+                ce: ce.scalar()?,
+                rates: rates.as_f32()?.iter().map(|&r| r as f64).collect(),
+            };
+            if !quiet {
+                println!(
+                    "  [{model_name}] step {:>5}  loss {:.4}  ce {:.4}  mean_rate {:.4}",
+                    entry.step,
+                    entry.loss,
+                    entry.ce,
+                    entry.rates.iter().sum::<f64>() / entry.rates.len().max(1) as f64
+                );
+            }
+            log.push(entry);
+        }
+    }
+
+    // final eval on held-out batches
+    let (eval_ce, eval_metric, final_rates) =
+        evaluate(engine, manifest, model_name, theta.as_f32()?, seed + 1, 8)?;
+
+    Ok(TrainResult {
+        model: model_name.to_string(),
+        steps,
+        log,
+        eval_ce,
+        eval_metric,
+        final_rates,
+        theta: theta.as_f32()?.to_vec(),
+    })
+}
+
+/// Evaluate a parameter vector on fresh batches. Returns (ce, metric,
+/// mean rates per boundary layer).
+pub fn evaluate(
+    engine: &Engine,
+    manifest: &Manifest,
+    model_name: &str,
+    theta: &[f32],
+    seed: u64,
+    batches: usize,
+) -> Result<(f64, f64, Vec<f64>)> {
+    let model = manifest.model(model_name)?;
+    let eval_fn = model.fns.get("eval").ok_or_else(|| anyhow!("no eval fn"))?;
+    let exe = engine.load(&format!("{model_name}.eval"), eval_fn)?;
+    let mut data = data_for(model, seed)?;
+    let theta_t = Tensor::F32(theta.to_vec());
+    let mut ce_sum = 0.0;
+    let mut metric_sum = 0.0;
+    let mut rate_sum = vec![0.0f64; model.n_rates];
+    for _ in 0..batches {
+        let (x, y) = data.next();
+        let out = exe.run(&[theta_t.clone(), x, y])?;
+        ce_sum += out[0].scalar()?;
+        metric_sum += out[1].scalar()?;
+        for (acc, &r) in rate_sum.iter_mut().zip(out[2].as_f32()?) {
+            *acc += r as f64;
+        }
+    }
+    let n = batches as f64;
+    Ok((
+        ce_sum / n,
+        metric_sum / n,
+        rate_sum.into_iter().map(|r| r / n).collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn setup() -> Option<(Engine, Manifest)> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let man = Manifest::load(&d).ok()?;
+        if !man.models.contains_key("hnn_lm") {
+            return None;
+        }
+        Some((Engine::cpu().ok()?, man))
+    }
+
+    #[test]
+    fn short_training_run_reduces_loss() {
+        let Some((engine, man)) = setup() else { return };
+        let res =
+            train(&engine, &man, "hnn_lm", 12, RegConfig::default(), 42, 4, true).unwrap();
+        let first = res.log.first().unwrap().loss;
+        let last = res.log.last().unwrap().loss;
+        assert!(last < first, "loss did not fall: {first} -> {last}");
+        assert_eq!(res.theta.len(), man.model("hnn_lm").unwrap().param_count);
+        assert!(res.final_rates.iter().all(|&r| (0.0..=1.0).contains(&r)));
+    }
+
+    #[test]
+    fn evaluate_returns_finite_metrics() {
+        let Some((engine, man)) = setup() else { return };
+        let model = man.model("hnn_lm").unwrap();
+        let theta = man.load_init_theta(model).unwrap();
+        let (ce, metric, rates) = evaluate(&engine, &man, "hnn_lm", &theta, 7, 2).unwrap();
+        assert!(ce.is_finite() && ce > 0.0);
+        assert!(metric.is_finite());
+        assert_eq!(rates.len(), model.n_rates);
+    }
+}

@@ -1,0 +1,9 @@
+//! Training driver + synthetic datasets (Enwik8 / CIFAR proxies, see
+//! DESIGN.md §Substitutions). The loop runs entirely in rust over the
+//! AOT-compiled `train_step` executables.
+
+pub mod corpus;
+pub mod loop_;
+pub mod vision_data;
+
+pub use loop_::{evaluate, train, RegConfig, StepLog, TrainResult};

@@ -1,0 +1,100 @@
+//! Micro-benchmark harness (criterion is not in the offline registry, so we
+//! provide a small, honest timing loop: warmup, N timed iterations, median +
+//! mean + p10/p90). Used by every `benches/` target via `harness = false`.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Measurement {
+    pub fn per_iter(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Time `f` (which should perform ONE unit of work) `iters` times after
+/// `warmup` untimed runs. Prints a criterion-like line and returns stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        median_ns: stats::median(&samples),
+        mean_ns: stats::mean(&samples),
+        p10_ns: stats::percentile(&samples, 10.0),
+        p90_ns: stats::percentile(&samples, 90.0),
+    };
+    println!(
+        "bench {:<48} median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+        m.name,
+        fmt_ns(m.median_ns),
+        fmt_ns(m.mean_ns),
+        fmt_ns(m.p10_ns),
+        fmt_ns(m.p90_ns),
+        m.iters
+    );
+    m
+}
+
+/// Auto-calibrating variant: picks an iteration count so the timed section
+/// runs for roughly `target_ms` milliseconds.
+pub fn bench_auto<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> Measurement {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_ms * 1e6 / once).ceil() as usize).clamp(5, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("noop-sum", 2, 20, || {
+            let s: u64 = black_box((0..100u64).sum());
+            black_box(s);
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.p10_ns <= m.p90_ns);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-free substrates: PRNG, JSON, statistics, tables, benching.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so these small utilities replace serde/rand/criterion with
+//! focused implementations that are fully unit-tested here.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

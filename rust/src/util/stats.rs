@@ -1,0 +1,132 @@
+//! Small statistics helpers shared by the simulators, benches and reports.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy. `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Median (p50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Geometric mean of strictly-positive values (0.0 if any non-positive).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Coefficient of variation (stddev / mean) — used for the Fig. 8 claim that
+/// HNN per-layer spike rates are more *uniform* than SNN's.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+/// Pretty SI formatting for counts ("1.23 M", "45.6 k").
+pub fn si(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e12 {
+        (x / 1e12, " T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, " G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, " M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, " k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.3}{suffix}")
+}
+
+/// Pretty engineering formatting for energy in joules ("1.2 mJ", "340 nJ").
+pub fn joules(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1.0 {
+        (x, " J")
+    } else if x.abs() >= 1e-3 {
+        (x * 1e3, " mJ")
+    } else if x.abs() >= 1e-6 {
+        (x * 1e6, " uJ")
+    } else if x.abs() >= 1e-9 {
+        (x * 1e9, " nJ")
+    } else {
+        (x * 1e12, " pJ")
+    };
+    format!("{v:.3}{suffix}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[1.0, -1.0]), 0.0);
+    }
+
+    #[test]
+    fn cv_uniformity_ordering() {
+        // a flat profile has lower CV than an imbalanced one (Fig 8 metric)
+        let flat = [0.1, 0.11, 0.09, 0.1];
+        let spiky = [0.01, 0.3, 0.02, 0.25];
+        assert!(cv(&flat) < cv(&spiky));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(si(1_230_000.0), "1.230 M");
+        assert_eq!(joules(3.4e-7), "340.000 nJ");
+    }
+}

@@ -1,0 +1,111 @@
+//! Console table rendering for the report harness (paper tables/figures).
+
+/// A simple left-aligned text table with a header row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep = |l: char, m: char, r: char| {
+            let mut s = String::new();
+            s.push(l);
+            for (i, w) in widths.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push(if i + 1 == ncol { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("│");
+            for (i, w) in widths.iter().enumerate() {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = w - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('│');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep('┌', '┬', '┐'));
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep('├', '┼', '┤'));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep('└', '┴', '┘'));
+        out
+    }
+
+    /// CSV rendering (for EXPERIMENTS.md ingestion / plotting elsewhere).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["xxx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("xxx"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["1,2".into()]);
+        assert!(t.to_csv().contains("\"1,2\""));
+    }
+}
