@@ -1,39 +1,194 @@
-//! Bench: cycle-level NoC simulator throughput (the L3 hot loop) —
-//! mesh packets/second and duplex (mesh+EMIO+mesh) cycles/second. This is
-//! the §Perf target surface for the cycle engine.
+//! Bench sweep: cycle-level NoC engine throughput across mesh sizes, load
+//! regimes, and chain depths — with the retained naive reference engine
+//! measured in the same run, so the worklist engine's speedup is grounded
+//! against the same machine/compiler/load (EXPERIMENTS.md §Perf).
+//!
+//! Cases:
+//!   * mesh dim 8/16/32, sparse load  — one packet injected every
+//!     `SPARSE_PERIOD` cycles over a long window: most routers idle most
+//!     cycles (the paper's spike-traffic regime, Aliyev et al. 2024);
+//!   * mesh dim 8/16/32, saturating load — all packets injected up front;
+//!   * chain 2/4/8 chips — 512 die crossings through the EMIO links;
+//!   * duplex — 2048 die crossings (mesh + EMIO + mesh).
+//!
+//! Every measurement is appended to BENCH_noc_cycle.json (schema bench/v1)
+//! so future PRs have a perf trajectory to beat. The sparse mesh cases also
+//! record an `x-vs-ref` speedup record; the acceptance floor is >= 5x.
+
+use std::path::Path;
 
 use spikelink::arch::chip::Coord;
-use spikelink::noc::{CrossTraffic, Duplex, Mesh};
-use spikelink::util::bench::{bench, black_box};
+use spikelink::noc::reference::{RefChain, RefMesh};
+use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, Duplex, Mesh};
+use spikelink::util::bench::{append_json, bench, black_box, BenchRecord};
 use spikelink::util::rng::Rng;
 
-fn main() {
-    // mesh: 5k random packets on an 8x8 grid
-    let make_load = |seed: u64| {
-        let mut rng = Rng::new(seed);
-        (0..5_000)
-            .map(|_| {
-                (
-                    Coord::new(rng.range(0, 8), rng.range(0, 8)),
-                    Coord::new(rng.range(0, 8), rng.range(0, 8)),
-                )
-            })
-            .collect::<Vec<_>>()
-    };
-    let load = make_load(3);
-    let m = bench("noc/mesh8x8/5k-random-packets", 3, 30, || {
-        let mut mesh = Mesh::new(8);
-        for &(s, d) in &load {
-            mesh.inject(s, d);
-        }
-        mesh.run_to_drain(10_000_000);
-        assert_eq!(mesh.stats.delivered, 5_000);
-        black_box(&mesh.stats);
-    });
-    let pkts_per_sec = 5_000.0 / (m.median_ns / 1e9);
-    println!("mesh throughput: {:.2} M packets/s", pkts_per_sec / 1e6);
+/// Sparse-load schedule: (inject_cycle, src, dest) triples.
+fn sparse_schedule(dim: usize, cycles: u64, period: u64, seed: u64) -> Vec<(u64, Coord, Coord)> {
+    let mut rng = Rng::new(seed);
+    (0..cycles)
+        .step_by(period as usize)
+        .map(|t| {
+            (
+                t,
+                Coord::new(rng.range(0, dim), rng.range(0, dim)),
+                Coord::new(rng.range(0, dim), rng.range(0, dim)),
+            )
+        })
+        .collect()
+}
 
-    // duplex: 2048 boundary crossings
+/// Saturating load: every packet present at cycle 0.
+fn saturating_load(dim: usize, packets: usize, seed: u64) -> Vec<(Coord, Coord)> {
+    let mut rng = Rng::new(seed);
+    (0..packets)
+        .map(|_| {
+            (
+                Coord::new(rng.range(0, dim), rng.range(0, dim)),
+                Coord::new(rng.range(0, dim), rng.range(0, dim)),
+            )
+        })
+        .collect()
+}
+
+/// Chain load: eastward transfers spread over rows and chips.
+fn chain_load(n_chips: usize, dim: usize, packets: usize, seed: u64) -> Vec<ChainTraffic> {
+    let mut rng = Rng::new(seed);
+    (0..packets)
+        .map(|_| {
+            let src_chip = rng.range(0, n_chips);
+            let dest_chip = rng.range(src_chip, n_chips);
+            ChainTraffic {
+                src_chip,
+                src: Coord::new(rng.range(0, dim), rng.range(0, dim)),
+                dest_chip,
+                dest: Coord::new(rng.range(0, dim), rng.range(0, dim)),
+            }
+        })
+        .collect()
+}
+
+// The optimized and reference engines expose identical methods, so the
+// drivers are stamped out per type with a macro (no shared trait needed).
+macro_rules! mesh_drivers {
+    ($sparse:ident, $sat:ident, $ty:ty) => {
+        fn $sparse(dim: usize, sched: &[(u64, Coord, Coord)], cycles: u64) -> u64 {
+            let mut m = <$ty>::new(dim);
+            let mut next = 0usize;
+            for c in 0..cycles {
+                while next < sched.len() && sched[next].0 == c {
+                    m.inject(sched[next].1, sched[next].2);
+                    next += 1;
+                }
+                m.step();
+            }
+            m.run_to_drain(1_000_000);
+            assert_eq!(m.stats.delivered, sched.len() as u64);
+            black_box(m.stats.delivered)
+        }
+
+        fn $sat(dim: usize, load: &[(Coord, Coord)]) -> u64 {
+            let mut m = <$ty>::new(dim);
+            for &(s, d) in load {
+                m.inject(s, d);
+            }
+            m.run_to_drain(10_000_000);
+            assert_eq!(m.stats.delivered, load.len() as u64);
+            black_box(m.stats.delivered)
+        }
+    };
+}
+
+mesh_drivers!(run_sparse_opt, run_sat_opt, Mesh);
+mesh_drivers!(run_sparse_ref, run_sat_ref, RefMesh);
+
+macro_rules! chain_driver {
+    ($name:ident, $ty:ty) => {
+        fn $name(n_chips: usize, dim: usize, load: &[ChainTraffic]) -> u64 {
+            let mut ch = <$ty>::new(n_chips, dim);
+            for &t in load {
+                ch.inject(t);
+            }
+            let stats = ch.run(100_000_000);
+            assert_eq!(stats.delivered, load.len() as u64);
+            black_box(stats.delivered)
+        }
+    };
+}
+
+chain_driver!(run_chain_opt, Chain);
+chain_driver!(run_chain_ref, RefChain);
+
+const SPARSE_CYCLES: u64 = 20_000;
+const SPARSE_PERIOD: u64 = 16;
+
+fn main() {
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // --- mesh sweep: sparse + saturating, optimized vs reference ---------
+    for &dim in &[8usize, 16, 32] {
+        let sched = sparse_schedule(dim, SPARSE_CYCLES, SPARSE_PERIOD, 3);
+        let n_sparse = sched.len() as f64;
+        let opt = bench(&format!("noc/mesh{dim}/sparse"), 2, 12, || {
+            run_sparse_opt(dim, &sched, SPARSE_CYCLES);
+        });
+        let ref_ = bench(&format!("noc/mesh{dim}/sparse/ref"), 1, 6, || {
+            run_sparse_ref(dim, &sched, SPARSE_CYCLES);
+        });
+        let speedup = ref_.median_ns / opt.median_ns;
+        println!(
+            "mesh{dim} sparse: {:.2} M packets/s, {speedup:.1}x vs reference",
+            n_sparse / (opt.median_ns / 1e9) / 1e6
+        );
+        let opt_tput = n_sparse / (opt.median_ns / 1e9);
+        let ref_tput = n_sparse / (ref_.median_ns / 1e9);
+        records.push(BenchRecord::new(opt.clone(), opt_tput, "packets/s"));
+        records.push(BenchRecord::new(ref_, ref_tput, "packets/s"));
+        let mut sp = opt;
+        sp.name = format!("noc/mesh{dim}/sparse/speedup");
+        records.push(BenchRecord::new(sp, speedup, "x-vs-ref"));
+
+        let load = saturating_load(dim, 8 * dim * dim, 7);
+        let n_sat = load.len() as f64;
+        let opt = bench(&format!("noc/mesh{dim}/saturating"), 2, 12, || {
+            run_sat_opt(dim, &load);
+        });
+        let ref_ = bench(&format!("noc/mesh{dim}/saturating/ref"), 1, 6, || {
+            run_sat_ref(dim, &load);
+        });
+        println!(
+            "mesh{dim} saturating: {:.2} M packets/s, {:.1}x vs reference",
+            n_sat / (opt.median_ns / 1e9) / 1e6,
+            ref_.median_ns / opt.median_ns
+        );
+        let opt_tput = n_sat / (opt.median_ns / 1e9);
+        let ref_tput = n_sat / (ref_.median_ns / 1e9);
+        records.push(BenchRecord::new(opt, opt_tput, "packets/s"));
+        records.push(BenchRecord::new(ref_, ref_tput, "packets/s"));
+    }
+
+    // --- chain sweep: 2/4/8 chips ----------------------------------------
+    for &chips in &[2usize, 4, 8] {
+        let load = chain_load(chips, 8, 512, 11);
+        let n = load.len() as f64;
+        let opt = bench(&format!("noc/chain{chips}/512-transfers"), 1, 8, || {
+            run_chain_opt(chips, 8, &load);
+        });
+        let ref_ = bench(&format!("noc/chain{chips}/512-transfers/ref"), 1, 4, || {
+            run_chain_ref(chips, 8, &load);
+        });
+        println!(
+            "chain{chips}: {:.2} k transfers/s, {:.1}x vs reference",
+            n / (opt.median_ns / 1e9) / 1e3,
+            ref_.median_ns / opt.median_ns
+        );
+        let opt_tput = n / (opt.median_ns / 1e9);
+        let ref_tput = n / (ref_.median_ns / 1e9);
+        records.push(BenchRecord::new(opt, opt_tput, "transfers/s"));
+        records.push(BenchRecord::new(ref_, ref_tput, "transfers/s"));
+    }
+
+    // --- duplex: 2048 boundary crossings ----------------------------------
     let b = bench("noc/duplex/2k-die-crossings", 2, 15, || {
         let mut d = Duplex::new(8);
         for i in 0..2_048usize {
@@ -50,4 +205,11 @@ fn main() {
         "duplex throughput: {:.2} k crossings/s",
         2_048.0 / (b.median_ns / 1e9) / 1e3
     );
+    records.push(BenchRecord::new(b.clone(), 2_048.0 / (b.median_ns / 1e9), "crossings/s"));
+
+    let path = Path::new("BENCH_noc_cycle.json");
+    match append_json(path, &records) {
+        Ok(()) => println!("appended {} records to {}", records.len(), path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

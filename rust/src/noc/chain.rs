@@ -9,8 +9,12 @@
 //! straight East (the repeater re-maps the route), so end-to-end latency
 //! composes as `sum(mesh hops) + k x SerDes + queueing` — exactly what
 //! Eq. 9 sums analytically.
-
-use std::collections::HashMap;
+//!
+//! Id bookkeeping: every mesh in the chain shares the chain's global id
+//! space (via [`Mesh::inject_with_id`]), so a flit's id *is* its index into
+//! the flat `tracked` table. This replaces the seed's two nested HashMaps
+//! (per-chip mesh-local id remaps), which were both slower and ambiguous —
+//! a re-injected chain id could collide with a chip's mesh-local id.
 
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
@@ -28,22 +32,13 @@ pub struct ChainTraffic {
     pub dest: Coord,
 }
 
-/// Delivery record.
-#[derive(Debug, Clone, Copy)]
-pub struct Delivery {
-    pub id: u64,
-    pub latency: u64,
-    pub crossings: usize,
-}
-
 /// Chain-level statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ChainStats {
     pub injected: u64,
     pub delivered: u64,
     pub cycles: u64,
     pub total_latency: u64,
-    pub max_latency: u64,
 }
 
 impl ChainStats {
@@ -56,22 +51,27 @@ impl ChainStats {
     }
 }
 
+/// Per-packet tracking record, indexed by chain id.
+#[derive(Debug, Clone, Copy)]
+struct Tracked {
+    injected_at: u64,
+    dest_chip: u32,
+    dest: Coord,
+    crossings: u32,
+}
+
 /// C chips + C-1 eastward EMIO links.
 pub struct Chain {
     pub chips: Vec<Mesh>,
     links: Vec<EmioLink>,
     dim: usize,
     now: u64,
-    next_id: u64,
-    /// id -> (inject cycle, dest chip, dest coord, crossings so far)
-    tracked: HashMap<u64, (u64, usize, Coord, usize)>,
+    /// Flat id -> record table (chain ids are dense and sequential).
+    tracked: Vec<Tracked>,
     pub stats: ChainStats,
-    pub deliveries: Vec<Delivery>,
-    /// per-chip delivered counts already accounted
-    accounted: Vec<u64>,
+    /// scratch buffers reused across cycles (allocation-free hot loop)
     egress_buf: Vec<(usize, Flit)>,
-    /// per-chip mesh-local flit id -> chain id
-    local_map: HashMap<usize, HashMap<u64, u64>>,
+    frames_buf: Vec<(super::emio::Frame, u64)>,
 }
 
 impl Chain {
@@ -82,13 +82,10 @@ impl Chain {
             links: (0..n_chips.saturating_sub(1)).map(|_| EmioLink::new()).collect(),
             dim,
             now: 0,
-            next_id: 0,
-            tracked: HashMap::new(),
+            tracked: Vec::new(),
             stats: ChainStats::default(),
-            deliveries: Vec::new(),
-            accounted: vec![0; n_chips],
             egress_buf: Vec::new(),
-            local_map: HashMap::new(),
+            frames_buf: Vec::new(),
         }
     }
 
@@ -96,36 +93,31 @@ impl Chain {
         self.chips.len()
     }
 
+    /// Die crossings a delivered packet has made so far (by chain id).
+    pub fn crossings_of(&self, id: u64) -> usize {
+        self.tracked.get(id as usize).map(|t| t.crossings as usize).unwrap_or(0)
+    }
+
     /// Inject a transfer (destination chip must be >= source chip — the
     /// directional-X mapping flows East).
     pub fn inject(&mut self, t: ChainTraffic) -> u64 {
         assert!(t.dest_chip >= t.src_chip, "directional-X: eastward only");
         assert!(t.dest_chip < self.n_chips());
-        let id = self.next_id;
-        self.next_id += 1;
-        self.tracked.insert(id, (self.now, t.dest_chip, t.dest, 0));
-        if t.dest_chip == t.src_chip {
-            let flit_id = self.chips[t.src_chip].inject(t.src, t.dest);
-            // same-chip: mesh handles it; remap the mesh-local id
-            self.remap_local(t.src_chip, flit_id, id);
+        let id = self.tracked.len() as u64;
+        self.tracked.push(Tracked {
+            injected_at: self.now,
+            dest_chip: t.dest_chip as u32,
+            dest: t.dest,
+            crossings: 0,
+        });
+        let target = if t.dest_chip == t.src_chip {
+            t.dest // same-chip: the mesh delivers it directly
         } else {
-            // head for the East edge of the source row
-            let exit = Coord::new(self.dim, t.src.y as usize);
-            let flit_id = self.chips[t.src_chip].inject(t.src, exit);
-            self.remap_local(t.src_chip, flit_id, id);
-        }
+            Coord::new(self.dim, t.src.y as usize) // head for the East edge
+        };
+        self.chips[t.src_chip].inject_with_id(t.src, target, id);
         self.stats.injected += 1;
         id
-    }
-
-    /// Mesh::inject assigns mesh-local ids; we keep a parallel chain-id by
-    /// re-tagging in the tracked table (mesh ids are only unique per chip,
-    /// so the chain tracks by (chip-local id at inject time) -> chain id).
-    /// Simpler: meshes share the chain's id-space via offsetting — here we
-    /// instead record the mapping.
-    fn remap_local(&mut self, chip: usize, mesh_id: u64, chain_id: u64) {
-        // mesh ids increase monotonically per chip; store reverse map
-        self.local_map.entry(chip).or_default().insert(mesh_id, chain_id);
     }
 
     /// One global clock.
@@ -139,14 +131,9 @@ impl Chain {
             self.egress_buf.append(&mut self.chips[c].east_egress);
             if c + 1 < n {
                 for (row, flit) in self.egress_buf.drain(..) {
-                    let chain_id = self
-                        .local_map
-                        .get(&c)
-                        .and_then(|m| m.get(&flit.id))
-                        .copied()
-                        .unwrap_or(flit.id);
+                    // flit.id IS the chain id: no per-chip remap lookup
                     let pkt = Packet::spike(0, 0, 0, 0);
-                    self.links[c].inject(row % LANES, &pkt, chain_id, self.now);
+                    self.links[c].inject(row % LANES, &pkt, flit.id, self.now);
                 }
             } else {
                 self.egress_buf.clear(); // nothing East of the last chip
@@ -155,19 +142,18 @@ impl Chain {
         // links advance; arrivals enter the next chip
         for c in 0..self.links.len() {
             self.links[c].step(self.now);
-            let arrivals: Vec<(super::emio::Frame, u64)> =
-                self.links[c].delivered.drain(..).collect();
-            for (frame, _) in arrivals {
-                let Some(&(inj, dest_chip, dest, crossings)) = self.tracked.get(&frame.id)
-                else {
+            self.frames_buf.clear();
+            self.frames_buf.append(&mut self.links[c].delivered);
+            for (frame, _) in &self.frames_buf {
+                let Some(tr) = self.tracked.get_mut(frame.id as usize) else {
                     continue;
                 };
-                self.tracked.insert(frame.id, (inj, dest_chip, dest, crossings + 1));
+                tr.crossings += 1;
                 let arriving_chip = c + 1;
                 let (_, port) = Packet::decode_d2d(frame.wire);
                 let row = port as usize % self.dim;
-                let target = if dest_chip == arriving_chip {
-                    dest
+                let target = if tr.dest_chip as usize == arriving_chip {
+                    tr.dest
                 } else {
                     // repeater: keep heading East
                     Coord::new(self.dim, row)
@@ -176,28 +162,17 @@ impl Chain {
                     id: frame.id,
                     dest: target,
                     wire: frame.wire,
-                    injected_at: inj,
+                    injected_at: tr.injected_at,
                     hops: 0,
                 };
-                // chain ids are globally unique; record identity mapping so
-                // subsequent egress lookups resolve
-                self.local_map.entry(arriving_chip).or_default().insert(frame.id, frame.id);
                 self.chips[arriving_chip].inject_west_edge(row, flit);
-            }
-        }
-        // account deliveries
-        for c in 0..n {
-            let delivered = self.chips[c].stats.delivered;
-            if delivered > self.accounted[c] {
-                // latencies are tracked inside the mesh stats; per-packet
-                // records come from tracked-table lookups at ejection time.
-                self.accounted[c] = delivered;
             }
         }
         self.stats.cycles = self.now;
     }
 
-    /// Total work left anywhere in the chain.
+    /// Total work left anywhere in the chain (per-chip backlogs are O(1)
+    /// counters, so this is O(chips + links), not O(chips x dim²)).
     pub fn pending(&self) -> usize {
         self.chips.iter().map(|m| m.backlog()).sum::<usize>()
             + self.links.iter().map(|l| l.pending()).sum::<usize>()
@@ -219,6 +194,11 @@ impl Chain {
         self.stats.total_latency = self.chips.iter().map(|m| m.stats.total_latency).sum();
         self.stats.cycles = self.now;
         self.stats.clone()
+    }
+
+    /// Frames accepted by link `i` (test/diagnostic hook).
+    pub fn link_accepted(&self, i: usize) -> u64 {
+        self.links[i].accepted
     }
 }
 
@@ -243,7 +223,7 @@ mod tests {
     #[test]
     fn one_crossing_pays_one_serdes() {
         let mut ch = Chain::new(2, 8);
-        ch.inject(ChainTraffic {
+        let id = ch.inject(ChainTraffic {
             src_chip: 0,
             src: Coord::new(7, 3),
             dest_chip: 1,
@@ -251,6 +231,7 @@ mod tests {
         });
         let stats = ch.run(10_000);
         assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.crossings_of(id), 1);
         let lat = stats.avg_latency();
         assert!(lat >= 76.0 && lat <= 76.0 + 8.0, "lat={lat}");
     }
@@ -259,7 +240,7 @@ mod tests {
     fn multi_chip_crossing_composes_serdes() {
         // 0 -> 3: three crossings, each >= 76 cycles of SerDes
         let mut ch = Chain::new(4, 8);
-        ch.inject(ChainTraffic {
+        let id = ch.inject(ChainTraffic {
             src_chip: 0,
             src: Coord::new(7, 0),
             dest_chip: 3,
@@ -267,6 +248,7 @@ mod tests {
         });
         let stats = ch.run(100_000);
         assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.crossings_of(id), 3);
         let lat = stats.avg_latency();
         assert!(lat >= 3.0 * 76.0, "lat={lat}");
         assert!(lat <= 3.0 * 76.0 + 3.0 * 16.0, "lat={lat}");
@@ -318,5 +300,32 @@ mod tests {
         };
         assert!(lat_for(1) < lat_for(2));
         assert!(lat_for(2) < lat_for(3));
+    }
+
+    #[test]
+    fn global_id_space_survives_mixed_local_and_crossing_traffic() {
+        // Interleave same-chip and crossing transfers whose ids would have
+        // collided in a per-chip id space: every packet must still reach
+        // its own destination chip.
+        let mut ch = Chain::new(3, 8);
+        for i in 0..30usize {
+            ch.inject(ChainTraffic {
+                src_chip: 1,
+                src: Coord::new(i % 4, i % 8),
+                dest_chip: 1,
+                dest: Coord::new(5, i % 8),
+            });
+            ch.inject(ChainTraffic {
+                src_chip: 0,
+                src: Coord::new(7, i % 8),
+                dest_chip: 2,
+                dest: Coord::new(i % 8, i % 8),
+            });
+        }
+        let stats = ch.run(1_000_000);
+        assert_eq!(stats.delivered, 60);
+        assert_eq!(ch.chips[1].stats.delivered, 30, "chip-1-local packets");
+        assert_eq!(ch.chips[2].stats.delivered, 30, "crossing packets");
+        assert_eq!(ch.chips[0].stats.delivered, 0);
     }
 }

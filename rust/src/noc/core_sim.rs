@@ -79,15 +79,18 @@ impl CoreSim {
     /// Execute one scheduler window of packets; `fan_in` is the layer's
     /// full fan-in (drives weight-reload iterations).
     pub fn run(&self, packets: &[CorePacket], fan_in: usize) -> CoreRun {
-        // scheduler SRAM: window x axons occupancy bitmap/value store
-        let mut sched: Vec<Vec<u8>> = vec![vec![0; self.axons]; self.window];
+        // scheduler SRAM: window x axons occupancy bitmap/value store,
+        // flattened to one row-major allocation (one cache-friendly slab
+        // instead of `window` separate heap vectors)
+        let mut sched = vec![0u8; self.window * self.axons];
         for p in packets {
             let t = (p.delay as usize).min(self.window - 1);
             let a = (p.axon as usize).min(self.axons - 1);
+            let cell = &mut sched[t * self.axons + a];
             // dense packets overwrite (activation value); spikes accumulate
             match self.kind {
-                CoreKind::Artificial => sched[t][a] = p.value,
-                CoreKind::Spiking => sched[t][a] = sched[t][a].saturating_add(1),
+                CoreKind::Artificial => *cell = p.value,
+                CoreKind::Spiking => *cell = cell.saturating_add(1),
             }
         }
 
@@ -98,7 +101,7 @@ impl CoreSim {
 
         let mut busy = 0u64;
         let mut ops = 0u64;
-        for tick in sched.iter() {
+        for tick in sched.chunks_exact(self.axons) {
             // active axons this tick
             let active = match self.kind {
                 // ANN: a tick with any delivery walks EVERY fan-in axon

@@ -4,8 +4,6 @@
 //! hops), and measures boundary-traffic throughput under dense vs spiking
 //! loads (the core HNN mechanism).
 
-use std::collections::HashMap;
-
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
 
@@ -21,7 +19,7 @@ pub struct CrossTraffic {
 }
 
 /// Result of a duplex run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DuplexStats {
     pub cycles: u64,
     pub delivered: u64,
@@ -50,11 +48,11 @@ pub struct Duplex {
     pub link: EmioLink,
     dim: usize,
     now: u64,
-    /// id -> (inject_cycle, dest on B). HashMap: the per-frame lookup in
-    /// `step` is on the hot path (was O(n) scan — see EXPERIMENTS.md §Perf).
-    tracked: HashMap<u64, (u64, Coord)>,
+    /// Indexed by flit id: (inject_cycle, dest on B). Ids are dense and
+    /// sequential (mesh A assigns them in inject order), so a flat Vec
+    /// replaces the seed's per-frame HashMap lookup on the hot path.
+    tracked: Vec<(u64, Coord)>,
     delivered_count: u64,
-    next_id: u64,
     /// scratch buffers reused across cycles (allocation-free hot loop)
     egress_buf: Vec<(usize, Flit)>,
     frames_buf: Vec<(super::emio::Frame, u64)>,
@@ -68,9 +66,8 @@ impl Duplex {
             link: EmioLink::new(),
             dim,
             now: 0,
-            tracked: HashMap::new(),
+            tracked: Vec::new(),
             delivered_count: 0,
-            next_id: 0,
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
         }
@@ -80,9 +77,9 @@ impl Duplex {
     pub fn inject(&mut self, t: CrossTraffic) {
         // Route on A to the East edge of the source row, then off-chip.
         let exit = Coord::new(self.dim, t.src.y as usize);
-        self.a.inject(t.src, exit);
-        self.tracked.insert(self.next_id, (self.now, t.dest));
-        self.next_id += 1;
+        let id = self.a.inject(t.src, exit);
+        debug_assert_eq!(id as usize, self.tracked.len());
+        self.tracked.push((self.now, t.dest));
     }
 
     /// One global clock cycle for both meshes and the link.
@@ -91,8 +88,7 @@ impl Duplex {
         self.a.step();
         // chip A east egress enters the EMIO serializer lanes by exit row
         // (8 boundary cores -> 8 lanes). Frames carry the tracked id via
-        // FIFO pairing: egress order matches tracked order per row, so we
-        // stamp ids through the flit id already carried.
+        // the flit id (dense, assigned at inject time).
         self.egress_buf.clear();
         self.egress_buf.append(&mut self.a.east_egress);
         for (row, flit) in self.egress_buf.drain(..) {
@@ -103,10 +99,9 @@ impl Duplex {
         // frames exiting the link enter chip B's West edge split block
         self.frames_buf.clear();
         self.frames_buf.append(&mut self.link.delivered);
-        for i in 0..self.frames_buf.len() {
-            let frame = &self.frames_buf[i].0;
-            // recover the destination from the tracked table (O(1))
-            if let Some(&(inj, dest)) = self.tracked.get(&frame.id) {
+        for (frame, _) in &self.frames_buf {
+            // recover the destination from the flat tracked table (O(1))
+            if let Some(&(inj, dest)) = self.tracked.get(frame.id as usize) {
                 let (_, port) = Packet::decode_d2d(frame.wire);
                 let flit = Flit {
                     id: frame.id,

@@ -1,0 +1,179 @@
+//! Ring-buffer input FIFO for the cycle engine's routers.
+//!
+//! Replaces the five heap-allocated `VecDeque<Flit>`s the seed router
+//! carried: a power-of-two ring over a flat `Vec` of packed `Copy` flits,
+//! lazily allocated (an idle router owns zero heap memory) and grown by
+//! doubling only when a queue actually overflows its capacity. Head/len
+//! indexing keeps `front`/`pop_front`/`push_back` branch-light on the hot
+//! path — see EXPERIMENTS.md §Perf.
+
+use crate::arch::chip::Coord;
+
+use super::router::Flit;
+
+/// Capacity installed on the first push (power of two).
+const INIT_CAP: usize = 16;
+
+const fn zero_flit() -> Flit {
+    Flit { id: 0, dest: Coord { x: 0, y: 0 }, wire: 0, injected_at: 0, hops: 0 }
+}
+
+/// A FIFO of flits backed by a power-of-two ring buffer.
+#[derive(Debug, Clone, Default)]
+pub struct FlitFifo {
+    buf: Vec<Flit>,
+    head: usize,
+    len: usize,
+}
+
+impl FlitFifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The flit at the head of the queue, if any.
+    #[inline]
+    pub fn front(&self) -> Option<&Flit> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(&self.buf[self.head])
+        }
+    }
+
+    /// Enqueue at the tail, growing the ring if it is full.
+    #[inline]
+    pub fn push_back(&mut self, flit: Flit) {
+        if self.len == self.buf.len() {
+            self.grow();
+        }
+        let mask = self.buf.len() - 1;
+        self.buf[(self.head + self.len) & mask] = flit;
+        self.len += 1;
+    }
+
+    /// Dequeue from the head.
+    #[inline]
+    pub fn pop_front(&mut self) -> Option<Flit> {
+        if self.len == 0 {
+            return None;
+        }
+        let flit = self.buf[self.head];
+        self.head = (self.head + 1) & (self.buf.len() - 1);
+        self.len -= 1;
+        if self.len == 0 {
+            self.head = 0; // re-anchor: keeps long-lived queues cache-local
+        }
+        Some(flit)
+    }
+
+    /// Double the ring (or install the initial capacity), compacting the
+    /// live span to the front.
+    #[cold]
+    fn grow(&mut self) {
+        let old_cap = self.buf.len();
+        let new_cap = (old_cap * 2).max(INIT_CAP);
+        let mut next = vec![zero_flit(); new_cap];
+        for (i, slot) in next.iter_mut().enumerate().take(self.len) {
+            *slot = self.buf[(self.head + i) & (old_cap - 1)];
+        }
+        self.buf = next;
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flit(id: u64) -> Flit {
+        Flit { id, dest: Coord::new(0, 0), wire: 0, injected_at: 0, hops: 0 }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = FlitFifo::new();
+        for i in 0..5 {
+            q.push_back(flit(i));
+        }
+        for i in 0..5 {
+            assert_eq!(q.front().unwrap().id, i);
+            assert_eq!(q.pop_front().unwrap().id, i);
+        }
+        assert!(q.pop_front().is_none());
+        assert!(q.front().is_none());
+    }
+
+    #[test]
+    fn empty_fifo_owns_no_heap() {
+        let q = FlitFifo::new();
+        assert_eq!(q.buf.capacity(), 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn wraps_around_the_ring() {
+        let mut q = FlitFifo::new();
+        // fill, half-drain, refill past the physical end repeatedly
+        let mut next_push = 0u64;
+        let mut next_pop = 0u64;
+        for round in 0..10 {
+            for _ in 0..(INIT_CAP / 2 + round) {
+                q.push_back(flit(next_push));
+                next_push += 1;
+            }
+            for _ in 0..(INIT_CAP / 2) {
+                assert_eq!(q.pop_front().unwrap().id, next_pop);
+                next_pop += 1;
+            }
+        }
+        while let Some(f) = q.pop_front() {
+            assert_eq!(f.id, next_pop);
+            next_pop += 1;
+        }
+        assert_eq!(next_pop, next_push);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut q = FlitFifo::new();
+        for i in 0..(INIT_CAP as u64 * 5) {
+            q.push_back(flit(i));
+        }
+        assert_eq!(q.len(), INIT_CAP * 5);
+        for i in 0..(INIT_CAP as u64 * 5) {
+            assert_eq!(q.pop_front().unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn growth_mid_wrap_keeps_order() {
+        let mut q = FlitFifo::new();
+        for i in 0..INIT_CAP as u64 {
+            q.push_back(flit(i));
+        }
+        for i in 0..(INIT_CAP as u64 / 2) {
+            assert_eq!(q.pop_front().unwrap().id, i);
+        }
+        // tail now wraps; pushing past capacity forces a compacting grow
+        for i in 0..(2 * INIT_CAP as u64) {
+            q.push_back(flit(1_000 + i));
+        }
+        for i in (INIT_CAP as u64 / 2)..INIT_CAP as u64 {
+            assert_eq!(q.pop_front().unwrap().id, i);
+        }
+        for i in 0..(2 * INIT_CAP as u64) {
+            assert_eq!(q.pop_front().unwrap().id, 1_000 + i);
+        }
+    }
+}

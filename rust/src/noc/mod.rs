@@ -1,11 +1,19 @@
 //! Cycle-level NoC simulator (§4.2's "custom simulation framework", the
 //! clocked counterpart of the closed-form `analytic` engine).
 //!
-//! * [`router`] — 5-port X-Y routers with East/West priority;
-//! * [`mesh`]   — a synchronous N x N mesh of routers (one chip);
+//! * [`router`] — 5-port X-Y routers with East/West priority, ring-buffer
+//!   input FIFOs of packed `Copy` flits;
+//! * [`fifo`]   — the fixed-capacity ring buffer behind every input port;
+//! * [`worklist`] — the dirty-router bitset that makes a mesh cycle cost
+//!   O(active routers) instead of O(dim²);
+//! * [`mesh`]   — a synchronous N x N mesh of routers (one chip) with
+//!   worklist scheduling and an O(1) backlog counter;
 //! * [`emio`]   — the §3.4 merge/SerDes/split die-to-die block
 //!   (validates the 76-cycle single-packet RTL figure);
 //! * [`duplex`] — two chips + one EMIO link, end-to-end;
+//! * [`chain`]  — C chips in a directional-X chain with repeater hops;
+//! * [`reference`] — the retained naive engine (full-scan, `VecDeque`
+//!   FIFOs): golden-equivalence oracle and perf baseline;
 //! * [`traffic`] — packet-trace generation from layer workloads;
 //! * [`clp`]    — the cross-layer packet converter state machine (Eqs. 2-3,
 //!   integer-exact against the Pallas kernels).
@@ -13,15 +21,19 @@
 pub mod chain;
 pub mod clp;
 pub mod core_sim;
-pub mod model_sim;
 pub mod duplex;
 pub mod emio;
+pub mod fifo;
 pub mod mesh;
+pub mod model_sim;
+pub mod reference;
 pub mod router;
 pub mod traffic;
+pub mod worklist;
 
-pub use chain::{Chain, ChainTraffic};
-pub use duplex::{CrossTraffic, Duplex};
+pub use chain::{Chain, ChainStats, ChainTraffic};
+pub use duplex::{CrossTraffic, Duplex, DuplexStats};
 pub use emio::EmioLink;
 pub use mesh::{Mesh, MeshStats};
+pub use reference::{RefChain, RefDuplex, RefMesh};
 pub use router::{route_xy, Flit, Port, Router};

@@ -13,7 +13,7 @@ use crate::arch::chip::Coord;
 use crate::arch::params::ArchConfig;
 use crate::model::layer::Network;
 use crate::model::mapping::map_network;
-use crate::model::partition::{partition, TrafficMode};
+use crate::model::partition::partition;
 use crate::sparsity::SparsityProfile;
 use crate::util::rng::Rng;
 
@@ -85,7 +85,6 @@ pub fn validate_boundary_edges(
             measured_cycles: stats.cycles,
             analytic_cycles: analytic.max(1),
         });
-        let _ = TrafficMode::Dense; // partition mode already folded into counts
     }
     out
 }

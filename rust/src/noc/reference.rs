@@ -1,0 +1,438 @@
+//! Retained naive cycle engine — the pre-worklist implementation, kept as
+//! a living specification of the arbitration semantics.
+//!
+//! Two jobs:
+//!
+//! 1. **Golden equivalence** (`rust/tests/golden_noc.rs`): the optimized
+//!    engine ([`super::mesh::Mesh`] & co.) must produce *identical*
+//!    `MeshStats`/`DuplexStats`/`ChainStats` on identical seeded loads.
+//! 2. **Perf baseline** (`benches/noc_cycle.rs`): every optimized number is
+//!    reported next to this engine's number from the same run, so the perf
+//!    trajectory in `BENCH_noc_cycle.json` is grounded.
+//!
+//! Deliberately naive — do NOT optimize this module: `RefMesh::step` scans
+//! all dim² routers every cycle, `RefMesh::backlog` re-sums every queue,
+//! routers hold five heap `VecDeque`s, and `RefDuplex` tracks packets
+//! through a `HashMap`. The one semantic divergence from the seed is shared
+//! with the optimized engine: chain meshes use the chain's global id space
+//! (`inject_with_id`), because the seed's per-chip id remap tables could
+//! alias a re-injected chain id with a chip-local id.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::arch::chip::Coord;
+use crate::arch::packet::Packet;
+
+use super::chain::{ChainStats, ChainTraffic};
+use super::duplex::{CrossTraffic, DuplexStats};
+use super::emio::{EmioLink, Frame, LANES};
+use super::mesh::MeshStats;
+use super::router::{route_xy, Flit, Port, IN_PORTS};
+
+/// Naive 5-port router: per-input `VecDeque`s, O(ports) backlog.
+#[derive(Debug, Clone)]
+pub struct RefRouter {
+    pub at: Coord,
+    inq: [VecDeque<Flit>; 5],
+    delivered: Vec<Flit>,
+}
+
+fn port_idx(p: Port) -> usize {
+    match p {
+        Port::East => 0,
+        Port::West => 1,
+        Port::North => 2,
+        Port::South => 3,
+        Port::Local => 4,
+    }
+}
+
+impl RefRouter {
+    pub fn new(at: Coord) -> Self {
+        RefRouter { at, inq: Default::default(), delivered: Vec::new() }
+    }
+
+    pub fn push(&mut self, port: Port, flit: Flit) {
+        self.inq[port_idx(port)].push_back(flit);
+    }
+
+    /// O(ports) scan — the cost the optimized router's counter removes.
+    pub fn backlog(&self) -> usize {
+        self.inq.iter().map(|q| q.len()).sum()
+    }
+
+    fn step_into(&mut self, out: &mut Vec<(Port, Flit)>) {
+        let mut granted = [false; 5];
+        for in_p in IN_PORTS {
+            let qi = port_idx(in_p);
+            let Some(head) = self.inq[qi].front() else { continue };
+            let out_p = route_xy(self.at, head.dest);
+            let oi = port_idx(out_p);
+            if granted[oi] {
+                continue;
+            }
+            granted[oi] = true;
+            let mut flit = self.inq[qi].pop_front().unwrap();
+            if out_p == Port::Local {
+                self.delivered.push(flit);
+            } else {
+                flit.hops += 1;
+                out.push((out_p, flit));
+            }
+        }
+    }
+}
+
+/// Naive mesh: full O(dim²) router scan per cycle.
+#[derive(Debug, Clone)]
+pub struct RefMesh {
+    pub dim: usize,
+    routers: Vec<RefRouter>,
+    pub stats: MeshStats,
+    now: u64,
+    next_id: u64,
+    pub east_egress: Vec<(usize, Flit)>,
+    grants: Vec<(Port, Flit)>,
+    moves: Vec<(usize, Port, Flit)>,
+}
+
+impl RefMesh {
+    pub fn new(dim: usize) -> Self {
+        let routers = (0..dim * dim)
+            .map(|i| RefRouter::new(Coord::new(i % dim, i / dim)))
+            .collect();
+        RefMesh {
+            dim,
+            routers,
+            stats: MeshStats::default(),
+            now: 0,
+            next_id: 0,
+            east_egress: Vec::new(),
+            grants: Vec::new(),
+            moves: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn idx(&self, c: Coord) -> usize {
+        c.y as usize * self.dim + c.x as usize
+    }
+
+    pub fn inject(&mut self, src: Coord, dest: Coord) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.inject_with_id(src, dest, id);
+        id
+    }
+
+    pub fn inject_with_id(&mut self, src: Coord, dest: Coord, id: u64) {
+        let dx = dest.x as i32 - src.x as i32;
+        let dy = dest.y as i32 - src.y as i32;
+        let pkt = Packet::activation(dx.clamp(-256, 255), dy.clamp(-256, 255), 0, 0);
+        let flit = Flit { id, dest, wire: pkt.encode(), injected_at: self.now, hops: 0 };
+        let i = self.idx(src);
+        self.routers[i].push(Port::Local, flit);
+        self.stats.injected += 1;
+    }
+
+    pub fn inject_west_edge(&mut self, row: usize, mut flit: Flit) {
+        flit.injected_at = flit.injected_at.min(self.now);
+        let i = self.idx(Coord::new(0, row));
+        self.routers[i].push(Port::West, flit);
+        self.stats.injected += 1;
+    }
+
+    pub fn step(&mut self) {
+        self.now += 1;
+        self.stats.cycles = self.now;
+        let dim = self.dim;
+        let mut moves = std::mem::take(&mut self.moves);
+        let mut grants = std::mem::take(&mut self.grants);
+        moves.clear();
+        for (i, r) in self.routers.iter_mut().enumerate() {
+            if r.backlog() == 0 {
+                continue; // idle router: skip arbitration (but pay the scan)
+            }
+            let x = i % dim;
+            let y = i / dim;
+            grants.clear();
+            r.step_into(&mut grants);
+            for (out_p, flit) in grants.drain(..) {
+                match out_p {
+                    Port::East if x + 1 < dim => moves.push((i + 1, Port::West, flit)),
+                    Port::East => self.east_egress.push((y, flit)),
+                    Port::West if x > 0 => moves.push((i - 1, Port::East, flit)),
+                    Port::West => { /* dropped at the chip edge (no West link) */ }
+                    Port::North if y + 1 < dim => moves.push((i + dim, Port::South, flit)),
+                    Port::South if y > 0 => moves.push((i - dim, Port::North, flit)),
+                    _ => { /* off-mesh vertical: dropped */ }
+                }
+            }
+        }
+        for (i, p, f) in moves.drain(..) {
+            self.routers[i].push(p, f);
+        }
+        self.moves = moves;
+        self.grants = grants;
+        for r in self.routers.iter_mut() {
+            for f in r.delivered.drain(..) {
+                self.stats.delivered += 1;
+                self.stats.total_hops += f.hops as u64;
+                self.stats.total_latency += self.now - f.injected_at;
+            }
+        }
+    }
+
+    /// O(dim² x ports) re-sum — the cost the optimized counter removes.
+    pub fn backlog(&self) -> usize {
+        self.routers.iter().map(|r| r.backlog()).sum()
+    }
+
+    pub fn run_to_drain(&mut self, max_cycles: u64) -> u64 {
+        let start = self.now;
+        while self.backlog() > 0 && self.now - start < max_cycles {
+            self.step();
+        }
+        self.now - start
+    }
+}
+
+/// Naive duplex: HashMap packet tracking, O(N) backlog checks per cycle.
+pub struct RefDuplex {
+    pub a: RefMesh,
+    pub b: RefMesh,
+    pub link: EmioLink,
+    dim: usize,
+    now: u64,
+    tracked: HashMap<u64, (u64, Coord)>,
+    delivered_count: u64,
+    next_id: u64,
+    egress_buf: Vec<(usize, Flit)>,
+    frames_buf: Vec<(Frame, u64)>,
+}
+
+impl RefDuplex {
+    pub fn new(dim: usize) -> Self {
+        RefDuplex {
+            a: RefMesh::new(dim),
+            b: RefMesh::new(dim),
+            link: EmioLink::new(),
+            dim,
+            now: 0,
+            tracked: HashMap::new(),
+            delivered_count: 0,
+            next_id: 0,
+            egress_buf: Vec::new(),
+            frames_buf: Vec::new(),
+        }
+    }
+
+    pub fn inject(&mut self, t: CrossTraffic) {
+        let exit = Coord::new(self.dim, t.src.y as usize);
+        self.a.inject(t.src, exit);
+        self.tracked.insert(self.next_id, (self.now, t.dest));
+        self.next_id += 1;
+    }
+
+    pub fn step(&mut self) {
+        self.now += 1;
+        self.a.step();
+        self.egress_buf.clear();
+        self.egress_buf.append(&mut self.a.east_egress);
+        for (row, flit) in self.egress_buf.drain(..) {
+            let pkt = Packet::spike(0, 0, 0, 0);
+            self.link.inject(row % LANES, &pkt, flit.id, self.now);
+        }
+        self.link.step(self.now);
+        self.frames_buf.clear();
+        self.frames_buf.append(&mut self.link.delivered);
+        for (frame, _) in &self.frames_buf {
+            if let Some(&(inj, dest)) = self.tracked.get(&frame.id) {
+                let (_, port) = Packet::decode_d2d(frame.wire);
+                let flit = Flit {
+                    id: frame.id,
+                    dest,
+                    wire: frame.wire,
+                    injected_at: inj,
+                    hops: 0,
+                };
+                self.b.inject_west_edge(port as usize % self.dim, flit);
+            }
+        }
+        self.b.step();
+        self.delivered_count = self.b.stats.delivered;
+    }
+
+    pub fn run(&mut self, max_cycles: u64) -> DuplexStats {
+        let mut idle = 0;
+        while idle < 4 && self.now < max_cycles {
+            let before = self.delivered_count;
+            self.step();
+            let busy = self.a.backlog() > 0
+                || self.b.backlog() > 0
+                || self.link.pending() > 0
+                || self.delivered_count != before;
+            idle = if busy { 0 } else { idle + 1 };
+        }
+        DuplexStats {
+            cycles: self.now,
+            delivered: self.b.stats.delivered,
+            latencies: vec![self.b.stats.total_latency / self.b.stats.delivered.max(1)],
+        }
+    }
+}
+
+/// Naive chain: full-scan meshes + O(chips x dim²) pending() per cycle.
+pub struct RefChain {
+    pub chips: Vec<RefMesh>,
+    links: Vec<EmioLink>,
+    dim: usize,
+    now: u64,
+    tracked: Vec<(u64, usize, Coord, usize)>,
+    pub stats: ChainStats,
+    egress_buf: Vec<(usize, Flit)>,
+    frames_buf: Vec<(Frame, u64)>,
+}
+
+impl RefChain {
+    pub fn new(n_chips: usize, dim: usize) -> Self {
+        assert!(n_chips >= 1);
+        RefChain {
+            chips: (0..n_chips).map(|_| RefMesh::new(dim)).collect(),
+            links: (0..n_chips.saturating_sub(1)).map(|_| EmioLink::new()).collect(),
+            dim,
+            now: 0,
+            tracked: Vec::new(),
+            stats: ChainStats::default(),
+            egress_buf: Vec::new(),
+            frames_buf: Vec::new(),
+        }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn inject(&mut self, t: ChainTraffic) -> u64 {
+        assert!(t.dest_chip >= t.src_chip, "directional-X: eastward only");
+        assert!(t.dest_chip < self.n_chips());
+        let id = self.tracked.len() as u64;
+        self.tracked.push((self.now, t.dest_chip, t.dest, 0));
+        let target = if t.dest_chip == t.src_chip {
+            t.dest
+        } else {
+            Coord::new(self.dim, t.src.y as usize)
+        };
+        self.chips[t.src_chip].inject_with_id(t.src, target, id);
+        self.stats.injected += 1;
+        id
+    }
+
+    pub fn step(&mut self) {
+        self.now += 1;
+        let n = self.n_chips();
+        for c in 0..n {
+            self.chips[c].step();
+            self.egress_buf.clear();
+            self.egress_buf.append(&mut self.chips[c].east_egress);
+            if c + 1 < n {
+                for (row, flit) in self.egress_buf.drain(..) {
+                    let pkt = Packet::spike(0, 0, 0, 0);
+                    self.links[c].inject(row % LANES, &pkt, flit.id, self.now);
+                }
+            } else {
+                self.egress_buf.clear();
+            }
+        }
+        for c in 0..self.links.len() {
+            self.links[c].step(self.now);
+            self.frames_buf.clear();
+            self.frames_buf.append(&mut self.links[c].delivered);
+            for (frame, _) in &self.frames_buf {
+                let Some(tr) = self.tracked.get_mut(frame.id as usize) else {
+                    continue;
+                };
+                tr.3 += 1;
+                let (inj, dest_chip, dest) = (tr.0, tr.1, tr.2);
+                let arriving_chip = c + 1;
+                let (_, port) = Packet::decode_d2d(frame.wire);
+                let row = port as usize % self.dim;
+                let target = if dest_chip == arriving_chip {
+                    dest
+                } else {
+                    Coord::new(self.dim, row)
+                };
+                let flit = Flit {
+                    id: frame.id,
+                    dest: target,
+                    wire: frame.wire,
+                    injected_at: inj,
+                    hops: 0,
+                };
+                self.chips[arriving_chip].inject_west_edge(row, flit);
+            }
+        }
+        self.stats.cycles = self.now;
+    }
+
+    pub fn pending(&self) -> usize {
+        self.chips.iter().map(|m| m.backlog()).sum::<usize>()
+            + self.links.iter().map(|l| l.pending()).sum::<usize>()
+    }
+
+    pub fn run(&mut self, max_cycles: u64) -> ChainStats {
+        let mut idle = 0;
+        while idle < 4 && self.now < max_cycles {
+            let before: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
+            self.step();
+            let after: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
+            let busy = self.pending() > 0 || after != before;
+            idle = if busy { 0 } else { idle + 1 };
+        }
+        self.stats.delivered = self.chips.iter().map(|m| m.stats.delivered).sum();
+        self.stats.total_latency = self.chips.iter().map(|m| m.stats.total_latency).sum();
+        self.stats.cycles = self.now;
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_mesh_delivers_with_manhattan_hops() {
+        let mut m = RefMesh::new(8);
+        m.inject(Coord::new(1, 1), Coord::new(5, 4));
+        m.run_to_drain(1_000);
+        assert_eq!(m.stats.delivered, 1);
+        assert_eq!(m.stats.total_hops, 7);
+        assert_eq!(m.stats.total_latency, 8);
+    }
+
+    #[test]
+    fn reference_duplex_single_packet_crosses() {
+        let mut d = RefDuplex::new(8);
+        d.inject(CrossTraffic { src: Coord::new(7, 3), dest: Coord::new(0, 3) });
+        let stats = d.run(10_000);
+        assert_eq!(stats.delivered, 1);
+        assert!(stats.avg_latency() >= 76.0);
+    }
+
+    #[test]
+    fn reference_chain_repeater_passes_through() {
+        let mut ch = RefChain::new(3, 8);
+        ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 4),
+            dest_chip: 2,
+            dest: Coord::new(3, 2),
+        });
+        let stats = ch.run(100_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.chips[1].stats.delivered, 0);
+    }
+}

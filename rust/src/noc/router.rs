@@ -4,10 +4,15 @@
 //! The router is a synchronous 5-port switch (N/S/E/W/Local). Each cycle it
 //! arbitrates one packet per *output* port; X-direction traffic wins ties so
 //! a packet never turns from Y back into X (the X-Y turn-model guarantee).
-
-use std::collections::VecDeque;
+//!
+//! Hot-path layout: the five input queues are ring-buffer FIFOs of packed
+//! `Copy` flits ([`super::fifo::FlitFifo`]) and the router maintains its own
+//! O(1) queued-flit counter, so the mesh's worklist scheduler never scans
+//! queues to discover work (see EXPERIMENTS.md §Perf).
 
 use crate::arch::chip::Coord;
+
+use super::fifo::FlitFifo;
 
 /// Router ports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,8 +26,10 @@ pub enum Port {
 
 pub const IN_PORTS: [Port; 5] = [Port::East, Port::West, Port::North, Port::South, Port::Local];
 
-/// A packet in flight inside one chip's mesh.
-#[derive(Debug, Clone, PartialEq)]
+/// A packet in flight inside one chip's mesh. Packed `Copy` value — the
+/// compile-time assertion below pins it to at most 32 bytes so FIFO slots
+/// stay half-a-cache-line and moves are plain memcpys.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Flit {
     pub id: u64,
     /// Destination tile on this chip.
@@ -35,14 +42,16 @@ pub struct Flit {
     pub hops: u32,
 }
 
-/// One 5-port router with per-input FIFOs.
+const _: () = assert!(std::mem::size_of::<Flit>() <= 32, "Flit must stay <= 32 bytes");
+
+/// One 5-port router with per-input ring-buffer FIFOs.
 #[derive(Debug, Clone)]
 pub struct Router {
     pub at: Coord,
     /// Input queues indexed in IN_PORTS order.
-    inq: [VecDeque<Flit>; 5],
-    /// Packets the local port delivered this tile (ejected).
-    pub delivered: Vec<Flit>,
+    inq: [FlitFifo; 5],
+    /// Total queued flits across all inputs (O(1) backlog).
+    queued: u32,
 }
 
 /// Routing decision for a packet at tile `at` heading to `dest`:
@@ -63,19 +72,10 @@ pub fn route_xy(at: Coord, dest: Coord) -> Port {
 
 impl Router {
     pub fn new(at: Coord) -> Self {
-        Router {
-            at,
-            inq: [
-                VecDeque::new(),
-                VecDeque::new(),
-                VecDeque::new(),
-                VecDeque::new(),
-                VecDeque::new(),
-            ],
-            delivered: Vec::new(),
-        }
+        Router { at, inq: Default::default(), queued: 0 }
     }
 
+    #[inline]
     fn port_idx(p: Port) -> usize {
         match p {
             Port::East => 0,
@@ -87,30 +87,34 @@ impl Router {
     }
 
     /// Enqueue a packet arriving on input `port`.
+    #[inline]
     pub fn push(&mut self, port: Port, flit: Flit) {
         self.inq[Self::port_idx(port)].push_back(flit);
+        self.queued += 1;
     }
 
-    /// Number of queued packets (all inputs).
+    /// Number of queued packets (all inputs) — O(1).
+    #[inline]
     pub fn backlog(&self) -> usize {
-        self.inq.iter().map(|q| q.len()).sum()
+        self.queued as usize
     }
 
-    /// Arbitrate one cycle. For each output direction pick at most one
-    /// packet, scanning inputs in X-priority order (East, West, North,
-    /// South, Local). Returns (out_port, flit) pairs to be delivered to
-    /// neighbours next cycle; locally-destined packets are ejected into
-    /// `delivered`.
-    pub fn step(&mut self) -> Vec<(Port, Flit)> {
+    /// Arbitrate one cycle. Convenience wrapper over [`Router::step_into`]
+    /// returning (forwards, ejections) as fresh vectors (tests / one-shot
+    /// callers; the mesh hot loop reuses scratch buffers instead).
+    pub fn step(&mut self) -> (Vec<(Port, Flit)>, Vec<Flit>) {
         let mut out = Vec::new();
-        self.step_into(&mut out);
-        out
+        let mut ejected = Vec::new();
+        self.step_into(&mut out, &mut ejected);
+        (out, ejected)
     }
 
-    /// Allocation-free variant of [`Router::step`]: appends grants to `out`
-    /// (the mesh reuses one scratch buffer across all routers per cycle —
-    /// see EXPERIMENTS.md §Perf).
-    pub fn step_into(&mut self, out: &mut Vec<(Port, Flit)>) {
+    /// Allocation-free arbitration: for each output direction pick at most
+    /// one packet, scanning inputs in X-priority order (East, West, North,
+    /// South, Local). Forwards are appended to `out` as (out_port, flit)
+    /// pairs to be delivered to neighbours next cycle; locally-destined
+    /// packets are appended to `ejected`.
+    pub fn step_into(&mut self, out: &mut Vec<(Port, Flit)>, ejected: &mut Vec<Flit>) {
         let mut granted = [false; 5]; // output-port grants this cycle
         for in_p in IN_PORTS {
             let qi = Self::port_idx(in_p);
@@ -123,8 +127,9 @@ impl Router {
             }
             granted[oi] = true;
             let mut flit = self.inq[qi].pop_front().unwrap();
+            self.queued -= 1;
             if out_p == Port::Local {
-                self.delivered.push(flit);
+                ejected.push(flit);
             } else {
                 flit.hops += 1;
                 out.push((out_p, flit));
@@ -157,11 +162,12 @@ mod tests {
         // two packets both need East
         r.push(Port::Local, flit(Coord::new(3, 0)));
         r.push(Port::West, flit(Coord::new(2, 0)));
-        let out = r.step();
+        let (out, ej) = r.step();
         assert_eq!(out.len(), 1);
+        assert!(ej.is_empty());
         assert_eq!(out[0].0, Port::East);
         assert_eq!(r.backlog(), 1); // loser waits
-        let out2 = r.step();
+        let (out2, _) = r.step();
         assert_eq!(out2.len(), 1);
         assert_eq!(r.backlog(), 0);
     }
@@ -175,7 +181,7 @@ mod tests {
         inj.id = 2;
         r.push(Port::Local, inj);
         r.push(Port::West, east); // through-traffic from the West input
-        let out = r.step();
+        let (out, _) = r.step();
         // through-traffic (scanned before Local) wins the East port
         assert_eq!(out[0].1.id, 1);
     }
@@ -184,16 +190,17 @@ mod tests {
     fn local_destination_ejects() {
         let mut r = Router::new(Coord::new(2, 2));
         r.push(Port::North, flit(Coord::new(2, 2)));
-        let out = r.step();
+        let (out, ej) = r.step();
         assert!(out.is_empty());
-        assert_eq!(r.delivered.len(), 1);
+        assert_eq!(ej.len(), 1);
+        assert_eq!(r.backlog(), 0);
     }
 
     #[test]
     fn hops_increment_on_forward() {
         let mut r = Router::new(Coord::new(0, 0));
         r.push(Port::Local, flit(Coord::new(2, 0)));
-        let out = r.step();
+        let (out, _) = r.step();
         assert_eq!(out[0].1.hops, 1);
     }
 
@@ -204,7 +211,19 @@ mod tests {
         r.push(Port::East, flit(Coord::new(0, 4))); // West
         r.push(Port::South, flit(Coord::new(4, 7))); // North
         r.push(Port::Local, flit(Coord::new(4, 0))); // South
-        let out = r.step();
+        let (out, _) = r.step();
         assert_eq!(out.len(), 4); // all four distinct outputs granted
+    }
+
+    #[test]
+    fn backlog_counter_tracks_pushes_and_pops() {
+        let mut r = Router::new(Coord::new(1, 1));
+        for i in 0..6 {
+            r.push(IN_PORTS[i % 5], flit(Coord::new(1, 1)));
+        }
+        assert_eq!(r.backlog(), 6);
+        let (_, ej) = r.step(); // one Local grant per cycle
+        assert_eq!(ej.len(), 1);
+        assert_eq!(r.backlog(), 5);
     }
 }

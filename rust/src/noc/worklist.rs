@@ -1,0 +1,99 @@
+//! Dirty-router worklist: a flat bitset over router indices.
+//!
+//! The mesh keeps the exact set of routers with at least one queued flit in
+//! one of these, so a cycle costs O(active routers) instead of O(dim²) —
+//! the sparsity-exploiting scheduling move (sparse spike traffic leaves most
+//! routers idle most cycles; see EXPERIMENTS.md §Perf). Word-wise iteration
+//! visits indices in ascending order, which keeps the cross-router order of
+//! `east_egress` identical to the naive row-major scan — a requirement for
+//! bit-for-bit golden equivalence with the reference engine.
+
+/// A fixed-universe bitset with ascending-order iteration.
+#[derive(Debug, Clone, Default)]
+pub struct DirtySet {
+    words: Vec<u64>,
+}
+
+impl DirtySet {
+    /// A set over the universe `0..n`.
+    pub fn new(n: usize) -> Self {
+        DirtySet { words: vec![0; n.div_ceil(64)] }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Visit every set index in ascending order.
+    pub fn for_each(&self, mut f: impl FnMut(usize)) {
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                f((wi << 6) | w.trailing_zeros() as usize);
+                w &= w - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_clear() {
+        let mut s = DirtySet::new(200);
+        assert!(s.is_empty());
+        for i in [0, 63, 64, 65, 127, 128, 199] {
+            s.insert(i);
+            assert!(s.contains(i));
+        }
+        assert!(!s.contains(1));
+        assert_eq!(s.count(), 7);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(63));
+    }
+
+    #[test]
+    fn iterates_ascending() {
+        let mut s = DirtySet::new(300);
+        let want = [5usize, 17, 63, 64, 130, 255, 299];
+        // insert out of order; iteration must still be ascending
+        for &i in [130usize, 5, 299, 64, 17, 255, 63].iter() {
+            s.insert(i);
+        }
+        let mut got = Vec::new();
+        s.for_each(|i| got.push(i));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn double_insert_is_idempotent() {
+        let mut s = DirtySet::new(64);
+        s.insert(10);
+        s.insert(10);
+        assert_eq!(s.count(), 1);
+        let mut got = Vec::new();
+        s.for_each(|i| got.push(i));
+        assert_eq!(got, vec![10]);
+    }
+}

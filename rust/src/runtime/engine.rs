@@ -1,5 +1,7 @@
 //! PJRT execution engine: load AOT HLO-text artifacts, compile once on the
-//! CPU PJRT client, execute from the rust hot path.
+//! CPU PJRT client, execute from the rust hot path. Compiled only with
+//! `--features xla` (needs the external PJRT bindings); the default build
+//! substitutes `stub.rs` with the same API surface.
 //!
 //! Adapted from /opt/xla-example/load_hlo — HLO *text* is the interchange
 //! format (xla_extension 0.5.1 rejects jax>=0.5 serialized protos whose
@@ -12,48 +14,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Context, Result};
 
 use super::manifest::{DType, FnEntry, TensorSig};
-
-/// A host-side tensor exchanged with an executable.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Tensor {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl Tensor {
-    pub fn len(&self) -> usize {
-        match self {
-            Tensor::F32(v) => v.len(),
-            Tensor::I32(v) => v.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            Tensor::F32(v) => Ok(v),
-            _ => Err(anyhow!("tensor is not f32")),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            Tensor::I32(v) => Ok(v),
-            _ => Err(anyhow!("tensor is not i32")),
-        }
-    }
-
-    /// First element as f64 (scalar outputs: loss, metric...).
-    pub fn scalar(&self) -> Result<f64> {
-        match self {
-            Tensor::F32(v) => v.first().map(|&x| x as f64).ok_or_else(|| anyhow!("empty")),
-            Tensor::I32(v) => v.first().map(|&x| x as f64).ok_or_else(|| anyhow!("empty")),
-        }
-    }
-}
+use super::tensor::Tensor;
 
 fn literal_of(sig: &TensorSig, t: &Tensor) -> Result<xla::Literal> {
     if t.len() != sig.elements() {

@@ -1,9 +1,23 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them from the rust hot path.
 //! Python never runs here — `make artifacts` is the only python step.
+//!
+//! The real engine needs the external `xla` (PJRT) bindings, so it sits
+//! behind the default-off `xla` cargo feature; without it a stub with the
+//! identical API surface is compiled instead ([`Engine::cpu`] errors, the
+//! artifact-gated tests skip). [`Tensor`] and the manifest are pure host
+//! code and always available.
 
-pub mod engine;
 pub mod manifest;
+pub mod tensor;
 
-pub use engine::{Engine, Executable, Tensor};
+#[cfg(feature = "xla")]
+pub mod engine;
+
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
+pub mod engine;
+
+pub use engine::{Engine, Executable};
 pub use manifest::{DType, FnEntry, Manifest, ModelEntry, TensorSig};
+pub use tensor::Tensor;

@@ -1,0 +1,64 @@
+//! Host-side tensors exchanged with an executable. Pure host code — shared
+//! by the real PJRT engine (`--features xla`) and the default stub, so the
+//! training driver and tests compile identically under both builds.
+
+use anyhow::{anyhow, Result};
+
+/// A host-side tensor exchanged with an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// First element as f64 (scalar outputs: loss, metric...).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            Tensor::F32(v) => v.first().map(|&x| x as f64).ok_or_else(|| anyhow!("empty")),
+            Tensor::I32(v) => v.first().map(|&x| x as f64).ok_or_else(|| anyhow!("empty")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_enforce_dtype() {
+        let f = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.len(), 2);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = Tensor::I32(vec![3]);
+        assert_eq!(i.scalar().unwrap(), 3.0);
+        assert!(Tensor::F32(vec![]).scalar().is_err());
+        assert!(Tensor::F32(vec![]).is_empty());
+    }
+}

@@ -1,9 +1,15 @@
 //! Micro-benchmark harness (criterion is not in the offline registry, so we
 //! provide a small, honest timing loop: warmup, N timed iterations, median +
 //! mean + p10/p90). Used by every `benches/` target via `harness = false`.
+//!
+//! [`append_json`] persists measurements as a JSON trajectory file (e.g.
+//! `BENCH_noc_cycle.json`) so successive PRs can be compared — schema in
+//! EXPERIMENTS.md §Perf.
 
+use std::path::Path;
 use std::time::Instant;
 
+use super::json::{self, Json};
 use super::stats;
 
 /// One benchmark measurement.
@@ -84,6 +90,56 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One persisted benchmark record: a [`Measurement`] plus the derived
+/// throughput (work-units per second) and its unit label.
+pub struct BenchRecord {
+    pub measurement: Measurement,
+    pub throughput: f64,
+    pub unit: &'static str,
+}
+
+impl BenchRecord {
+    pub fn new(measurement: Measurement, throughput: f64, unit: &'static str) -> Self {
+        BenchRecord { measurement, throughput, unit }
+    }
+}
+
+/// Append records to a JSON trajectory file. The file holds one JSON array;
+/// existing records are preserved (parse + extend + rewrite), a missing or
+/// corrupt file starts a fresh array. Schema (`bench/v1`, documented in
+/// EXPERIMENTS.md §Perf): name, median_ns, mean_ns, p10_ns, p90_ns, iters,
+/// throughput, unit, unix_ts.
+pub fn append_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    let unix_ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut arr = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| json::parse(&s).ok())
+        .and_then(|j| match j {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        })
+        .unwrap_or_default();
+    for r in records {
+        let m = &r.measurement;
+        arr.push(Json::obj(vec![
+            ("schema", Json::str("bench/v1")),
+            ("name", Json::str(m.name.clone())),
+            ("median_ns", Json::num(m.median_ns)),
+            ("mean_ns", Json::num(m.mean_ns)),
+            ("p10_ns", Json::num(m.p10_ns)),
+            ("p90_ns", Json::num(m.p90_ns)),
+            ("iters", Json::num(m.iters as f64)),
+            ("throughput", Json::num(r.throughput)),
+            ("unit", Json::str(r.unit)),
+            ("unix_ts", Json::num(unix_ts as f64)),
+        ]));
+    }
+    std::fs::write(path, Json::Arr(arr).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +152,29 @@ mod tests {
         });
         assert!(m.median_ns > 0.0);
         assert!(m.p10_ns <= m.p90_ns);
+    }
+
+    #[test]
+    fn append_json_accumulates_records() {
+        let path = std::env::temp_dir()
+            .join(format!("spikelink_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let m = |name: &str| Measurement {
+            name: name.to_string(),
+            iters: 3,
+            median_ns: 1_000.0,
+            mean_ns: 1_100.0,
+            p10_ns: 900.0,
+            p90_ns: 1_300.0,
+        };
+        append_json(&path, &[BenchRecord::new(m("a"), 5e6, "packets/s")]).unwrap();
+        append_json(&path, &[BenchRecord::new(m("b"), 2.0, "x-vs-ref")]).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = doc.as_arr().unwrap();
+        assert_eq!(arr.len(), 2, "records must accumulate across runs");
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "a");
+        assert_eq!(arr[1].get("unit").unwrap().as_str().unwrap(), "x-vs-ref");
+        assert_eq!(arr[1].get("throughput").unwrap().as_f64().unwrap(), 2.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

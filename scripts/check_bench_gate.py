@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""CI acceptance gate for the cycle-engine benches (EXPERIMENTS.md §Perf).
+
+Reads BENCH_noc_cycle.json (the bench/v1 trajectory file appended by
+`cargo bench --bench noc_cycle`) and fails unless the *latest* sparse-mesh
+speedup records — one per mesh dim 8/16/32, unit "x-vs-ref" — all meet the
+>= 5x floor. Gating on the exact recorded values avoids two failure modes
+of grepping console output: display rounding (4.97x prints as "5.0x") and
+vacuous passes when the bench crashed before printing anything.
+"""
+
+import json
+import sys
+
+FLOOR = 5.0
+EXPECTED = 3  # sparse speedup records per bench run: mesh dims 8, 16, 32
+
+
+def main(path: str) -> None:
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"{path}: unreadable or invalid ({e}) — did the bench run?")
+    if not isinstance(records, list):
+        sys.exit(f"{path}: expected a JSON array of bench/v1 records")
+    speedups = [r for r in records if r.get("unit") == "x-vs-ref"]
+    if len(speedups) < EXPECTED:
+        sys.exit(
+            f"{path}: expected >= {EXPECTED} x-vs-ref records, found "
+            f"{len(speedups)} — bench did not complete"
+        )
+    latest = speedups[-EXPECTED:]  # this run's three mesh dims
+    failed = []
+    for r in latest:
+        ok = r["throughput"] >= FLOOR
+        verdict = "OK" if ok else f"BELOW {FLOOR}x FLOOR"
+        print(f"{r['name']}: {r['throughput']:.2f}x vs reference  [{verdict}]")
+        if not ok:
+            failed.append(r["name"])
+    if failed:
+        sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
+    print(f"gate passed: all {EXPECTED} sparse cases >= {FLOOR}x")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_noc_cycle.json")
