@@ -11,15 +11,22 @@
 //!   * chain 2/4/8 chips — 512 die crossings through the EMIO links;
 //!   * duplex — 2048 die crossings (mesh + EMIO + mesh).
 //!
-//! Every measurement is appended to BENCH_noc_cycle.json (schema bench/v1)
+//! Every measurement is appended to BENCH_noc_cycle.json (schema bench/v2)
 //! so future PRs have a perf trajectory to beat. The sparse mesh cases also
 //! record an `x-vs-ref` speedup record; the acceptance floor is >= 5x.
+//!
+//! Telemetry: the mesh-16 sparse case is additionally measured with a
+//! recording `DeliverySink` (`noc/mesh16/sparse/telemetry`) and the ratio
+//! against the `NoopSink` run lands as `noc/mesh16/sparse/telemetry-overhead`
+//! (unit `x-vs-noop`, gated <= 1.05 by scripts/check_bench_gate.py). Chain
+//! and duplex records carry per-packet `latency_p50/p99/p999` fields from a
+//! telemetry-enabled run of the identical load.
 
 use std::path::Path;
 
 use spikelink::arch::chip::Coord;
 use spikelink::noc::reference::{RefChain, RefMesh};
-use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, Duplex, Mesh};
+use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex, Mesh};
 use spikelink::util::bench::{append_json, bench, black_box, BenchRecord};
 use spikelink::util::rng::Rng;
 
@@ -102,6 +109,27 @@ macro_rules! mesh_drivers {
 mesh_drivers!(run_sparse_opt, run_sat_opt, Mesh);
 mesh_drivers!(run_sparse_ref, run_sat_ref, RefMesh);
 
+/// Telemetry-enabled sparse driver: identical load, recording sink. The
+/// returned mesh hands back the latency histogram for the bench/v2 fields.
+fn run_sparse_tel(
+    dim: usize,
+    sched: &[(u64, Coord, Coord)],
+    cycles: u64,
+) -> Mesh<DeliverySink> {
+    let mut m = Mesh::with_sink(dim, DeliverySink::with_capacity(sched.len()));
+    let mut next = 0usize;
+    for c in 0..cycles {
+        while next < sched.len() && sched[next].0 == c {
+            m.inject(sched[next].1, sched[next].2);
+            next += 1;
+        }
+        m.step();
+    }
+    m.run_to_drain(1_000_000);
+    assert_eq!(m.stats.delivered, sched.len() as u64);
+    m
+}
+
 macro_rules! chain_driver {
     ($name:ident, $ty:ty) => {
         fn $name(n_chips: usize, dim: usize, load: &[ChainTraffic]) -> u64 {
@@ -142,11 +170,40 @@ fn main() {
         );
         let opt_tput = n_sparse / (opt.median_ns / 1e9);
         let ref_tput = n_sparse / (ref_.median_ns / 1e9);
+        let opt_median_ns = opt.median_ns;
         records.push(BenchRecord::new(opt.clone(), opt_tput, "packets/s"));
         records.push(BenchRecord::new(ref_, ref_tput, "packets/s"));
         let mut sp = opt;
         sp.name = format!("noc/mesh{dim}/sparse/speedup");
         records.push(BenchRecord::new(sp, speedup, "x-vs-ref"));
+
+        // Telemetry cost on the paper-regime case (dim 16, sparse): same
+        // load with a recording DeliverySink; the overhead ratio is gated
+        // at <= 1.05 by scripts/check_bench_gate.py.
+        if dim == 16 {
+            let tel = bench("noc/mesh16/sparse/telemetry", 2, 12, || {
+                black_box(run_sparse_tel(dim, &sched, SPARSE_CYCLES).stats.delivered);
+            });
+            let hist = run_sparse_tel(dim, &sched, SPARSE_CYCLES).sink.hist;
+            let overhead = tel.median_ns / opt_median_ns;
+            println!(
+                "mesh16 sparse telemetry: {overhead:.3}x vs noop (p50 {} p99 {} p999 {})",
+                hist.p50(),
+                hist.p99(),
+                hist.p999()
+            );
+            let tel_tput = n_sparse / (tel.median_ns / 1e9);
+            records.push(
+                BenchRecord::new(tel.clone(), tel_tput, "packets/s").with_latency(
+                    hist.p50(),
+                    hist.p99(),
+                    hist.p999(),
+                ),
+            );
+            let mut ov = tel;
+            ov.name = "noc/mesh16/sparse/telemetry-overhead".to_string();
+            records.push(BenchRecord::new(ov, overhead, "x-vs-noop"));
+        }
 
         let load = saturating_load(dim, 8 * dim * dim, 7);
         let n_sat = load.len() as f64;
@@ -184,18 +241,35 @@ fn main() {
         );
         let opt_tput = n / (opt.median_ns / 1e9);
         let ref_tput = n / (ref_.median_ns / 1e9);
-        records.push(BenchRecord::new(opt, opt_tput, "transfers/s"));
+        // per-packet tail quantiles from one telemetry-enabled run of the
+        // identical load (outside the timed loop)
+        let mut tc = Chain::<DeliverySink>::with_sinks(chips, 8);
+        for &t in &load {
+            tc.inject(t);
+        }
+        tc.run(100_000_000);
+        let h = tc.latency_hist();
+        records.push(
+            BenchRecord::new(opt, opt_tput, "transfers/s")
+                .with_latency(h.p50(), h.p99(), h.p999()),
+        );
         records.push(BenchRecord::new(ref_, ref_tput, "transfers/s"));
     }
 
     // --- duplex: 2048 boundary crossings ----------------------------------
+    // One load definition shared by the timed (NoopSink) closure and the
+    // telemetry run, so the recorded latency_p* fields describe exactly the
+    // measured load.
+    let duplex_load: Vec<CrossTraffic> = (0..2_048usize)
+        .map(|i| CrossTraffic {
+            src: Coord::new(7, i % 8),
+            dest: Coord::new(i % 8, (i / 8) % 8),
+        })
+        .collect();
     let b = bench("noc/duplex/2k-die-crossings", 2, 15, || {
         let mut d = Duplex::new(8);
-        for i in 0..2_048usize {
-            d.inject(CrossTraffic {
-                src: Coord::new(7, i % 8),
-                dest: Coord::new(i % 8, (i / 8) % 8),
-            });
+        for &t in &duplex_load {
+            d.inject(t);
         }
         let stats = d.run(50_000_000);
         assert_eq!(stats.delivered, 2_048);
@@ -205,11 +279,26 @@ fn main() {
         "duplex throughput: {:.2} k crossings/s",
         2_048.0 / (b.median_ns / 1e9) / 1e3
     );
-    records.push(BenchRecord::new(b.clone(), 2_048.0 / (b.median_ns / 1e9), "crossings/s"));
+    let mut td = Duplex::<DeliverySink>::with_sinks(8);
+    for &t in &duplex_load {
+        td.inject(t);
+    }
+    td.run(50_000_000);
+    let h = td.latency_hist();
+    records.push(
+        BenchRecord::new(b.clone(), 2_048.0 / (b.median_ns / 1e9), "crossings/s")
+            .with_latency(h.p50(), h.p99(), h.p999()),
+    );
 
     let path = Path::new("BENCH_noc_cycle.json");
     match append_json(path, &records) {
         Ok(()) => println!("appended {} records to {}", records.len(), path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+        Err(e) => {
+            // Exit non-zero: the CI perf gates read the trajectory file, so
+            // a silent write failure would let them validate stale cached
+            // records instead of this run's.
+            eprintln!("could not write {}: {e}", path.display());
+            std::process::exit(1);
+        }
     }
 }

@@ -8,15 +8,38 @@
 //!   * model quality is stable until a phase transition at extreme sparsity
 //!     (>95% for RWKV-like LMs).
 //!
+//! Each sweep point also drives the telemetry-enabled cycle engine with the
+//! sparsity-scaled boundary traffic (activity x T packets per neuron, as in
+//! the §3 HNN encoding), so the table pairs the analytic total with
+//! *measured* per-packet p50/p99 die-crossing latencies — the distribution
+//! claims of §4.3, not just means.
+//!
 //! Run: `make artifacts && cargo run --release --example sparsity_sweep -- [steps]`
 
 use spikelink::analytic::simulate;
+use spikelink::arch::chip::Coord;
 use spikelink::arch::params::{ArchConfig, Variant};
 use spikelink::model::networks;
+use spikelink::noc::{CrossTraffic, DeliverySink, Duplex};
 use spikelink::runtime::{Engine, Manifest};
 use spikelink::sparsity::SparsityProfile;
 use spikelink::train::{train, RegConfig};
 use spikelink::util::table::Table;
+
+/// Measured duplex tail latency for a boundary edge carrying `packets`
+/// die crossings: (p50, p99) in cycles from per-packet telemetry.
+fn measured_tail(packets: usize) -> (u64, u64) {
+    let mut d = Duplex::<DeliverySink>::with_sinks(8);
+    for i in 0..packets {
+        d.inject(CrossTraffic {
+            src: Coord::new(7, i % 8),
+            dest: Coord::new(i % 8, (i / 8) % 8),
+        });
+    }
+    d.run(100_000_000);
+    let h = d.latency_hist();
+    (h.p50(), h.p99())
+}
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
@@ -30,12 +53,13 @@ fn main() -> anyhow::Result<()> {
         format!("Fig 7 sweep — hnn_lm, {steps} steps per point"),
         &[
             "target sparsity", "lambda budget", "measured rate", "eval ppl",
-            "latency (cycles, analytic)",
+            "latency (cycles, analytic)", "xing p50 (meas)", "xing p99 (meas)",
         ],
     );
 
     let mut ppls = Vec::new();
     let mut cycles = Vec::new();
+    let mut p99s = Vec::new();
     for &target in &targets {
         let budget = (1.0 - target) as f32;
         // stronger lambda at higher sparsity targets (the paper sweeps
@@ -54,15 +78,22 @@ fn main() -> anyhow::Result<()> {
         let rate =
             res.final_rates.iter().sum::<f64>() / res.final_rates.len().max(1) as f64;
         let rep = simulate(&net, &cfg, &SparsityProfile::uniform(net.layers.len(), 1.0 - target));
+        // boundary traffic at this sparsity: activity x T packets per
+        // neuron on a 256-neuron boundary edge (the §3 HNN encoding)
+        let boundary_packets = ((1.0 - target) * 256.0 * 8.0).ceil().max(1.0) as usize;
+        let (p50, p99) = measured_tail(boundary_packets);
         t.row(vec![
             format!("{target:.2}"),
             format!("{budget:.3}"),
             format!("{rate:.4}"),
             format!("{:.3}", res.perplexity()),
             format!("{}", rep.latency.total_cycles),
+            format!("{p50}"),
+            format!("{p99}"),
         ]);
         ppls.push(res.perplexity());
         cycles.push(rep.latency.total_cycles);
+        p99s.push(p99);
     }
     println!("{}", t.render());
 
@@ -75,6 +106,20 @@ fn main() -> anyhow::Result<()> {
         "latency improves monotonically with sparsity: {} -> {} cycles",
         cycles.first().unwrap(),
         cycles.last().unwrap()
+    );
+    // the measured tail follows: fewer boundary packets -> less queueing
+    assert!(
+        p99s.windows(2).all(|w| w[1] <= w[0]),
+        "measured crossing p99 must not grow with sparsity: {p99s:?}"
+    );
+    assert!(
+        p99s.iter().all(|&p| p >= 76),
+        "every crossing pays the 76-cycle SerDes floor: {p99s:?}"
+    );
+    println!(
+        "measured die-crossing p99 improves with sparsity: {} -> {} cycles",
+        p99s.first().unwrap(),
+        p99s.last().unwrap()
     );
     let stable = ppls[..3].iter().cloned().fold(f64::MIN, f64::max);
     println!(

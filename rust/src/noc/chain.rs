@@ -22,6 +22,8 @@ use crate::arch::packet::Packet;
 use super::emio::{EmioLink, LANES};
 use super::mesh::Mesh;
 use super::router::Flit;
+use super::telemetry::{Delivery, NoopSink, TelemetrySink};
+use crate::util::stats::LatencyHist;
 
 /// A cross-chain transfer.
 #[derive(Debug, Clone, Copy)]
@@ -61,8 +63,13 @@ struct Tracked {
 }
 
 /// C chips + C-1 eastward EMIO links.
-pub struct Chain {
-    pub chips: Vec<Mesh>,
+///
+/// Generic over a [`TelemetrySink`] (default [`NoopSink`] — zero overhead):
+/// every mesh carries its own sink, flits keep their original inject cycle
+/// across crossings, and [`Chain::deliveries`] merges the per-chip records
+/// with die-crossing counts patched in from the tracked table.
+pub struct Chain<S: TelemetrySink = NoopSink> {
+    pub chips: Vec<Mesh<S>>,
     links: Vec<EmioLink>,
     dim: usize,
     now: u64,
@@ -74,11 +81,18 @@ pub struct Chain {
     frames_buf: Vec<(super::emio::Frame, u64)>,
 }
 
-impl Chain {
+impl Chain<NoopSink> {
     pub fn new(n_chips: usize, dim: usize) -> Self {
+        Self::with_sinks(n_chips, dim)
+    }
+}
+
+impl<S: TelemetrySink> Chain<S> {
+    /// A chain whose meshes record into per-chip `S::default()` sinks.
+    pub fn with_sinks(n_chips: usize, dim: usize) -> Self {
         assert!(n_chips >= 1);
         Chain {
-            chips: (0..n_chips).map(|_| Mesh::new(dim)).collect(),
+            chips: (0..n_chips).map(|_| Mesh::with_sink(dim, S::default())).collect(),
             links: (0..n_chips.saturating_sub(1)).map(|_| EmioLink::new()).collect(),
             dim,
             now: 0,
@@ -91,6 +105,34 @@ impl Chain {
 
     pub fn n_chips(&self) -> usize {
         self.chips.len()
+    }
+
+    /// Merged per-packet delivery records across all chips, die-crossing
+    /// counts patched from the tracked table, ordered by (delivered_at, id).
+    pub fn deliveries(&self) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        for m in &self.chips {
+            out.extend_from_slice(m.sink.deliveries());
+        }
+        for d in &mut out {
+            d.crossings =
+                self.tracked.get(d.id as usize).map(|t| t.crossings).unwrap_or(0);
+        }
+        out.sort_by_key(|d| (d.delivered_at, d.id));
+        out
+    }
+
+    /// Merged end-to-end latency histogram across all chips (flits carry
+    /// their original inject cycle over the links, so per-chip histograms
+    /// already hold end-to-end latencies).
+    pub fn latency_hist(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for m in &self.chips {
+            if let Some(mh) = m.sink.hist() {
+                h.merge(mh);
+            }
+        }
+        h
     }
 
     /// Die crossings a delivered packet has made so far (by chain id).
@@ -300,6 +342,42 @@ mod tests {
         };
         assert!(lat_for(1) < lat_for(2));
         assert!(lat_for(2) < lat_for(3));
+    }
+
+    #[test]
+    fn telemetry_crossings_and_latency_per_packet() {
+        use super::super::telemetry::DeliverySink;
+        let mut ch = Chain::<DeliverySink>::with_sinks(4, 8);
+        // one local packet + one full-span crossing packet
+        let local = ch.inject(ChainTraffic {
+            src_chip: 1,
+            src: Coord::new(0, 0),
+            dest_chip: 1,
+            dest: Coord::new(5, 5),
+        });
+        let far = ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 0),
+            dest_chip: 3,
+            dest: Coord::new(0, 0),
+        });
+        let stats = ch.run(1_000_000);
+        assert_eq!(stats.delivered, 2);
+        let ds = ch.deliveries();
+        assert_eq!(ds.len(), 2);
+        let by_id = |id: u64| *ds.iter().find(|d| d.id == id).unwrap();
+        assert_eq!(by_id(local).crossings, 0);
+        assert_eq!(by_id(far).crossings, 3);
+        assert!(by_id(far).latency() >= 3 * 76, "{:?}", by_id(far));
+        assert!(by_id(local).latency() < 76);
+        // merged histogram covers both and totals match the aggregate
+        let h = ch.latency_hist();
+        assert_eq!(h.count(), 2);
+        assert_eq!(
+            ds.iter().map(|d| d.latency()).sum::<u64>(),
+            stats.total_latency,
+            "per-packet latencies must reproduce the aggregate total"
+        );
     }
 
     #[test]

@@ -10,6 +10,8 @@ use crate::arch::packet::Packet;
 use super::emio::EmioLink;
 use super::mesh::Mesh;
 use super::router::Flit;
+use super::telemetry::{Delivery, NoopSink, TelemetrySink};
+use crate::util::stats::LatencyHist;
 
 /// A source->dest transfer across the die gap.
 #[derive(Debug, Clone, Copy)]
@@ -42,9 +44,13 @@ impl DuplexStats {
 }
 
 /// Two chips + one eastward EMIO link.
-pub struct Duplex {
-    pub a: Mesh,
-    pub b: Mesh,
+///
+/// Generic over a [`TelemetrySink`] (default [`NoopSink`] — zero overhead):
+/// both meshes carry a sink, and every cross-die delivery lands in chip B's
+/// sink with the *A-side* inject cycle, so its records are end-to-end.
+pub struct Duplex<S: TelemetrySink = NoopSink> {
+    pub a: Mesh<S>,
+    pub b: Mesh<S>,
     pub link: EmioLink,
     dim: usize,
     now: u64,
@@ -58,11 +64,18 @@ pub struct Duplex {
     frames_buf: Vec<(super::emio::Frame, u64)>,
 }
 
-impl Duplex {
+impl Duplex<NoopSink> {
     pub fn new(dim: usize) -> Self {
+        Self::with_sinks(dim)
+    }
+}
+
+impl<S: TelemetrySink> Duplex<S> {
+    /// A duplex whose meshes record into per-chip `S::default()` sinks.
+    pub fn with_sinks(dim: usize) -> Self {
         Duplex {
-            a: Mesh::new(dim),
-            b: Mesh::new(dim),
+            a: Mesh::with_sink(dim, S::default()),
+            b: Mesh::with_sink(dim, S::default()),
             link: EmioLink::new(),
             dim,
             now: 0,
@@ -71,6 +84,30 @@ impl Duplex {
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
         }
+    }
+
+    /// Merged per-packet delivery records, crossings patched (every duplex
+    /// delivery crossed exactly one die), ordered by (delivered_at, id).
+    pub fn deliveries(&self) -> Vec<Delivery> {
+        let mut out: Vec<Delivery> = self.b.sink.deliveries().to_vec();
+        for d in &mut out {
+            d.crossings = 1;
+        }
+        out.extend_from_slice(self.a.sink.deliveries()); // empty by construction
+        out.sort_by_key(|d| (d.delivered_at, d.id));
+        out
+    }
+
+    /// Merged end-to-end latency histogram across both chips.
+    pub fn latency_hist(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        if let Some(ha) = self.a.sink.hist() {
+            h.merge(ha);
+        }
+        if let Some(hb) = self.b.sink.hist() {
+            h.merge(hb);
+        }
+        h
     }
 
     /// Inject a cross-die packet at cycle `now` (src on A, dest on B).
@@ -183,6 +220,28 @@ mod tests {
         let stats = d.run(100_000);
         assert_eq!(stats.delivered, 64);
         assert!(stats.cycles < 64 * 76, "cycles={}", stats.cycles);
+    }
+
+    #[test]
+    fn telemetry_records_are_end_to_end() {
+        use super::super::telemetry::DeliverySink;
+        let mut d = Duplex::<DeliverySink>::with_sinks(8);
+        for y in 0..8 {
+            d.inject(CrossTraffic { src: Coord::new(7, y), dest: Coord::new(0, y) });
+        }
+        let stats = d.run(100_000);
+        assert_eq!(stats.delivered, 8);
+        let ds = d.deliveries();
+        assert_eq!(ds.len() as u64, stats.delivered);
+        // every record crossed the die once and paid the SerDes floor
+        assert!(ds.iter().all(|x| x.crossings == 1));
+        assert!(ds.iter().all(|x| x.latency() >= 76), "{ds:?}");
+        let h = d.latency_hist();
+        assert_eq!(h.count(), stats.delivered);
+        assert!(h.p50() >= 76 && h.p999() >= h.p50());
+        // per-packet mean must reproduce the aggregate average exactly
+        let mean = ds.iter().map(|x| x.latency()).sum::<u64>() as f64 / ds.len() as f64;
+        assert!((mean - d.b.stats.avg_latency()).abs() < 1e-9);
     }
 
     #[test]

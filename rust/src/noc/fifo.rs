@@ -157,6 +157,58 @@ mod tests {
     }
 
     #[test]
+    fn fill_to_exact_capacity_without_growth() {
+        // the boundary case: len == capacity is legal and must not grow
+        // until the NEXT push
+        let mut q = FlitFifo::new();
+        for i in 0..INIT_CAP as u64 {
+            q.push_back(flit(i));
+        }
+        assert_eq!(q.len(), INIT_CAP);
+        assert_eq!(q.buf.len(), INIT_CAP, "no growth at exactly-full");
+        q.push_back(flit(INIT_CAP as u64));
+        assert_eq!(q.buf.len(), INIT_CAP * 2, "grow on overflow push");
+        for i in 0..=(INIT_CAP as u64) {
+            assert_eq!(q.pop_front().unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn wrap_exactly_at_capacity_boundary_without_growth() {
+        // keep the queue at len == capacity across a full head revolution:
+        // every slot index gets written through the mask at least once
+        let mut q = FlitFifo::new();
+        for i in 0..INIT_CAP as u64 {
+            q.push_back(flit(i));
+        }
+        for round in 0..(2 * INIT_CAP as u64) {
+            assert_eq!(q.pop_front().unwrap().id, round);
+            q.push_back(flit(INIT_CAP as u64 + round)); // back to exactly full
+            assert_eq!(q.len(), INIT_CAP);
+            assert_eq!(q.buf.len(), INIT_CAP, "steady-state full must not grow");
+        }
+        for i in 0..INIT_CAP as u64 {
+            assert_eq!(q.pop_front().unwrap().id, 2 * INIT_CAP as u64 + i);
+        }
+    }
+
+    #[test]
+    fn head_reanchors_to_zero_on_empty() {
+        let mut q = FlitFifo::new();
+        for i in 0..5u64 {
+            q.push_back(flit(i));
+        }
+        for _ in 0..5 {
+            q.pop_front();
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.head, 0, "empty queue must re-anchor for cache locality");
+        // and keeps working afterwards
+        q.push_back(flit(99));
+        assert_eq!(q.pop_front().unwrap().id, 99);
+    }
+
+    #[test]
     fn growth_mid_wrap_keeps_order() {
         let mut q = FlitFifo::new();
         for i in 0..INIT_CAP as u64 {

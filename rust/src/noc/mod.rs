@@ -14,6 +14,9 @@
 //! * [`chain`]  — C chips in a directional-X chain with repeater hops;
 //! * [`reference`] — the retained naive engine (full-scan, `VecDeque`
 //!   FIFOs): golden-equivalence oracle and perf baseline;
+//! * [`telemetry`] — zero-overhead-when-off per-packet delivery records
+//!   ([`telemetry::NoopSink`] monomorphizes to nothing;
+//!   [`telemetry::DeliverySink`] feeds the p50/p99/p999 figures);
 //! * [`traffic`] — packet-trace generation from layer workloads;
 //! * [`clp`]    — the cross-layer packet converter state machine (Eqs. 2-3,
 //!   integer-exact against the Pallas kernels).
@@ -28,6 +31,7 @@ pub mod mesh;
 pub mod model_sim;
 pub mod reference;
 pub mod router;
+pub mod telemetry;
 pub mod traffic;
 pub mod worklist;
 
@@ -37,3 +41,4 @@ pub use emio::EmioLink;
 pub use mesh::{Mesh, MeshStats};
 pub use reference::{RefChain, RefDuplex, RefMesh};
 pub use router::{route_xy, Flit, Port, Router};
+pub use telemetry::{Delivery, DeliverySink, NoopSink, TelemetrySink};

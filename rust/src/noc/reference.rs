@@ -22,12 +22,14 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
+use crate::util::stats::LatencyHist;
 
 use super::chain::{ChainStats, ChainTraffic};
 use super::duplex::{CrossTraffic, DuplexStats};
 use super::emio::{EmioLink, Frame, LANES};
 use super::mesh::MeshStats;
 use super::router::{route_xy, Flit, Port, IN_PORTS};
+use super::telemetry::{Delivery, NoopSink, TelemetrySink};
 
 /// Naive 5-port router: per-input `VecDeque`s, O(ports) backlog.
 #[derive(Debug, Clone)]
@@ -83,12 +85,15 @@ impl RefRouter {
     }
 }
 
-/// Naive mesh: full O(dim²) router scan per cycle.
+/// Naive mesh: full O(dim²) router scan per cycle. Records telemetry
+/// through the same [`TelemetrySink`] trait as the optimized engine, so
+/// golden/fuzz suites can assert per-packet delivery equality.
 #[derive(Debug, Clone)]
-pub struct RefMesh {
+pub struct RefMesh<S: TelemetrySink = NoopSink> {
     pub dim: usize,
     routers: Vec<RefRouter>,
     pub stats: MeshStats,
+    pub sink: S,
     now: u64,
     next_id: u64,
     pub east_egress: Vec<(usize, Flit)>,
@@ -96,8 +101,14 @@ pub struct RefMesh {
     moves: Vec<(usize, Port, Flit)>,
 }
 
-impl RefMesh {
+impl RefMesh<NoopSink> {
     pub fn new(dim: usize) -> Self {
+        Self::with_sink(dim, NoopSink)
+    }
+}
+
+impl<S: TelemetrySink> RefMesh<S> {
+    pub fn with_sink(dim: usize, sink: S) -> Self {
         let routers = (0..dim * dim)
             .map(|i| RefRouter::new(Coord::new(i % dim, i / dim)))
             .collect();
@@ -105,6 +116,7 @@ impl RefMesh {
             dim,
             routers,
             stats: MeshStats::default(),
+            sink,
             now: 0,
             next_id: 0,
             east_egress: Vec::new(),
@@ -182,6 +194,13 @@ impl RefMesh {
                 self.stats.delivered += 1;
                 self.stats.total_hops += f.hops as u64;
                 self.stats.total_latency += self.now - f.injected_at;
+                self.sink.delivered(Delivery {
+                    id: f.id,
+                    injected_at: f.injected_at,
+                    delivered_at: self.now,
+                    crossings: 0,
+                    hops: f.hops,
+                });
             }
         }
     }
@@ -201,9 +220,9 @@ impl RefMesh {
 }
 
 /// Naive duplex: HashMap packet tracking, O(N) backlog checks per cycle.
-pub struct RefDuplex {
-    pub a: RefMesh,
-    pub b: RefMesh,
+pub struct RefDuplex<S: TelemetrySink = NoopSink> {
+    pub a: RefMesh<S>,
+    pub b: RefMesh<S>,
     pub link: EmioLink,
     dim: usize,
     now: u64,
@@ -214,11 +233,17 @@ pub struct RefDuplex {
     frames_buf: Vec<(Frame, u64)>,
 }
 
-impl RefDuplex {
+impl RefDuplex<NoopSink> {
     pub fn new(dim: usize) -> Self {
+        Self::with_sinks(dim)
+    }
+}
+
+impl<S: TelemetrySink> RefDuplex<S> {
+    pub fn with_sinks(dim: usize) -> Self {
         RefDuplex {
-            a: RefMesh::new(dim),
-            b: RefMesh::new(dim),
+            a: RefMesh::with_sink(dim, S::default()),
+            b: RefMesh::with_sink(dim, S::default()),
             link: EmioLink::new(),
             dim,
             now: 0,
@@ -228,6 +253,30 @@ impl RefDuplex {
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
         }
+    }
+
+    /// Merged per-packet records (every delivery crossed one die), ordered
+    /// by (delivered_at, id) — mirrors `Duplex::deliveries`.
+    pub fn deliveries(&self) -> Vec<Delivery> {
+        let mut out: Vec<Delivery> = self.b.sink.deliveries().to_vec();
+        for d in &mut out {
+            d.crossings = 1;
+        }
+        out.extend_from_slice(self.a.sink.deliveries());
+        out.sort_by_key(|d| (d.delivered_at, d.id));
+        out
+    }
+
+    /// Merged latency histogram — mirrors `Duplex::latency_hist`.
+    pub fn latency_hist(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        if let Some(ha) = self.a.sink.hist() {
+            h.merge(ha);
+        }
+        if let Some(hb) = self.b.sink.hist() {
+            h.merge(hb);
+        }
+        h
     }
 
     pub fn inject(&mut self, t: CrossTraffic) {
@@ -286,8 +335,8 @@ impl RefDuplex {
 }
 
 /// Naive chain: full-scan meshes + O(chips x dim²) pending() per cycle.
-pub struct RefChain {
-    pub chips: Vec<RefMesh>,
+pub struct RefChain<S: TelemetrySink = NoopSink> {
+    pub chips: Vec<RefMesh<S>>,
     links: Vec<EmioLink>,
     dim: usize,
     now: u64,
@@ -297,11 +346,17 @@ pub struct RefChain {
     frames_buf: Vec<(Frame, u64)>,
 }
 
-impl RefChain {
+impl RefChain<NoopSink> {
     pub fn new(n_chips: usize, dim: usize) -> Self {
+        Self::with_sinks(n_chips, dim)
+    }
+}
+
+impl<S: TelemetrySink> RefChain<S> {
+    pub fn with_sinks(n_chips: usize, dim: usize) -> Self {
         assert!(n_chips >= 1);
         RefChain {
-            chips: (0..n_chips).map(|_| RefMesh::new(dim)).collect(),
+            chips: (0..n_chips).map(|_| RefMesh::with_sink(dim, S::default())).collect(),
             links: (0..n_chips.saturating_sub(1)).map(|_| EmioLink::new()).collect(),
             dim,
             now: 0,
@@ -314,6 +369,32 @@ impl RefChain {
 
     pub fn n_chips(&self) -> usize {
         self.chips.len()
+    }
+
+    /// Merged per-packet records with crossings patched from the tracked
+    /// table — mirrors `Chain::deliveries`.
+    pub fn deliveries(&self) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        for m in &self.chips {
+            out.extend_from_slice(m.sink.deliveries());
+        }
+        for d in &mut out {
+            d.crossings =
+                self.tracked.get(d.id as usize).map(|t| t.3 as u32).unwrap_or(0);
+        }
+        out.sort_by_key(|d| (d.delivered_at, d.id));
+        out
+    }
+
+    /// Merged latency histogram — mirrors `Chain::latency_hist`.
+    pub fn latency_hist(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for m in &self.chips {
+            if let Some(mh) = m.sink.hist() {
+                h.merge(mh);
+            }
+        }
+        h
     }
 
     pub fn inject(&mut self, t: ChainTraffic) -> u64 {

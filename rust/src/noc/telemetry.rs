@@ -1,0 +1,174 @@
+//! Per-packet delivery telemetry for the cycle engines.
+//!
+//! The paper's headline claims are latency *distributions* across die
+//! boundaries (§4.3, Eqs. 6-9), so aggregate `total_latency` averages are
+//! not enough — p99/p999 figures need per-packet records. This module makes
+//! those records **zero-overhead when off**: every stepping topology
+//! ([`super::mesh::Mesh`], [`super::duplex::Duplex`], [`super::chain::Chain`]
+//! and their naive counterparts in [`super::reference`]) is generic over a
+//! [`TelemetrySink`], monomorphized at compile time:
+//!
+//! * [`NoopSink`] (the default type parameter) has an empty, inlined
+//!   `delivered` — the telemetry call compiles to nothing, so `Mesh::new`
+//!   and every existing call site keep the exact hot path they had;
+//! * [`DeliverySink`] appends a packed [`Delivery`] record to a slab
+//!   (preallocatable via [`DeliverySink::with_capacity`]) and feeds a
+//!   streaming [`LatencyHist`], so p50/p99/p999 fall out of million-packet
+//!   runs without a per-sample sort.
+//!
+//! The reference engines record through the *same* trait, so the golden and
+//! fuzz suites assert per-packet equality — id by id, cycle by cycle — not
+//! just aggregate stats.
+
+use crate::util::stats::LatencyHist;
+
+/// One delivered packet, as observed at its ejection router.
+///
+/// `crossings` is filled by the owning topology (a mesh on its own cannot
+/// know how many dies a flit traversed): 0 for a standalone mesh, 1 for a
+/// duplex, and the tracked per-id count for a chain (patched into merged
+/// views by [`super::chain::Chain::deliveries`]). `hops` counts hops on the
+/// *delivering* chip only — West-edge re-injection resets the flit's hop
+/// counter at each crossing, matching the aggregate `total_hops` accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Delivery {
+    pub id: u64,
+    pub injected_at: u64,
+    pub delivered_at: u64,
+    pub crossings: u32,
+    pub hops: u32,
+}
+
+impl Delivery {
+    /// End-to-end latency in cycles.
+    #[inline]
+    pub fn latency(&self) -> u64 {
+        self.delivered_at - self.injected_at
+    }
+}
+
+/// Observer of per-packet deliveries, monomorphized into the cycle engines.
+///
+/// `Default` is a supertrait so multi-chip topologies can stamp out one
+/// sink per mesh without a factory argument.
+pub trait TelemetrySink: Default {
+    /// Called exactly once per delivered packet, at its ejection cycle.
+    fn delivered(&mut self, d: Delivery);
+
+    /// Construct with room for `packets` records preallocated (ignored by
+    /// sinks that store nothing).
+    fn with_capacity(packets: usize) -> Self {
+        let _ = packets;
+        Self::default()
+    }
+
+    /// Recorded deliveries in ejection order (empty for non-recording sinks).
+    fn deliveries(&self) -> &[Delivery] {
+        &[]
+    }
+
+    /// Mutable view of the recorded deliveries (for crossings patch-up by
+    /// the owning topology).
+    fn deliveries_mut(&mut self) -> &mut [Delivery] {
+        &mut []
+    }
+
+    /// The streaming latency histogram, if this sink keeps one.
+    fn hist(&self) -> Option<&LatencyHist> {
+        None
+    }
+}
+
+/// The do-nothing default: telemetry disabled, codegen identical to the
+/// pre-telemetry engines (the `delivered` body is empty and `Delivery`
+/// construction at the call site is dead-code-eliminated).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NoopSink;
+
+impl TelemetrySink for NoopSink {
+    #[inline(always)]
+    fn delivered(&mut self, _d: Delivery) {}
+}
+
+/// Recording sink: a slab of per-packet [`Delivery`] records plus a
+/// streaming log-binned latency histogram.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeliverySink {
+    pub deliveries: Vec<Delivery>,
+    pub hist: LatencyHist,
+}
+
+impl DeliverySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Preallocate the record slab (inherent so callers need no trait import).
+    pub fn with_capacity(packets: usize) -> Self {
+        DeliverySink { deliveries: Vec::with_capacity(packets), hist: LatencyHist::new() }
+    }
+}
+
+impl TelemetrySink for DeliverySink {
+    #[inline]
+    fn delivered(&mut self, d: Delivery) {
+        self.hist.record(d.latency());
+        self.deliveries.push(d);
+    }
+
+    fn with_capacity(packets: usize) -> Self {
+        DeliverySink { deliveries: Vec::with_capacity(packets), hist: LatencyHist::new() }
+    }
+
+    fn deliveries(&self) -> &[Delivery] {
+        &self.deliveries
+    }
+
+    fn deliveries_mut(&mut self) -> &mut [Delivery] {
+        &mut self.deliveries
+    }
+
+    fn hist(&self) -> Option<&LatencyHist> {
+        Some(&self.hist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(id: u64, injected_at: u64, delivered_at: u64) -> Delivery {
+        Delivery { id, injected_at, delivered_at, crossings: 0, hops: 3 }
+    }
+
+    #[test]
+    fn delivery_sink_records_and_bins() {
+        let mut s = DeliverySink::with_capacity(8);
+        assert!(s.deliveries.capacity() >= 8);
+        s.delivered(d(0, 0, 10));
+        s.delivered(d(1, 5, 10));
+        s.delivered(d(2, 0, 100));
+        assert_eq!(s.deliveries().len(), 3);
+        assert_eq!(s.deliveries()[1].latency(), 5);
+        assert_eq!(s.hist().unwrap().count(), 3);
+        assert_eq!(s.hist().unwrap().min(), 5);
+        assert_eq!(s.hist().unwrap().max(), 100);
+    }
+
+    #[test]
+    fn noop_sink_stores_nothing() {
+        let mut s = NoopSink;
+        s.delivered(d(0, 0, 1));
+        assert!(s.deliveries().is_empty());
+        assert!(s.hist().is_none());
+        assert!(s.deliveries_mut().is_empty());
+    }
+
+    #[test]
+    fn crossings_patchable_via_mut_view() {
+        let mut s = DeliverySink::new();
+        s.delivered(d(7, 0, 80));
+        s.deliveries_mut()[0].crossings = 2;
+        assert_eq!(s.deliveries()[0].crossings, 2);
+    }
+}

@@ -96,4 +96,49 @@ mod tests {
         s.for_each(|i| got.push(i));
         assert_eq!(got, vec![10]);
     }
+
+    #[test]
+    fn single_element_universe() {
+        // dim-1 mesh edge: one router, one bit, one word
+        let mut s = DirtySet::new(1);
+        assert!(s.is_empty());
+        s.insert(0);
+        assert!(s.contains(0));
+        assert_eq!(s.count(), 1);
+        let mut got = Vec::new();
+        s.for_each(|i| got.push(i));
+        assert_eq!(got, vec![0]);
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn full_universe_iterates_every_index() {
+        // saturating-mesh edge: every bit set, including a partial top word
+        for n in [63usize, 64, 65, 200, 256] {
+            let mut s = DirtySet::new(n);
+            for i in 0..n {
+                s.insert(i);
+            }
+            assert_eq!(s.count(), n, "n={n}");
+            let mut got = Vec::new();
+            s.for_each(|i| got.push(i));
+            assert_eq!(got, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn reinsert_after_clear_and_after_visit() {
+        // the mesh re-dirties routers that keep backlog across cycles: the
+        // same index must be insertable again after clear with no residue
+        let mut s = DirtySet::new(128);
+        s.insert(77);
+        s.clear();
+        assert!(!s.contains(77));
+        s.insert(77);
+        s.insert(3);
+        let mut got = Vec::new();
+        s.for_each(|i| got.push(i));
+        assert_eq!(got, vec![3, 77]);
+    }
 }

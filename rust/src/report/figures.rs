@@ -1,13 +1,21 @@
 //! Paper-figure regeneration (Figs. 7, 8, 10-13): each function runs the
 //! relevant sweep through the analytic engine and returns the series the
-//! paper plots, as a [`Table`] (console + CSV).
+//! paper plots, as a [`Table`] (console + CSV) — plus the measured
+//! latency-*distribution* figure ([`fig_tail_latency`]) that drives the
+//! telemetry-enabled cycle engine for the p50/p99/p999 claims of §4.3.
 
+use crate::analytic::latency::TailLatency;
 use crate::analytic::{efficiency_gain, simulate, simulate_variants, speedup, SimReport};
+use crate::arch::chip::Coord;
 use crate::arch::params::{ArchConfig, Variant};
 use crate::model::networks;
+use crate::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex};
 use crate::sparsity::SparsityProfile;
+use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::Table;
+
+use super::tables::{table5_tail_latency, TailRow};
 
 /// The three benchmark rows of Figs. 10/12: (display name, network).
 pub fn benchmark_names() -> [(&'static str, &'static str); 3] {
@@ -66,6 +74,55 @@ pub fn fig8_heatmap(net_name: &str, seed: u64) -> Table {
         format!("{:.3}", hnn.imbalance()),
     ]);
     t
+}
+
+/// Measured tail-latency rows: one seeded boundary-traffic run per
+/// topology (duplex, chain 2/4/8 at full span), per-packet telemetry on.
+/// Every packet in a row makes the same number of die crossings, so the
+/// Eq. 8/9 floor applies uniformly to the whole distribution.
+pub fn tail_latency_rows(packets: usize, seed: u64) -> Vec<TailRow> {
+    let mut rows = Vec::new();
+
+    let mut rng = Rng::new(seed);
+    let mut d = Duplex::<DeliverySink>::with_sinks(8);
+    for _ in 0..packets {
+        d.inject(CrossTraffic {
+            src: Coord::new(7, rng.range(0, 8)),
+            dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
+        });
+    }
+    d.run(100_000_000);
+    rows.push(TailRow {
+        topology: "duplex (1 crossing)".into(),
+        crossings: 1,
+        tail: TailLatency::from_hist(&d.latency_hist()),
+    });
+
+    for &chips in &[2usize, 4, 8] {
+        let mut rng = Rng::new(seed ^ ((chips as u64) << 32));
+        let mut c = Chain::<DeliverySink>::with_sinks(chips, 8);
+        for _ in 0..packets {
+            c.inject(ChainTraffic {
+                src_chip: 0,
+                src: Coord::new(7, rng.range(0, 8)),
+                dest_chip: chips - 1,
+                dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
+            });
+        }
+        c.run(100_000_000);
+        rows.push(TailRow {
+            topology: format!("chain{chips} (full span)"),
+            crossings: (chips - 1) as u32,
+            tail: TailLatency::from_hist(&c.latency_hist()),
+        });
+    }
+    rows
+}
+
+/// §4.3 latency-distribution figure: measured per-packet p50/p99/p999 from
+/// the cycle engine against the Eq. 8/9 closed-form crossing floor.
+pub fn fig_tail_latency(packets: usize, seed: u64) -> Table {
+    table5_tail_latency(&tail_latency_rows(packets, seed))
 }
 
 /// Fig. 10: latency-per-inference speedup (x) vs ANN at base parameters
@@ -249,6 +306,37 @@ mod tests {
         let snn_cv: f64 = t.rows[0][3].parse().unwrap();
         let hnn_cv: f64 = t.rows[1][3].parse().unwrap();
         assert!(snn_cv > hnn_cv);
+    }
+
+    #[test]
+    fn tail_latency_rows_respect_floor_and_deepen_with_chain() {
+        use crate::analytic::latency::crossing_floor_cycles;
+        let rows = tail_latency_rows(96, 11);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            let floor = crossing_floor_cycles(r.crossings);
+            assert!(r.tail.samples > 0, "{}: no packets delivered", r.topology);
+            assert!(
+                r.tail.p50 >= floor,
+                "{}: p50 {} under floor {floor}",
+                r.topology,
+                r.tail.p50
+            );
+            assert!(r.tail.p50 <= r.tail.p99 && r.tail.p99 <= r.tail.p999, "{}", r.topology);
+        }
+        // deeper chains shift the whole distribution right
+        assert!(rows[1].tail.p50 < rows[2].tail.p50);
+        assert!(rows[2].tail.p50 < rows[3].tail.p50);
+    }
+
+    #[test]
+    fn fig_tail_latency_renders_floor_column() {
+        let t = fig_tail_latency(48, 5);
+        let s = t.render();
+        assert_eq!(t.rows.len(), 4);
+        assert!(s.contains("duplex"));
+        assert!(s.contains("chain8"));
+        assert!(!s.contains("NO"), "no topology may undercut the Eq. 8 floor:\n{s}");
     }
 
     #[test]

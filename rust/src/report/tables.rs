@@ -1,5 +1,8 @@
-//! Paper-table regeneration (Tables 1-4) with paper-vs-measured columns.
+//! Paper-table regeneration (Tables 1-4) with paper-vs-measured columns,
+//! plus the tail-latency table (measured cycle-engine distributions vs the
+//! Eq. 8/9 closed-form floor) backing the latency-distribution claims.
 
+use crate::analytic::latency::{crossing_floor_cycles, tail_vs_floor, TailLatency};
 use crate::arch::core::{chip_sram_bytes, CoreSpec};
 use crate::arch::packet;
 use crate::arch::params::{ArchConfig, Variant};
@@ -139,6 +142,44 @@ pub fn table4(rows: &[Table4Row]) -> Table {
     t
 }
 
+/// One measured tail-latency row: a topology's per-packet distribution
+/// (from cycle-engine telemetry) against its analytic crossing floor.
+pub struct TailRow {
+    pub topology: String,
+    pub crossings: u32,
+    pub tail: TailLatency,
+}
+
+/// Table 5 (repo-added): per-packet delivery-latency distributions from the
+/// telemetry-enabled cycle engine, with the Eq. 8/9 SerDes floor and the
+/// p99-over-floor queueing excess per row. The `floor holds?` column is the
+/// physical sanity check: no measured median may undercut the closed form.
+pub fn table5_tail_latency(rows: &[TailRow]) -> Table {
+    let mut t = Table::new(
+        "Table 5: delivery-latency distribution (cycles, measured) vs Eq. 8/9 floor",
+        &[
+            "topology", "packets", "mean", "p50", "p99", "p999", "floor", "p99/floor",
+            "floor holds?",
+        ],
+    );
+    for r in rows {
+        let floor = crossing_floor_cycles(r.crossings);
+        let ok = r.tail.p50 >= floor;
+        t.row(vec![
+            r.topology.clone(),
+            format!("{}", r.tail.samples),
+            format!("{:.1}", r.tail.mean),
+            format!("{}", r.tail.p50),
+            format!("{}", r.tail.p99),
+            format!("{}", r.tail.p999),
+            format!("{floor}"),
+            format!("{:.2}", tail_vs_floor(&r.tail, r.crossings)),
+            if ok { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +198,20 @@ mod tests {
         let s = table1().render();
         assert!(s.contains("28"));
         assert!(s.contains("36"));
+    }
+
+    #[test]
+    fn table5_floor_column_flags_violations() {
+        let tail = TailLatency { samples: 100, mean: 90.0, p50: 80, p99: 150, p999: 200 };
+        let rows = [
+            TailRow { topology: "duplex".into(), crossings: 1, tail },
+            // a p50 below the 2-crossing floor must be flagged
+            TailRow { topology: "bogus".into(), crossings: 2, tail },
+        ];
+        let s = table5_tail_latency(&rows).render();
+        assert!(s.contains("yes"));
+        assert!(s.contains("NO"));
+        assert!(s.contains("76"), "single-crossing floor column");
     }
 
     #[test]

@@ -90,25 +90,45 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Per-packet latency quantiles attached to a bench record (cycles, from a
+/// telemetry-enabled run of the same load — see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyQuantiles {
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
 /// One persisted benchmark record: a [`Measurement`] plus the derived
-/// throughput (work-units per second) and its unit label.
+/// throughput (work-units per second) and its unit label, optionally
+/// carrying the packet-latency tail quantiles of the measured load.
 pub struct BenchRecord {
     pub measurement: Measurement,
     pub throughput: f64,
     pub unit: &'static str,
+    pub latency: Option<LatencyQuantiles>,
 }
 
 impl BenchRecord {
     pub fn new(measurement: Measurement, throughput: f64, unit: &'static str) -> Self {
-        BenchRecord { measurement, throughput, unit }
+        BenchRecord { measurement, throughput, unit, latency: None }
+    }
+
+    /// Attach packet-latency tail quantiles (emitted as the bench/v2
+    /// `latency_p50/p99/p999` fields).
+    pub fn with_latency(mut self, p50: u64, p99: u64, p999: u64) -> Self {
+        self.latency = Some(LatencyQuantiles { p50, p99, p999 });
+        self
     }
 }
 
 /// Append records to a JSON trajectory file. The file holds one JSON array;
 /// existing records are preserved (parse + extend + rewrite), a missing or
-/// corrupt file starts a fresh array. Schema (`bench/v1`, documented in
+/// corrupt file starts a fresh array. Schema (`bench/v2`, documented in
 /// EXPERIMENTS.md §Perf): name, median_ns, mean_ns, p10_ns, p90_ns, iters,
-/// throughput, unit, unix_ts.
+/// throughput, unit, unix_ts, and — when the case ran with telemetry —
+/// latency_p50/latency_p99/latency_p999 (cycles). v2 is a strict superset
+/// of v1: readers keyed on name/unit/throughput are unaffected.
 pub fn append_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
     let unix_ts = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -124,8 +144,8 @@ pub fn append_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> 
         .unwrap_or_default();
     for r in records {
         let m = &r.measurement;
-        arr.push(Json::obj(vec![
-            ("schema", Json::str("bench/v1")),
+        let mut fields = vec![
+            ("schema", Json::str("bench/v2")),
             ("name", Json::str(m.name.clone())),
             ("median_ns", Json::num(m.median_ns)),
             ("mean_ns", Json::num(m.mean_ns)),
@@ -135,7 +155,13 @@ pub fn append_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> 
             ("throughput", Json::num(r.throughput)),
             ("unit", Json::str(r.unit)),
             ("unix_ts", Json::num(unix_ts as f64)),
-        ]));
+        ];
+        if let Some(lat) = r.latency {
+            fields.push(("latency_p50", Json::num(lat.p50 as f64)));
+            fields.push(("latency_p99", Json::num(lat.p99 as f64)));
+            fields.push(("latency_p999", Json::num(lat.p999 as f64)));
+        }
+        arr.push(Json::obj(fields));
     }
     std::fs::write(path, Json::Arr(arr).to_string_pretty())
 }
@@ -168,13 +194,21 @@ mod tests {
             p90_ns: 1_300.0,
         };
         append_json(&path, &[BenchRecord::new(m("a"), 5e6, "packets/s")]).unwrap();
-        append_json(&path, &[BenchRecord::new(m("b"), 2.0, "x-vs-ref")]).unwrap();
+        append_json(
+            &path,
+            &[BenchRecord::new(m("b"), 2.0, "x-vs-ref").with_latency(80, 150, 290)],
+        )
+        .unwrap();
         let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         let arr = doc.as_arr().unwrap();
         assert_eq!(arr.len(), 2, "records must accumulate across runs");
         assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "a");
+        assert_eq!(arr[0].get("schema").unwrap().as_str().unwrap(), "bench/v2");
+        assert!(arr[0].get("latency_p50").is_none(), "no telemetry -> no latency fields");
         assert_eq!(arr[1].get("unit").unwrap().as_str().unwrap(), "x-vs-ref");
         assert_eq!(arr[1].get("throughput").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(arr[1].get("latency_p50").unwrap().as_f64().unwrap(), 80.0);
+        assert_eq!(arr[1].get("latency_p999").unwrap().as_f64().unwrap(), 290.0);
         let _ = std::fs::remove_file(&path);
     }
 }

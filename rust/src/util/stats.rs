@@ -19,12 +19,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on a sorted copy. `q` in [0, 100].
+///
+/// Sorting uses `total_cmp`, so NaN inputs cannot panic the comparator:
+/// NaNs order after +inf (IEEE 754 totalOrder) and therefore only perturb
+/// the extreme upper percentiles instead of aborting a whole report run.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -91,6 +95,178 @@ pub fn joules(x: f64) -> String {
     format!("{v:.3}{suffix}")
 }
 
+// ---------------------------------------------------------------------------
+// LatencyHist — streaming log-binned latency histogram
+// ---------------------------------------------------------------------------
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per power of two, bounding
+/// the relative quantile error at 1/32 (~3.1%).
+const HIST_SUB_BITS: usize = 5;
+/// Sub-buckets per octave.
+const HIST_SUB: usize = 1 << HIST_SUB_BITS;
+/// Total bins covering the full u64 range: values below 32 get an exact
+/// bin each; every octave above contributes 32 log-spaced bins.
+const HIST_BINS: usize = (64 - HIST_SUB_BITS + 1) * HIST_SUB;
+
+/// Streaming log-binned histogram of cycle latencies (HdrHistogram-style).
+///
+/// Built for the cycle engine's per-packet telemetry: million-packet runs
+/// need p50/p99/p999 without storing every sample. `record` is O(1) (one
+/// leading-zeros + one array increment), memory is a fixed ~15 KiB counts
+/// table, and quantiles are exact for values < 64 cycles and within a
+/// 1/32 relative error above that (each octave splits into 32 sub-bins).
+/// Histograms from different meshes/chips `merge` losslessly, so a chain's
+/// end-to-end distribution is the merge of its per-chip sinks.
+#[derive(Clone, PartialEq)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHist")
+            .field("total", &self.total)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .field("p50", &self.p50())
+            .field("p99", &self.p99())
+            .finish()
+    }
+}
+
+/// Bin index of value `v` (exact below 32, log-spaced above).
+#[inline]
+fn hist_bin_of(v: u64) -> usize {
+    if v < HIST_SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (msb - HIST_SUB_BITS)) & (HIST_SUB as u64 - 1)) as usize;
+        (msb - HIST_SUB_BITS + 1) * HIST_SUB + sub
+    }
+}
+
+/// Smallest value mapping to bin `i` (inverse of [`hist_bin_of`]).
+#[inline]
+fn hist_bin_low(i: usize) -> u64 {
+    if i < HIST_SUB {
+        i as u64
+    } else {
+        let oct = i / HIST_SUB - 1;
+        let sub = (i % HIST_SUB) as u64;
+        (HIST_SUB as u64 + sub) << oct
+    }
+}
+
+/// Largest value mapping to bin `i` (test oracle for bin contiguity).
+#[cfg(test)]
+fn hist_bin_high(i: usize) -> u64 {
+    if i + 1 >= HIST_BINS {
+        u64::MAX
+    } else {
+        hist_bin_low(i + 1) - 1
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { counts: vec![0; HIST_BINS], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one latency sample (cycles). O(1).
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[hist_bin_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (lossless: bins align).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Quantile `q` in [0, 1]: the lower edge of the bin holding the sample
+    /// of rank `ceil(q * count)`, clamped up to the recorded minimum. Exact
+    /// for values < 64 (unit-width bins) and for any sample sitting on a
+    /// bin edge; at most a 1/32 relative *underestimate* otherwise.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return hist_bin_low(i).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +304,130 @@ mod tests {
     fn formatting() {
         assert_eq!(si(1_230_000.0), "1.230 M");
         assert_eq!(joules(3.4e-7), "340.000 nJ");
+    }
+
+    #[test]
+    fn percentile_survives_nan_input() {
+        // total_cmp orders NaN after +inf: no panic, finite quantiles keep
+        // working, only the extreme top percentile sees the NaN.
+        let xs = [1.0, f64::NAN, 3.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 2.5).abs() < 1e-12, "p50={p50}");
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // all-NaN input must not panic either
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        for q in [0.0, 37.5, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[42.0], q), 42.0);
+        }
+    }
+
+    // --- LatencyHist -------------------------------------------------------
+
+    #[test]
+    fn hist_bins_are_contiguous_and_invertible() {
+        // every boundary value maps to a bin whose [low, high] contains it,
+        // and bin lows are strictly increasing (no gaps, no overlaps)
+        let probes: Vec<u64> = (0..200u64)
+            .chain((5..63).flat_map(|e| {
+                let p = 1u64 << e;
+                [p - 1, p, p + 1, p + p / 3]
+            }))
+            .chain([u64::MAX - 1, u64::MAX])
+            .collect();
+        for &v in &probes {
+            let i = hist_bin_of(v);
+            assert!(hist_bin_low(i) <= v && v <= hist_bin_high(i), "v={v} bin={i}");
+        }
+        for i in 1..HIST_BINS {
+            assert_eq!(hist_bin_high(i - 1), hist_bin_low(i) - 1, "gap at bin {i}");
+        }
+    }
+
+    #[test]
+    fn hist_empty_and_single() {
+        let mut h = LatencyHist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!((h.min(), h.max()), (0, 0));
+        h.record(77);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 77, "q={q}");
+        }
+        assert_eq!(h.mean(), 77.0);
+    }
+
+    #[test]
+    fn hist_exact_below_64() {
+        // values under two octaves are binned exactly: quantiles are exact
+        let mut h = LatencyHist::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), 31); // rank ceil(0.5 * 64) = 32 -> order stat 31
+        assert_eq!(h.quantile(1.0), 63);
+        assert_eq!(h.quantile(1.0 / 64.0), 0);
+    }
+
+    #[test]
+    fn hist_merge_is_lossless() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        let mut both = LatencyHist::new();
+        let mut rng = crate::util::rng::Rng::new(31);
+        for _ in 0..500 {
+            let v = rng.below(100_000);
+            a.record(v);
+            both.record(v);
+            let w = rng.below(100);
+            b.record(w);
+            both.record(w);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn hist_quantile_tracks_exact_percentile_within_bin_error() {
+        // property: against the exact order statistics, the histogram
+        // quantile may only be off by the log-bin width (1/32 relative) plus
+        // one rank position (the interpolation convention gap).
+        let mut rng = crate::util::rng::Rng::new(97);
+        for case in 0..20u64 {
+            let n = 50 + rng.range(0, 2_000);
+            // log-uniform latencies spanning ~6 orders of magnitude
+            let mut xs: Vec<u64> = (0..n)
+                .map(|_| {
+                    let e = rng.range(0, 20) as u32;
+                    (1u64 << e) | rng.below(1u64 << e.max(1))
+                })
+                .collect();
+            let mut h = LatencyHist::new();
+            for &v in &xs {
+                h.record(v);
+            }
+            xs.sort_unstable();
+            for &q in &[0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let got = h.quantile(q) as f64;
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                // neighbouring order statistics bracket any rank convention
+                let lo = xs[rank.saturating_sub(2)] as f64;
+                let hi = xs[(rank).min(n - 1)] as f64;
+                assert!(
+                    got >= lo * (1.0 - 1.0 / 32.0) - 1.0,
+                    "case {case} q={q}: {got} under {lo}"
+                );
+                assert!(
+                    got <= hi * (1.0 + 1.0 / 32.0) + 1.0,
+                    "case {case} q={q}: {got} over {hi}"
+                );
+            }
+        }
     }
 }

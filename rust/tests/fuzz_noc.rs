@@ -1,0 +1,257 @@
+//! Differential fuzzing: the worklist-scheduled engine vs the naive
+//! reference engine (`spikelink::noc::reference`) on *random* op sequences.
+//!
+//! The golden suite (`golden_noc.rs`) pins equivalence on hand-shaped
+//! seeded loads; this suite removes the shaping: a seeded LCG generates
+//! arbitrary interleavings of `inject` / `inject_with_id` / West-edge
+//! arrivals / `step` / bounded `run_to_drain`-style draining, across mesh
+//! dims 1-16 and chain depths 1-8, and both engines must stay identical
+//! after **every operation** — aggregate stats, backlogs, East-egress
+//! contents, and the per-packet delivery records (id, inject cycle,
+//! delivery cycle, hops, crossings) including their ejection order.
+//!
+//! CI runs 3 random cases per topology (the default); crank the
+//! `NOC_FUZZ_ITERS` env var for long local runs:
+//!
+//! ```text
+//! NOC_FUZZ_ITERS=500 cargo test --release --test fuzz_noc
+//! ```
+
+use spikelink::arch::chip::Coord;
+use spikelink::noc::reference::{RefChain, RefDuplex, RefMesh};
+use spikelink::noc::router::Flit;
+use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex, Mesh};
+
+/// Minimal 64-bit LCG (Knuth MMIX constants). Deliberately *not* the
+/// crate's xoshiro [`spikelink::util::rng::Rng`]: the fuzzer's schedule
+/// generator must not share code with the engines under test.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        let mut l = Lcg(seed);
+        l.next(); // decorrelate small consecutive seeds
+        l
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(1_442_695_040_888_963_407);
+        self.0 >> 11
+    }
+
+    /// Uniform-ish in [0, n) (modulo bias is irrelevant for fuzzing).
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Cases per topology: 3 in CI, `NOC_FUZZ_ITERS` for long runs.
+fn fuzz_iters() -> u64 {
+    std::env::var("NOC_FUZZ_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(3)
+}
+
+// ---------------------------------------------------------------------------
+// mesh
+// ---------------------------------------------------------------------------
+
+fn check_mesh(m: &Mesh<DeliverySink>, r: &RefMesh<DeliverySink>, ctx: &str) {
+    assert_eq!(m.stats, r.stats, "{ctx}: stats diverged");
+    assert_eq!(m.backlog(), r.backlog(), "{ctx}: backlog diverged");
+    assert_eq!(m.now(), r.now(), "{ctx}: clocks diverged");
+    assert_eq!(m.east_egress, r.east_egress, "{ctx}: east egress diverged");
+    assert_eq!(
+        m.sink.deliveries, r.sink.deliveries,
+        "{ctx}: per-packet delivery records diverged"
+    );
+}
+
+fn fuzz_mesh_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let dim = 1 + rng.below(16) as usize; // 1..=16
+    let d64 = dim as u64;
+    let mut m = Mesh::with_sink(dim, DeliverySink::new());
+    let mut r = RefMesh::with_sink(dim, DeliverySink::new());
+    let n_ops = 200 + rng.below(400);
+    for op in 0..n_ops {
+        match rng.below(100) {
+            // inject: random source, dest possibly past the East edge
+            0..=39 => {
+                let src = Coord::new(rng.below(d64) as usize, rng.below(d64) as usize);
+                let dest = Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize);
+                let a = m.inject(src, dest);
+                let b = r.inject(src, dest);
+                assert_eq!(a, b, "seed={seed} op={op}: id allocation diverged");
+            }
+            // inject_with_id: caller-assigned id in a disjoint range
+            40..=49 => {
+                let src = Coord::new(rng.below(d64) as usize, rng.below(d64) as usize);
+                let dest = Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize);
+                let id = 1_000_000 + op;
+                m.inject_with_id(src, dest, id);
+                r.inject_with_id(src, dest, id);
+            }
+            // cross-die arrival at the West edge (sometimes pass-through)
+            50..=59 => {
+                let flit = Flit {
+                    id: 2_000_000 + op,
+                    dest: Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize),
+                    wire: 0,
+                    injected_at: rng.below(m.now() + 1),
+                    hops: 0,
+                };
+                let row = rng.below(d64) as usize;
+                m.inject_west_edge(row, flit);
+                r.inject_west_edge(row, flit);
+            }
+            // single cycle
+            60..=89 => {
+                m.step();
+                r.step();
+            }
+            // bounded drain burst
+            _ => {
+                let k = rng.below(64);
+                let a = m.run_to_drain(k);
+                let b = r.run_to_drain(k);
+                assert_eq!(a, b, "seed={seed} op={op}: drain cycle counts diverged");
+            }
+        }
+        check_mesh(&m, &r, &format!("mesh dim={dim} seed={seed} op={op}"));
+    }
+    let a = m.run_to_drain(10_000_000);
+    let b = r.run_to_drain(10_000_000);
+    assert_eq!(a, b, "seed={seed}: final drain diverged");
+    check_mesh(&m, &r, &format!("mesh dim={dim} seed={seed} drained"));
+    assert_eq!(m.backlog(), 0, "seed={seed}: mesh failed to drain");
+    assert_eq!(m.sink.hist, r.sink.hist, "seed={seed}: histograms diverged");
+}
+
+#[test]
+fn fuzz_mesh_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_mesh_case(0x5EED_0000 + i);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// duplex
+// ---------------------------------------------------------------------------
+
+fn fuzz_duplex_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let dim = 1 + rng.below(16) as usize;
+    let d64 = dim as u64;
+    let mut d = Duplex::<DeliverySink>::with_sinks(dim);
+    let mut r = RefDuplex::<DeliverySink>::with_sinks(dim);
+    let n_ops = 150 + rng.below(300);
+    for op in 0..n_ops {
+        match rng.below(100) {
+            0..=34 => {
+                let t = CrossTraffic {
+                    src: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
+                    dest: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
+                };
+                d.inject(t);
+                r.inject(t);
+            }
+            _ => {
+                d.step();
+                r.step();
+            }
+        }
+        let ctx = format!("duplex dim={dim} seed={seed} op={op}");
+        assert_eq!(d.a.stats, r.a.stats, "{ctx}: chip A diverged");
+        assert_eq!(d.b.stats, r.b.stats, "{ctx}: chip B diverged");
+        assert_eq!(d.link.pending(), r.link.pending(), "{ctx}: link diverged");
+        assert_eq!(d.b.sink.deliveries, r.b.sink.deliveries, "{ctx}: records diverged");
+    }
+    let ds = d.run(50_000_000);
+    let rs = r.run(50_000_000);
+    assert_eq!(ds, rs, "seed={seed}: duplex run stats diverged");
+    assert_eq!(d.deliveries(), r.deliveries(), "seed={seed}: merged records diverged");
+    assert_eq!(d.latency_hist(), r.latency_hist(), "seed={seed}: histograms diverged");
+    assert!(
+        d.deliveries().iter().all(|x| x.crossings == 1 && x.latency() >= 76),
+        "seed={seed}: a crossing undercut the SerDes floor"
+    );
+}
+
+#[test]
+fn fuzz_duplex_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_duplex_case(0xD0_D1E5 + i);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chain
+// ---------------------------------------------------------------------------
+
+fn fuzz_chain_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let chips = 1 + rng.below(8) as usize; // 1..=8
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let d64 = dim as u64;
+    let mut c = Chain::<DeliverySink>::with_sinks(chips, dim);
+    let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
+    let n_ops = 150 + rng.below(300);
+    for op in 0..n_ops {
+        match rng.below(100) {
+            0..=29 => {
+                let src_chip = rng.below(chips as u64) as usize;
+                let dest_chip = src_chip + rng.below((chips - src_chip) as u64) as usize;
+                let t = ChainTraffic {
+                    src_chip,
+                    src: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
+                    dest_chip,
+                    dest: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
+                };
+                let a = c.inject(t);
+                let b = r.inject(t);
+                assert_eq!(a, b, "seed={seed} op={op}: chain id allocation diverged");
+            }
+            _ => {
+                c.step();
+                r.step();
+            }
+        }
+        let ctx = format!("chain chips={chips} dim={dim} seed={seed} op={op}");
+        assert_eq!(c.pending(), r.pending(), "{ctx}: pending diverged");
+        for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
+            assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} stats diverged");
+            assert_eq!(
+                mc.sink.deliveries, mr.sink.deliveries,
+                "{ctx}: chip {i} records diverged"
+            );
+        }
+    }
+    let cs = c.run(100_000_000);
+    let rs = r.run(100_000_000);
+    assert_eq!(cs, rs, "seed={seed}: chain run stats diverged");
+    assert_eq!(cs.delivered, cs.injected, "seed={seed}: chain lost packets");
+    let cd = c.deliveries();
+    assert_eq!(cd, r.deliveries(), "seed={seed}: merged records diverged");
+    assert_eq!(c.latency_hist(), r.latency_hist(), "seed={seed}: histograms diverged");
+    for d in &cd {
+        assert_eq!(
+            d.crossings as usize,
+            c.crossings_of(d.id),
+            "seed={seed}: patched crossings disagree with tracked table"
+        );
+        assert!(
+            d.latency() >= 76 * d.crossings as u64,
+            "seed={seed}: id {} undercut the SerDes floor",
+            d.id
+        );
+    }
+}
+
+#[test]
+fn fuzz_chain_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_chain_case(0xC4A1_0000 + i);
+    }
+}

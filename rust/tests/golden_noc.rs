@@ -1,16 +1,26 @@
 //! Golden equivalence: the worklist-scheduled cycle engine must be
 //! bit-for-bit equivalent to the retained naive reference engine
 //! (`spikelink::noc::reference`) — same arbitration (X-priority, one grant
-//! per output port per cycle), same West-edge re-injection, same stats.
+//! per output port per cycle), same West-edge re-injection, same stats, and
+//! (since both engines record through the same `TelemetrySink` trait) the
+//! same *per-packet* delivery records: id, inject/delivery cycle, hops and
+//! die crossings, in the same ejection order.
 //!
 //! Every test drives both engines in lockstep on identical seeded loads and
 //! asserts equality after *every* operation, not just at the end, so a
 //! divergence is caught at the first cycle it appears.
+//!
+//! The EMIO merge/mux block is additionally pinned against the Eq. 8
+//! closed form of `analytic::latency` (lone-frame 76-cycle crossing,
+//! round-robin lane fairness, saturated drain bounds).
 
+use spikelink::analytic::latency::{emio_cycles, emio_single_packet_cycles};
 use spikelink::arch::chip::Coord;
+use spikelink::arch::packet::Packet;
+use spikelink::noc::emio::{EmioLink, DES_CYCLES, LANES, SER_CYCLES};
 use spikelink::noc::reference::{RefChain, RefDuplex, RefMesh};
 use spikelink::noc::router::Flit;
-use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, Duplex, Mesh};
+use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex, Mesh};
 use spikelink::util::rng::Rng;
 
 /// One scripted operation on a mesh (applied identically to both engines).
@@ -58,18 +68,22 @@ fn mesh_script(dim: usize, seed: u64) -> Vec<MeshOp> {
     ops
 }
 
-fn assert_mesh_eq(m: &Mesh, r: &RefMesh, ctx: &str) {
+fn assert_mesh_eq(m: &Mesh<DeliverySink>, r: &RefMesh<DeliverySink>, ctx: &str) {
     assert_eq!(m.stats, r.stats, "{ctx}: stats diverged");
     assert_eq!(m.backlog(), r.backlog(), "{ctx}: backlog diverged");
     assert_eq!(m.east_egress, r.east_egress, "{ctx}: east egress diverged");
+    assert_eq!(
+        m.sink.deliveries, r.sink.deliveries,
+        "{ctx}: per-packet delivery records diverged"
+    );
 }
 
 #[test]
 fn mesh_golden_equivalence_across_seeds_and_dims() {
     for &dim in &[4usize, 8, 16] {
         for seed in [1u64, 7, 42] {
-            let mut m = Mesh::new(dim);
-            let mut r = RefMesh::new(dim);
+            let mut m = Mesh::with_sink(dim, DeliverySink::new());
+            let mut r = RefMesh::with_sink(dim, DeliverySink::new());
             for (step, op) in mesh_script(dim, seed).iter().enumerate() {
                 match *op {
                     MeshOp::Inject(s, d) => {
@@ -92,6 +106,10 @@ fn mesh_golden_equivalence_across_seeds_and_dims() {
             r.run_to_drain(1_000_000);
             assert_mesh_eq(&m, &r, &format!("dim={dim} seed={seed} drained"));
             assert_eq!(m.backlog(), 0, "mesh must drain");
+            assert_eq!(
+                m.sink.hist, r.sink.hist,
+                "dim={dim} seed={seed}: latency histograms diverged"
+            );
         }
     }
 }
@@ -100,8 +118,8 @@ fn mesh_golden_equivalence_across_seeds_and_dims() {
 fn duplex_golden_equivalence_across_seeds() {
     for seed in [3u64, 5, 9] {
         let mut rng = Rng::new(seed);
-        let mut d = Duplex::new(8);
-        let mut r = RefDuplex::new(8);
+        let mut d = Duplex::<DeliverySink>::with_sinks(8);
+        let mut r = RefDuplex::<DeliverySink>::with_sinks(8);
         // bursts of crossings with interleaved settling cycles
         for _ in 0..8 {
             for _ in 0..rng.range(1, 40) {
@@ -118,12 +136,22 @@ fn duplex_golden_equivalence_across_seeds() {
                 assert_eq!(d.a.stats, r.a.stats, "seed={seed}: chip A diverged");
                 assert_eq!(d.b.stats, r.b.stats, "seed={seed}: chip B diverged");
                 assert_eq!(d.link.pending(), r.link.pending(), "seed={seed}: link diverged");
+                assert_eq!(
+                    d.b.sink.deliveries, r.b.sink.deliveries,
+                    "seed={seed}: per-packet records diverged mid-run"
+                );
             }
         }
         let ds = d.run(1_000_000);
         let rs = r.run(1_000_000);
         assert_eq!(ds, rs, "seed={seed}: duplex stats diverged");
         assert!(ds.delivered > 0, "load must actually deliver");
+        // end-to-end per-packet records (crossings patched) are identical
+        let dd = d.deliveries();
+        assert_eq!(dd, r.deliveries(), "seed={seed}: merged delivery records diverged");
+        assert_eq!(dd.len() as u64, ds.delivered);
+        assert!(dd.iter().all(|x| x.crossings == 1 && x.latency() >= 76));
+        assert_eq!(d.latency_hist(), r.latency_hist(), "seed={seed}: histograms diverged");
     }
 }
 
@@ -132,8 +160,8 @@ fn chain_golden_equivalence_across_depths_and_seeds() {
     for &chips in &[2usize, 4, 8] {
         for seed in [13u64, 21, 34] {
             let mut rng = Rng::new(seed);
-            let mut c = Chain::new(chips, 8);
-            let mut r = RefChain::new(chips, 8);
+            let mut c = Chain::<DeliverySink>::with_sinks(chips, 8);
+            let mut r = RefChain::<DeliverySink>::with_sinks(chips, 8);
             for _ in 0..6 {
                 for _ in 0..rng.range(1, 25) {
                     let src_chip = rng.range(0, chips);
@@ -162,7 +190,25 @@ fn chain_golden_equivalence_across_depths_and_seeds() {
                     mc.stats, mr.stats,
                     "chips={chips} seed={seed}: chip {i} mesh stats diverged"
                 );
+                assert_eq!(
+                    mc.sink.deliveries, mr.sink.deliveries,
+                    "chips={chips} seed={seed}: chip {i} per-packet records diverged"
+                );
             }
+            // merged views: same records, same crossings, same histogram
+            let cd = c.deliveries();
+            assert_eq!(cd, r.deliveries(), "chips={chips} seed={seed}: merged records");
+            assert_eq!(cd.len() as u64, cs.delivered);
+            assert_eq!(
+                cd.iter().map(|d| d.latency()).sum::<u64>(),
+                cs.total_latency,
+                "chips={chips} seed={seed}: per-packet sum vs aggregate"
+            );
+            assert!(
+                cd.iter().all(|d| d.latency() >= 76 * d.crossings as u64),
+                "chips={chips} seed={seed}: a crossing undercut the SerDes floor"
+            );
+            assert_eq!(c.latency_hist(), r.latency_hist(), "chips={chips} seed={seed}");
         }
     }
 }
@@ -208,6 +254,75 @@ fn property_backlog_conservation() {
     }
     m.run_to_drain(1_000_000);
     assert_eq!(m.backlog(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// EmioLink merge/mux arbitration vs the Eq. 8 closed form
+// ---------------------------------------------------------------------------
+
+/// Step the link until it drains; returns the final cycle.
+fn drain_link(link: &mut EmioLink, start: u64) -> u64 {
+    let mut now = start;
+    while link.pending() > 0 {
+        now += 1;
+        link.step(now);
+        assert!(now < start + 1_000_000, "link wedged");
+    }
+    now
+}
+
+#[test]
+fn emio_lone_frame_matches_eq8_single_packet_figure() {
+    // the §3.4 RTL figure: 38 serialize + 38 deserialize = 76, exactly the
+    // analytic emio_single_packet_cycles() closed form
+    let mut link = EmioLink::new();
+    link.inject(2, &Packet::spike(1, 0, 2, 0), 9, 0);
+    drain_link(&mut link, 0);
+    assert_eq!(link.delivered.len(), 1);
+    let (frame, at) = &link.delivered[0];
+    assert_eq!(*at - frame.entered_at, emio_single_packet_cycles());
+    assert_eq!(*at - frame.entered_at, SER_CYCLES + DES_CYCLES);
+}
+
+#[test]
+fn emio_merge_drains_lanes_round_robin() {
+    // 3 frames on each of the 8 lanes: every 38-cycle batch completes one
+    // frame per lane simultaneously, and the merge/mux must interleave the
+    // pad fairly — delivered order cycles through lanes 0..7, never letting
+    // one lane starve another within a batch.
+    let mut link = EmioLink::new();
+    for k in 0..3u64 {
+        for lane in 0..LANES as u64 {
+            link.inject(lane as usize, &Packet::spike(1, 0, lane as u8, 0), lane * 10 + k, 0);
+        }
+    }
+    drain_link(&mut link, 0);
+    assert_eq!(link.delivered.len(), 3 * LANES);
+    for (i, (frame, _)) in link.delivered.iter().enumerate() {
+        let lane = frame.id / 10;
+        let batch = frame.id % 10;
+        assert_eq!(lane as usize, i % LANES, "position {i}: lane order broken");
+        assert_eq!(batch as usize, i / LANES, "position {i}: per-lane FIFO broken");
+    }
+}
+
+#[test]
+fn emio_saturated_drain_bounded_by_eq8_closed_form() {
+    // n frames spread round-robin over the 8 lanes: the measured drain time
+    // must sit between the serialization-bound lower bound and the Eq. 8
+    // closed form (which adds the full pipelined-deserialization term).
+    for n in [8u64, 64, 256] {
+        let mut link = EmioLink::new();
+        for i in 0..n {
+            link.inject((i % LANES as u64) as usize, &Packet::spike(1, 0, 0, 0), i, 0);
+        }
+        let done = drain_link(&mut link, 0);
+        assert_eq!(link.delivered.len(), n as usize);
+        let lower = (n / LANES as u64) * SER_CYCLES + DES_CYCLES;
+        let upper = emio_cycles(n, LANES);
+        assert!(done >= lower, "n={n}: drained in {done} < serialization bound {lower}");
+        assert!(done <= upper, "n={n}: drained in {done} > Eq. 8 closed form {upper}");
+    }
 }
 
 #[test]

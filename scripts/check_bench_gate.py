@@ -1,12 +1,20 @@
 #!/usr/bin/env python3
 """CI acceptance gate for the cycle-engine benches (EXPERIMENTS.md §Perf).
 
-Reads BENCH_noc_cycle.json (the bench/v1 trajectory file appended by
-`cargo bench --bench noc_cycle`) and fails unless the *latest* sparse-mesh
-speedup records — one per mesh dim 8/16/32, unit "x-vs-ref" — all meet the
->= 5x floor. Gating on the exact recorded values avoids two failure modes
-of grepping console output: display rounding (4.97x prints as "5.0x") and
-vacuous passes when the bench crashed before printing anything.
+Reads BENCH_noc_cycle.json (the bench/v2 trajectory file appended by
+`cargo bench --bench noc_cycle`) and fails unless, for the *latest* run:
+
+  1. the sparse-mesh speedup records — one per mesh dim 8/16/32, unit
+     "x-vs-ref" — all meet the >= 5x floor;
+  2. the telemetry overhead record (`noc/mesh16/sparse/telemetry-overhead`,
+     unit "x-vs-noop": DeliverySink median over NoopSink median on the same
+     load) is <= 1.05 — per-packet recording must cost at most 5%.
+
+Gating on the exact recorded values avoids two failure modes of grepping
+console output: display rounding (4.97x prints as "5.0x") and vacuous
+passes when the bench crashed before printing anything. bench/v1 records
+from older runs may still be present in the trajectory; both gates only
+look at the latest records of their unit.
 """
 
 import json
@@ -14,16 +22,21 @@ import sys
 
 FLOOR = 5.0
 EXPECTED = 3  # sparse speedup records per bench run: mesh dims 8, 16, 32
+TELEMETRY_CEILING = 1.05  # telemetry-on may cost at most 5% vs NoopSink
 
 
-def main(path: str) -> None:
+def load(path):
     try:
         with open(path) as f:
             records = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         sys.exit(f"{path}: unreadable or invalid ({e}) — did the bench run?")
     if not isinstance(records, list):
-        sys.exit(f"{path}: expected a JSON array of bench/v1 records")
+        sys.exit(f"{path}: expected a JSON array of bench records")
+    return records
+
+
+def check_speedups(path, records):
     speedups = [r for r in records if r.get("unit") == "x-vs-ref"]
     if len(speedups) < EXPECTED:
         sys.exit(
@@ -40,7 +53,33 @@ def main(path: str) -> None:
             failed.append(r["name"])
     if failed:
         sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
-    print(f"gate passed: all {EXPECTED} sparse cases >= {FLOOR}x")
+    print(f"speedup gate passed: all {EXPECTED} sparse cases >= {FLOOR}x")
+
+
+def check_telemetry_overhead(path, records):
+    overheads = [r for r in records if r.get("unit") == "x-vs-noop"]
+    if not overheads:
+        sys.exit(
+            f"{path}: no x-vs-noop telemetry-overhead record — "
+            "bench did not complete the telemetry case"
+        )
+    r = overheads[-1]  # this run's record
+    ratio = r["throughput"]
+    ok = ratio <= TELEMETRY_CEILING
+    verdict = "OK" if ok else f"ABOVE {TELEMETRY_CEILING}x CEILING"
+    print(f"{r['name']}: {ratio:.3f}x vs noop  [{verdict}]")
+    if not ok:
+        sys.exit(
+            f"telemetry overhead {ratio:.3f}x exceeds the "
+            f"{TELEMETRY_CEILING}x (5%) acceptance ceiling"
+        )
+    print("telemetry gate passed: per-packet recording costs <= 5%")
+
+
+def main(path: str) -> None:
+    records = load(path)
+    check_speedups(path, records)
+    check_telemetry_overhead(path, records)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Fixture tests for scripts/check_bench_gate.py — the perf gate itself is
+CI-tested: golden BENCH trajectory files in scripts/fixtures/bench_gate/
+go in, the expected verdict (exit code + message fragment) must come out.
+
+Run: python3 scripts/test_check_bench_gate.py
+"""
+
+import os
+import subprocess
+import sys
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GATE = os.path.join(HERE, "check_bench_gate.py")
+FIXTURES = os.path.join(HERE, "fixtures", "bench_gate")
+
+# fixture -> (should_pass, fragment expected in combined stdout+stderr)
+CASES = {
+    "pass.json": (True, "telemetry gate passed"),
+    "stale_then_pass.json": (True, "telemetry gate passed"),
+    "mixed_v1_pass.json": (True, "speedup gate passed"),
+    "fail_speedup.json": (False, "below the 5x acceptance floor"),
+    "fail_overhead.json": (False, "exceeds the 1.05x (5%) acceptance ceiling"),
+    "incomplete.json": (False, "bench did not complete"),
+    "missing_overhead.json": (False, "no x-vs-noop telemetry-overhead record"),
+    "corrupt.json": (False, "unreadable or invalid"),
+}
+
+
+def run_gate(fixture):
+    return subprocess.run(
+        [sys.executable, GATE, os.path.join(FIXTURES, fixture)],
+        capture_output=True,
+        text=True,
+    )
+
+
+class GateFixtureTests(unittest.TestCase):
+    def test_all_fixtures_present(self):
+        on_disk = {f for f in os.listdir(FIXTURES) if f.endswith(".json")}
+        self.assertEqual(on_disk, set(CASES), "fixture set and case table out of sync")
+
+    def test_verdicts(self):
+        for fixture, (should_pass, fragment) in CASES.items():
+            with self.subTest(fixture=fixture):
+                proc = run_gate(fixture)
+                combined = proc.stdout + proc.stderr
+                if should_pass:
+                    self.assertEqual(
+                        proc.returncode, 0,
+                        f"{fixture}: expected pass, got rc={proc.returncode}\n{combined}",
+                    )
+                else:
+                    self.assertNotEqual(
+                        proc.returncode, 0,
+                        f"{fixture}: expected failure, gate passed\n{combined}",
+                    )
+                self.assertIn(fragment, combined, f"{fixture}: verdict text missing")
+
+    def test_failing_speedup_names_the_case(self):
+        proc = run_gate("fail_speedup.json")
+        self.assertIn("noc/mesh16/sparse/speedup", proc.stdout + proc.stderr)
+
+    def test_latest_run_wins_over_stale_records(self):
+        # the stale failing run at the head of the file must be ignored
+        proc = run_gate("stale_then_pass.json")
+        combined = proc.stdout + proc.stderr
+        self.assertEqual(proc.returncode, 0, combined)
+        self.assertNotIn("3.00x", combined, "stale speedup record leaked into the verdict")
+        self.assertIn("1.013x vs noop", combined)
+
+    def test_passing_output_reports_exact_values(self):
+        proc = run_gate("pass.json")
+        self.assertIn("9.80x vs reference", proc.stdout)
+        self.assertIn("[OK]", proc.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
