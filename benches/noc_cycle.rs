@@ -3,13 +3,17 @@
 //! measured in the same run, so the worklist engine's speedup is grounded
 //! against the same machine/compiler/load (EXPERIMENTS.md §Perf).
 //!
-//! Cases:
-//!   * mesh dim 8/16/32, sparse load  — one packet injected every
-//!     `SPARSE_PERIOD` cycles over a long window: most routers idle most
-//!     cycles (the paper's spike-traffic regime, Aliyev et al. 2024);
-//!   * mesh dim 8/16/32, saturating load — all packets injected up front;
-//!   * chain 2/4/8 chips — 512 die crossings through the EMIO links;
-//!   * duplex — 2048 die crossings (mesh + EMIO + mesh).
+//! Every load is a [`Scenario`] (same schedule expansion, same seeds, same
+//! case labels as the `spikelink noc-sim` CLI), and every engine — six
+//! types across two families — is driven by one generic `CycleEngine`
+//! runner ([`run_schedule`], monomorphized per engine type so the timed
+//! loops stay static-dispatch). Cases:
+//!
+//!   * `noc/mesh{8,16,32}/sparse`  — one packet every `period=16` cycles
+//!     over 20k cycles (the paper's spike-traffic regime);
+//!   * `noc/mesh{8,16,32}/saturating` — 8·dim² packets at cycle 0;
+//!   * `noc/chain{2,4,8}x8/512-transfers` — 512 eastward transfers;
+//!   * `noc/duplex8/2k-die-crossings` — 2048 die crossings.
 //!
 //! Every measurement is appended to BENCH_noc_cycle.json (schema bench/v2)
 //! so future PRs have a perf trajectory to beat. The sparse mesh cases also
@@ -19,153 +23,55 @@
 //! recording `DeliverySink` (`noc/mesh16/sparse/telemetry`) and the ratio
 //! against the `NoopSink` run lands as `noc/mesh16/sparse/telemetry-overhead`
 //! (unit `x-vs-noop`, gated <= 1.05 by scripts/check_bench_gate.py). Chain
-//! and duplex records carry per-packet `latency_p50/p99/p999` fields from a
+//! and duplex records carry per-packet `latency_p*` fields from a
 //! telemetry-enabled run of the identical load.
 
 use std::path::Path;
 
-use spikelink::arch::chip::Coord;
 use spikelink::noc::reference::{RefChain, RefMesh};
-use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex, Mesh};
+use spikelink::noc::{
+    run_schedule, Chain, CycleEngine, DeliverySink, Duplex, Mesh, Scenario, Transfer, TrafficSpec,
+};
 use spikelink::util::bench::{append_json, bench, black_box, BenchRecord};
-use spikelink::util::rng::Rng;
-
-/// Sparse-load schedule: (inject_cycle, src, dest) triples.
-fn sparse_schedule(dim: usize, cycles: u64, period: u64, seed: u64) -> Vec<(u64, Coord, Coord)> {
-    let mut rng = Rng::new(seed);
-    (0..cycles)
-        .step_by(period as usize)
-        .map(|t| {
-            (
-                t,
-                Coord::new(rng.range(0, dim), rng.range(0, dim)),
-                Coord::new(rng.range(0, dim), rng.range(0, dim)),
-            )
-        })
-        .collect()
-}
-
-/// Saturating load: every packet present at cycle 0.
-fn saturating_load(dim: usize, packets: usize, seed: u64) -> Vec<(Coord, Coord)> {
-    let mut rng = Rng::new(seed);
-    (0..packets)
-        .map(|_| {
-            (
-                Coord::new(rng.range(0, dim), rng.range(0, dim)),
-                Coord::new(rng.range(0, dim), rng.range(0, dim)),
-            )
-        })
-        .collect()
-}
-
-/// Chain load: eastward transfers spread over rows and chips.
-fn chain_load(n_chips: usize, dim: usize, packets: usize, seed: u64) -> Vec<ChainTraffic> {
-    let mut rng = Rng::new(seed);
-    (0..packets)
-        .map(|_| {
-            let src_chip = rng.range(0, n_chips);
-            let dest_chip = rng.range(src_chip, n_chips);
-            ChainTraffic {
-                src_chip,
-                src: Coord::new(rng.range(0, dim), rng.range(0, dim)),
-                dest_chip,
-                dest: Coord::new(rng.range(0, dim), rng.range(0, dim)),
-            }
-        })
-        .collect()
-}
-
-// The optimized and reference engines expose identical methods, so the
-// drivers are stamped out per type with a macro (no shared trait needed).
-macro_rules! mesh_drivers {
-    ($sparse:ident, $sat:ident, $ty:ty) => {
-        fn $sparse(dim: usize, sched: &[(u64, Coord, Coord)], cycles: u64) -> u64 {
-            let mut m = <$ty>::new(dim);
-            let mut next = 0usize;
-            for c in 0..cycles {
-                while next < sched.len() && sched[next].0 == c {
-                    m.inject(sched[next].1, sched[next].2);
-                    next += 1;
-                }
-                m.step();
-            }
-            m.run_to_drain(1_000_000);
-            assert_eq!(m.stats.delivered, sched.len() as u64);
-            black_box(m.stats.delivered)
-        }
-
-        fn $sat(dim: usize, load: &[(Coord, Coord)]) -> u64 {
-            let mut m = <$ty>::new(dim);
-            for &(s, d) in load {
-                m.inject(s, d);
-            }
-            m.run_to_drain(10_000_000);
-            assert_eq!(m.stats.delivered, load.len() as u64);
-            black_box(m.stats.delivered)
-        }
-    };
-}
-
-mesh_drivers!(run_sparse_opt, run_sat_opt, Mesh);
-mesh_drivers!(run_sparse_ref, run_sat_ref, RefMesh);
-
-/// Telemetry-enabled sparse driver: identical load, recording sink. The
-/// returned mesh hands back the latency histogram for the bench/v2 fields.
-fn run_sparse_tel(
-    dim: usize,
-    sched: &[(u64, Coord, Coord)],
-    cycles: u64,
-) -> Mesh<DeliverySink> {
-    let mut m = Mesh::with_sink(dim, DeliverySink::with_capacity(sched.len()));
-    let mut next = 0usize;
-    for c in 0..cycles {
-        while next < sched.len() && sched[next].0 == c {
-            m.inject(sched[next].1, sched[next].2);
-            next += 1;
-        }
-        m.step();
-    }
-    m.run_to_drain(1_000_000);
-    assert_eq!(m.stats.delivered, sched.len() as u64);
-    m
-}
-
-macro_rules! chain_driver {
-    ($name:ident, $ty:ty) => {
-        fn $name(n_chips: usize, dim: usize, load: &[ChainTraffic]) -> u64 {
-            let mut ch = <$ty>::new(n_chips, dim);
-            for &t in load {
-                ch.inject(t);
-            }
-            let stats = ch.run(100_000_000);
-            assert_eq!(stats.delivered, load.len() as u64);
-            black_box(stats.delivered)
-        }
-    };
-}
-
-chain_driver!(run_chain_opt, Chain);
-chain_driver!(run_chain_ref, RefChain);
 
 const SPARSE_CYCLES: u64 = 20_000;
 const SPARSE_PERIOD: u64 = 16;
+const DRAIN_CAP: u64 = 100_000_000;
+
+/// Drive one engine through a scenario schedule and drain; asserts every
+/// packet delivered. Generic (not `dyn`) so each engine's hot loop stays
+/// monomorphized. Returns the engine for post-run telemetry reads.
+fn drive<E: CycleEngine>(mut e: E, sched: &[(u64, Transfer)]) -> E {
+    let stats = run_schedule(&mut e, sched, DRAIN_CAP);
+    assert_eq!(stats.delivered, sched.len() as u64);
+    black_box(stats.delivered);
+    e
+}
 
 fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
 
     // --- mesh sweep: sparse + saturating, optimized vs reference ---------
+    // NOTE: scripts/check_bench_gate.py requires the sparse speedup records
+    // to appear in this ascending dim order within one run — keep 8, 16, 32.
     for &dim in &[8usize, 16, 32] {
-        let sched = sparse_schedule(dim, SPARSE_CYCLES, SPARSE_PERIOD, 3);
-        let n_sparse = sched.len() as f64;
-        let opt = bench(&format!("noc/mesh{dim}/sparse"), 2, 12, || {
-            run_sparse_opt(dim, &sched, SPARSE_CYCLES);
+        let sparse = Scenario::mesh(dim).traffic(TrafficSpec::Sparse {
+            cycles: SPARSE_CYCLES,
+            period: SPARSE_PERIOD,
+            seed: 3,
         });
-        let ref_ = bench(&format!("noc/mesh{dim}/sparse/ref"), 1, 6, || {
-            run_sparse_ref(dim, &sched, SPARSE_CYCLES);
+        let label = sparse.label(); // scenario-derived: "mesh8" etc.
+        let sched = sparse.schedule();
+        let n_sparse = sched.len() as f64;
+        let opt = bench(&format!("noc/{label}/sparse"), 2, 12, || {
+            drive(Mesh::new(dim), &sched);
+        });
+        let ref_ = bench(&format!("noc/{label}/sparse/ref"), 1, 6, || {
+            drive(RefMesh::new(dim), &sched);
         });
         let speedup = ref_.median_ns / opt.median_ns;
         println!(
-            "mesh{dim} sparse: {:.2} M packets/s, {speedup:.1}x vs reference",
+            "{label} sparse: {:.2} M packets/s, {speedup:.1}x vs reference",
             n_sparse / (opt.median_ns / 1e9) / 1e6
         );
         let opt_tput = n_sparse / (opt.median_ns / 1e9);
@@ -174,7 +80,7 @@ fn main() {
         records.push(BenchRecord::new(opt.clone(), opt_tput, "packets/s"));
         records.push(BenchRecord::new(ref_, ref_tput, "packets/s"));
         let mut sp = opt;
-        sp.name = format!("noc/mesh{dim}/sparse/speedup");
+        sp.name = format!("noc/{label}/sparse/speedup");
         records.push(BenchRecord::new(sp, speedup, "x-vs-ref"));
 
         // Telemetry cost on the paper-regime case (dim 16, sparse): same
@@ -182,9 +88,12 @@ fn main() {
         // at <= 1.05 by scripts/check_bench_gate.py.
         if dim == 16 {
             let tel = bench("noc/mesh16/sparse/telemetry", 2, 12, || {
-                black_box(run_sparse_tel(dim, &sched, SPARSE_CYCLES).stats.delivered);
+                drive(Mesh::with_sink(dim, DeliverySink::with_capacity(sched.len())), &sched);
             });
-            let hist = run_sparse_tel(dim, &sched, SPARSE_CYCLES).sink.hist;
+            let hist =
+                drive(Mesh::with_sink(dim, DeliverySink::with_capacity(sched.len())), &sched)
+                    .sink
+                    .hist;
             let overhead = tel.median_ns / opt_median_ns;
             println!(
                 "mesh16 sparse telemetry: {overhead:.3}x vs noop (p50 {} p99 {} p999 {})",
@@ -205,16 +114,18 @@ fn main() {
             records.push(BenchRecord::new(ov, overhead, "x-vs-noop"));
         }
 
-        let load = saturating_load(dim, 8 * dim * dim, 7);
+        let saturating =
+            Scenario::mesh(dim).traffic(TrafficSpec::Uniform { packets: 8 * dim * dim, seed: 7 });
+        let load = saturating.schedule();
         let n_sat = load.len() as f64;
-        let opt = bench(&format!("noc/mesh{dim}/saturating"), 2, 12, || {
-            run_sat_opt(dim, &load);
+        let opt = bench(&format!("noc/{label}/saturating"), 2, 12, || {
+            drive(Mesh::new(dim), &load);
         });
-        let ref_ = bench(&format!("noc/mesh{dim}/saturating/ref"), 1, 6, || {
-            run_sat_ref(dim, &load);
+        let ref_ = bench(&format!("noc/{label}/saturating/ref"), 1, 6, || {
+            drive(RefMesh::new(dim), &load);
         });
         println!(
-            "mesh{dim} saturating: {:.2} M packets/s, {:.1}x vs reference",
+            "{label} saturating: {:.2} M packets/s, {:.1}x vs reference",
             n_sat / (opt.median_ns / 1e9) / 1e6,
             ref_.median_ns / opt.median_ns
         );
@@ -226,16 +137,18 @@ fn main() {
 
     // --- chain sweep: 2/4/8 chips ----------------------------------------
     for &chips in &[2usize, 4, 8] {
-        let load = chain_load(chips, 8, 512, 11);
+        let sc = Scenario::chain(chips, 8).traffic(TrafficSpec::Uniform { packets: 512, seed: 11 });
+        let label = sc.label(); // "chain2x8" etc.
+        let load = sc.schedule();
         let n = load.len() as f64;
-        let opt = bench(&format!("noc/chain{chips}/512-transfers"), 1, 8, || {
-            run_chain_opt(chips, 8, &load);
+        let opt = bench(&format!("noc/{label}/512-transfers"), 1, 8, || {
+            drive(Chain::new(chips, 8), &load);
         });
-        let ref_ = bench(&format!("noc/chain{chips}/512-transfers/ref"), 1, 4, || {
-            run_chain_ref(chips, 8, &load);
+        let ref_ = bench(&format!("noc/{label}/512-transfers/ref"), 1, 4, || {
+            drive(RefChain::new(chips, 8), &load);
         });
         println!(
-            "chain{chips}: {:.2} k transfers/s, {:.1}x vs reference",
+            "{label}: {:.2} k transfers/s, {:.1}x vs reference",
             n / (opt.median_ns / 1e9) / 1e3,
             ref_.median_ns / opt.median_ns
         );
@@ -243,11 +156,7 @@ fn main() {
         let ref_tput = n / (ref_.median_ns / 1e9);
         // per-packet tail quantiles from one telemetry-enabled run of the
         // identical load (outside the timed loop)
-        let mut tc = Chain::<DeliverySink>::with_sinks(chips, 8);
-        for &t in &load {
-            tc.inject(t);
-        }
-        tc.run(100_000_000);
+        let tc = drive(Chain::<DeliverySink>::with_sinks(chips, 8), &load);
         let h = tc.latency_hist();
         records.push(
             BenchRecord::new(opt, opt_tput, "transfers/s")
@@ -257,33 +166,19 @@ fn main() {
     }
 
     // --- duplex: 2048 boundary crossings ----------------------------------
-    // One load definition shared by the timed (NoopSink) closure and the
-    // telemetry run, so the recorded latency_p* fields describe exactly the
-    // measured load.
-    let duplex_load: Vec<CrossTraffic> = (0..2_048usize)
-        .map(|i| CrossTraffic {
-            src: Coord::new(7, i % 8),
-            dest: Coord::new(i % 8, (i / 8) % 8),
-        })
-        .collect();
-    let b = bench("noc/duplex/2k-die-crossings", 2, 15, || {
-        let mut d = Duplex::new(8);
-        for &t in &duplex_load {
-            d.inject(t);
-        }
-        let stats = d.run(50_000_000);
-        assert_eq!(stats.delivered, 2_048);
-        black_box(stats);
+    // One scenario shared by the timed (NoopSink) closure and the telemetry
+    // run, so the recorded latency_p* fields describe exactly the measured
+    // load.
+    let sc = Scenario::duplex(8).traffic(TrafficSpec::Uniform { packets: 2_048, seed: 13 });
+    let load = sc.schedule();
+    let b = bench(&format!("noc/{}/2k-die-crossings", sc.label()), 2, 15, || {
+        drive(Duplex::new(8), &load);
     });
     println!(
         "duplex throughput: {:.2} k crossings/s",
         2_048.0 / (b.median_ns / 1e9) / 1e3
     );
-    let mut td = Duplex::<DeliverySink>::with_sinks(8);
-    for &t in &duplex_load {
-        td.inject(t);
-    }
-    td.run(50_000_000);
+    let td = drive(Duplex::<DeliverySink>::with_sinks(8), &load);
     let h = td.latency_hist();
     records.push(
         BenchRecord::new(b.clone(), 2_048.0 / (b.median_ns / 1e9), "crossings/s")

@@ -12,10 +12,9 @@ use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use spikelink::metrics::Histogram;
 use spikelink::runtime::{Engine, Manifest, Tensor};
 use spikelink::train::corpus;
-use spikelink::util::stats;
+use spikelink::util::stats::{self, LatencyHist};
 
 struct Request {
     x: Vec<i32>, // one sequence, seq_len chars
@@ -48,7 +47,9 @@ fn main() -> anyhow::Result<()> {
     // batcher/executor loop
     let mut pending: VecDeque<Request> = VecDeque::new();
     let mut latencies_ms: Vec<f64> = Vec::new();
-    let hist = Histogram::new();
+    // Streaming percentiles over nanosecond samples — the same LatencyHist
+    // the cycle engines' telemetry uses (one histogram impl in the crate).
+    let mut hist = LatencyHist::new();
     let mut batches = 0usize;
     let t_start = Instant::now();
     let mut done = 0usize;
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         let now = Instant::now();
         for r in &reqs {
             let d = now.duration_since(r.t0);
-            hist.record(d);
+            hist.record(d.as_nanos() as u64);
             latencies_ms.push(d.as_secs_f64() * 1e3);
         }
         done += reqs.len();
@@ -95,7 +96,14 @@ fn main() -> anyhow::Result<()> {
         stats::percentile(&latencies_ms, 99.0),
         stats::percentile(&latencies_ms, 100.0),
     );
-    println!("histogram: {}", hist.summary());
+    println!(
+        "histogram: n={} mean={:.2}ms p50={:.2}ms p99={:.2}ms p999={:.2}ms",
+        hist.count(),
+        hist.mean() / 1e6,
+        hist.p50() as f64 / 1e6,
+        hist.p99() as f64 / 1e6,
+        hist.p999() as f64 / 1e6,
+    );
     println!("serve OK");
     Ok(())
 }

@@ -17,28 +17,24 @@
 //! Run: `make artifacts && cargo run --release --example sparsity_sweep -- [steps]`
 
 use spikelink::analytic::simulate;
-use spikelink::arch::chip::Coord;
 use spikelink::arch::params::{ArchConfig, Variant};
 use spikelink::model::networks;
-use spikelink::noc::{CrossTraffic, DeliverySink, Duplex};
+use spikelink::noc::{Scenario, TrafficSpec};
 use spikelink::runtime::{Engine, Manifest};
 use spikelink::sparsity::SparsityProfile;
 use spikelink::train::{train, RegConfig};
 use spikelink::util::table::Table;
 
-/// Measured duplex tail latency for a boundary edge carrying `packets`
-/// die crossings: (p50, p99) in cycles from per-packet telemetry.
-fn measured_tail(packets: usize) -> (u64, u64) {
-    let mut d = Duplex::<DeliverySink>::with_sinks(8);
-    for i in 0..packets {
-        d.inject(CrossTraffic {
-            src: Coord::new(7, i % 8),
-            dest: Coord::new(i % 8, (i / 8) % 8),
-        });
-    }
-    d.run(100_000_000);
-    let h = d.latency_hist();
-    (h.p50(), h.p99())
+/// Measured duplex tail latency for a boundary edge firing at `activity`
+/// over 8 ticks (the §3 HNN encoding, 256 boundary neurons): (p50, p99) in
+/// cycles from per-packet telemetry. One `Scenario` per sweep point — the
+/// identical run is reproducible via `spikelink noc-sim --scenario`.
+fn measured_tail(activity: f64) -> (u64, u64) {
+    let sc = Scenario::duplex(8)
+        .with_telemetry()
+        .traffic(TrafficSpec::Boundary { neurons: 256, dense: 0, activity, ticks: 8, seed: 7 });
+    let tail = sc.run().tail.expect("boundary traffic at these activities delivers packets");
+    (tail.p50, tail.p99)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -78,10 +74,11 @@ fn main() -> anyhow::Result<()> {
         let rate =
             res.final_rates.iter().sum::<f64>() / res.final_rates.len().max(1) as f64;
         let rep = simulate(&net, &cfg, &SparsityProfile::uniform(net.layers.len(), 1.0 - target));
-        // boundary traffic at this sparsity: activity x T packets per
-        // neuron on a 256-neuron boundary edge (the §3 HNN encoding)
-        let boundary_packets = ((1.0 - target) * 256.0 * 8.0).ceil().max(1.0) as usize;
-        let (p50, p99) = measured_tail(boundary_packets);
+        // boundary traffic at this sparsity: activity x T spike events per
+        // neuron on a 256-neuron boundary edge, Bernoulli-sampled with a
+        // fixed seed so the event sets nest across sweep points (lower
+        // activity fires a strict subset of a higher activity's events)
+        let (p50, p99) = measured_tail(1.0 - target);
         t.row(vec![
             format!("{target:.2}"),
             format!("{budget:.3}"),

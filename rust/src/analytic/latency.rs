@@ -85,6 +85,15 @@ impl TailLatency {
     }
 }
 
+/// Conversion form of [`TailLatency::from_hist`], so engine-trait consumers
+/// (`CycleEngine::latency_hist` returns a [`LatencyHist`]) distil with
+/// `.into()` / `TailLatency::from`.
+impl From<&LatencyHist> for TailLatency {
+    fn from(h: &LatencyHist) -> Self {
+        TailLatency::from_hist(h)
+    }
+}
+
 /// Eq. 8/9 closed-form *floor* for a packet crossing `crossings` die
 /// boundaries: every crossing pays at least one full SerDes + deserializer
 /// traversal (76 cycles), regardless of congestion. Measured per-packet
@@ -213,6 +222,7 @@ mod tests {
             h.record(v);
         }
         let t = TailLatency::from_hist(&h);
+        assert_eq!(TailLatency::from(&h), t, "From conversion mirrors from_hist");
         assert_eq!(t.samples, 10);
         assert_eq!(t.p50, 80);
         assert!((t.mean - 102.0).abs() < 1e-9);

@@ -14,8 +14,19 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
+/// Can `token` serve as the *value* of a preceding `--key`? Anything not
+/// starting with `-` can; a `-`-prefixed token only if it is a number
+/// (`--lam -0.5` must parse as an option value, not as flag + positional).
+fn is_value_token(token: &str) -> bool {
+    !token.starts_with('-') || token.parse::<f64>().is_ok()
+}
+
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
+    ///
+    /// Grammar: `--key=value`, `--key value` (including negative numeric
+    /// values), `--flag`, single-dash short flags (`-v`; combined `-abc` is
+    /// one flag named `abc`), bare negative numbers and `-` as positionals.
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
         let mut out = Args::default();
         let mut it = args.into_iter().peekable();
@@ -29,11 +40,20 @@ impl Args {
                 // --key=value or --key value or --flag
                 if let Some((k, v)) = name.split_once('=') {
                     out.opts.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if it.peek().map(|n| is_value_token(n)).unwrap_or(false) {
                     let v = it.next().unwrap();
                     out.opts.insert(name.to_string(), v);
                 } else {
                     out.flags.push(name.to_string());
+                }
+            } else if let Some(short) = a.strip_prefix('-') {
+                // single-dash token: a bare negative number (or "-" alone,
+                // the stdin convention) is a positional; anything else is a
+                // short flag (`-v` -> flag "v")
+                if short.is_empty() || a.parse::<f64>().is_ok() {
+                    out.positional.push(a);
+                } else {
+                    out.flags.push(short.to_string());
                 }
             } else {
                 out.positional.push(a);
@@ -104,6 +124,16 @@ COMMANDS:
   table4            train all six variants briefly and print the Table-4 proxy
                       --steps N (default 150)
   noc-validate      run the cycle-level NoC cross-checks (EMIO 76c, hops)
+  noc-sim           run one cycle-level scenario, print NocStats + tail p50/p99/p999
+                      --scenario FILE      scenario/v1 JSON (overrides the flags below)
+                      --topology mesh|duplex|chain   (default mesh)
+                      --dim N (default 16)  --chips N (chain only, default 4)
+                      --traffic uniform|full-span|sparse|boundary (default uniform)
+                      --packets N  --cycles N --period N  --neurons N --dense N
+                      --activity F --ticks N  --seed N  --max-cycles N
+                      --reference          run the retained naive engine instead
+                      --no-telemetry       skip per-packet records (no tail quantiles)
+                      --save FILE          write the scenario JSON for reproduction
   help              this text
 ";
 
@@ -149,5 +179,46 @@ mod tests {
         let a = parse("simulate --verbose");
         assert!(a.has_flag("verbose"));
         assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn single_dash_tokens_are_flags_not_positionals() {
+        // regression: `-v` used to fall through to the positionals
+        let a = parse("simulate -v --bits 8");
+        assert!(a.has_flag("v"));
+        assert!(a.positional.is_empty());
+        assert_eq!(a.u32_or("bits", 0).unwrap(), 8);
+        // combined short token stays one flag
+        let b = parse("report -xy");
+        assert!(b.has_flag("xy"));
+    }
+
+    #[test]
+    fn short_flag_does_not_become_a_value() {
+        // `--verbose -v` must yield two flags, not verbose="-v"
+        let a = parse("simulate --verbose -v");
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("v"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn negative_option_values_parse() {
+        // regression: a negative number after `--key` is the key's value
+        let a = parse("train --lam -0.5 --dx -3");
+        assert!((a.f64_or("lam", 0.0).unwrap() + 0.5).abs() < 1e-12);
+        assert_eq!(a.str_or("dx", ""), "-3");
+        assert!(a.flags.is_empty());
+        assert!(a.positional.is_empty());
+        // equals form agrees
+        let b = parse("train --lam=-0.5");
+        assert!((b.f64_or("lam", 0.0).unwrap() + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bare_negative_number_and_dash_are_positionals() {
+        let a = parse("eval -0.25 -");
+        assert_eq!(a.positional, vec!["-0.25".to_string(), "-".to_string()]);
+        assert!(a.flags.is_empty());
     }
 }

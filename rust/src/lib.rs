@@ -16,6 +16,15 @@
 //!   simulators), the PJRT runtime that executes the AOT artifacts, the
 //!   training driver, and the report harness regenerating every paper
 //!   table and figure.
+//!
+//! The cycle-level simulators share one surface: every engine — mesh,
+//! duplex, chain, and their naive reference oracles — implements
+//! [`noc::CycleEngine`] and reports a unified [`noc::NocStats`];
+//! [`noc::Scenario`] builds any of them from a JSON-serializable
+//! description (see `spikelink noc-sim` and EXPERIMENTS.md §Perf), and
+//! [`noc::harness`] holds the only generic drivers (differential lockstep,
+//! timed schedules). See the migration note in [`noc`] if you are coming
+//! from the old per-topology `MeshStats`/`DuplexStats`/`ChainStats` API.
 
 pub mod analytic;
 pub mod metrics;

@@ -44,6 +44,7 @@ fn run(args: &cli::Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "table4" => cmd_table4(args),
         "noc-validate" => cmd_noc_validate(),
+        "noc-sim" => cmd_noc_sim(args),
         "" | "help" => {
             print!("{}", cli::HELP);
             Ok(())
@@ -359,6 +360,98 @@ fn cmd_table4(args: &cli::Args) -> Result<()> {
         );
         std::fs::write(out, j.to_string_pretty())?;
         println!("records written to {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// noc-sim
+// ---------------------------------------------------------------------------
+
+/// Run one cycle-level scenario — from a `scenario/v1` JSON file or from
+/// flags — and print the unified `NocStats` plus measured tail percentiles.
+fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
+    use spikelink::noc::scenario::DEFAULT_MAX_CYCLES;
+    use spikelink::noc::{Scenario, TrafficSpec};
+
+    let sc = if let Some(path) = args.get("scenario") {
+        let text = std::fs::read_to_string(path)?;
+        Scenario::from_json_str(&text).map_err(|e| anyhow!("{path}: {e}"))?
+    } else {
+        let dim = args.usize_or("dim", 16)?;
+        if dim == 0 {
+            return Err(anyhow!("--dim must be >= 1"));
+        }
+        let seed = args.usize_or("seed", 3)? as u64;
+        let mut sc = match args.str_or("topology", "mesh").as_str() {
+            "mesh" => Scenario::mesh(dim),
+            "duplex" => Scenario::duplex(dim),
+            "chain" => {
+                let chips = args.usize_or("chips", 4)?;
+                if chips == 0 {
+                    return Err(anyhow!("--chips must be >= 1"));
+                }
+                Scenario::chain(chips, dim)
+            }
+            other => return Err(anyhow!("--topology must be mesh|duplex|chain, got {other}")),
+        };
+        let traffic = match args.str_or("traffic", "uniform").as_str() {
+            "uniform" => TrafficSpec::Uniform { packets: args.usize_or("packets", 2048)?, seed },
+            "full-span" => {
+                TrafficSpec::FullSpan { packets: args.usize_or("packets", 2048)?, seed }
+            }
+            "sparse" => TrafficSpec::Sparse {
+                cycles: args.usize_or("cycles", 20_000)? as u64,
+                period: args.usize_or("period", 16)? as u64,
+                seed,
+            },
+            "boundary" => TrafficSpec::Boundary {
+                neurons: args.usize_or("neurons", 256)?,
+                dense: args.usize_or("dense", 0)?,
+                activity: args.f64_or("activity", 0.1)?,
+                ticks: args.u32_or("ticks", 8)?,
+                seed,
+            },
+            other => {
+                return Err(anyhow!(
+                    "--traffic must be uniform|full-span|sparse|boundary, got {other}"
+                ))
+            }
+        };
+        sc = sc
+            .traffic(traffic)
+            .with_max_cycles(args.usize_or("max-cycles", DEFAULT_MAX_CYCLES as usize)? as u64);
+        if !args.has_flag("no-telemetry") {
+            sc = sc.with_telemetry();
+        }
+        sc
+    };
+
+    if let Some(out) = args.get("save") {
+        std::fs::write(out, sc.to_json().to_string_pretty())?;
+        println!("scenario written to {out}");
+    }
+
+    let reference = args.has_flag("reference");
+    let res = if reference { sc.run_reference() } else { sc.run() };
+    let s = res.stats;
+    println!(
+        "scenario        : {} ({} engine)",
+        sc.label(),
+        if reference { "reference" } else { "optimized" },
+    );
+    println!("injected        : {}", s.injected);
+    println!("delivered       : {}", s.delivered);
+    println!("cycles          : {}", s.cycles);
+    println!("avg hops        : {:.3}", s.avg_hops());
+    println!("avg latency     : {:.3} cycles", s.avg_latency());
+    println!("throughput      : {:.4} packets/cycle", s.throughput());
+    match res.tail {
+        Some(t) => println!(
+            "latency tail    : p50 {}  p99 {}  p999 {}  (mean {:.2}, {} samples)",
+            t.p50, t.p99, t.p999, t.mean, t.samples
+        ),
+        None => println!("latency tail    : n/a (telemetry off)"),
     }
     Ok(())
 }

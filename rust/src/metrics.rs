@@ -1,6 +1,10 @@
-//! Lightweight runtime metrics: counters + log-bucketed latency histograms
-//! shared by the serving path and the simulators (the ops-facing face of
-//! the Layer-3 coordinator).
+//! Lightweight runtime metrics: lock-free counters for the serving path and
+//! the simulators (the ops-facing face of the Layer-3 coordinator).
+//!
+//! Latency histograms live in [`crate::util::stats::LatencyHist`] — the one
+//! streaming-percentile implementation in the crate, shared by the cycle
+//! engines' telemetry and the serving example. (This module used to carry a
+//! second, coarser log2-bucketed histogram; it was redundant and removed.)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -24,83 +28,6 @@ impl Counter {
     }
 }
 
-/// Log2-bucketed histogram for durations in nanoseconds: bucket k covers
-/// [2^k, 2^(k+1)) ns, 0..=47 (~ up to 1.6 days). Lock-free recording.
-#[derive(Debug)]
-pub struct Histogram {
-    buckets: [AtomicU64; 48],
-    count: AtomicU64,
-    sum_ns: AtomicU64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Histogram {
-    pub fn new() -> Self {
-        Histogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            count: AtomicU64::new(0),
-            sum_ns: AtomicU64::new(0),
-        }
-    }
-
-    pub fn record_ns(&self, ns: u64) {
-        let k = (63 - ns.max(1).leading_zeros() as usize).min(47);
-        self.buckets[k].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
-    }
-
-    pub fn record(&self, d: std::time::Duration) {
-        self.record_ns(d.as_nanos() as u64);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_ns(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
-        }
-    }
-
-    /// Approximate quantile (bucket upper bound), q in [0, 1].
-    pub fn quantile_ns(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut seen = 0;
-        for (k, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (k + 1);
-            }
-        }
-        1u64 << 48
-    }
-
-    /// One-line summary for logs.
-    pub fn summary(&self) -> String {
-        format!(
-            "n={} mean={:.2}ms p50<={:.2}ms p99<={:.2}ms",
-            self.count(),
-            self.mean_ns() / 1e6,
-            self.quantile_ns(0.50) as f64 / 1e6,
-            self.quantile_ns(0.99) as f64 / 1e6,
-        )
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,51 +41,20 @@ mod tests {
     }
 
     #[test]
-    fn histogram_quantiles_bound_samples() {
-        let h = Histogram::new();
-        for ms in [1u64, 2, 4, 8, 100] {
-            h.record_ns(ms * 1_000_000);
-        }
-        assert_eq!(h.count(), 5);
-        // p50 upper bound must be >= the true median (4ms) and < max*2
-        let p50 = h.quantile_ns(0.5);
-        assert!(p50 >= 4_000_000, "p50={p50}");
-        assert!(p50 <= 16_000_000, "p50={p50}");
-        let p100 = h.quantile_ns(1.0);
-        assert!(p100 >= 100_000_000);
-    }
-
-    #[test]
-    fn histogram_mean_exact() {
-        let h = Histogram::new();
-        h.record_ns(10);
-        h.record_ns(30);
-        assert!((h.mean_ns() - 20.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn empty_histogram_safe() {
-        let h = Histogram::new();
-        assert_eq!(h.quantile_ns(0.99), 0);
-        assert_eq!(h.mean_ns(), 0.0);
-        assert!(h.summary().contains("n=0"));
-    }
-
-    #[test]
-    fn concurrent_recording() {
-        let h = std::sync::Arc::new(Histogram::new());
+    fn counter_concurrent_increments() {
+        let c = std::sync::Arc::new(Counter::default());
         let mut threads = Vec::new();
-        for t in 0..4 {
-            let h = h.clone();
+        for _ in 0..4 {
+            let c = c.clone();
             threads.push(std::thread::spawn(move || {
-                for i in 0..1000u64 {
-                    h.record_ns(1000 + t * 17 + i);
+                for _ in 0..1000u64 {
+                    c.inc();
                 }
             }));
         }
         for t in threads {
             t.join().unwrap();
         }
-        assert_eq!(h.count(), 4000);
+        assert_eq!(c.get(), 4000);
     }
 }

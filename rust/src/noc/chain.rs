@@ -18,12 +18,13 @@
 
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
+use crate::util::stats::LatencyHist;
 
 use super::emio::{EmioLink, LANES};
+use super::engine::{CycleEngine, NocStats, Transfer};
 use super::mesh::Mesh;
 use super::router::Flit;
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
-use crate::util::stats::LatencyHist;
 
 /// A cross-chain transfer.
 #[derive(Debug, Clone, Copy)]
@@ -32,25 +33,6 @@ pub struct ChainTraffic {
     pub src: Coord,
     pub dest_chip: usize,
     pub dest: Coord,
-}
-
-/// Chain-level statistics.
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct ChainStats {
-    pub injected: u64,
-    pub delivered: u64,
-    pub cycles: u64,
-    pub total_latency: u64,
-}
-
-impl ChainStats {
-    pub fn avg_latency(&self) -> f64 {
-        if self.delivered == 0 {
-            0.0
-        } else {
-            self.total_latency as f64 / self.delivered as f64
-        }
-    }
 }
 
 /// Per-packet tracking record, indexed by chain id.
@@ -75,7 +57,7 @@ pub struct Chain<S: TelemetrySink = NoopSink> {
     now: u64,
     /// Flat id -> record table (chain ids are dense and sequential).
     tracked: Vec<Tracked>,
-    pub stats: ChainStats,
+    pub stats: NocStats,
     /// scratch buffers reused across cycles (allocation-free hot loop)
     egress_buf: Vec<(usize, Flit)>,
     frames_buf: Vec<(super::emio::Frame, u64)>,
@@ -97,7 +79,7 @@ impl<S: TelemetrySink> Chain<S> {
             dim,
             now: 0,
             tracked: Vec::new(),
-            stats: ChainStats::default(),
+            stats: NocStats::default(),
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
         }
@@ -223,24 +205,52 @@ impl<S: TelemetrySink> Chain<S> {
     /// Run to drain (bounded); returns aggregate stats. Per-packet
     /// end-to-end latency is read from the destination meshes' totals
     /// (flits carry their original inject cycle across links).
-    pub fn run(&mut self, max_cycles: u64) -> ChainStats {
-        let mut idle = 0;
-        while idle < 4 && self.now < max_cycles {
-            let before: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
-            self.step();
-            let after: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
-            let busy = self.pending() > 0 || after != before;
-            idle = if busy { 0 } else { idle + 1 };
-        }
-        self.stats.delivered = self.chips.iter().map(|m| m.stats.delivered).sum();
-        self.stats.total_latency = self.chips.iter().map(|m| m.stats.total_latency).sum();
-        self.stats.cycles = self.now;
-        self.stats.clone()
+    pub fn run(&mut self, max_cycles: u64) -> NocStats {
+        let stats = CycleEngine::run_until_drained(self, max_cycles);
+        self.stats = stats;
+        stats
     }
 
     /// Frames accepted by link `i` (test/diagnostic hook).
     pub fn link_accepted(&self, i: usize) -> u64 {
         self.links[i].accepted
+    }
+}
+
+/// The unified engine surface: eastward transfers across any chip span.
+impl<S: TelemetrySink> CycleEngine for Chain<S> {
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        Chain::inject(self, ChainTraffic::from(t))
+    }
+
+    fn step(&mut self) {
+        Chain::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        Chain::pending(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        NocStats {
+            injected: self.stats.injected,
+            delivered: self.chips.iter().map(|m| m.stats.delivered).sum(),
+            total_hops: self.chips.iter().map(|m| m.stats.total_hops).sum(),
+            total_latency: self.chips.iter().map(|m| m.stats.total_latency).sum(),
+            cycles: self.now,
+        }
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        Chain::deliveries(self)
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        Chain::latency_hist(self)
     }
 }
 

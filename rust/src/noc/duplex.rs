@@ -6,41 +6,19 @@
 
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
+use crate::util::stats::LatencyHist;
 
 use super::emio::EmioLink;
+use super::engine::{CycleEngine, NocStats, Transfer};
 use super::mesh::Mesh;
 use super::router::Flit;
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
-use crate::util::stats::LatencyHist;
 
 /// A source->dest transfer across the die gap.
 #[derive(Debug, Clone, Copy)]
 pub struct CrossTraffic {
     pub src: Coord,  // on chip A
     pub dest: Coord, // on chip B
-}
-
-/// Result of a duplex run.
-#[derive(Debug, Clone, PartialEq)]
-pub struct DuplexStats {
-    pub cycles: u64,
-    pub delivered: u64,
-    /// Per-packet end-to-end latencies (inject on A -> eject on B).
-    pub latencies: Vec<u64>,
-}
-
-impl DuplexStats {
-    pub fn max_latency(&self) -> u64 {
-        self.latencies.iter().copied().max().unwrap_or(0)
-    }
-
-    pub fn avg_latency(&self) -> f64 {
-        if self.latencies.is_empty() {
-            0.0
-        } else {
-            self.latencies.iter().sum::<u64>() as f64 / self.latencies.len() as f64
-        }
-    }
 }
 
 /// Two chips + one eastward EMIO link.
@@ -58,7 +36,6 @@ pub struct Duplex<S: TelemetrySink = NoopSink> {
     /// sequential (mesh A assigns them in inject order), so a flat Vec
     /// replaces the seed's per-frame HashMap lookup on the hot path.
     tracked: Vec<(u64, Coord)>,
-    delivered_count: u64,
     /// scratch buffers reused across cycles (allocation-free hot loop)
     egress_buf: Vec<(usize, Flit)>,
     frames_buf: Vec<(super::emio::Frame, u64)>,
@@ -80,7 +57,6 @@ impl<S: TelemetrySink> Duplex<S> {
             dim,
             now: 0,
             tracked: Vec::new(),
-            delivered_count: 0,
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
         }
@@ -110,13 +86,15 @@ impl<S: TelemetrySink> Duplex<S> {
         h
     }
 
-    /// Inject a cross-die packet at cycle `now` (src on A, dest on B).
-    pub fn inject(&mut self, t: CrossTraffic) {
+    /// Inject a cross-die packet at cycle `now` (src on A, dest on B);
+    /// returns the packet's id.
+    pub fn inject(&mut self, t: CrossTraffic) -> u64 {
         // Route on A to the East edge of the source row, then off-chip.
         let exit = Coord::new(self.dim, t.src.y as usize);
         let id = self.a.inject(t.src, exit);
         debug_assert_eq!(id as usize, self.tracked.len());
         self.tracked.push((self.now, t.dest));
+        id
     }
 
     /// One global clock cycle for both meshes and the link.
@@ -151,28 +129,61 @@ impl<S: TelemetrySink> Duplex<S> {
             }
         }
         self.b.step();
-        self.delivered_count = self.b.stats.delivered;
     }
 
-    /// Run until everything drains; return end-to-end stats.
-    pub fn run(&mut self, max_cycles: u64) -> DuplexStats {
-        let mut idle = 0;
-        while idle < 4 && self.now < max_cycles {
-            let before = self.delivered_count;
-            self.step();
-            let busy = self.a.backlog() > 0
-                || self.b.backlog() > 0
-                || self.link.pending() > 0
-                || self.delivered_count != before;
-            idle = if busy { 0 } else { idle + 1 };
-        }
-        // end-to-end latency: B-mesh tracks injected_at from the A-side
-        // inject cycle, so B's per-packet latency is end-to-end.
-        DuplexStats {
-            cycles: self.now,
+    /// Packets in flight anywhere in the topology: both mesh backlogs plus
+    /// frames inside the EMIO link — all O(1) counters.
+    pub fn backlog(&self) -> usize {
+        self.a.backlog() + self.b.backlog() + self.link.pending()
+    }
+
+    /// Run until everything drains (bounded); returns end-to-end stats.
+    /// B-mesh flits keep the A-side inject cycle, so `total_latency` is
+    /// end-to-end.
+    pub fn run(&mut self, max_cycles: u64) -> NocStats {
+        CycleEngine::run_until_drained(self, max_cycles)
+    }
+}
+
+/// The unified engine surface: transfers cross chip 0 (A) -> chip 1 (B).
+impl<S: TelemetrySink> CycleEngine for Duplex<S> {
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 1),
+            "duplex engine: transfers cross chip 0 -> chip 1"
+        );
+        Duplex::inject(self, CrossTraffic::from(t))
+    }
+
+    fn step(&mut self) {
+        Duplex::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        Duplex::backlog(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        NocStats {
+            injected: self.tracked.len() as u64,
             delivered: self.b.stats.delivered,
-            latencies: vec![self.b.stats.total_latency / self.b.stats.delivered.max(1)],
+            total_hops: self.b.stats.total_hops,
+            total_latency: self.b.stats.total_latency,
+            cycles: self.now,
         }
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        Duplex::deliveries(self)
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        Duplex::latency_hist(self)
     }
 }
 

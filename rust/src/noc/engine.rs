@@ -1,0 +1,356 @@
+//! The unified cycle-engine surface.
+//!
+//! Every clocked NoC topology in the crate — the optimized worklist engines
+//! ([`super::mesh::Mesh`], [`super::duplex::Duplex`], [`super::chain::Chain`])
+//! *and* their retained naive oracles ([`super::reference::RefMesh`],
+//! [`super::reference::RefDuplex`], [`super::reference::RefChain`]) —
+//! implements [`CycleEngine`], so every driver (the lockstep golden/fuzz
+//! harness in [`super::harness`], the bench sweep, the `spikelink noc-sim`
+//! CLI, the report figures) is written once, generically. A future engine
+//! variant (SoA router state, event-wheel EMIO scheduling, a threaded chain
+//! stepper) becomes benchable and fuzzable by implementing this one trait.
+//!
+//! [`NocStats`] is the aggregate-statistics superset that replaced the old
+//! per-topology `MeshStats`/`DuplexStats`/`ChainStats` triple. The old names
+//! are kept as thin shims ([`MeshStats`] is a plain alias; [`DuplexStats`]
+//! and [`ChainStats`] carry `From` conversions) so downstream code migrates
+//! mechanically.
+
+use crate::arch::chip::Coord;
+use crate::util::stats::LatencyHist;
+
+use super::chain::ChainTraffic;
+use super::duplex::CrossTraffic;
+use super::router::Flit;
+use super::telemetry::Delivery;
+
+/// Aggregate statistics of one engine run — the superset of every
+/// per-topology stats shape. Semantics per topology:
+///
+/// * `injected` counts *transfers* offered to the topology (cross-die
+///   re-injections at intermediate chips are not double-counted);
+/// * `total_latency` is end-to-end (flits keep their original inject cycle
+///   across die crossings);
+/// * `total_hops` counts hops on the *delivering* chip only — West-edge
+///   re-injection resets the per-chip hop counter, matching the per-packet
+///   [`Delivery::hops`] accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NocStats {
+    pub injected: u64,
+    pub delivered: u64,
+    pub total_hops: u64,
+    pub total_latency: u64,
+    pub cycles: u64,
+}
+
+impl NocStats {
+    /// Mean hops per delivered packet (0.0 before any delivery).
+    pub fn avg_hops(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_hops as f64 / self.delivered as f64
+        }
+    }
+
+    /// Mean end-to-end latency in cycles (0.0 before any delivery).
+    pub fn avg_latency(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_latency as f64 / self.delivered as f64
+        }
+    }
+
+    /// Delivered packets per cycle.
+    pub fn throughput(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.delivered as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// One topology-agnostic transfer: a packet from a tile on `src_chip` to a
+/// tile on `dest_chip`. Single-mesh engines use chip 0 only (a `dest.x`
+/// equal to the mesh dim requests East-edge egress, as in
+/// [`super::mesh::Mesh::inject`]); a duplex is chips `{0, 1}`; chains use
+/// `0..n_chips` with `dest_chip >= src_chip` (directional-X, eastward).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub src_chip: usize,
+    pub src: Coord,
+    pub dest_chip: usize,
+    pub dest: Coord,
+}
+
+impl Transfer {
+    /// Same-chip transfer (single-mesh engines).
+    pub fn local(src: Coord, dest: Coord) -> Self {
+        Transfer { src_chip: 0, src, dest_chip: 0, dest }
+    }
+
+    /// One die crossing (duplex engines: chip 0 -> chip 1).
+    pub fn crossing(src: Coord, dest: Coord) -> Self {
+        Transfer { src_chip: 0, src, dest_chip: 1, dest }
+    }
+}
+
+impl From<CrossTraffic> for Transfer {
+    fn from(t: CrossTraffic) -> Self {
+        Transfer::crossing(t.src, t.dest)
+    }
+}
+
+impl From<Transfer> for CrossTraffic {
+    fn from(t: Transfer) -> Self {
+        CrossTraffic { src: t.src, dest: t.dest }
+    }
+}
+
+impl From<ChainTraffic> for Transfer {
+    fn from(t: ChainTraffic) -> Self {
+        Transfer { src_chip: t.src_chip, src: t.src, dest_chip: t.dest_chip, dest: t.dest }
+    }
+}
+
+impl From<Transfer> for ChainTraffic {
+    fn from(t: Transfer) -> Self {
+        ChainTraffic { src_chip: t.src_chip, src: t.src, dest_chip: t.dest_chip, dest: t.dest }
+    }
+}
+
+/// The one interface every cycle engine exposes.
+///
+/// Object-safe: heterogeneous drivers hold a `Box<dyn CycleEngine>` (see
+/// [`super::scenario::Scenario::build`]); hot paths stay monomorphized by
+/// taking `E: CycleEngine` generically (see [`super::harness`]).
+pub trait CycleEngine {
+    /// Current simulation clock in cycles.
+    fn now(&self) -> u64;
+
+    /// Inject one transfer; returns the packet's topology-global id.
+    fn inject(&mut self, t: Transfer) -> u64;
+
+    /// Advance one global clock cycle (all chips and links).
+    fn step(&mut self);
+
+    /// Packets still in flight anywhere in the topology (router queues plus
+    /// EMIO links). `0` means fully drained.
+    fn backlog(&self) -> usize;
+
+    /// Aggregate statistics snapshot (valid at any point, not just after a
+    /// drain).
+    fn stats(&self) -> NocStats;
+
+    /// Merged per-packet delivery records, die-crossing counts patched in,
+    /// ordered as the topology observes ejections (empty without a
+    /// recording [`super::telemetry::TelemetrySink`]).
+    fn deliveries(&self) -> Vec<Delivery>;
+
+    /// Merged end-to-end latency histogram across every chip (empty without
+    /// a recording sink).
+    fn latency_hist(&self) -> LatencyHist;
+
+    /// Raw cross-die arrival at the West edge of `row` — the ingress an
+    /// EMIO split block feeds. Only single-mesh engines expose it; the
+    /// composite topologies own their links and panic here.
+    fn inject_west_edge(&mut self, row: usize, flit: Flit) {
+        let _ = (row, flit);
+        panic!("this CycleEngine has no exposed West edge (single-mesh engines only)");
+    }
+
+    /// Inject with a caller-assigned id (the raw ingress multi-chip
+    /// simulators use to share one global id space across meshes). Only
+    /// single-mesh engines expose it; composite topologies assign their own
+    /// dense chain ids and panic here.
+    fn inject_with_id(&mut self, t: Transfer, id: u64) {
+        let _ = (t, id);
+        panic!("this CycleEngine assigns its own packet ids (single-mesh engines only)");
+    }
+
+    /// Run until the topology drains or `max_cycles` further cycles elapse;
+    /// returns the final stats.
+    fn run_until_drained(&mut self, max_cycles: u64) -> NocStats {
+        let start = self.now();
+        while self.backlog() > 0 && self.now() - start < max_cycles {
+            self.step();
+        }
+        self.stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// migration shims for the pre-trait per-topology stats shapes
+// ---------------------------------------------------------------------------
+
+/// Migration alias: the old per-mesh stats had exactly [`NocStats`]'s
+/// fields, so the unified struct is a drop-in replacement.
+pub type MeshStats = NocStats;
+
+/// Migration shim: the old duplex result shape (per-run latency list that in
+/// practice held one averaged entry). New code reads [`NocStats`] from
+/// [`CycleEngine::stats`] instead.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DuplexStats {
+    pub cycles: u64,
+    pub delivered: u64,
+    pub latencies: Vec<u64>,
+}
+
+impl DuplexStats {
+    pub fn avg_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.latencies.iter().sum::<u64>() as f64 / self.latencies.len() as f64
+        }
+    }
+
+    pub fn max_latency(&self) -> u64 {
+        self.latencies.iter().copied().max().unwrap_or(0)
+    }
+}
+
+impl From<NocStats> for DuplexStats {
+    fn from(s: NocStats) -> Self {
+        let latencies = if s.delivered == 0 {
+            Vec::new()
+        } else {
+            vec![s.total_latency / s.delivered]
+        };
+        DuplexStats { cycles: s.cycles, delivered: s.delivered, latencies }
+    }
+}
+
+/// Migration shim: the old chain stats shape (no hop counter). New code
+/// reads [`NocStats`] from [`CycleEngine::stats`] instead.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChainStats {
+    pub injected: u64,
+    pub delivered: u64,
+    pub cycles: u64,
+    pub total_latency: u64,
+}
+
+impl ChainStats {
+    pub fn avg_latency(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_latency as f64 / self.delivered as f64
+        }
+    }
+}
+
+impl From<NocStats> for ChainStats {
+    fn from(s: NocStats) -> Self {
+        ChainStats {
+            injected: s.injected,
+            delivered: s.delivered,
+            cycles: s.cycles,
+            total_latency: s.total_latency,
+        }
+    }
+}
+
+impl From<ChainStats> for NocStats {
+    fn from(s: ChainStats) -> Self {
+        NocStats {
+            injected: s.injected,
+            delivered: s.delivered,
+            total_hops: 0, // the old shape never carried hops
+            total_latency: s.total_latency,
+            cycles: s.cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::chain::Chain;
+    use super::super::mesh::Mesh;
+    use super::*;
+
+    #[test]
+    fn nocstats_ratios_and_zero_cases() {
+        let z = NocStats::default();
+        assert_eq!(z.avg_hops(), 0.0);
+        assert_eq!(z.avg_latency(), 0.0);
+        assert_eq!(z.throughput(), 0.0);
+        let s =
+            NocStats { injected: 4, delivered: 4, total_hops: 10, total_latency: 100, cycles: 50 };
+        assert!((s.avg_hops() - 2.5).abs() < 1e-12);
+        assert!((s.avg_latency() - 25.0).abs() < 1e-12);
+        assert!((s.throughput() - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_constructors_and_conversions_roundtrip() {
+        let t = Transfer::crossing(Coord::new(7, 3), Coord::new(0, 3));
+        assert_eq!((t.src_chip, t.dest_chip), (0, 1));
+        let ct: CrossTraffic = t.into();
+        assert_eq!(Transfer::from(ct), t);
+        let c = ChainTraffic {
+            src_chip: 2,
+            src: Coord::new(1, 1),
+            dest_chip: 5,
+            dest: Coord::new(0, 4),
+        };
+        let tr = Transfer::from(c);
+        assert_eq!((tr.src_chip, tr.dest_chip), (2, 5));
+        let back: ChainTraffic = tr.into();
+        assert_eq!((back.src_chip, back.dest_chip, back.src, back.dest), (2, 5, c.src, c.dest));
+        assert_eq!(Transfer::local(c.src, c.dest).src_chip, 0);
+    }
+
+    #[test]
+    fn legacy_stat_shims_convert() {
+        let s =
+            NocStats { injected: 4, delivered: 4, total_hops: 9, total_latency: 100, cycles: 50 };
+        let d = DuplexStats::from(s);
+        assert_eq!(d.latencies, vec![25]);
+        assert!((d.avg_latency() - 25.0).abs() < 1e-12);
+        assert_eq!(d.max_latency(), 25);
+        assert!(DuplexStats::from(NocStats::default()).latencies.is_empty());
+        let c = ChainStats::from(s);
+        assert_eq!((c.injected, c.delivered, c.cycles, c.total_latency), (4, 4, 50, 100));
+        assert!((c.avg_latency() - 25.0).abs() < 1e-12);
+        let back = NocStats::from(c);
+        assert_eq!(back.total_hops, 0);
+        assert_eq!(back.total_latency, 100);
+    }
+
+    #[test]
+    fn mesh_drives_through_the_trait_object() {
+        let mut m = Mesh::new(4);
+        let e: &mut dyn CycleEngine = &mut m;
+        e.inject(Transfer::local(Coord::new(0, 0), Coord::new(3, 3)));
+        let stats = e.run_until_drained(1_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(stats.total_hops, 6);
+        assert_eq!(stats.injected, 1);
+        assert_eq!(e.backlog(), 0);
+        assert!(e.deliveries().is_empty(), "NoopSink records nothing");
+        assert!(e.latency_hist().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "West edge")]
+    fn composite_engines_reject_west_edge_ingress() {
+        let mut c = Chain::new(2, 4);
+        CycleEngine::inject_west_edge(
+            &mut c,
+            0,
+            Flit { id: 0, dest: Coord::new(0, 0), wire: 0, injected_at: 0, hops: 0 },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "own packet ids")]
+    fn composite_engines_reject_caller_assigned_ids() {
+        let mut c = Chain::new(2, 4);
+        CycleEngine::inject_with_id(&mut c, Transfer::local(Coord::new(0, 0), Coord::new(1, 1)), 7);
+    }
+}

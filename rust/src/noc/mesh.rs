@@ -11,47 +11,12 @@
 
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
+use crate::util::stats::LatencyHist;
 
+use super::engine::{CycleEngine, NocStats, Transfer};
 use super::router::{Flit, Port, Router};
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
 use super::worklist::DirtySet;
-
-/// Statistics of one mesh simulation.
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct MeshStats {
-    pub injected: u64,
-    pub delivered: u64,
-    pub total_hops: u64,
-    pub total_latency: u64,
-    pub cycles: u64,
-}
-
-impl MeshStats {
-    pub fn avg_hops(&self) -> f64 {
-        if self.delivered == 0 {
-            0.0
-        } else {
-            self.total_hops as f64 / self.delivered as f64
-        }
-    }
-
-    pub fn avg_latency(&self) -> f64 {
-        if self.delivered == 0 {
-            0.0
-        } else {
-            self.total_latency as f64 / self.delivered as f64
-        }
-    }
-
-    /// Delivered packets per cycle.
-    pub fn throughput(&self) -> f64 {
-        if self.cycles == 0 {
-            0.0
-        } else {
-            self.delivered as f64 / self.cycles as f64
-        }
-    }
-}
 
 /// An N x N mesh of routers with worklist scheduling.
 ///
@@ -63,7 +28,7 @@ impl MeshStats {
 pub struct Mesh<S: TelemetrySink = NoopSink> {
     pub dim: usize,
     routers: Vec<Router>,
-    pub stats: MeshStats,
+    pub stats: NocStats,
     /// Per-packet delivery observer (a [`NoopSink`] unless constructed via
     /// [`Mesh::with_sink`]).
     pub sink: S,
@@ -103,7 +68,7 @@ impl<S: TelemetrySink> Mesh<S> {
         Mesh {
             dim,
             routers,
-            stats: MeshStats::default(),
+            stats: NocStats::default(),
             sink,
             now: 0,
             next_id: 0,
@@ -268,6 +233,56 @@ impl<S: TelemetrySink> Mesh<S> {
             self.step();
         }
         self.now - start
+    }
+}
+
+/// The unified engine surface. Same-chip transfers only; a `dest.x` equal
+/// to the mesh dim requests East-edge egress as in [`Mesh::inject`].
+impl<S: TelemetrySink> CycleEngine for Mesh<S> {
+    fn now(&self) -> u64 {
+        Mesh::now(self)
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 0),
+            "mesh engine: single-chip transfers only"
+        );
+        Mesh::inject(self, t.src, t.dest)
+    }
+
+    fn step(&mut self) {
+        Mesh::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        Mesh::backlog(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        self.stats
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        self.sink.deliveries().to_vec()
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        self.sink.hist().cloned().unwrap_or_default()
+    }
+
+    fn inject_west_edge(&mut self, row: usize, flit: Flit) {
+        Mesh::inject_west_edge(self, row, flit)
+    }
+
+    fn inject_with_id(&mut self, t: Transfer, id: u64) {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 0),
+            "mesh engine: single-chip transfers only"
+        );
+        Mesh::inject_with_id(self, t.src, t.dest, id)
     }
 }
 

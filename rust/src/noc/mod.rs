@@ -1,6 +1,35 @@
 //! Cycle-level NoC simulator (§4.2's "custom simulation framework", the
 //! clocked counterpart of the closed-form `analytic` engine).
 //!
+//! ## The unified engine surface
+//!
+//! Every clocked topology implements the [`engine::CycleEngine`] trait
+//! (`now` / `inject` / `step` / `backlog` / `run_until_drained` / `stats` /
+//! `deliveries` / `latency_hist`), returning one [`engine::NocStats`]
+//! aggregate regardless of topology. [`scenario::Scenario`] builds any of
+//! the six engines from a serializable description
+//! (`Scenario::mesh(16)`, `Scenario::chain(4, 8)`, `.with_telemetry()`,
+//! `.traffic(...)`, `.build()` / `.build_reference()`; JSON schema
+//! `scenario/v1` in EXPERIMENTS.md §Perf), and [`harness`] holds the only
+//! drivers in the repo: the golden/fuzz `lockstep` differential harness and
+//! the `run_schedule` player behind the bench sweep and `spikelink noc-sim`.
+//!
+//! **Migration note** (pre-trait API): the per-topology constructors are
+//! unchanged (`Mesh::new(dim)`, `Duplex::new(dim)`, `Chain::new(chips,
+//! dim)`, `with_sink`/`with_sinks` for telemetry), but the per-topology
+//! stats structs are gone — `MeshStats` is now an alias of
+//! [`engine::NocStats`], and the old `DuplexStats`/`ChainStats` shapes
+//! survive only as `From<NocStats>` shims in [`engine`]. `Duplex::run` /
+//! `Chain::run` return [`engine::NocStats`]; per-topology driver loops
+//! should be replaced with [`harness::run_schedule`] /
+//! [`harness::lockstep`] over `CycleEngine`.
+//!
+//! ## Modules
+//!
+//! * [`engine`] — the [`engine::CycleEngine`] trait, [`engine::NocStats`],
+//!   [`engine::Transfer`], and the legacy-stats migration shims;
+//! * [`harness`] — generic lockstep + schedule drivers;
+//! * [`scenario`] — serializable, reproducible scenario builder;
 //! * [`router`] — 5-port X-Y routers with East/West priority, ring-buffer
 //!   input FIFOs of packed `Copy` flits;
 //! * [`fifo`]   — the fixed-capacity ring buffer behind every input port;
@@ -12,8 +41,8 @@
 //!   (validates the 76-cycle single-packet RTL figure);
 //! * [`duplex`] — two chips + one EMIO link, end-to-end;
 //! * [`chain`]  — C chips in a directional-X chain with repeater hops;
-//! * [`reference`] — the retained naive engine (full-scan, `VecDeque`
-//!   FIFOs): golden-equivalence oracle and perf baseline;
+//! * [`reference`] — the retained naive engines (full-scan, `VecDeque`
+//!   FIFOs): golden-equivalence oracles and perf baselines;
 //! * [`telemetry`] — zero-overhead-when-off per-packet delivery records
 //!   ([`telemetry::NoopSink`] monomorphizes to nothing;
 //!   [`telemetry::DeliverySink`] feeds the p50/p99/p999 figures);
@@ -26,19 +55,25 @@ pub mod clp;
 pub mod core_sim;
 pub mod duplex;
 pub mod emio;
+pub mod engine;
 pub mod fifo;
+pub mod harness;
 pub mod mesh;
 pub mod model_sim;
 pub mod reference;
 pub mod router;
+pub mod scenario;
 pub mod telemetry;
 pub mod traffic;
 pub mod worklist;
 
-pub use chain::{Chain, ChainStats, ChainTraffic};
-pub use duplex::{CrossTraffic, Duplex, DuplexStats};
+pub use chain::{Chain, ChainTraffic};
+pub use duplex::{CrossTraffic, Duplex};
 pub use emio::EmioLink;
-pub use mesh::{Mesh, MeshStats};
+pub use engine::{ChainStats, CycleEngine, DuplexStats, MeshStats, NocStats, Transfer};
+pub use harness::{lockstep, run_schedule, Op};
+pub use mesh::Mesh;
 pub use reference::{RefChain, RefDuplex, RefMesh};
 pub use router::{route_xy, Flit, Port, Router};
+pub use scenario::{Scenario, ScenarioResult, Topology, TrafficSpec};
 pub use telemetry::{Delivery, DeliverySink, NoopSink, TelemetrySink};

@@ -5,7 +5,9 @@
 //!
 //! 1. **Golden equivalence** (`rust/tests/golden_noc.rs`): the optimized
 //!    engine ([`super::mesh::Mesh`] & co.) must produce *identical*
-//!    `MeshStats`/`DuplexStats`/`ChainStats` on identical seeded loads.
+//!    [`NocStats`] and per-packet records on identical seeded loads —
+//!    asserted through the shared [`super::harness::lockstep`] driver (all
+//!    three reference engines implement [`CycleEngine`] too).
 //! 2. **Perf baseline** (`benches/noc_cycle.rs`): every optimized number is
 //!    reported next to this engine's number from the same run, so the perf
 //!    trajectory in `BENCH_noc_cycle.json` is grounded.
@@ -24,10 +26,10 @@ use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
 use crate::util::stats::LatencyHist;
 
-use super::chain::{ChainStats, ChainTraffic};
-use super::duplex::{CrossTraffic, DuplexStats};
+use super::chain::ChainTraffic;
+use super::duplex::CrossTraffic;
 use super::emio::{EmioLink, Frame, LANES};
-use super::mesh::MeshStats;
+use super::engine::{CycleEngine, NocStats, Transfer};
 use super::router::{route_xy, Flit, Port, IN_PORTS};
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
 
@@ -92,7 +94,7 @@ impl RefRouter {
 pub struct RefMesh<S: TelemetrySink = NoopSink> {
     pub dim: usize,
     routers: Vec<RefRouter>,
-    pub stats: MeshStats,
+    pub stats: NocStats,
     pub sink: S,
     now: u64,
     next_id: u64,
@@ -115,7 +117,7 @@ impl<S: TelemetrySink> RefMesh<S> {
         RefMesh {
             dim,
             routers,
-            stats: MeshStats::default(),
+            stats: NocStats::default(),
             sink,
             now: 0,
             next_id: 0,
@@ -219,6 +221,55 @@ impl<S: TelemetrySink> RefMesh<S> {
     }
 }
 
+/// The unified engine surface — mirrors [`super::mesh::Mesh`]'s impl.
+impl<S: TelemetrySink> CycleEngine for RefMesh<S> {
+    fn now(&self) -> u64 {
+        RefMesh::now(self)
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 0),
+            "mesh engine: single-chip transfers only"
+        );
+        RefMesh::inject(self, t.src, t.dest)
+    }
+
+    fn step(&mut self) {
+        RefMesh::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        RefMesh::backlog(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        self.stats
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        self.sink.deliveries().to_vec()
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        self.sink.hist().cloned().unwrap_or_default()
+    }
+
+    fn inject_west_edge(&mut self, row: usize, flit: Flit) {
+        RefMesh::inject_west_edge(self, row, flit)
+    }
+
+    fn inject_with_id(&mut self, t: Transfer, id: u64) {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 0),
+            "mesh engine: single-chip transfers only"
+        );
+        RefMesh::inject_with_id(self, t.src, t.dest, id)
+    }
+}
+
 /// Naive duplex: HashMap packet tracking, O(N) backlog checks per cycle.
 pub struct RefDuplex<S: TelemetrySink = NoopSink> {
     pub a: RefMesh<S>,
@@ -227,7 +278,6 @@ pub struct RefDuplex<S: TelemetrySink = NoopSink> {
     dim: usize,
     now: u64,
     tracked: HashMap<u64, (u64, Coord)>,
-    delivered_count: u64,
     next_id: u64,
     egress_buf: Vec<(usize, Flit)>,
     frames_buf: Vec<(Frame, u64)>,
@@ -248,7 +298,6 @@ impl<S: TelemetrySink> RefDuplex<S> {
             dim,
             now: 0,
             tracked: HashMap::new(),
-            delivered_count: 0,
             next_id: 0,
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
@@ -279,11 +328,13 @@ impl<S: TelemetrySink> RefDuplex<S> {
         h
     }
 
-    pub fn inject(&mut self, t: CrossTraffic) {
+    pub fn inject(&mut self, t: CrossTraffic) -> u64 {
         let exit = Coord::new(self.dim, t.src.y as usize);
-        self.a.inject(t.src, exit);
+        let id = self.a.inject(t.src, exit);
+        debug_assert_eq!(id, self.next_id);
         self.tracked.insert(self.next_id, (self.now, t.dest));
         self.next_id += 1;
+        id
     }
 
     pub fn step(&mut self) {
@@ -312,25 +363,57 @@ impl<S: TelemetrySink> RefDuplex<S> {
             }
         }
         self.b.step();
-        self.delivered_count = self.b.stats.delivered;
     }
 
-    pub fn run(&mut self, max_cycles: u64) -> DuplexStats {
-        let mut idle = 0;
-        while idle < 4 && self.now < max_cycles {
-            let before = self.delivered_count;
-            self.step();
-            let busy = self.a.backlog() > 0
-                || self.b.backlog() > 0
-                || self.link.pending() > 0
-                || self.delivered_count != before;
-            idle = if busy { 0 } else { idle + 1 };
-        }
-        DuplexStats {
-            cycles: self.now,
+    /// O(dim²) queue re-sums plus the link — mirrors `Duplex::backlog`.
+    pub fn backlog(&self) -> usize {
+        self.a.backlog() + self.b.backlog() + self.link.pending()
+    }
+
+    pub fn run(&mut self, max_cycles: u64) -> NocStats {
+        CycleEngine::run_until_drained(self, max_cycles)
+    }
+}
+
+/// The unified engine surface — mirrors [`super::duplex::Duplex`]'s impl.
+impl<S: TelemetrySink> CycleEngine for RefDuplex<S> {
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 1),
+            "duplex engine: transfers cross chip 0 -> chip 1"
+        );
+        RefDuplex::inject(self, CrossTraffic::from(t))
+    }
+
+    fn step(&mut self) {
+        RefDuplex::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        RefDuplex::backlog(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        NocStats {
+            injected: self.tracked.len() as u64,
             delivered: self.b.stats.delivered,
-            latencies: vec![self.b.stats.total_latency / self.b.stats.delivered.max(1)],
+            total_hops: self.b.stats.total_hops,
+            total_latency: self.b.stats.total_latency,
+            cycles: self.now,
         }
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        RefDuplex::deliveries(self)
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        RefDuplex::latency_hist(self)
     }
 }
 
@@ -341,7 +424,7 @@ pub struct RefChain<S: TelemetrySink = NoopSink> {
     dim: usize,
     now: u64,
     tracked: Vec<(u64, usize, Coord, usize)>,
-    pub stats: ChainStats,
+    pub stats: NocStats,
     egress_buf: Vec<(usize, Flit)>,
     frames_buf: Vec<(Frame, u64)>,
 }
@@ -361,7 +444,7 @@ impl<S: TelemetrySink> RefChain<S> {
             dim,
             now: 0,
             tracked: Vec::new(),
-            stats: ChainStats::default(),
+            stats: NocStats::default(),
             egress_buf: Vec::new(),
             frames_buf: Vec::new(),
         }
@@ -464,19 +547,47 @@ impl<S: TelemetrySink> RefChain<S> {
             + self.links.iter().map(|l| l.pending()).sum::<usize>()
     }
 
-    pub fn run(&mut self, max_cycles: u64) -> ChainStats {
-        let mut idle = 0;
-        while idle < 4 && self.now < max_cycles {
-            let before: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
-            self.step();
-            let after: u64 = self.chips.iter().map(|m| m.stats.delivered).sum();
-            let busy = self.pending() > 0 || after != before;
-            idle = if busy { 0 } else { idle + 1 };
+    pub fn run(&mut self, max_cycles: u64) -> NocStats {
+        let stats = CycleEngine::run_until_drained(self, max_cycles);
+        self.stats = stats;
+        stats
+    }
+}
+
+/// The unified engine surface — mirrors [`super::chain::Chain`]'s impl.
+impl<S: TelemetrySink> CycleEngine for RefChain<S> {
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        RefChain::inject(self, ChainTraffic::from(t))
+    }
+
+    fn step(&mut self) {
+        RefChain::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        RefChain::pending(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        NocStats {
+            injected: self.stats.injected,
+            delivered: self.chips.iter().map(|m| m.stats.delivered).sum(),
+            total_hops: self.chips.iter().map(|m| m.stats.total_hops).sum(),
+            total_latency: self.chips.iter().map(|m| m.stats.total_latency).sum(),
+            cycles: self.now,
         }
-        self.stats.delivered = self.chips.iter().map(|m| m.stats.delivered).sum();
-        self.stats.total_latency = self.chips.iter().map(|m| m.stats.total_latency).sum();
-        self.stats.cycles = self.now;
-        self.stats.clone()
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        RefChain::deliveries(self)
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        RefChain::latency_hist(self)
     }
 }
 

@@ -1,0 +1,565 @@
+//! Reproducible, serializable simulation scenarios.
+//!
+//! A [`Scenario`] names a topology, a seeded traffic specification, and run
+//! options; [`Scenario::build`] / [`Scenario::build_reference`] stamp out
+//! the matching engine behind a `Box<dyn CycleEngine>`, and
+//! [`Scenario::run`] plays the deterministic injection schedule through the
+//! shared [`super::harness::run_schedule`] driver. The whole value
+//! serializes to/from JSON (`scenario/v1`, documented in EXPERIMENTS.md
+//! §Perf), so any measured run — a bench case, a CLI invocation, a figure —
+//! can be reproduced from one small file:
+//!
+//! ```
+//! use spikelink::noc::{Scenario, TrafficSpec};
+//!
+//! let sc = Scenario::mesh(4).traffic(TrafficSpec::Uniform { packets: 8, seed: 1 });
+//! let json = sc.to_json().to_string_pretty();
+//! let back = Scenario::from_json_str(&json).unwrap();
+//! assert_eq!(back, sc);
+//! assert_eq!(back.run().stats, sc.run().stats);
+//! ```
+//!
+//! Seeds are stored as JSON numbers; keep them below 2^53 so the round trip
+//! is exact.
+
+use anyhow::{anyhow, Result};
+
+use crate::analytic::latency::TailLatency;
+use crate::arch::chip::Coord;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::chain::Chain;
+use super::duplex::Duplex;
+use super::engine::{CycleEngine, NocStats, Transfer};
+use super::harness::run_schedule;
+use super::mesh::Mesh;
+use super::reference::{RefChain, RefDuplex, RefMesh};
+use super::telemetry::DeliverySink;
+use super::traffic::boundary_edge_traffic;
+
+/// Default drain cap for scenario runs (cycles after the last injection).
+pub const DEFAULT_MAX_CYCLES: u64 = 100_000_000;
+
+/// Which engine family a scenario instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// One `dim` x `dim` mesh chip.
+    Mesh { dim: usize },
+    /// Two chips joined by one eastward EMIO link.
+    Duplex { dim: usize },
+    /// `chips` chips in a directional-X chain.
+    Chain { chips: usize, dim: usize },
+}
+
+impl Topology {
+    /// Mesh dimension of every chip in the topology.
+    pub fn dim(&self) -> usize {
+        match *self {
+            Topology::Mesh { dim } | Topology::Duplex { dim } | Topology::Chain { dim, .. } => dim,
+        }
+    }
+
+    /// Number of chips (1 for a mesh, 2 for a duplex).
+    pub fn chips(&self) -> usize {
+        match *self {
+            Topology::Mesh { .. } => 1,
+            Topology::Duplex { .. } => 2,
+            Topology::Chain { chips, .. } => chips,
+        }
+    }
+
+    /// Scenario-derived case label used in bench record names
+    /// (`"mesh16"`, `"duplex8"`, `"chain4x8"`).
+    pub fn label(&self) -> String {
+        match *self {
+            Topology::Mesh { dim } => format!("mesh{dim}"),
+            Topology::Duplex { dim } => format!("duplex{dim}"),
+            Topology::Chain { chips, dim } => format!("chain{chips}x{dim}"),
+        }
+    }
+}
+
+/// Seeded, deterministic traffic specification. Every variant expands to
+/// the same `(cycle, Transfer)` schedule for the same seed and topology.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficSpec {
+    /// `packets` uniform random transfers, all present at cycle 0 (random
+    /// tiles; chains draw a random eastward chip span per packet).
+    Uniform { packets: usize, seed: u64 },
+    /// Like `Uniform`, but every packet spans the whole topology: source on
+    /// chip 0, destination on the last chip — so each packet makes the same
+    /// number of die crossings (latency-distribution figures).
+    FullSpan { packets: usize, seed: u64 },
+    /// One random transfer every `period` cycles over `cycles` cycles — the
+    /// paper's spike-traffic regime (most routers idle most cycles).
+    Sparse { cycles: u64, period: u64, seed: u64 },
+    /// §3 boundary-edge traffic from [`super::traffic::boundary_edge_traffic`]:
+    /// `dense` packets per neuron when `dense > 0`, otherwise rate-coded
+    /// spiking at `activity` over `ticks`. Sources sit on the East boundary
+    /// column of chip 0; destinations on the topology's last chip.
+    Boundary { neurons: usize, dense: usize, activity: f64, ticks: u32, seed: u64 },
+}
+
+/// Result of one scenario run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioResult {
+    pub stats: NocStats,
+    /// Measured tail quantiles — present when the scenario ran with
+    /// telemetry and delivered at least one packet.
+    pub tail: Option<TailLatency>,
+}
+
+/// A reproducible simulation scenario: topology + traffic + run options.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scenario {
+    pub topology: Topology,
+    pub traffic: TrafficSpec,
+    /// Record per-packet deliveries (a `DeliverySink` per chip) when true.
+    pub telemetry: bool,
+    /// Drain cap passed to `run_until_drained` after the last injection.
+    pub max_cycles: u64,
+}
+
+impl Scenario {
+    fn new(topology: Topology) -> Self {
+        Scenario {
+            topology,
+            traffic: TrafficSpec::Uniform { packets: 1024, seed: 1 },
+            telemetry: false,
+            max_cycles: DEFAULT_MAX_CYCLES,
+        }
+    }
+
+    /// A single-mesh scenario (`dim` x `dim`).
+    pub fn mesh(dim: usize) -> Self {
+        assert!(dim >= 1, "mesh dim must be >= 1");
+        Self::new(Topology::Mesh { dim })
+    }
+
+    /// A two-chip duplex scenario.
+    pub fn duplex(dim: usize) -> Self {
+        assert!(dim >= 1, "duplex dim must be >= 1");
+        Self::new(Topology::Duplex { dim })
+    }
+
+    /// A `chips`-chip chain scenario.
+    pub fn chain(chips: usize, dim: usize) -> Self {
+        assert!(chips >= 1 && dim >= 1, "chain needs chips >= 1 and dim >= 1");
+        Self::new(Topology::Chain { chips, dim })
+    }
+
+    /// Replace the traffic specification.
+    pub fn traffic(mut self, spec: TrafficSpec) -> Self {
+        self.traffic = spec;
+        self
+    }
+
+    /// Enable per-packet delivery telemetry (tail quantiles in the result).
+    pub fn with_telemetry(mut self) -> Self {
+        self.telemetry = true;
+        self
+    }
+
+    /// Replace the post-injection drain cap.
+    pub fn with_max_cycles(mut self, max_cycles: u64) -> Self {
+        self.max_cycles = max_cycles;
+        self
+    }
+
+    /// Scenario-derived case label (see [`Topology::label`]).
+    pub fn label(&self) -> String {
+        self.topology.label()
+    }
+
+    // -- schedule expansion -------------------------------------------------
+
+    fn random_transfer(&self, rng: &mut Rng) -> Transfer {
+        let dim = self.topology.dim();
+        let src = Coord::new(rng.range(0, dim), rng.range(0, dim));
+        let dest = Coord::new(rng.range(0, dim), rng.range(0, dim));
+        match self.topology {
+            Topology::Mesh { .. } => Transfer::local(src, dest),
+            Topology::Duplex { .. } => Transfer::crossing(src, dest),
+            Topology::Chain { chips, .. } => {
+                let src_chip = rng.range(0, chips);
+                let dest_chip = rng.range(src_chip, chips); // eastward span
+                Transfer { src_chip, src, dest_chip, dest }
+            }
+        }
+    }
+
+    fn span_transfer(&self, rng: &mut Rng) -> Transfer {
+        let dim = self.topology.dim();
+        let src = Coord::new(rng.range(0, dim), rng.range(0, dim));
+        let dest = Coord::new(rng.range(0, dim), rng.range(0, dim));
+        Transfer { src_chip: 0, src, dest_chip: self.topology.chips() - 1, dest }
+    }
+
+    /// Expand the traffic spec into the deterministic injection schedule:
+    /// ascending `(cycle, transfer)` pairs.
+    pub fn schedule(&self) -> Vec<(u64, Transfer)> {
+        match self.traffic {
+            TrafficSpec::Uniform { packets, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..packets).map(|_| (0, self.random_transfer(&mut rng))).collect()
+            }
+            TrafficSpec::FullSpan { packets, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..packets).map(|_| (0, self.span_transfer(&mut rng))).collect()
+            }
+            TrafficSpec::Sparse { cycles, period, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..cycles)
+                    .step_by(period.max(1) as usize)
+                    .map(|t| (t, self.random_transfer(&mut rng)))
+                    .collect()
+            }
+            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed } => {
+                let last = self.topology.chips() - 1;
+                boundary_edge_traffic(neurons, dense, activity, ticks, self.topology.dim(), seed)
+                    .into_iter()
+                    .map(|t| {
+                        (0, Transfer { src_chip: 0, src: t.src, dest_chip: last, dest: t.dest })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    // -- engine construction ------------------------------------------------
+
+    /// Instantiate the optimized (worklist) engine for this scenario.
+    pub fn build(&self) -> Box<dyn CycleEngine> {
+        match (self.topology, self.telemetry) {
+            (Topology::Mesh { dim }, false) => Box::new(Mesh::new(dim)),
+            (Topology::Mesh { dim }, true) => Box::new(Mesh::with_sink(dim, DeliverySink::new())),
+            (Topology::Duplex { dim }, false) => Box::new(Duplex::new(dim)),
+            (Topology::Duplex { dim }, true) => Box::new(Duplex::<DeliverySink>::with_sinks(dim)),
+            (Topology::Chain { chips, dim }, false) => Box::new(Chain::new(chips, dim)),
+            (Topology::Chain { chips, dim }, true) => {
+                Box::new(Chain::<DeliverySink>::with_sinks(chips, dim))
+            }
+        }
+    }
+
+    /// Instantiate the retained naive reference engine for this scenario.
+    pub fn build_reference(&self) -> Box<dyn CycleEngine> {
+        match (self.topology, self.telemetry) {
+            (Topology::Mesh { dim }, false) => Box::new(RefMesh::new(dim)),
+            (Topology::Mesh { dim }, true) => {
+                Box::new(RefMesh::with_sink(dim, DeliverySink::new()))
+            }
+            (Topology::Duplex { dim }, false) => Box::new(RefDuplex::new(dim)),
+            (Topology::Duplex { dim }, true) => {
+                Box::new(RefDuplex::<DeliverySink>::with_sinks(dim))
+            }
+            (Topology::Chain { chips, dim }, false) => Box::new(RefChain::new(chips, dim)),
+            (Topology::Chain { chips, dim }, true) => {
+                Box::new(RefChain::<DeliverySink>::with_sinks(chips, dim))
+            }
+        }
+    }
+
+    fn run_on(&self, e: &mut dyn CycleEngine) -> ScenarioResult {
+        let stats = run_schedule(&mut *e, &self.schedule(), self.max_cycles);
+        let hist = e.latency_hist();
+        let tail = if self.telemetry && !hist.is_empty() {
+            Some(TailLatency::from_hist(&hist))
+        } else {
+            None
+        };
+        ScenarioResult { stats, tail }
+    }
+
+    /// Build the optimized engine, play the schedule, drain, and report.
+    pub fn run(&self) -> ScenarioResult {
+        let mut e = self.build();
+        self.run_on(&mut *e)
+    }
+
+    /// Same run on the naive reference engine.
+    pub fn run_reference(&self) -> ScenarioResult {
+        let mut e = self.build_reference();
+        self.run_on(&mut *e)
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    /// Serialize as `scenario/v1` (see EXPERIMENTS.md §Perf).
+    pub fn to_json(&self) -> Json {
+        let topology = match self.topology {
+            Topology::Mesh { dim } => Json::obj(vec![
+                ("kind", Json::str("mesh")),
+                ("dim", Json::num(dim as f64)),
+            ]),
+            Topology::Duplex { dim } => Json::obj(vec![
+                ("kind", Json::str("duplex")),
+                ("dim", Json::num(dim as f64)),
+            ]),
+            Topology::Chain { chips, dim } => Json::obj(vec![
+                ("kind", Json::str("chain")),
+                ("chips", Json::num(chips as f64)),
+                ("dim", Json::num(dim as f64)),
+            ]),
+        };
+        let traffic = match self.traffic {
+            TrafficSpec::Uniform { packets, seed } => Json::obj(vec![
+                ("kind", Json::str("uniform")),
+                ("packets", Json::num(packets as f64)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+            TrafficSpec::FullSpan { packets, seed } => Json::obj(vec![
+                ("kind", Json::str("full-span")),
+                ("packets", Json::num(packets as f64)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+            TrafficSpec::Sparse { cycles, period, seed } => Json::obj(vec![
+                ("kind", Json::str("sparse")),
+                ("cycles", Json::num(cycles as f64)),
+                ("period", Json::num(period as f64)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed } => Json::obj(vec![
+                ("kind", Json::str("boundary")),
+                ("neurons", Json::num(neurons as f64)),
+                ("dense", Json::num(dense as f64)),
+                ("activity", Json::num(activity)),
+                ("ticks", Json::num(ticks as f64)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("schema", Json::str("scenario/v1")),
+            ("topology", topology),
+            ("traffic", traffic),
+            ("telemetry", Json::Bool(self.telemetry)),
+            ("max_cycles", Json::num(self.max_cycles as f64)),
+        ])
+    }
+
+    /// Parse a `scenario/v1` document.
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        if let Some(schema) = j.get("schema").and_then(Json::as_str) {
+            if schema != "scenario/v1" {
+                return Err(anyhow!("unsupported scenario schema {schema:?}"));
+            }
+        }
+        let topo = j.get("topology").ok_or_else(|| anyhow!("scenario: missing topology"))?;
+        let kind = topo
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("scenario: topology.kind missing"))?;
+        let dim = topo
+            .get("dim")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("scenario: topology.dim missing"))?;
+        if dim == 0 {
+            return Err(anyhow!("scenario: topology.dim must be >= 1"));
+        }
+        let topology = match kind {
+            "mesh" => Topology::Mesh { dim },
+            "duplex" => Topology::Duplex { dim },
+            "chain" => {
+                let chips = topo
+                    .get("chips")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("scenario: chain topology needs chips"))?;
+                if chips == 0 {
+                    return Err(anyhow!("scenario: topology.chips must be >= 1"));
+                }
+                Topology::Chain { chips, dim }
+            }
+            other => return Err(anyhow!("scenario: unknown topology kind {other:?}")),
+        };
+        let tr = j.get("traffic").ok_or_else(|| anyhow!("scenario: missing traffic"))?;
+        let tkind = tr
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("scenario: traffic.kind missing"))?;
+        // Reject negative or fractional numbers instead of letting `as u64`
+        // coerce them — a coerced seed/cycle count would silently run a
+        // *different* scenario than the file describes.
+        let non_negative = |field: &str, n: Option<f64>| -> Result<u64> {
+            match n {
+                None => Err(anyhow!("scenario: {field} missing")),
+                Some(n) if n < 0.0 || n.fract() != 0.0 => {
+                    Err(anyhow!("scenario: {field} must be a non-negative integer, got {n}"))
+                }
+                Some(n) => Ok(n as u64),
+            }
+        };
+        let field_u64 = |name: &str| -> Result<u64> {
+            non_negative(&format!("traffic.{name}"), tr.get(name).and_then(Json::as_f64))
+        };
+        let field_usize = |name: &str| -> Result<usize> { field_u64(name).map(|n| n as usize) };
+        let traffic = match tkind {
+            "uniform" => {
+                TrafficSpec::Uniform { packets: field_usize("packets")?, seed: field_u64("seed")? }
+            }
+            "full-span" => {
+                TrafficSpec::FullSpan { packets: field_usize("packets")?, seed: field_u64("seed")? }
+            }
+            "sparse" => TrafficSpec::Sparse {
+                cycles: field_u64("cycles")?,
+                period: field_u64("period")?,
+                seed: field_u64("seed")?,
+            },
+            "boundary" => TrafficSpec::Boundary {
+                neurons: field_usize("neurons")?,
+                dense: field_usize("dense")?,
+                activity: tr
+                    .get("activity")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("scenario: traffic.activity missing"))?,
+                ticks: field_u64("ticks")? as u32,
+                seed: field_u64("seed")?,
+            },
+            other => return Err(anyhow!("scenario: unknown traffic kind {other:?}")),
+        };
+        let max_cycles = match j.get("max_cycles").and_then(Json::as_f64) {
+            None => DEFAULT_MAX_CYCLES,
+            some => non_negative("max_cycles", some)?,
+        };
+        Ok(Scenario {
+            topology,
+            traffic,
+            telemetry: j.get("telemetry").and_then(Json::as_bool).unwrap_or(false),
+            max_cycles,
+        })
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_str(text: &str) -> Result<Scenario> {
+        let j = json::parse(text).map_err(|e| anyhow!("scenario JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_scenario_derived() {
+        assert_eq!(Scenario::mesh(16).label(), "mesh16");
+        assert_eq!(Scenario::duplex(8).label(), "duplex8");
+        assert_eq!(Scenario::chain(4, 8).label(), "chain4x8");
+    }
+
+    #[test]
+    fn roundtripped_scenario_reproduces_identical_stats() {
+        // the acceptance criterion: Scenario -> JSON -> Scenario -> run
+        // yields bit-identical NocStats (and tail quantiles), on both the
+        // optimized and reference engines.
+        let sc = Scenario::chain(3, 4)
+            .with_telemetry()
+            .traffic(TrafficSpec::Uniform { packets: 40, seed: 9 })
+            .with_max_cycles(10_000_000);
+        let text = sc.to_json().to_string_pretty();
+        let back = Scenario::from_json_str(&text).expect("round trip parses");
+        assert_eq!(back, sc);
+        let a = sc.run();
+        let b = back.run();
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.tail, b.tail);
+        assert_eq!(a.stats.delivered, 40);
+        assert!(a.tail.is_some(), "telemetry scenario reports tail quantiles");
+        // and the reference engine agrees on the same scenario
+        let r = back.run_reference();
+        assert_eq!(a.stats, r.stats);
+        assert_eq!(a.tail, r.tail);
+    }
+
+    #[test]
+    fn every_topology_matches_its_reference() {
+        let cases = [
+            Scenario::mesh(4).traffic(TrafficSpec::Sparse { cycles: 200, period: 8, seed: 5 }),
+            Scenario::duplex(4).traffic(TrafficSpec::Uniform { packets: 24, seed: 5 }),
+            Scenario::chain(2, 4).traffic(TrafficSpec::FullSpan { packets: 16, seed: 5 }),
+        ];
+        for sc in cases {
+            let a = sc.run();
+            let r = sc.run_reference();
+            assert_eq!(a.stats, r.stats, "{}: engines diverged", sc.label());
+            assert!(a.stats.delivered > 0, "{}: nothing delivered", sc.label());
+        }
+    }
+
+    #[test]
+    fn boundary_traffic_spans_the_topology() {
+        let sc = Scenario::chain(3, 8).with_telemetry().traffic(TrafficSpec::Boundary {
+            neurons: 16,
+            dense: 1,
+            activity: 0.0,
+            ticks: 0,
+            seed: 2,
+        });
+        let sched = sc.schedule();
+        assert_eq!(sched.len(), 16);
+        assert!(sched.iter().all(|(c, t)| *c == 0 && t.src_chip == 0 && t.dest_chip == 2));
+        assert!(sched.iter().all(|(_, t)| t.src.x == 7), "sources sit on the East boundary");
+        let res = sc.run();
+        assert_eq!(res.stats.delivered, 16);
+        // every packet crossed two dies: the tail floor is 2 x 76
+        assert!(res.tail.unwrap().p50 >= 152);
+    }
+
+    #[test]
+    fn sparse_schedule_is_periodic_and_seed_deterministic() {
+        let sc =
+            Scenario::mesh(8).traffic(TrafficSpec::Sparse { cycles: 100, period: 10, seed: 3 });
+        let a = sc.schedule();
+        let b = sc.schedule();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().enumerate().all(|(i, (c, _))| *c == 10 * i as u64));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_documents() {
+        assert!(Scenario::from_json_str("not json").is_err());
+        assert!(Scenario::from_json_str(r#"{"schema": "scenario/v1"}"#).is_err());
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "torus", "dim": 8}, "traffic": {"kind": "uniform", "packets": 1, "seed": 1}}"#
+        )
+        .is_err());
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 0}, "traffic": {"kind": "uniform", "packets": 1, "seed": 1}}"#
+        )
+        .is_err());
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "chain", "dim": 8}, "traffic": {"kind": "uniform", "packets": 1, "seed": 1}}"#
+        )
+        .is_err(), "chain without chips");
+        // negative numbers must be rejected, not saturated to 0 (a coerced
+        // seed would silently run a different scenario than the file says)
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8}, "traffic": {"kind": "uniform", "packets": 1, "seed": -1}}"#
+        )
+        .is_err(), "negative seed");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8}, "traffic": {"kind": "uniform", "packets": 1, "seed": 1}, "max_cycles": -5}"#
+        )
+        .is_err(), "negative max_cycles");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8}, "traffic": {"kind": "uniform", "packets": 1.5, "seed": 1}}"#
+        )
+        .is_err(), "fractional packets");
+        // missing optional fields default: telemetry off, max_cycles default
+        let sc = Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8}, "traffic": {"kind": "uniform", "packets": 4, "seed": 1}}"#,
+        )
+        .unwrap();
+        assert!(!sc.telemetry);
+        assert_eq!(sc.max_cycles, DEFAULT_MAX_CYCLES);
+    }
+
+    #[test]
+    fn no_telemetry_means_no_tail() {
+        let sc = Scenario::mesh(4).traffic(TrafficSpec::Uniform { packets: 8, seed: 1 });
+        let res = sc.run();
+        assert_eq!(res.stats.delivered, 8);
+        assert!(res.tail.is_none());
+    }
+}

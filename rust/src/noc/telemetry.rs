@@ -18,7 +18,11 @@
 //!
 //! The reference engines record through the *same* trait, so the golden and
 //! fuzz suites assert per-packet equality — id by id, cycle by cycle — not
-//! just aggregate stats.
+//! just aggregate stats. Consumers usually read the records through the
+//! unified engine surface: [`super::engine::CycleEngine::deliveries`]
+//! merges per-chip sinks with die-crossing counts patched in, and
+//! [`super::engine::CycleEngine::latency_hist`] merges the per-chip
+//! histograms into one end-to-end distribution.
 
 use crate::util::stats::LatencyHist;
 

@@ -84,6 +84,54 @@ mod tests {
     }
 
     #[test]
+    fn full_activity_fires_every_tick() {
+        // activity 1.0 is the dense limit of rate coding: every one of the
+        // N x T Bernoulli draws fires, exactly.
+        let t = boundary_edge_traffic(16, 0, 1.0, 8, 8, 3);
+        assert_eq!(t.len(), 16 * 8);
+    }
+
+    #[test]
+    fn edge_distribution_hand_checked() {
+        // neuron i sources from the East boundary column at row i % dim and
+        // targets column (i / dim) % dim of the mirrored row on the far chip
+        let dim = 4;
+        let t = boundary_edge_traffic(10, 1, 0.0, 0, dim, 9);
+        assert_eq!(t.len(), 10);
+        for (i, tr) in t.iter().enumerate() {
+            assert_eq!(tr.src.x as usize, dim - 1, "neuron {i}");
+            assert_eq!(tr.src.y as usize, i % dim, "neuron {i}");
+            assert_eq!(tr.dest.x as usize, (i / dim) % dim, "neuron {i}");
+            assert_eq!(tr.dest.y as usize, i % dim, "neuron {i}");
+        }
+        // hand-computed spots: neuron 5 -> row 1, dest column 1;
+        // neuron 9 -> row 1, dest column 2
+        assert_eq!((t[5].src.y, t[5].dest.x), (1, 1));
+        assert_eq!((t[9].src.y, t[9].dest.x), (1, 2));
+        // rows cycle through the dim boundary ports uniformly
+        for row in 0..dim {
+            let on_row = t.iter().filter(|c| c.src.y as usize == row).count();
+            assert!(on_row >= 2, "row {row} underused: {on_row}");
+        }
+    }
+
+    #[test]
+    fn expected_spike_packets_hand_computed() {
+        // N x activity x T, against hand-worked values
+        assert!((expected_spike_packets(256, 0.1, 8) - 204.8).abs() < 1e-9);
+        assert_eq!(expected_spike_packets(4096, 0.5, 4), 8192.0);
+        assert_eq!(expected_spike_packets(100, 0.0, 8), 0.0); // silent edge
+        assert_eq!(expected_spike_packets(100, 1.0, 8), 800.0); // dense limit
+        assert_eq!(expected_spike_packets(0, 0.7, 8), 0.0);
+
+        // the sampled trace converges on the closed form at both boundaries
+        let silent = boundary_edge_traffic(512, 0, 0.0, 8, 8, 1);
+        assert_eq!(silent.len() as f64, expected_spike_packets(512, 0.0, 8));
+        let dense = boundary_edge_traffic(512, 0, 1.0, 8, 8, 1);
+        assert_eq!(dense.len() as f64, expected_spike_packets(512, 1.0, 8));
+    }
+
+    #[test]
     fn deterministic_in_seed() {
         let a = boundary_edge_traffic(100, 0, 0.3, 8, 8, 11);
         let b = boundary_edge_traffic(100, 0, 0.3, 8, 8, 11);

@@ -4,14 +4,11 @@
 //! latency-*distribution* figure ([`fig_tail_latency`]) that drives the
 //! telemetry-enabled cycle engine for the p50/p99/p999 claims of §4.3.
 
-use crate::analytic::latency::TailLatency;
 use crate::analytic::{efficiency_gain, simulate, simulate_variants, speedup, SimReport};
-use crate::arch::chip::Coord;
 use crate::arch::params::{ArchConfig, Variant};
 use crate::model::networks;
-use crate::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex};
+use crate::noc::{Scenario, TrafficSpec};
 use crate::sparsity::SparsityProfile;
-use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::Table;
 
@@ -76,44 +73,32 @@ pub fn fig8_heatmap(net_name: &str, seed: u64) -> Table {
     t
 }
 
-/// Measured tail-latency rows: one seeded boundary-traffic run per
-/// topology (duplex, chain 2/4/8 at full span), per-packet telemetry on.
-/// Every packet in a row makes the same number of die crossings, so the
-/// Eq. 8/9 floor applies uniformly to the whole distribution.
+/// Measured tail-latency rows: one seeded full-span [`Scenario`] run per
+/// topology (duplex, chain 2/4/8), per-packet telemetry on. Every packet in
+/// a row makes the same number of die crossings, so the Eq. 8/9 floor
+/// applies uniformly to the whole distribution. Drives the engines only
+/// through the `CycleEngine`/`Scenario` surface — reproduce any row by
+/// saving the scenario JSON and replaying it with `spikelink noc-sim`.
 pub fn tail_latency_rows(packets: usize, seed: u64) -> Vec<TailRow> {
     let mut rows = Vec::new();
 
-    let mut rng = Rng::new(seed);
-    let mut d = Duplex::<DeliverySink>::with_sinks(8);
-    for _ in 0..packets {
-        d.inject(CrossTraffic {
-            src: Coord::new(7, rng.range(0, 8)),
-            dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
-        });
-    }
-    d.run(100_000_000);
+    let duplex = Scenario::duplex(8)
+        .with_telemetry()
+        .traffic(TrafficSpec::FullSpan { packets, seed });
     rows.push(TailRow {
         topology: "duplex (1 crossing)".into(),
         crossings: 1,
-        tail: TailLatency::from_hist(&d.latency_hist()),
+        tail: duplex.run().tail.expect("telemetry run with packets delivers"),
     });
 
     for &chips in &[2usize, 4, 8] {
-        let mut rng = Rng::new(seed ^ ((chips as u64) << 32));
-        let mut c = Chain::<DeliverySink>::with_sinks(chips, 8);
-        for _ in 0..packets {
-            c.inject(ChainTraffic {
-                src_chip: 0,
-                src: Coord::new(7, rng.range(0, 8)),
-                dest_chip: chips - 1,
-                dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
-            });
-        }
-        c.run(100_000_000);
+        let sc = Scenario::chain(chips, 8)
+            .with_telemetry()
+            .traffic(TrafficSpec::FullSpan { packets, seed: seed ^ ((chips as u64) << 32) });
         rows.push(TailRow {
             topology: format!("chain{chips} (full span)"),
             crossings: (chips - 1) as u32,
-            tail: TailLatency::from_hist(&c.latency_hist()),
+            tail: sc.run().tail.expect("telemetry run with packets delivers"),
         });
     }
     rows

@@ -28,7 +28,7 @@ impl VisionData {
         (img, label as i32)
     }
 
-    /// A batch: (x f32[batch, HW*HW*C], y i32[batch]).
+    /// A batch: (x `f32[batch, HW*HW*C]`, y `i32[batch]`).
     pub fn batch(&mut self, batch: usize) -> (Vec<f32>, Vec<i32>) {
         let mut xs = Vec::with_capacity(batch * HW * HW * CHANNELS);
         let mut ys = Vec::with_capacity(batch);

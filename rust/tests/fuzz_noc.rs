@@ -3,12 +3,15 @@
 //!
 //! The golden suite (`golden_noc.rs`) pins equivalence on hand-shaped
 //! seeded loads; this suite removes the shaping: a seeded LCG generates
-//! arbitrary interleavings of `inject` / `inject_with_id` / West-edge
-//! arrivals / `step` / bounded `run_to_drain`-style draining, across mesh
-//! dims 1-16 and chain depths 1-8, and both engines must stay identical
-//! after **every operation** — aggregate stats, backlogs, East-egress
-//! contents, and the per-packet delivery records (id, inject cycle,
-//! delivery cycle, hops, crossings) including their ejection order.
+//! arbitrary interleavings of `inject` / sparse-id `inject_with_id` /
+//! West-edge arrivals / `step` / bounded drains, across mesh dims 1-16 and
+//! chain depths 1-8, and both engines must stay identical after **every
+//! operation** — the scripts are executed by the same generic `lockstep`
+//! harness the golden suite uses (`spikelink::noc::harness`), which asserts
+//! the full `CycleEngine` surface (stats, backlog, clock, and the
+//! per-packet delivery records including ejection order) after each op.
+//! Topology internals the trait cannot see (East-egress buffers, per-chip
+//! mesh stats, link occupancy) are asserted after each script.
 //!
 //! CI runs 3 random cases per topology (the default); crank the
 //! `NOC_FUZZ_ITERS` env var for long local runs:
@@ -20,7 +23,7 @@
 use spikelink::arch::chip::Coord;
 use spikelink::noc::reference::{RefChain, RefDuplex, RefMesh};
 use spikelink::noc::router::Flit;
-use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex, Mesh};
+use spikelink::noc::{lockstep, Chain, DeliverySink, Duplex, Mesh, Op, Transfer};
 
 /// Minimal 64-bit LCG (Knuth MMIX constants). Deliberately *not* the
 /// crate's xoshiro [`spikelink::util::rng::Rng`]: the fuzzer's schedule
@@ -57,76 +60,55 @@ fn fuzz_iters() -> u64 {
 // mesh
 // ---------------------------------------------------------------------------
 
-fn check_mesh(m: &Mesh<DeliverySink>, r: &RefMesh<DeliverySink>, ctx: &str) {
-    assert_eq!(m.stats, r.stats, "{ctx}: stats diverged");
-    assert_eq!(m.backlog(), r.backlog(), "{ctx}: backlog diverged");
-    assert_eq!(m.now(), r.now(), "{ctx}: clocks diverged");
-    assert_eq!(m.east_egress, r.east_egress, "{ctx}: east egress diverged");
-    assert_eq!(
-        m.sink.deliveries, r.sink.deliveries,
-        "{ctx}: per-packet delivery records diverged"
-    );
+fn mesh_ops(rng: &mut Lcg, dim: usize) -> Vec<Op> {
+    let d64 = dim as u64;
+    let n_ops = 200 + rng.below(400);
+    let mut ops = Vec::with_capacity(n_ops as usize + 1);
+    for op in 0..n_ops {
+        ops.push(match rng.below(100) {
+            // inject: random source, dest possibly past the East edge
+            0..=39 => {
+                let src = Coord::new(rng.below(d64) as usize, rng.below(d64) as usize);
+                let dest = Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize);
+                Op::Inject(Transfer::local(src, dest))
+            }
+            // inject_with_id: sparse caller-assigned id in a disjoint range
+            40..=49 => {
+                let src = Coord::new(rng.below(d64) as usize, rng.below(d64) as usize);
+                let dest = Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize);
+                Op::InjectWithId(Transfer::local(src, dest), 1_000_000 + op)
+            }
+            // cross-die arrival at the West edge (sometimes pass-through);
+            // injected_at is clamped to the clock by both engines
+            50..=59 => Op::WestEdge(
+                rng.below(d64) as usize,
+                Flit {
+                    id: 2_000_000 + op,
+                    dest: Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize),
+                    wire: 0,
+                    injected_at: rng.below(1_000),
+                    hops: 0,
+                },
+            ),
+            // single cycle
+            60..=89 => Op::Step,
+            // bounded drain burst
+            _ => Op::Drain(rng.below(64)),
+        });
+    }
+    ops.push(Op::Drain(10_000_000));
+    ops
 }
 
 fn fuzz_mesh_case(seed: u64) {
     let mut rng = Lcg::new(seed);
     let dim = 1 + rng.below(16) as usize; // 1..=16
-    let d64 = dim as u64;
     let mut m = Mesh::with_sink(dim, DeliverySink::new());
     let mut r = RefMesh::with_sink(dim, DeliverySink::new());
-    let n_ops = 200 + rng.below(400);
-    for op in 0..n_ops {
-        match rng.below(100) {
-            // inject: random source, dest possibly past the East edge
-            0..=39 => {
-                let src = Coord::new(rng.below(d64) as usize, rng.below(d64) as usize);
-                let dest = Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize);
-                let a = m.inject(src, dest);
-                let b = r.inject(src, dest);
-                assert_eq!(a, b, "seed={seed} op={op}: id allocation diverged");
-            }
-            // inject_with_id: caller-assigned id in a disjoint range
-            40..=49 => {
-                let src = Coord::new(rng.below(d64) as usize, rng.below(d64) as usize);
-                let dest = Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize);
-                let id = 1_000_000 + op;
-                m.inject_with_id(src, dest, id);
-                r.inject_with_id(src, dest, id);
-            }
-            // cross-die arrival at the West edge (sometimes pass-through)
-            50..=59 => {
-                let flit = Flit {
-                    id: 2_000_000 + op,
-                    dest: Coord::new(rng.below(d64 + 1) as usize, rng.below(d64) as usize),
-                    wire: 0,
-                    injected_at: rng.below(m.now() + 1),
-                    hops: 0,
-                };
-                let row = rng.below(d64) as usize;
-                m.inject_west_edge(row, flit);
-                r.inject_west_edge(row, flit);
-            }
-            // single cycle
-            60..=89 => {
-                m.step();
-                r.step();
-            }
-            // bounded drain burst
-            _ => {
-                let k = rng.below(64);
-                let a = m.run_to_drain(k);
-                let b = r.run_to_drain(k);
-                assert_eq!(a, b, "seed={seed} op={op}: drain cycle counts diverged");
-            }
-        }
-        check_mesh(&m, &r, &format!("mesh dim={dim} seed={seed} op={op}"));
-    }
-    let a = m.run_to_drain(10_000_000);
-    let b = r.run_to_drain(10_000_000);
-    assert_eq!(a, b, "seed={seed}: final drain diverged");
-    check_mesh(&m, &r, &format!("mesh dim={dim} seed={seed} drained"));
-    assert_eq!(m.backlog(), 0, "seed={seed}: mesh failed to drain");
-    assert_eq!(m.sink.hist, r.sink.hist, "seed={seed}: histograms diverged");
+    let ops = mesh_ops(&mut rng, dim);
+    lockstep(&mut m, &mut r, &ops, &format!("mesh dim={dim} seed={seed:#x}"));
+    assert_eq!(m.backlog(), 0, "seed={seed:#x}: mesh failed to drain");
+    assert_eq!(m.east_egress, r.east_egress, "seed={seed:#x}: east egress diverged");
 }
 
 #[test]
@@ -140,42 +122,38 @@ fn fuzz_mesh_differential() {
 // duplex
 // ---------------------------------------------------------------------------
 
+fn duplex_ops(rng: &mut Lcg, dim: usize) -> Vec<Op> {
+    let d64 = dim as u64;
+    let n_ops = 150 + rng.below(300);
+    let mut ops = Vec::with_capacity(n_ops as usize + 1);
+    for _ in 0..n_ops {
+        ops.push(match rng.below(100) {
+            0..=34 => Op::Inject(Transfer::crossing(
+                Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
+                Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
+            )),
+            _ => Op::Step,
+        });
+    }
+    ops.push(Op::Drain(50_000_000));
+    ops
+}
+
 fn fuzz_duplex_case(seed: u64) {
     let mut rng = Lcg::new(seed);
     let dim = 1 + rng.below(16) as usize;
-    let d64 = dim as u64;
     let mut d = Duplex::<DeliverySink>::with_sinks(dim);
     let mut r = RefDuplex::<DeliverySink>::with_sinks(dim);
-    let n_ops = 150 + rng.below(300);
-    for op in 0..n_ops {
-        match rng.below(100) {
-            0..=34 => {
-                let t = CrossTraffic {
-                    src: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
-                    dest: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
-                };
-                d.inject(t);
-                r.inject(t);
-            }
-            _ => {
-                d.step();
-                r.step();
-            }
-        }
-        let ctx = format!("duplex dim={dim} seed={seed} op={op}");
-        assert_eq!(d.a.stats, r.a.stats, "{ctx}: chip A diverged");
-        assert_eq!(d.b.stats, r.b.stats, "{ctx}: chip B diverged");
-        assert_eq!(d.link.pending(), r.link.pending(), "{ctx}: link diverged");
-        assert_eq!(d.b.sink.deliveries, r.b.sink.deliveries, "{ctx}: records diverged");
-    }
-    let ds = d.run(50_000_000);
-    let rs = r.run(50_000_000);
-    assert_eq!(ds, rs, "seed={seed}: duplex run stats diverged");
-    assert_eq!(d.deliveries(), r.deliveries(), "seed={seed}: merged records diverged");
-    assert_eq!(d.latency_hist(), r.latency_hist(), "seed={seed}: histograms diverged");
+    let ops = duplex_ops(&mut rng, dim);
+    let stats = lockstep(&mut d, &mut r, &ops, &format!("duplex dim={dim} seed={seed:#x}"));
+    assert_eq!(stats.delivered, stats.injected, "seed={seed:#x}: duplex lost packets");
+    // trait-invisible internals: per-chip mesh state and link occupancy
+    assert_eq!(d.a.stats, r.a.stats, "seed={seed:#x}: chip A diverged");
+    assert_eq!(d.b.stats, r.b.stats, "seed={seed:#x}: chip B diverged");
+    assert_eq!(d.link.pending(), r.link.pending(), "seed={seed:#x}: link diverged");
     assert!(
         d.deliveries().iter().all(|x| x.crossings == 1 && x.latency() >= 76),
-        "seed={seed}: a crossing undercut the SerDes floor"
+        "seed={seed:#x}: a crossing undercut the SerDes floor"
     );
 }
 
@@ -190,60 +168,57 @@ fn fuzz_duplex_differential() {
 // chain
 // ---------------------------------------------------------------------------
 
-fn fuzz_chain_case(seed: u64) {
-    let mut rng = Lcg::new(seed);
-    let chips = 1 + rng.below(8) as usize; // 1..=8
-    let dim = 1 + rng.below(8) as usize; // 1..=8
+fn chain_ops(rng: &mut Lcg, chips: usize, dim: usize) -> Vec<Op> {
     let d64 = dim as u64;
-    let mut c = Chain::<DeliverySink>::with_sinks(chips, dim);
-    let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
     let n_ops = 150 + rng.below(300);
-    for op in 0..n_ops {
-        match rng.below(100) {
+    let mut ops = Vec::with_capacity(n_ops as usize + 1);
+    for _ in 0..n_ops {
+        ops.push(match rng.below(100) {
             0..=29 => {
                 let src_chip = rng.below(chips as u64) as usize;
                 let dest_chip = src_chip + rng.below((chips - src_chip) as u64) as usize;
-                let t = ChainTraffic {
+                Op::Inject(Transfer {
                     src_chip,
                     src: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
                     dest_chip,
                     dest: Coord::new(rng.below(d64) as usize, rng.below(d64) as usize),
-                };
-                let a = c.inject(t);
-                let b = r.inject(t);
-                assert_eq!(a, b, "seed={seed} op={op}: chain id allocation diverged");
+                })
             }
-            _ => {
-                c.step();
-                r.step();
-            }
-        }
-        let ctx = format!("chain chips={chips} dim={dim} seed={seed} op={op}");
-        assert_eq!(c.pending(), r.pending(), "{ctx}: pending diverged");
-        for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
-            assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} stats diverged");
-            assert_eq!(
-                mc.sink.deliveries, mr.sink.deliveries,
-                "{ctx}: chip {i} records diverged"
-            );
-        }
+            _ => Op::Step,
+        });
     }
-    let cs = c.run(100_000_000);
-    let rs = r.run(100_000_000);
-    assert_eq!(cs, rs, "seed={seed}: chain run stats diverged");
-    assert_eq!(cs.delivered, cs.injected, "seed={seed}: chain lost packets");
-    let cd = c.deliveries();
-    assert_eq!(cd, r.deliveries(), "seed={seed}: merged records diverged");
-    assert_eq!(c.latency_hist(), r.latency_hist(), "seed={seed}: histograms diverged");
-    for d in &cd {
+    ops.push(Op::Drain(100_000_000));
+    ops
+}
+
+fn fuzz_chain_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let chips = 1 + rng.below(8) as usize; // 1..=8
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let mut c = Chain::<DeliverySink>::with_sinks(chips, dim);
+    let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
+    let ops = chain_ops(&mut rng, chips, dim);
+    let ctx = format!("chain chips={chips} dim={dim} seed={seed:#x}");
+    let stats = lockstep(&mut c, &mut r, &ops, &ctx);
+    assert_eq!(stats.delivered, stats.injected, "{ctx}: chain lost packets");
+    // per-chip internals the trait surface cannot see
+    for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
+        assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} stats diverged");
+        assert_eq!(
+            mc.sink.deliveries, mr.sink.deliveries,
+            "{ctx}: chip {i} records diverged"
+        );
+    }
+    // merged records agree with the tracked crossing table and the floor
+    for d in &c.deliveries() {
         assert_eq!(
             d.crossings as usize,
             c.crossings_of(d.id),
-            "seed={seed}: patched crossings disagree with tracked table"
+            "{ctx}: patched crossings disagree with tracked table"
         );
         assert!(
             d.latency() >= 76 * d.crossings as u64,
-            "seed={seed}: id {} undercut the SerDes floor",
+            "{ctx}: id {} undercut the SerDes floor",
             d.id
         );
     }

@@ -6,9 +6,13 @@
 //! same *per-packet* delivery records: id, inject/delivery cycle, hops and
 //! die crossings, in the same ejection order.
 //!
-//! Every test drives both engines in lockstep on identical seeded loads and
-//! asserts equality after *every* operation, not just at the end, so a
-//! divergence is caught at the first cycle it appears.
+//! Every engine pair is driven through the one generic lockstep harness
+//! (`spikelink::noc::harness::lockstep` over `CycleEngine`) on seeded
+//! scripted loads; the harness asserts the full trait surface is equal
+//! after *every* operation, so a divergence is caught at the first cycle it
+//! appears. Only topology internals the trait cannot see (East-egress
+//! buffers, per-chip mesh stats, link occupancy) are asserted here, after
+//! the scripts finish.
 //!
 //! The EMIO merge/mux block is additionally pinned against the Eq. 8
 //! closed form of `analytic::latency` (lone-frame 76-cycle crossing,
@@ -20,21 +24,16 @@ use spikelink::arch::packet::Packet;
 use spikelink::noc::emio::{EmioLink, DES_CYCLES, LANES, SER_CYCLES};
 use spikelink::noc::reference::{RefChain, RefDuplex, RefMesh};
 use spikelink::noc::router::Flit;
-use spikelink::noc::{Chain, ChainTraffic, CrossTraffic, DeliverySink, Duplex, Mesh};
+use spikelink::noc::{
+    lockstep, Chain, ChainTraffic, DeliverySink, Duplex, Mesh, Op, Transfer,
+};
 use spikelink::util::rng::Rng;
-
-/// One scripted operation on a mesh (applied identically to both engines).
-#[derive(Clone, Copy)]
-enum MeshOp {
-    Inject(Coord, Coord),
-    WestEdge(usize, Flit),
-    Step,
-}
 
 /// A seeded mesh load: bursts of injections (including East-egress
 /// destinations and pre-built West-edge flits) interleaved with idle and
-/// busy stepping — the temporal sparsity the worklist exploits.
-fn mesh_script(dim: usize, seed: u64) -> Vec<MeshOp> {
+/// busy stepping — the temporal sparsity the worklist exploits — ending in
+/// a full drain.
+fn mesh_script(dim: usize, seed: u64) -> Vec<Op> {
     let mut rng = Rng::new(seed);
     let mut ops = Vec::new();
     for burst in 0..12u64 {
@@ -51,31 +50,22 @@ fn mesh_script(dim: usize, seed: u64) -> Vec<MeshOp> {
                     injected_at: 0,
                     hops: 0,
                 };
-                ops.push(MeshOp::WestEdge(rng.range(0, dim), flit));
+                ops.push(Op::WestEdge(rng.range(0, dim), flit));
             } else {
                 let src = Coord::new(rng.range(0, dim), rng.range(0, dim));
                 // ~1 in 8 packets leaves the chip East (x = dim)
                 let dest_x = if rng.chance(0.125) { dim } else { rng.range(0, dim) };
                 let dest = Coord::new(dest_x, rng.range(0, dim));
-                ops.push(MeshOp::Inject(src, dest));
+                ops.push(Op::Inject(Transfer::local(src, dest)));
             }
         }
         // idle gaps exercise the worklist going empty and refilling
         for _ in 0..rng.range(1, 20) {
-            ops.push(MeshOp::Step);
+            ops.push(Op::Step);
         }
     }
+    ops.push(Op::Drain(1_000_000));
     ops
-}
-
-fn assert_mesh_eq(m: &Mesh<DeliverySink>, r: &RefMesh<DeliverySink>, ctx: &str) {
-    assert_eq!(m.stats, r.stats, "{ctx}: stats diverged");
-    assert_eq!(m.backlog(), r.backlog(), "{ctx}: backlog diverged");
-    assert_eq!(m.east_egress, r.east_egress, "{ctx}: east egress diverged");
-    assert_eq!(
-        m.sink.deliveries, r.sink.deliveries,
-        "{ctx}: per-packet delivery records diverged"
-    );
 }
 
 #[test]
@@ -84,131 +74,111 @@ fn mesh_golden_equivalence_across_seeds_and_dims() {
         for seed in [1u64, 7, 42] {
             let mut m = Mesh::with_sink(dim, DeliverySink::new());
             let mut r = RefMesh::with_sink(dim, DeliverySink::new());
-            for (step, op) in mesh_script(dim, seed).iter().enumerate() {
-                match *op {
-                    MeshOp::Inject(s, d) => {
-                        let a = m.inject(s, d);
-                        let b = r.inject(s, d);
-                        assert_eq!(a, b, "id allocation diverged");
-                    }
-                    MeshOp::WestEdge(row, flit) => {
-                        m.inject_west_edge(row, flit);
-                        r.inject_west_edge(row, flit);
-                    }
-                    MeshOp::Step => {
-                        m.step();
-                        r.step();
-                    }
-                }
-                assert_mesh_eq(&m, &r, &format!("dim={dim} seed={seed} op#{step}"));
-            }
-            m.run_to_drain(1_000_000);
-            r.run_to_drain(1_000_000);
-            assert_mesh_eq(&m, &r, &format!("dim={dim} seed={seed} drained"));
-            assert_eq!(m.backlog(), 0, "mesh must drain");
-            assert_eq!(
-                m.sink.hist, r.sink.hist,
-                "dim={dim} seed={seed}: latency histograms diverged"
-            );
+            let ctx = format!("dim={dim} seed={seed}");
+            let stats = lockstep(&mut m, &mut r, &mesh_script(dim, seed), &ctx);
+            assert_eq!(m.backlog(), 0, "{ctx}: mesh must drain");
+            assert!(stats.delivered > 0, "{ctx}: load must actually deliver");
+            // trait-invisible internals: boundary egress order and the raw
+            // per-chip sink state
+            assert_eq!(m.east_egress, r.east_egress, "{ctx}: east egress diverged");
+            assert_eq!(m.sink.hist, r.sink.hist, "{ctx}: latency histograms diverged");
         }
     }
+}
+
+/// Bursts of die crossings with interleaved settling cycles, then a drain.
+fn duplex_script(seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    for _ in 0..8 {
+        for _ in 0..rng.range(1, 40) {
+            ops.push(Op::Inject(Transfer::crossing(
+                Coord::new(rng.range(0, 8), rng.range(0, 8)),
+                Coord::new(rng.range(0, 8), rng.range(0, 8)),
+            )));
+        }
+        for _ in 0..rng.range(0, 90) {
+            ops.push(Op::Step);
+        }
+    }
+    ops.push(Op::Drain(1_000_000));
+    ops
 }
 
 #[test]
 fn duplex_golden_equivalence_across_seeds() {
     for seed in [3u64, 5, 9] {
-        let mut rng = Rng::new(seed);
         let mut d = Duplex::<DeliverySink>::with_sinks(8);
         let mut r = RefDuplex::<DeliverySink>::with_sinks(8);
-        // bursts of crossings with interleaved settling cycles
-        for _ in 0..8 {
-            for _ in 0..rng.range(1, 40) {
-                let t = CrossTraffic {
-                    src: Coord::new(rng.range(0, 8), rng.range(0, 8)),
-                    dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
-                };
-                d.inject(t);
-                r.inject(t);
-            }
-            for _ in 0..rng.range(0, 90) {
-                d.step();
-                r.step();
-                assert_eq!(d.a.stats, r.a.stats, "seed={seed}: chip A diverged");
-                assert_eq!(d.b.stats, r.b.stats, "seed={seed}: chip B diverged");
-                assert_eq!(d.link.pending(), r.link.pending(), "seed={seed}: link diverged");
-                assert_eq!(
-                    d.b.sink.deliveries, r.b.sink.deliveries,
-                    "seed={seed}: per-packet records diverged mid-run"
-                );
-            }
-        }
-        let ds = d.run(1_000_000);
-        let rs = r.run(1_000_000);
-        assert_eq!(ds, rs, "seed={seed}: duplex stats diverged");
-        assert!(ds.delivered > 0, "load must actually deliver");
-        // end-to-end per-packet records (crossings patched) are identical
+        let ctx = format!("duplex seed={seed}");
+        let stats = lockstep(&mut d, &mut r, &duplex_script(seed), &ctx);
+        assert!(stats.delivered > 0, "{ctx}: load must actually deliver");
+        assert_eq!(stats.delivered, stats.injected, "{ctx}: crossings lost");
+        // trait-invisible internals
+        assert_eq!(d.a.stats, r.a.stats, "{ctx}: chip A diverged");
+        assert_eq!(d.b.stats, r.b.stats, "{ctx}: chip B diverged");
+        assert_eq!(d.link.pending(), r.link.pending(), "{ctx}: link diverged");
+        // end-to-end per-packet records: one crossing each, SerDes floor paid
         let dd = d.deliveries();
-        assert_eq!(dd, r.deliveries(), "seed={seed}: merged delivery records diverged");
-        assert_eq!(dd.len() as u64, ds.delivered);
-        assert!(dd.iter().all(|x| x.crossings == 1 && x.latency() >= 76));
-        assert_eq!(d.latency_hist(), r.latency_hist(), "seed={seed}: histograms diverged");
+        assert_eq!(dd.len() as u64, stats.delivered);
+        assert!(dd.iter().all(|x| x.crossings == 1 && x.latency() >= 76), "{ctx}");
+        // per-packet mean must reproduce the aggregate average exactly
+        let mean = dd.iter().map(|x| x.latency()).sum::<u64>() as f64 / dd.len() as f64;
+        assert!((mean - stats.avg_latency()).abs() < 1e-9, "{ctx}");
     }
+}
+
+/// Bursts of random-span chain transfers with settling cycles, then a drain.
+fn chain_script(chips: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    for _ in 0..6 {
+        for _ in 0..rng.range(1, 25) {
+            let src_chip = rng.range(0, chips);
+            ops.push(Op::Inject(Transfer {
+                src_chip,
+                src: Coord::new(rng.range(0, 8), rng.range(0, 8)),
+                dest_chip: rng.range(src_chip, chips),
+                dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
+            }));
+        }
+        for _ in 0..rng.range(0, 120) {
+            ops.push(Op::Step);
+        }
+    }
+    ops.push(Op::Drain(10_000_000));
+    ops
 }
 
 #[test]
 fn chain_golden_equivalence_across_depths_and_seeds() {
     for &chips in &[2usize, 4, 8] {
         for seed in [13u64, 21, 34] {
-            let mut rng = Rng::new(seed);
             let mut c = Chain::<DeliverySink>::with_sinks(chips, 8);
             let mut r = RefChain::<DeliverySink>::with_sinks(chips, 8);
-            for _ in 0..6 {
-                for _ in 0..rng.range(1, 25) {
-                    let src_chip = rng.range(0, chips);
-                    let t = ChainTraffic {
-                        src_chip,
-                        src: Coord::new(rng.range(0, 8), rng.range(0, 8)),
-                        dest_chip: rng.range(src_chip, chips),
-                        dest: Coord::new(rng.range(0, 8), rng.range(0, 8)),
-                    };
-                    let a = c.inject(t);
-                    let b = r.inject(t);
-                    assert_eq!(a, b, "chain id allocation diverged");
-                }
-                for _ in 0..rng.range(0, 120) {
-                    c.step();
-                    r.step();
-                    assert_eq!(c.pending(), r.pending(), "chips={chips} seed={seed}");
-                }
-            }
-            let cs = c.run(10_000_000);
-            let rs = r.run(10_000_000);
-            assert_eq!(cs, rs, "chips={chips} seed={seed}: chain stats diverged");
-            assert_eq!(cs.delivered, cs.injected, "all transfers must deliver");
+            let ctx = format!("chips={chips} seed={seed}");
+            let stats = lockstep(&mut c, &mut r, &chain_script(chips, seed), &ctx);
+            assert_eq!(stats.delivered, stats.injected, "{ctx}: all transfers must deliver");
+            // trait-invisible internals: every chip's mesh agrees
             for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
-                assert_eq!(
-                    mc.stats, mr.stats,
-                    "chips={chips} seed={seed}: chip {i} mesh stats diverged"
-                );
+                assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} mesh stats diverged");
                 assert_eq!(
                     mc.sink.deliveries, mr.sink.deliveries,
-                    "chips={chips} seed={seed}: chip {i} per-packet records diverged"
+                    "{ctx}: chip {i} per-packet records diverged"
                 );
             }
-            // merged views: same records, same crossings, same histogram
+            // merged views: crossings patched, totals reproduced, floor held
             let cd = c.deliveries();
-            assert_eq!(cd, r.deliveries(), "chips={chips} seed={seed}: merged records");
-            assert_eq!(cd.len() as u64, cs.delivered);
+            assert_eq!(cd.len() as u64, stats.delivered);
             assert_eq!(
                 cd.iter().map(|d| d.latency()).sum::<u64>(),
-                cs.total_latency,
-                "chips={chips} seed={seed}: per-packet sum vs aggregate"
+                stats.total_latency,
+                "{ctx}: per-packet sum vs aggregate"
             );
             assert!(
                 cd.iter().all(|d| d.latency() >= 76 * d.crossings as u64),
-                "chips={chips} seed={seed}: a crossing undercut the SerDes floor"
+                "{ctx}: a crossing undercut the SerDes floor"
             );
-            assert_eq!(c.latency_hist(), r.latency_hist(), "chips={chips} seed={seed}");
         }
     }
 }

@@ -15,14 +15,27 @@ console output: display rounding (4.97x prints as "5.0x") and vacuous
 passes when the bench crashed before printing anything. bench/v1 records
 from older runs may still be present in the trajectory; both gates only
 look at the latest records of their unit.
+
+Case names are accepted in both the v1/v2 form (`noc/mesh16/sparse/speedup`)
+and the scenario-derived form the Scenario-based bench emits (labels like
+`mesh16` / `mesh-16` anywhere in the name, alongside `chain4x8` / `duplex8`
+cases the gate does not examine). Whatever the labelling, the latest
+speedup records must cover mesh dims {8, 16, 32} exactly — a partial rerun
+cannot sneak a stale dim past the floor.
 """
 
 import json
+import re
 import sys
 
 FLOOR = 5.0
 EXPECTED = 3  # sparse speedup records per bench run: mesh dims 8, 16, 32
+EXPECTED_DIMS = {8, 16, 32}
 TELEMETRY_CEILING = 1.05  # telemetry-on may cost at most 5% vs NoopSink
+
+# matches "mesh16" (v1/v2 and scenario labels) and "mesh-16" (hyphenated
+# scenario labels), wherever they sit in the record name
+MESH_DIM_RE = re.compile(r"mesh-?(\d+)")
 
 
 def load(path):
@@ -44,6 +57,29 @@ def check_speedups(path, records):
             f"{len(speedups)} — bench did not complete"
         )
     latest = speedups[-EXPECTED:]  # this run's three mesh dims
+    dims = []
+    for r in latest:
+        m = MESH_DIM_RE.search(r.get("name", ""))
+        if not m:
+            sys.exit(
+                f"{path}: speedup record {r.get('name')!r} carries no mesh dim label "
+                "(expected a v1/v2 name like noc/mesh16/sparse/speedup or a "
+                "scenario label like mesh-16)"
+            )
+        dims.append(int(m.group(1)))
+    if set(dims) != EXPECTED_DIMS:
+        sys.exit(
+            f"{path}: latest speedup records cover mesh dims {sorted(set(dims))}, "
+            f"expected {sorted(EXPECTED_DIMS)} — bench did not complete"
+        )
+    # The bench emits the dims in ascending order within one run; anything
+    # else means the tail of the trajectory mixes a partial rerun with a
+    # prior run's stale records, which must not vouch for the floor.
+    if dims != sorted(EXPECTED_DIMS):
+        sys.exit(
+            f"{path}: latest speedup records are out of emission order {dims} "
+            f"(expected {sorted(EXPECTED_DIMS)}) — partial rerun atop stale records?"
+        )
     failed = []
     for r in latest:
         ok = r["throughput"] >= FLOOR

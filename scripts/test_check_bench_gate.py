@@ -20,11 +20,22 @@ CASES = {
     "pass.json": (True, "telemetry gate passed"),
     "stale_then_pass.json": (True, "telemetry gate passed"),
     "mixed_v1_pass.json": (True, "speedup gate passed"),
+    # scenario-derived labels (mesh-16, chain4x8, duplex8) alongside v1/v2
+    # names must be accepted by both gates
+    "scenario_labels_pass.json": (True, "speedup gate passed"),
     "fail_speedup.json": (False, "below the 5x acceptance floor"),
     "fail_overhead.json": (False, "exceeds the 1.05x (5%) acceptance ceiling"),
     "incomplete.json": (False, "bench did not complete"),
     "missing_overhead.json": (False, "no x-vs-noop telemetry-overhead record"),
     "corrupt.json": (False, "unreadable or invalid"),
+    # a speedup record the gate cannot attribute to a mesh dim is an error,
+    # not a silent pass
+    "unlabeled_speedup.json": (False, "carries no mesh dim label"),
+    # the latest three speedups must cover dims {8, 16, 32} exactly
+    "wrong_dims.json": (False, "cover mesh dims"),
+    # a crashed rerun's fresh mesh8 atop a complete prior run leaves the
+    # stale mesh16/mesh32 in the latest-three window: emission order catches it
+    "stale_partial_rerun.json": (False, "out of emission order"),
 }
 
 
@@ -74,6 +85,19 @@ class GateFixtureTests(unittest.TestCase):
         proc = run_gate("pass.json")
         self.assertIn("9.80x vs reference", proc.stdout)
         self.assertIn("[OK]", proc.stdout)
+
+    def test_scenario_labels_report_per_dim_values(self):
+        # the hyphenated scenario labels flow through to the verdict lines
+        proc = run_gate("scenario_labels_pass.json")
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("noc/scenario/mesh-32/sparse/speedup", proc.stdout)
+        self.assertIn("24.00x vs reference", proc.stdout)
+
+    def test_dim_coverage_failure_names_the_dims(self):
+        proc = run_gate("wrong_dims.json")
+        combined = proc.stdout + proc.stderr
+        self.assertNotEqual(proc.returncode, 0, combined)
+        self.assertIn("[8, 16]", combined)
 
 
 if __name__ == "__main__":
