@@ -9,12 +9,13 @@
 //! Run: `make artifacts && cargo run --release --example serve -- [n_requests]`
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use spikelink::runtime::{Engine, Manifest, Tensor};
 use spikelink::train::corpus;
 use spikelink::util::stats::{self, LatencyHist};
+use spikelink::util::Counter;
 
 struct Request {
     x: Vec<i32>, // one sequence, seq_len chars
@@ -31,18 +32,24 @@ fn main() -> anyhow::Result<()> {
     let exe = engine.load("hnn_lm.predict", model.fns.get("predict").unwrap())?;
     let theta = Tensor::F32(manifest.load_init_theta(model)?);
 
-    // producer: requests arrive with small jitter
+    // producer: requests arrive with small jitter; the lock-free ingress
+    // counter is the ops-facing metric the batcher reconciles against
     let (tx, rx) = mpsc::channel::<Request>();
-    let producer = std::thread::spawn(move || {
-        let mut c = corpus::generate(100_000, 7);
-        for i in 0..n_requests {
-            let (x, _) = c.batch(1, seq);
-            tx.send(Request { x, t0: Instant::now() }).ok();
-            if i % 8 == 0 {
-                std::thread::sleep(Duration::from_micros(200));
+    let produced = Arc::new(Counter::default());
+    let producer = {
+        let produced = produced.clone();
+        std::thread::spawn(move || {
+            let mut c = corpus::generate(100_000, 7);
+            for i in 0..n_requests {
+                let (x, _) = c.batch(1, seq);
+                tx.send(Request { x, t0: Instant::now() }).ok();
+                produced.inc();
+                if i % 8 == 0 {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
             }
-        }
-    });
+        })
+    };
 
     // batcher/executor loop
     let mut pending: VecDeque<Request> = VecDeque::new();
@@ -85,6 +92,7 @@ fn main() -> anyhow::Result<()> {
         batches += 1;
     }
     producer.join().ok();
+    assert_eq!(produced.get(), done as u64, "every produced request was served");
 
     let wall = t_start.elapsed().as_secs_f64();
     println!("served {done} requests in {wall:.2}s over {batches} batches (batch cap {batch})");

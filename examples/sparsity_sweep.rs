@@ -12,12 +12,20 @@
 //! sparsity-scaled boundary traffic (activity x T packets per neuron, as in
 //! the §3 HNN encoding), so the table pairs the analytic total with
 //! *measured* per-packet p50/p99 die-crossing latencies — the distribution
-//! claims of §4.3, not just means.
+//! claims of §4.3, not just means. A closing table sweeps the boundary
+//! *codec* axis (dense / rate / topk-delta / temporal) at the paper's
+//! matched activity and checks the packet-count ordering the codec API
+//! guarantees.
 //!
 //! Run: `make artifacts && cargo run --release --example sparsity_sweep -- [steps]`
+//!
+//! Without the `xla` runtime (default builds) or without `artifacts/`, the
+//! training column is skipped and the analytic + measured sweeps still run
+//! — that degraded mode is what the CI examples smoke job exercises.
 
 use spikelink::analytic::simulate;
 use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::codec::CodecId;
 use spikelink::model::networks;
 use spikelink::noc::{Scenario, TrafficSpec};
 use spikelink::runtime::{Engine, Manifest};
@@ -26,21 +34,40 @@ use spikelink::train::{train, RegConfig};
 use spikelink::util::table::Table;
 
 /// Measured duplex tail latency for a boundary edge firing at `activity`
-/// over 8 ticks (the §3 HNN encoding, 256 boundary neurons): (p50, p99) in
-/// cycles from per-packet telemetry. One `Scenario` per sweep point — the
-/// identical run is reproducible via `spikelink noc-sim --scenario`.
-fn measured_tail(activity: f64) -> (u64, u64) {
-    let sc = Scenario::duplex(8)
-        .with_telemetry()
-        .traffic(TrafficSpec::Boundary { neurons: 256, dense: 0, activity, ticks: 8, seed: 7 });
-    let tail = sc.run().tail.expect("boundary traffic at these activities delivers packets");
-    (tail.p50, tail.p99)
+/// over 8 ticks through `codec` (256 boundary neurons): (packets, p50, p99)
+/// from per-packet telemetry. One `Scenario` per point — the identical run
+/// is reproducible via `spikelink noc-sim --scenario`.
+fn measured_tail(codec: CodecId, activity: f64) -> (u64, u64, u64) {
+    let sc = Scenario::duplex(8).with_telemetry().traffic(TrafficSpec::Boundary {
+        neurons: 256,
+        dense: 0,
+        activity,
+        ticks: 8,
+        seed: 7,
+        codec,
+    });
+    let res = sc.run();
+    let tail = res.tail.expect("boundary traffic at these activities delivers packets");
+    (res.stats.delivered, tail.p50, tail.p99)
 }
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
-    let manifest = Manifest::load("artifacts")?;
-    let engine = Engine::cpu()?;
+    // Training needs `make artifacts` + an `xla`-featured build; degrade to
+    // the analytic + measured sweep when either is absent so the example
+    // (and the CI smoke job) always runs end to end.
+    let trainer = match (Manifest::load("artifacts"), Engine::cpu()) {
+        (Ok(manifest), Ok(engine)) => Some((manifest, engine)),
+        (m, e) => {
+            if let Err(err) = m {
+                println!("note: training column skipped ({err})");
+            }
+            if let Err(err) = e {
+                println!("note: training column skipped ({err})");
+            }
+            None
+        }
+    };
     let net = networks::rwkv_6l_512();
     let cfg = ArchConfig::baseline(Variant::Hnn);
 
@@ -61,34 +88,42 @@ fn main() -> anyhow::Result<()> {
         // stronger lambda at higher sparsity targets (the paper sweeps
         // lambda to land each sparsity level)
         let lam = 2.0 + 20.0 * target as f32;
-        let res = train(
-            &engine,
-            &manifest,
-            "hnn_lm",
-            steps,
-            RegConfig { lam, rate_budget: budget },
-            42,
-            steps.max(1),
-            true,
-        )?;
-        let rate =
-            res.final_rates.iter().sum::<f64>() / res.final_rates.len().max(1) as f64;
+        let (rate, ppl) = match &trainer {
+            Some((manifest, engine)) => {
+                let res = train(
+                    engine,
+                    manifest,
+                    "hnn_lm",
+                    steps,
+                    RegConfig { lam, rate_budget: budget },
+                    42,
+                    steps.max(1),
+                    true,
+                )?;
+                let rate =
+                    res.final_rates.iter().sum::<f64>() / res.final_rates.len().max(1) as f64;
+                (format!("{rate:.4}"), Some(res.perplexity()))
+            }
+            None => ("n/a".into(), None),
+        };
         let rep = simulate(&net, &cfg, &SparsityProfile::uniform(net.layers.len(), 1.0 - target));
         // boundary traffic at this sparsity: activity x T spike events per
         // neuron on a 256-neuron boundary edge, Bernoulli-sampled with a
         // fixed seed so the event sets nest across sweep points (lower
         // activity fires a strict subset of a higher activity's events)
-        let (p50, p99) = measured_tail(1.0 - target);
+        let (_, p50, p99) = measured_tail(CodecId::Rate, 1.0 - target);
         t.row(vec![
             format!("{target:.2}"),
             format!("{budget:.3}"),
-            format!("{rate:.4}"),
-            format!("{:.3}", res.perplexity()),
+            rate,
+            ppl.map(|p| format!("{p:.3}")).unwrap_or_else(|| "n/a".into()),
             format!("{}", rep.latency.total_cycles),
             format!("{p50}"),
             format!("{p99}"),
         ]);
-        ppls.push(res.perplexity());
+        if let Some(p) = ppl {
+            ppls.push(p);
+        }
         cycles.push(rep.latency.total_cycles);
         p99s.push(p99);
     }
@@ -118,15 +153,46 @@ fn main() -> anyhow::Result<()> {
         p99s.first().unwrap(),
         p99s.last().unwrap()
     );
-    let stable = ppls[..3].iter().cloned().fold(f64::MIN, f64::max);
+    if ppls.len() == targets.len() {
+        let stable = ppls[..3].iter().cloned().fold(f64::MIN, f64::max);
+        println!(
+            "model quality: ppl {:.3} (<=90% sparsity, stable band) vs {:.3} at 99% target",
+            stable,
+            ppls.last().unwrap()
+        );
+    }
+
+    // codec axis: the same boundary edge at the paper's matched activity
+    // (10%), one measured duplex run per codec — the packet counts must
+    // follow the BoundaryCodec ordering guarantee
+    let mut ct = Table::new(
+        "boundary codec comparison — 256 neurons, activity 0.10, T=8 (measured duplex)",
+        &["codec", "packets", "xing p50", "xing p99"],
+    );
+    let mut packet_counts = Vec::new();
+    for codec in CodecId::ALL {
+        let (packets, p50, p99) = measured_tail(codec, 0.10);
+        ct.row(vec![
+            codec.to_string(),
+            format!("{packets}"),
+            format!("{p50}"),
+            format!("{p99}"),
+        ]);
+        packet_counts.push(packets);
+    }
+    println!("{}", ct.render());
+    assert!(
+        packet_counts.windows(2).all(|w| w[0] >= w[1]),
+        "codec packet counts must be ordered dense >= rate >= topk >= temporal: {packet_counts:?}"
+    );
     println!(
-        "model quality: ppl {:.3} (<=90% sparsity, stable band) vs {:.3} at 99% target",
-        stable,
-        ppls.last().unwrap()
+        "codec ordering holds: dense {} >= rate {} >= topk-delta {} >= temporal {}",
+        packet_counts[0], packet_counts[1], packet_counts[2], packet_counts[3]
     );
 
     std::fs::create_dir_all("results")?;
     std::fs::write("results/fig07_model_axis.csv", t.to_csv())?;
+    std::fs::write("results/codec_comparison.csv", ct.to_csv())?;
     println!("wrote results/fig07_model_axis.csv\nsparsity_sweep OK");
     Ok(())
 }

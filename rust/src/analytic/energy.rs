@@ -131,8 +131,10 @@ pub fn layer_energy(w: &LayerWork, table: &EnergyTable) -> EnergyBreakdown {
     let router_j =
         w.routed_packets as f64 * table.hop_j + w.local_packets as f64 * table.local_j;
 
-    // EMIO: boundary packets (already multiplied by crossings) x d2d cost.
-    let emio_j = w.boundary_packets as f64 * table.d2d_j;
+    // EMIO: boundary packets (already multiplied by crossings) x d2d cost,
+    // scaled by the edge codec's energy hook (1.0 for every built-in codec:
+    // they all fit the fixed D2D frame; see `codec::BoundaryCodec`).
+    let emio_j = w.boundary_packets as f64 * table.d2d_j * w.egress.codec().d2d_energy_scale();
 
     EnergyBreakdown { pe_j, mem_j, router_j, emio_j }
 }
@@ -151,14 +153,14 @@ pub fn energy(works: &[LayerWork], cfg: &ArchConfig) -> EnergyBreakdown {
 mod tests {
     use super::*;
     use crate::arch::params::Variant;
-    use crate::model::partition::TrafficMode;
+    use crate::codec::CodecId;
 
     fn work(compute: ComputeMode, ops: u64, local: u64, boundary: u64) -> LayerWork {
         LayerWork {
             layer_idx: 0,
             name: "t".into(),
             compute,
-            egress: TrafficMode::Dense,
+            egress: CodecId::Dense,
             ops,
             local_packets: local,
             routed_packets: local * 2,
@@ -229,6 +231,21 @@ mod tests {
         let m1 = layer_energy(&w1, &t).mem_j;
         let m8 = layer_energy(&w8, &t).mem_j;
         assert!((m8 / m1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn builtin_codecs_share_the_d2d_frame_cost() {
+        // every built-in codec fits the fixed 76-bit D2D frame, so the
+        // per-packet EMIO energy is codec-invariant (the hook is identity);
+        // codec savings come from *fewer packets*, not cheaper ones
+        let cfg = ArchConfig::baseline(Variant::Hnn);
+        let t = EnergyTable::for_arch(&cfg);
+        let base = layer_energy(&work(ComputeMode::Acc, 0, 256, 256), &t).emio_j;
+        for id in CodecId::ALL {
+            let mut w = work(ComputeMode::Acc, 0, 256, 256);
+            w.egress = id;
+            assert_eq!(layer_energy(&w, &t).emio_j, base, "{id}");
+        }
     }
 
     #[test]

@@ -137,8 +137,12 @@ pub fn latency(works: &[LayerWork], cfg: &ArchConfig) -> LatencyReport {
         let cc = compute_cycles(w.ops, w.neurons, cfg.grouping);
         // Each die crossing on the egress edge pays one EMIO traversal;
         // N_c is capped by both the layer span and the pad ports (Eq. 8).
+        // The edge codec may add per-crossing encode/decode cycles on top
+        // (0 for dense/rate/top-k-delta; a full `ticks` window for TTFS —
+        // see `codec::BoundaryCodec::latency_overhead_cycles`).
         let nc = w.cores.min(cfg.emio_pad_ports()).max(1);
-        let per_crossing = emio_cycles(w.local_packets, nc);
+        let per_crossing =
+            emio_cycles(w.local_packets, nc) + w.egress.codec().latency_overhead_cycles(cfg.ticks);
         let ec = per_crossing * w.die_crossings as u64;
         compute_total += cc;
         emio_total += ec;
@@ -255,12 +259,13 @@ mod tests {
     #[test]
     fn eq9_totals_and_seconds() {
         use crate::analytic::workload::LayerWork;
-        use crate::model::partition::{ComputeMode, TrafficMode};
+        use crate::codec::CodecId;
+        use crate::model::partition::ComputeMode;
         let works = vec![LayerWork {
             layer_idx: 0,
             name: "l0".into(),
             compute: ComputeMode::Mac,
-            egress: TrafficMode::Dense,
+            egress: CodecId::Dense,
             ops: 65_536,
             local_packets: 256,
             routed_packets: 512,
@@ -279,5 +284,14 @@ mod tests {
         assert_eq!(rep.total_cycles, rep.compute_cycles + rep.emio_cycles);
         let expect_s = rep.total_cycles as f64 / 200e6;
         assert!((rep.seconds - expect_s).abs() < 1e-15);
+
+        // the TTFS codec pays its decode window once per crossing; the
+        // other built-ins add nothing (bit-identical to pre-codec totals)
+        let mut w = works[0].clone();
+        w.egress = CodecId::Temporal;
+        let rep_t = latency(&[w.clone()], &cfg);
+        assert_eq!(rep_t.emio_cycles, rep.emio_cycles + cfg.ticks as u64);
+        w.egress = CodecId::TopKDelta;
+        assert_eq!(latency(&[w], &cfg).emio_cycles, rep.emio_cycles);
     }
 }

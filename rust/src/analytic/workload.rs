@@ -5,16 +5,19 @@
 //! * **ops** — MACs (dense layers) or ACCs (spiking layers; one accumulate
 //!   per presynaptic spike event = MACs x activity x T);
 //! * **local packets** — intra-core deliveries through the local port: the
-//!   layer's egress traffic. Dense activations need `ceil(bits/8)` packets
-//!   each (Table 3 payload is 8-bit); spikes are single-bit events, so a
-//!   neuron emits `activity x T` packets per inference;
+//!   layer's egress traffic, delegated to the edge's
+//!   [`crate::codec::BoundaryCodec::packets_per_edge`] (dense activations need
+//!   `ceil(bits/8)` packets each per Table 3; rate-coded spikes emit
+//!   `activity x T` single-bit events per neuron; see [`crate::codec`] for
+//!   the temporal / top-k-delta formulas);
 //! * **routed packets** — Eq. 5: local packets x AverageHops (Eq. 4);
 //! * **boundary packets** — the subset of egress that crosses die(s).
 
 use crate::arch::params::ArchConfig;
+use crate::codec::CodecId;
 use crate::model::layer::Network;
 use crate::model::mapping::Mapping;
-use crate::model::partition::{ComputeMode, Partition, TrafficMode};
+use crate::model::partition::{ComputeMode, Partition};
 use crate::sparsity::SparsityProfile;
 
 /// Workload of one layer (per single-input inference).
@@ -23,7 +26,8 @@ pub struct LayerWork {
     pub layer_idx: usize,
     pub name: String,
     pub compute: ComputeMode,
-    pub egress: TrafficMode,
+    /// Codec handle of the egress edge (resolves via [`CodecId::codec`]).
+    pub egress: CodecId,
     /// MACs or ACCs depending on `compute`.
     pub ops: u64,
     /// Packets delivered through local ports (egress of this layer).
@@ -46,12 +50,16 @@ pub struct LayerWork {
     pub activity: f64,
 }
 
-/// Packets one dense activation needs on the wire: 8-bit payload per packet.
+/// Packets one dense activation needs on the wire: 8-bit payload per
+/// packet. The closed form [`crate::codec::DenseCodec`] must reproduce
+/// (locked by `tests/codec_regression.rs`).
 pub fn dense_packets_per_neuron(bits: u32) -> u64 {
     (bits as u64).div_ceil(8)
 }
 
-/// Spike packets one neuron emits per inference: activity x T events.
+/// Spike packets one neuron emits per inference: activity x T events. The
+/// closed form [`crate::codec::RateCodec`] must reproduce (locked by
+/// `tests/codec_regression.rs`).
 pub fn spike_packets_per_neuron(activity: f64, ticks: u32) -> f64 {
     activity * ticks as f64
 }
@@ -77,12 +85,8 @@ pub fn layer_workloads(
             ComputeMode::Acc => layer.accs(act, cfg.ticks),
         };
 
-        let local_packets = match pl.egress {
-            TrafficMode::Dense => layer.neurons() * dense_packets_per_neuron(cfg.bits),
-            TrafficMode::Spike => {
-                (layer.neurons() as f64 * spike_packets_per_neuron(act, cfg.ticks)).round() as u64
-            }
-        };
+        let local_packets =
+            pl.egress.codec().packets_per_edge(layer.neurons(), act, cfg.ticks, cfg.bits);
 
         let avg_hops = if i + 1 < n { mapping.average_hops(i, i + 1, cfg) } else { 1.0 };
         let routed_packets = (local_packets as f64 * avg_hops).round() as u64;
@@ -165,6 +169,37 @@ mod tests {
                 assert!(w.avg_hops >= 1.0);
             }
         }
+    }
+
+    #[test]
+    fn codec_choice_orders_boundary_packets() {
+        // the codec axis at matched activity: dense >= rate >= topk-delta
+        // >= temporal boundary packets on the same partitioned network
+        let net = Network {
+            name: "t".into(),
+            layers: (0..100)
+                .map(|i| Layer::new(format!("l{i}"), LayerKind::Dense { in_f: 256, out_f: 256 }))
+                .collect(),
+        };
+        let boundary = |codec: CodecId| {
+            let cfg = ArchConfig::baseline(Variant::Hnn).with_boundary_codec(codec);
+            let m = map_network(&net, &cfg);
+            let p = partition(&net, &m, &cfg);
+            layer_workloads(&net, &m, &p, &cfg, &SparsityProfile::uniform(100, 0.1))
+                .iter()
+                .map(|w| w.boundary_packets)
+                .sum::<u64>()
+        };
+        let counts: Vec<u64> = CodecId::ALL.iter().map(|&c| boundary(c)).collect();
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(
+            counts.windows(2).all(|w| w[0] >= w[1]),
+            "dense >= rate >= topk >= temporal violated: {counts:?}"
+        );
+        // dense codec on the boundary == what the ANN charges (256 packets);
+        // rate stays at the legacy 205-packet lock
+        assert_eq!(counts[0], 256);
+        assert_eq!(counts[1], 205);
     }
 
     #[test]

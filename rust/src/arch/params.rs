@@ -3,6 +3,8 @@
 
 use std::fmt;
 
+use crate::codec::CodecId;
+
 /// Which accelerator the chip array implements (the paper's three columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Variant {
@@ -66,6 +68,10 @@ pub struct ArchConfig {
     pub input_activity: f64,
     /// Scheduler max delay in ticks (4-bit delivery time -> 16).
     pub max_delay_ticks: u32,
+    /// Boundary traffic encoding for spiking edges (paper baseline: rate
+    /// coding, Eq. 2). Dense edges always use [`CodecId::Dense`]; this
+    /// selects what SNN edges and HNN die-crossing edges emit.
+    pub boundary_codec: CodecId,
 }
 
 impl ArchConfig {
@@ -82,6 +88,7 @@ impl ArchConfig {
             ticks: 8,
             input_activity: 0.10,
             max_delay_ticks: 16,
+            boundary_codec: CodecId::Rate,
         }
     }
 
@@ -162,6 +169,11 @@ impl ArchConfig {
 
     pub fn with_ticks(mut self, t: u32) -> Self {
         self.ticks = t;
+        self
+    }
+
+    pub fn with_boundary_codec(mut self, codec: CodecId) -> Self {
+        self.boundary_codec = codec;
         self
     }
 }

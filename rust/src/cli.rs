@@ -104,17 +104,19 @@ USAGE: spikelink <command> [options]
 
 COMMANDS:
   report            regenerate paper tables/figures from the analytic engine
-                      --table 1|2|3   --figure 7|8|9|10|11|12|13  (default: all)
+                      --table 1|2|3|6  --figure 7|8|9|10|11|12|13|14  (default: all)
                       --out DIR       also write CSVs (default results/)
                       --runs DIR      run records for fig 9 (default results/runs)
   simulate          one (network, variant) analytic simulation
                       --model rwkv|msresnet18|efficientnet-b4
                       --variant ann|snn|hnn  --bits N  --dim N  --grouping N
                       --activity F    uniform firing activity (default 0.10)
+                      --codec dense|rate|topk-delta|temporal   boundary codec
                       --sparsity-from FILE   use measured rates from a run JSON
                       --verbose       dump the per-layer workload table
   sweep             sweep an axis and print speedup/efficiency vs ANN
-                      --model NAME  --axis bits|dim|grouping|sparsity
+                      --model NAME  --axis bits|dim|grouping|sparsity|codec
+                      --codec NAME    pin the boundary codec on non-codec axes
   train             run the AOT train-step loop (needs `make artifacts`)
                       --model hnn_lm|ann_lm|snn_lm|hnn_vision|...
                       --steps N (default 200)  --lam F  --budget F
@@ -131,6 +133,8 @@ COMMANDS:
                       --traffic uniform|full-span|sparse|boundary (default uniform)
                       --packets N  --cycles N --period N  --neurons N --dense N
                       --activity F --ticks N  --seed N  --max-cycles N
+                      --codec dense|rate|topk-delta|temporal   boundary-traffic
+                        encoding (default: dense if --dense > 0, else rate)
                       --reference          run the retained naive engine instead
                       --no-telemetry       skip per-packet records (no tail quantiles)
                       --save FILE          write the scenario JSON for reproduction

@@ -1,0 +1,518 @@
+//! Boundary-encoding codecs — the repo's primary extension axis for the
+//! paper's central claim (*learnable* sparsification of die-to-die traffic
+//! via spike-based encoding).
+//!
+//! Until PR 4 the repo hardwired exactly two encodings (dense activation
+//! packets and rate-coded spikes) as a closed `TrafficMode` enum threaded
+//! through partitioning, the analytic engine, and the cycle simulator.
+//! [`BoundaryCodec`] replaces that enum with an open trait: a codec owns
+//!
+//! * the **analytic packet count** for a boundary edge
+//!   ([`BoundaryCodec::packets_per_edge`] — what `analytic::workload`
+//!   charges per layer),
+//! * the **payload width** on the wire ([`BoundaryCodec::payload_bits`]),
+//! * **energy / latency cost hooks** ([`BoundaryCodec::d2d_energy_scale`],
+//!   [`BoundaryCodec::latency_overhead_cycles`] — multiplied into the
+//!   Eq. 8/§4.4 models; identity for the legacy codecs so default outputs
+//!   stay bit-identical), and
+//! * **seeded cycle-sim traffic generation**
+//!   ([`BoundaryCodec::edge_traffic`] — the concrete `(src, dest)` event
+//!   set a `noc::Scenario` plays through the clocked engines).
+//!
+//! Four built-in codecs ([`CodecId::ALL`]):
+//!
+//! | codec | expected packets / edge | payload | sampled event set |
+//! |---|---|---|---|
+//! | [`DenseCodec`] | `N x ceil(bits/8)` | 8 b | every activation slot |
+//! | [`RateCodec`] | `round(N x a x T)` | 1 b | every Bernoulli(a) fire over T ticks |
+//! | [`TopKDeltaCodec`] | `round(N x a x (1 + (T-1)(1-a)))` | 4 b graded | rising edges (silent -> firing) |
+//! | [`TemporalCodec`] | `round(N x (1 - (1-a)^T))` | 1 b (time-coded) | first fire per neuron (TTFS) |
+//!
+//! `DenseCodec`/`RateCodec` reproduce the pre-codec `TrafficMode::Dense`/
+//! `Spike` numbers **bit-for-bit** (locked by `rust/tests/codec_regression.rs`):
+//! same closed forms, same RNG draw order in traffic generation.
+//!
+//! **Ordering guarantee.** The three spiking codecs sample the *same*
+//! Bernoulli fire pattern (same seed, same draw order), then filter it:
+//! rate keeps every fire, top-k-delta keeps the rising edges (a first fire
+//! is always a rising edge), temporal keeps only the first fire. So for any
+//! seed the event sets nest, `rate >= topk-delta >= temporal`, per sample
+//! path — not just in expectation. Dense exceeds rate whenever
+//! `a x T <= ceil(bits/8)` (always true at the paper's matched operating
+//! point, a = 0.10, T = 8, 8-bit).
+
+use std::fmt;
+
+use crate::arch::chip::Coord;
+use crate::noc::duplex::CrossTraffic;
+use crate::util::rng::Rng;
+
+/// Stable identifier of a built-in boundary codec. `Copy` so partitioned
+/// layers and scenarios can carry a codec handle by value;
+/// [`CodecId::codec`] resolves it to the trait implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    /// One packet per activation byte, no zero-skipping (`TrafficMode::Dense`).
+    Dense,
+    /// Rate-coded spike events, packets = N x a x T (`TrafficMode::Spike`).
+    Rate,
+    /// Learnable-threshold top-k delta coding: graded spikes on
+    /// silent->firing transitions only.
+    TopKDelta,
+    /// Temporal (TTFS-style) coding: at most one spike per neuron per
+    /// window; the spike *time* carries the value.
+    Temporal,
+}
+
+impl CodecId {
+    /// All built-in codecs, densest first (the Table 6 / Fig 14 row order).
+    pub const ALL: [CodecId; 4] =
+        [CodecId::Dense, CodecId::Rate, CodecId::TopKDelta, CodecId::Temporal];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CodecId::Dense => "dense",
+            CodecId::Rate => "rate",
+            CodecId::TopKDelta => "topk-delta",
+            CodecId::Temporal => "temporal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CodecId> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Some(CodecId::Dense),
+            "rate" | "spike" => Some(CodecId::Rate),
+            "topk-delta" | "topk" | "delta" => Some(CodecId::TopKDelta),
+            "temporal" | "ttfs" => Some(CodecId::Temporal),
+            _ => None,
+        }
+    }
+
+    /// Resolve the handle to its codec implementation.
+    pub fn codec(&self) -> &'static dyn BoundaryCodec {
+        match self {
+            CodecId::Dense => &DenseCodec,
+            CodecId::Rate => &RateCodec,
+            CodecId::TopKDelta => &TopKDeltaCodec,
+            CodecId::Temporal => &TemporalCodec,
+        }
+    }
+
+    /// True for codecs whose edges carry spike events (ACC compute in the
+    /// partitioner); false only for [`CodecId::Dense`].
+    pub fn is_spiking(&self) -> bool {
+        *self != CodecId::Dense
+    }
+}
+
+impl fmt::Display for CodecId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Map neuron `i` of a boundary edge onto its (source, destination) tiles:
+/// sources sit on the East boundary column at row `i % dim` (the paper's
+/// peripheral ports), destinations on the mirrored row of the far chip,
+/// column `(i / dim) % dim`. This is the exact pre-codec
+/// `noc::traffic::boundary_edge_traffic` coordinate map.
+pub fn edge_endpoints(neuron: usize, dim: usize) -> (Coord, Coord) {
+    let row = neuron % dim;
+    (Coord::new(dim - 1, row), Coord::new(neuron / dim % dim, row))
+}
+
+/// A die-boundary traffic encoding: how one layer edge's activations become
+/// packets, in both the closed-form (analytic) and sampled (cycle-sim)
+/// worlds. Implementations must keep the two consistent — the sampled event
+/// count converges on `packets_per_edge` (exactly, for deterministic
+/// codecs like [`DenseCodec`]).
+pub trait BoundaryCodec {
+    /// The handle this implementation answers to.
+    fn id(&self) -> CodecId;
+
+    /// Human-readable name (the `CodecId::as_str` spelling).
+    fn name(&self) -> &'static str {
+        self.id().as_str()
+    }
+
+    /// Expected packets emitted by an edge of `neurons` neurons firing at
+    /// `activity` over a `ticks`-cycle window at `bits` precision — the
+    /// analytic model's per-layer `local_packets` count.
+    fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, bits: u32) -> u64;
+
+    /// Informative payload bits per packet at `bits` activation precision
+    /// (the on-wire packet/frame sizes are fixed by Table 3; this is the
+    /// useful width, feeding the Table 6 bandwidth column).
+    fn payload_bits(&self, bits: u32) -> u32;
+
+    /// Energy multiplier on the §4.4 die-to-die per-packet cost. 1.0 for
+    /// every built-in codec (all fit the fixed 76-bit D2D frame); the hook
+    /// exists for codecs that widen the frame.
+    fn d2d_energy_scale(&self) -> f64 {
+        1.0
+    }
+
+    /// Extra cycles one die crossing pays for encode/decode beyond the
+    /// Eq. 8 SerDes pipeline, per boundary edge. 0 for the legacy codecs;
+    /// TTFS decoding must observe the full `ticks` window.
+    fn latency_overhead_cycles(&self, _ticks: u32) -> u64 {
+        0
+    }
+
+    /// Seeded cycle-sim traffic for one boundary edge: the concrete
+    /// `(src, dest)` event set, deterministic in `seed`. Coordinates follow
+    /// [`edge_endpoints`].
+    fn edge_traffic(
+        &self,
+        neurons: usize,
+        activity: f64,
+        ticks: u32,
+        bits: u32,
+        dim: usize,
+        seed: u64,
+    ) -> Vec<CrossTraffic>;
+}
+
+/// Sample the edge's Bernoulli fire pattern (the `RateCodec` event set) and
+/// keep the events `keep` selects; for every *fired* tick of a neuron,
+/// `keep` sees `(fired_at_previous_tick, fired_earlier_in_window)`. All
+/// three spiking codecs filter through this one sampler — one fire pattern
+/// per seed, one draw order, three nested event sets (every first fire is
+/// a rising edge, every rising edge is a fire).
+fn filtered_spike_traffic(
+    neurons: usize,
+    activity: f64,
+    ticks: u32,
+    dim: usize,
+    seed: u64,
+    keep: impl Fn(bool, bool) -> bool,
+) -> Vec<CrossTraffic> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for i in 0..neurons {
+        let (src, dest) = edge_endpoints(i, dim);
+        let mut prev = false;
+        let mut fired_any = false;
+        for _ in 0..ticks {
+            let fire = rng.chance(activity);
+            if fire && keep(prev, fired_any) {
+                out.push(CrossTraffic { src, dest });
+            }
+            prev = fire;
+            fired_any |= fire;
+        }
+    }
+    out
+}
+
+/// `TrafficMode::Dense`, reborn: one packet per activation byte
+/// (`ceil(bits/8)` per neuron, 8-bit payload each, §5.1 "zero-skipping is
+/// not implemented in the ANN cores").
+pub struct DenseCodec;
+
+impl BoundaryCodec for DenseCodec {
+    fn id(&self) -> CodecId {
+        CodecId::Dense
+    }
+
+    fn packets_per_edge(&self, neurons: u64, _activity: f64, _ticks: u32, bits: u32) -> u64 {
+        neurons * (bits as u64).div_ceil(8)
+    }
+
+    fn payload_bits(&self, _bits: u32) -> u32 {
+        8
+    }
+
+    fn edge_traffic(
+        &self,
+        neurons: usize,
+        _activity: f64,
+        _ticks: u32,
+        bits: u32,
+        dim: usize,
+        _seed: u64,
+    ) -> Vec<CrossTraffic> {
+        let per_neuron = (bits as usize).div_ceil(8).max(1);
+        let mut out = Vec::with_capacity(neurons * per_neuron);
+        for i in 0..neurons {
+            let (src, dest) = edge_endpoints(i, dim);
+            for _ in 0..per_neuron {
+                out.push(CrossTraffic { src, dest });
+            }
+        }
+        out
+    }
+}
+
+/// `TrafficMode::Spike`, reborn: rate-coded single-bit events, a Bernoulli
+/// draw per neuron per tick (Eq. 2) — packets = N x a x T in expectation.
+pub struct RateCodec;
+
+impl BoundaryCodec for RateCodec {
+    fn id(&self) -> CodecId {
+        CodecId::Rate
+    }
+
+    fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, _bits: u32) -> u64 {
+        (neurons as f64 * activity * ticks as f64).round() as u64
+    }
+
+    fn payload_bits(&self, _bits: u32) -> u32 {
+        1
+    }
+
+    fn edge_traffic(
+        &self,
+        neurons: usize,
+        activity: f64,
+        ticks: u32,
+        _bits: u32,
+        dim: usize,
+        seed: u64,
+    ) -> Vec<CrossTraffic> {
+        filtered_spike_traffic(neurons, activity, ticks, dim, seed, |_, _| true)
+    }
+}
+
+/// Learnable-threshold top-k delta coding: a neuron transmits a *graded*
+/// (magnitude-carrying) spike only when it crosses the learned threshold
+/// upward — a silent->firing transition. Sustained firing is suppressed
+/// (the previous graded value still holds at the decoder), so the event set
+/// is exactly the rising edges of the rate-coded pattern: per neuron per
+/// window, `a + (T-1) x a x (1-a)` expected transmissions. The sparsity
+/// budget `k` per tick ([`TopKDeltaCodec::budget_k`]) is what the trained
+/// threshold targets: expected rising edges per tick, `N x a x (1-a)`,
+/// sit at or below `k = ceil(a x N)` for every activity.
+pub struct TopKDeltaCodec;
+
+impl TopKDeltaCodec {
+    /// Per-tick transmission budget the learnable threshold is trained to:
+    /// `k = ceil(activity x neurons)`, driven by the layer's
+    /// `SparsityProfile` activity (never below 1 on a non-empty edge).
+    pub fn budget_k(neurons: u64, activity: f64) -> u64 {
+        if neurons == 0 {
+            return 0;
+        }
+        ((neurons as f64 * activity).ceil() as u64).max(1)
+    }
+}
+
+impl BoundaryCodec for TopKDeltaCodec {
+    fn id(&self) -> CodecId {
+        CodecId::TopKDelta
+    }
+
+    /// Expected rising edges: the first tick fires fresh with probability
+    /// `a`; each later tick is a rising edge with probability `a x (1-a)`.
+    fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, _bits: u32) -> u64 {
+        if ticks == 0 {
+            return 0;
+        }
+        let per_neuron = activity * (1.0 + (ticks as f64 - 1.0) * (1.0 - activity));
+        (neurons as f64 * per_neuron).round() as u64
+    }
+
+    /// Graded spikes reuse the Table 3 spike payload slot (4-bit + padding).
+    fn payload_bits(&self, _bits: u32) -> u32 {
+        4
+    }
+
+    fn edge_traffic(
+        &self,
+        neurons: usize,
+        activity: f64,
+        ticks: u32,
+        _bits: u32,
+        dim: usize,
+        seed: u64,
+    ) -> Vec<CrossTraffic> {
+        // rising edges of the rate pattern: transmit only when the
+        // previous tick was silent
+        filtered_spike_traffic(neurons, activity, ticks, dim, seed, |prev, _| !prev)
+    }
+}
+
+/// Temporal (time-to-first-spike) coding: each neuron emits **at most one**
+/// spike per `ticks`-cycle window — at its first fire — and the spike's
+/// *timing* encodes the value. Expected packets: `N x (1 - (1-a)^T)`
+/// (the probability a neuron fires at all in the window). The decoder must
+/// observe the whole window before the TTFS order is final, so every die
+/// crossing pays a `ticks`-cycle decode overhead on top of Eq. 8.
+pub struct TemporalCodec;
+
+impl BoundaryCodec for TemporalCodec {
+    fn id(&self) -> CodecId {
+        CodecId::Temporal
+    }
+
+    fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, _bits: u32) -> u64 {
+        let p_any = 1.0 - (1.0 - activity).powi(ticks as i32);
+        (neurons as f64 * p_any).round() as u64
+    }
+
+    fn payload_bits(&self, _bits: u32) -> u32 {
+        1
+    }
+
+    fn latency_overhead_cycles(&self, ticks: u32) -> u64 {
+        ticks as u64
+    }
+
+    fn edge_traffic(
+        &self,
+        neurons: usize,
+        activity: f64,
+        ticks: u32,
+        _bits: u32,
+        dim: usize,
+        seed: u64,
+    ) -> Vec<CrossTraffic> {
+        filtered_spike_traffic(neurons, activity, ticks, dim, seed, |_, fired| !fired)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: (u64, f64, u32, u32) = (256, 0.1, 8, 8); // N, a, T, bits
+
+    #[test]
+    fn ids_roundtrip_and_resolve() {
+        for id in CodecId::ALL {
+            assert_eq!(CodecId::parse(id.as_str()), Some(id));
+            assert_eq!(id.codec().id(), id);
+            assert_eq!(id.codec().name(), id.as_str());
+        }
+        assert_eq!(CodecId::parse("spike"), Some(CodecId::Rate), "legacy spelling");
+        assert_eq!(CodecId::parse("ttfs"), Some(CodecId::Temporal));
+        assert_eq!(CodecId::parse("bogus"), None);
+        assert!(!CodecId::Dense.is_spiking());
+        assert!(CodecId::Rate.is_spiking() && CodecId::Temporal.is_spiking());
+    }
+
+    #[test]
+    fn dense_and_rate_match_legacy_closed_forms() {
+        let (n, a, t, bits) = BASE;
+        // TrafficMode::Dense: neurons x ceil(bits/8)
+        assert_eq!(DenseCodec.packets_per_edge(n, a, t, 8), 256);
+        assert_eq!(DenseCodec.packets_per_edge(n, a, t, 32), 1024);
+        assert_eq!(DenseCodec.packets_per_edge(n, a, t, 4), 256);
+        // TrafficMode::Spike: round(neurons x a x T) — the 205-packet lock
+        assert_eq!(RateCodec.packets_per_edge(n, a, t, bits), 205);
+        assert_eq!(RateCodec.packets_per_edge(4096, 0.5, 4, bits), 8192);
+    }
+
+    #[test]
+    fn analytic_counts_ordered_at_matched_activity() {
+        // the acceptance ordering: dense >= rate >= topk-delta >= temporal
+        let (n, _, t, bits) = BASE;
+        for &a in &[0.02, 0.05, 0.1, 0.125] {
+            let counts: Vec<u64> = CodecId::ALL
+                .iter()
+                .map(|c| c.codec().packets_per_edge(n, a, t, bits))
+                .collect();
+            assert!(
+                counts.windows(2).all(|w| w[0] >= w[1]),
+                "a={a}: {counts:?} not ordered dense >= rate >= topk >= temporal"
+            );
+        }
+    }
+
+    #[test]
+    fn spiking_event_sets_nest_for_a_common_seed() {
+        // same seed -> rate keeps every fire, topk-delta the rising edges,
+        // temporal the first fires: counts ordered per sample path, and the
+        // temporal set has at most one event per neuron.
+        for seed in [1u64, 7, 42] {
+            for &a in &[0.05, 0.1, 0.3, 0.7, 1.0] {
+                let rate = RateCodec.edge_traffic(128, a, 8, 8, 8, seed);
+                let topk = TopKDeltaCodec.edge_traffic(128, a, 8, 8, 8, seed);
+                let temporal = TemporalCodec.edge_traffic(128, a, 8, 8, 8, seed);
+                assert!(
+                    rate.len() >= topk.len() && topk.len() >= temporal.len(),
+                    "seed={seed} a={a}: {} >= {} >= {} violated",
+                    rate.len(),
+                    topk.len(),
+                    temporal.len()
+                );
+                assert!(temporal.len() <= 128, "TTFS fires at most once per neuron");
+            }
+        }
+    }
+
+    #[test]
+    fn temporal_fires_at_most_once_per_neuron_exactly_once_at_full_activity() {
+        let t = TemporalCodec.edge_traffic(64, 1.0, 8, 8, 8, 3);
+        assert_eq!(t.len(), 64);
+        assert_eq!(TemporalCodec.packets_per_edge(64, 1.0, 8, 8), 64);
+        assert_eq!(TemporalCodec.packets_per_edge(64, 0.0, 8, 8), 0);
+    }
+
+    #[test]
+    fn topk_delta_budget_tracks_profile_activity() {
+        assert_eq!(TopKDeltaCodec::budget_k(256, 0.1), 26); // ceil(25.6)
+        assert_eq!(TopKDeltaCodec::budget_k(256, 0.0), 1); // floor of 1
+        assert_eq!(TopKDeltaCodec::budget_k(0, 0.5), 0);
+        // expected rising edges per tick N x a x (1-a) never exceed k
+        for &a in &[0.01, 0.1, 0.5, 0.9] {
+            let expect_per_tick = 256.0 * a * (1.0 - a);
+            assert!(expect_per_tick <= TopKDeltaCodec::budget_k(256, a) as f64);
+        }
+    }
+
+    #[test]
+    fn sampled_counts_converge_on_analytic() {
+        let (a, t) = (0.1, 8);
+        for id in CodecId::ALL {
+            let c = id.codec();
+            let expect = c.packets_per_edge(4096, a, t, 8) as f64;
+            let got = c.edge_traffic(4096, a, t, 8, 8, 42).len() as f64;
+            assert!(
+                (got - expect).abs() / expect.max(1.0) < 0.10,
+                "{id}: sampled {got} vs analytic {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_hooks_identity_for_legacy_codecs() {
+        for id in [CodecId::Dense, CodecId::Rate, CodecId::TopKDelta] {
+            assert_eq!(id.codec().d2d_energy_scale(), 1.0);
+            assert_eq!(id.codec().latency_overhead_cycles(8), 0, "{id}");
+        }
+        // TTFS decode waits out the window
+        assert_eq!(CodecId::Temporal.codec().latency_overhead_cycles(8), 8);
+        assert_eq!(CodecId::Temporal.codec().d2d_energy_scale(), 1.0);
+    }
+
+    #[test]
+    fn edge_endpoints_match_the_boundary_map() {
+        let dim = 4;
+        for i in 0..12 {
+            let (src, dest) = edge_endpoints(i, dim);
+            assert_eq!(src.x as usize, dim - 1);
+            assert_eq!(src.y as usize, i % dim);
+            assert_eq!(dest.x as usize, (i / dim) % dim);
+            assert_eq!(dest.y as usize, i % dim);
+        }
+    }
+
+    #[test]
+    fn payload_bits_per_codec() {
+        assert_eq!(DenseCodec.payload_bits(8), 8);
+        assert_eq!(DenseCodec.payload_bits(32), 8); // per packet, not per neuron
+        assert_eq!(RateCodec.payload_bits(8), 1);
+        assert_eq!(TopKDeltaCodec.payload_bits(8), 4);
+        assert_eq!(TemporalCodec.payload_bits(8), 1);
+    }
+
+    #[test]
+    fn edge_traffic_deterministic_in_seed() {
+        for id in CodecId::ALL {
+            let a = id.codec().edge_traffic(100, 0.3, 8, 8, 8, 11);
+            let b = id.codec().edge_traffic(100, 0.3, 8, 8, 8, 11);
+            assert_eq!(a, b, "{id}");
+        }
+    }
+}

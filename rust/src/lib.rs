@@ -25,10 +25,17 @@
 //! [`noc::harness`] holds the only generic drivers (differential lockstep,
 //! timed schedules). See the migration note in [`noc`] if you are coming
 //! from the old per-topology `MeshStats`/`DuplexStats`/`ChainStats` API.
+//!
+//! Die-boundary traffic encodings are the repo's primary extension axis:
+//! the [`codec::BoundaryCodec`] trait (dense / rate / top-k-delta /
+//! temporal built-ins) owns packet counts, payload widths, energy/latency
+//! hooks, and seeded cycle-sim traffic for every boundary edge, from the
+//! partitioner down to `spikelink noc-sim --codec` (see EXPERIMENTS.md
+//! §Codec; the old two-variant `TrafficMode` enum is gone).
 
 pub mod analytic;
-pub mod metrics;
 pub mod arch;
+pub mod codec;
 pub mod model;
 pub mod noc;
 pub mod report;

@@ -6,6 +6,7 @@ use anyhow::{anyhow, Result};
 
 use spikelink::analytic::{self, simulate, simulate_variants};
 use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::codec::CodecId;
 use spikelink::model::networks;
 use spikelink::report::{self, figures, tables};
 use spikelink::runtime::{Engine, Manifest};
@@ -53,6 +54,15 @@ fn run(args: &cli::Args) -> Result<()> {
     }
 }
 
+fn codec_from(args: &cli::Args) -> Result<Option<CodecId>> {
+    match args.get("codec") {
+        None => Ok(None),
+        Some(name) => CodecId::parse(name)
+            .map(Some)
+            .ok_or_else(|| anyhow!("--codec must be dense|rate|topk-delta|temporal, got {name}")),
+    }
+}
+
 fn arch_from(args: &cli::Args, variant: Variant) -> Result<ArchConfig> {
     let mut cfg = ArchConfig::baseline(variant);
     cfg.bits = args.u32_or("bits", cfg.bits)?;
@@ -60,6 +70,9 @@ fn arch_from(args: &cli::Args, variant: Variant) -> Result<ArchConfig> {
     cfg.grouping = args.usize_or("grouping", cfg.grouping)?;
     cfg.ticks = args.u32_or("ticks", cfg.ticks)?;
     cfg.input_activity = args.f64_or("activity", cfg.input_activity)?;
+    if let Some(codec) = codec_from(args)? {
+        cfg.boundary_codec = codec;
+    }
     Ok(cfg)
 }
 
@@ -118,6 +131,15 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
     }
     if all || figure == Some(13) {
         emit("fig13_efficiency_sweep", &figures::fig13_table("ms-resnet18"))?;
+    }
+    if all || table == Some(6) {
+        emit("table6_codec_bandwidth", &tables::table6_codec_bandwidth(256, 0.1, 8, 8))?;
+    }
+    if all || figure == Some(14) {
+        emit(
+            "fig14_codec_sweep",
+            &figures::fig14_codec_sweep("ms-resnet18", &[0.9, 0.95, 0.975, 0.99]),
+        )?;
     }
     if all {
         let (speed, eff, _) = figures::headline_claims();
@@ -213,10 +235,20 @@ fn cmd_sweep(args: &cli::Args) -> Result<()> {
     let model = args.str_or("model", "ms-resnet18");
     let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let axis = args.str_or("axis", "bits");
+    // --codec pins the boundary encoding for every swept point (the codec
+    // axis instead sweeps it, one row per codec)
+    let pinned_codec = codec_from(args)?;
     let mut t = spikelink::util::table::Table::new(
         format!("sweep {axis} — {model} (speedup & efficiency vs ANN)"),
         &["config", "SNN speedup", "HNN speedup", "SNN eff", "HNN eff"],
     );
+    let base = || {
+        let mut cfg = ArchConfig::baseline(Variant::Ann);
+        if let Some(codec) = pinned_codec {
+            cfg.boundary_codec = codec;
+        }
+        cfg
+    };
     let mut push = |label: String, cfg: ArchConfig| {
         let [ann, snn, hnn] = simulate_variants(&net, &cfg);
         t.row(vec![
@@ -230,24 +262,29 @@ fn cmd_sweep(args: &cli::Args) -> Result<()> {
     match axis.as_str() {
         "bits" => {
             for bits in [4u32, 8, 16, 32] {
-                push(format!("bits={bits}"), ArchConfig::baseline(Variant::Ann).with_bits(bits));
+                push(format!("bits={bits}"), base().with_bits(bits));
             }
         }
         "dim" => {
             for dim in [4usize, 8, 16] {
-                push(format!("dim={dim}"), ArchConfig::baseline(Variant::Ann).with_noc_dim(dim));
+                push(format!("dim={dim}"), base().with_noc_dim(dim));
             }
         }
         "grouping" => {
             for g in [64usize, 128, 256] {
-                push(format!("G={g}"), ArchConfig::baseline(Variant::Ann).with_grouping(g));
+                push(format!("G={g}"), base().with_grouping(g));
             }
         }
         "sparsity" => {
             for s in [0.5, 0.8, 0.9, 0.95, 0.99] {
-                let mut cfg = ArchConfig::baseline(Variant::Ann);
+                let mut cfg = base();
                 cfg.input_activity = 1.0 - s;
                 push(format!("sparsity={s}"), cfg);
+            }
+        }
+        "codec" => {
+            for codec in CodecId::ALL {
+                push(format!("codec={codec}"), base().with_boundary_codec(codec));
             }
         }
         other => return Err(anyhow!("unknown axis {other}")),
@@ -375,6 +412,11 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
     use spikelink::noc::{Scenario, TrafficSpec};
 
     let sc = if let Some(path) = args.get("scenario") {
+        if args.get("codec").is_some() {
+            return Err(anyhow!(
+                "--codec cannot override a --scenario file; set the codec in its traffic object"
+            ));
+        }
         let text = std::fs::read_to_string(path)?;
         Scenario::from_json_str(&text).map_err(|e| anyhow!("{path}: {e}"))?
     } else {
@@ -405,19 +447,28 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
                 period: args.usize_or("period", 16)? as u64,
                 seed,
             },
-            "boundary" => TrafficSpec::Boundary {
-                neurons: args.usize_or("neurons", 256)?,
-                dense: args.usize_or("dense", 0)?,
-                activity: args.f64_or("activity", 0.1)?,
-                ticks: args.u32_or("ticks", 8)?,
-                seed,
-            },
+            "boundary" => {
+                let dense = args.usize_or("dense", 0)?;
+                let codec = codec_from(args)?
+                    .unwrap_or_else(|| TrafficSpec::legacy_boundary_codec(dense));
+                TrafficSpec::Boundary {
+                    neurons: args.usize_or("neurons", 256)?,
+                    dense,
+                    activity: args.f64_or("activity", 0.1)?,
+                    ticks: args.u32_or("ticks", 8)?,
+                    seed,
+                    codec,
+                }
+            }
             other => {
                 return Err(anyhow!(
                     "--traffic must be uniform|full-span|sparse|boundary, got {other}"
                 ))
             }
         };
+        if args.get("codec").is_some() && !matches!(traffic, TrafficSpec::Boundary { .. }) {
+            return Err(anyhow!("--codec only applies to --traffic boundary"));
+        }
         sc = sc
             .traffic(traffic)
             .with_max_cycles(args.usize_or("max-cycles", DEFAULT_MAX_CYCLES as usize)? as u64);
@@ -440,6 +491,9 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         sc.label(),
         if reference { "reference" } else { "optimized" },
     );
+    if let TrafficSpec::Boundary { codec, .. } = sc.traffic {
+        println!("codec           : {codec}");
+    }
     println!("injected        : {}", s.injected);
     println!("delivered       : {}", s.delivered);
     println!("cycles          : {}", s.cycles);

@@ -8,4 +8,4 @@ pub mod partition;
 
 pub use layer::{Layer, LayerKind, Network};
 pub use mapping::{map_network, LayerPlacement, Mapping};
-pub use partition::{partition, ComputeMode, PartLayer, Partition, TrafficMode};
+pub use partition::{partition, ComputeMode, PartLayer, Partition};

@@ -1,15 +1,18 @@
 //! ANN / SNN / HNN partitioning of a mapped network (§3, §4.2).
 //!
 //! Decides, per layer, the *compute mode* (MAC vs ACC) and, per layer edge,
-//! the *traffic mode* (dense activation packets vs spike packets):
+//! the *boundary codec* (how the edge's activations become packets — see
+//! [`crate::codec`]):
 //!
-//! * **ANN**  — every layer MAC; every edge dense.
-//! * **SNN**  — every layer ACC; every edge spiking.
+//! * **ANN**  — every layer MAC; every edge [`CodecId::Dense`].
+//! * **SNN**  — every layer ACC; every edge uses the configured
+//!   [`ArchConfig::boundary_codec`] (paper baseline: rate coding).
 //! * **HNN**  — interior layers MAC with dense on-chip edges; edges that
-//!   cross a die boundary are *spiking* (the boundary layer runs on the
-//!   peripheral spiking cores, its traffic is rate-coded spike packets).
+//!   cross a die boundary use the boundary codec (the boundary layer runs
+//!   on the peripheral spiking cores, its traffic is spike-encoded).
 
 use crate::arch::params::{ArchConfig, Variant};
+use crate::codec::CodecId;
 use crate::model::layer::Network;
 use crate::model::mapping::Mapping;
 
@@ -22,23 +25,14 @@ pub enum ComputeMode {
     Acc,
 }
 
-/// Traffic mode of the edge *leaving* a layer.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TrafficMode {
-    /// One packet per activation (8-bit payload), no zero-skipping
-    /// ("zero-skipping is not implemented in the ANN cores", §5.1).
-    Dense,
-    /// Rate-coded spike events: packets = neurons x rate x T.
-    Spike,
-}
-
 /// Partitioned view of one layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PartLayer {
     pub layer_idx: usize,
     pub compute: ComputeMode,
-    /// Traffic on the edge from this layer to the next.
-    pub egress: TrafficMode,
+    /// Codec handle for the edge from this layer to the next — resolves to
+    /// the packet/bit/energy/traffic model via [`CodecId::codec`].
+    pub egress: CodecId,
     /// Whether that edge crosses >= 1 die boundary.
     pub crosses_die: bool,
     /// Number of die boundaries crossed.
@@ -55,6 +49,7 @@ pub struct Partition {
 /// Build the partition for a mapped network under a variant config.
 pub fn partition(net: &Network, mapping: &Mapping, cfg: &ArchConfig) -> Partition {
     let n = net.layers.len();
+    let spike = cfg.boundary_codec;
     let mut layers = Vec::with_capacity(n);
     for i in 0..n {
         let (crosses, crossings) = if i + 1 < n {
@@ -63,16 +58,16 @@ pub fn partition(net: &Network, mapping: &Mapping, cfg: &ArchConfig) -> Partitio
             (false, 0)
         };
         let (compute, egress) = match cfg.variant {
-            Variant::Ann => (ComputeMode::Mac, TrafficMode::Dense),
-            Variant::Snn => (ComputeMode::Acc, TrafficMode::Spike),
+            Variant::Ann => (ComputeMode::Mac, CodecId::Dense),
+            Variant::Snn => (ComputeMode::Acc, spike),
             Variant::Hnn => {
                 // A layer computes on spiking cores when its egress crosses
                 // the die (it lives on the peripheral ring feeding the EMIO);
                 // all other layers stay dense on interior cores.
                 if crosses {
-                    (ComputeMode::Acc, TrafficMode::Spike)
+                    (ComputeMode::Acc, spike)
                 } else {
-                    (ComputeMode::Mac, TrafficMode::Dense)
+                    (ComputeMode::Mac, CodecId::Dense)
                 }
             }
         };
@@ -132,7 +127,7 @@ mod tests {
     fn ann_all_dense_mac() {
         let p = part(Variant::Ann);
         assert!(p.layers.iter().all(|l| l.compute == ComputeMode::Mac));
-        assert!(p.layers.iter().all(|l| l.egress == TrafficMode::Dense));
+        assert!(p.layers.iter().all(|l| l.egress == CodecId::Dense));
         assert_eq!(p.spiking_layer_count(), 0);
     }
 
@@ -140,7 +135,7 @@ mod tests {
     fn snn_all_spike_acc() {
         let p = part(Variant::Snn);
         assert!(p.layers.iter().all(|l| l.compute == ComputeMode::Acc));
-        assert!(p.layers.iter().all(|l| l.egress == TrafficMode::Spike));
+        assert!(p.layers.iter().all(|l| l.egress == CodecId::Rate));
     }
 
     #[test]
@@ -151,13 +146,35 @@ mod tests {
         for l in &p.layers {
             if l.crosses_die {
                 assert_eq!(l.compute, ComputeMode::Acc);
-                assert_eq!(l.egress, TrafficMode::Spike);
+                assert_eq!(l.egress, CodecId::Rate);
             } else {
                 assert_eq!(l.compute, ComputeMode::Mac);
-                assert_eq!(l.egress, TrafficMode::Dense);
+                assert_eq!(l.egress, CodecId::Dense);
             }
         }
         assert_eq!(p.spiking_layer_count(), 1);
+    }
+
+    #[test]
+    fn configured_codec_lands_on_spiking_edges_only() {
+        // the codec handle is the partition's extension axis: swapping the
+        // boundary codec re-types every spiking edge but never a dense one
+        let cfg = ArchConfig::baseline(Variant::Hnn).with_boundary_codec(CodecId::Temporal);
+        let net = big_net();
+        let m = map_network(&net, &cfg);
+        let p = partition(&net, &m, &cfg);
+        for l in &p.layers {
+            let expect = if l.crosses_die { CodecId::Temporal } else { CodecId::Dense };
+            assert_eq!(l.egress, expect, "layer {}", l.layer_idx);
+        }
+        // SNN: every edge follows the configured codec
+        let cfg = ArchConfig::baseline(Variant::Snn).with_boundary_codec(CodecId::TopKDelta);
+        let p = partition(&net, &map_network(&net, &cfg), &cfg);
+        assert!(p.layers.iter().all(|l| l.egress == CodecId::TopKDelta));
+        // ANN ignores the boundary codec entirely
+        let cfg = ArchConfig::baseline(Variant::Ann).with_boundary_codec(CodecId::Temporal);
+        let p = partition(&net, &map_network(&net, &cfg), &cfg);
+        assert!(p.layers.iter().all(|l| l.egress == CodecId::Dense));
     }
 
     #[test]

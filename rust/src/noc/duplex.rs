@@ -15,7 +15,7 @@ use super::router::Flit;
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
 
 /// A source->dest transfer across the die gap.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CrossTraffic {
     pub src: Coord,  // on chip A
     pub dest: Coord, // on chip B

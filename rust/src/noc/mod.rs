@@ -46,7 +46,10 @@
 //! * [`telemetry`] — zero-overhead-when-off per-packet delivery records
 //!   ([`telemetry::NoopSink`] monomorphizes to nothing;
 //!   [`telemetry::DeliverySink`] feeds the p50/p99/p999 figures);
-//! * [`traffic`] — packet-trace generation from layer workloads;
+//! * [`traffic`] — packet-trace generation from layer workloads, delegated
+//!   to the boundary codecs ([`crate::codec`]); scenario `Boundary` traffic
+//!   carries a [`crate::codec::CodecId`] (JSON `codec` field, optional and
+//!   backward compatible);
 //! * [`clp`]    — the cross-layer packet converter state machine (Eqs. 2-3,
 //!   integer-exact against the Pallas kernels).
 

@@ -26,6 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::analytic::latency::TailLatency;
 use crate::arch::chip::Coord;
+use crate::codec::CodecId;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
@@ -36,7 +37,7 @@ use super::harness::run_schedule;
 use super::mesh::Mesh;
 use super::reference::{RefChain, RefDuplex, RefMesh};
 use super::telemetry::DeliverySink;
-use super::traffic::boundary_edge_traffic;
+use super::traffic::codec_edge_traffic;
 
 /// Default drain cap for scenario runs (cycles after the last injection).
 pub const DEFAULT_MAX_CYCLES: u64 = 100_000_000;
@@ -94,11 +95,33 @@ pub enum TrafficSpec {
     /// One random transfer every `period` cycles over `cycles` cycles — the
     /// paper's spike-traffic regime (most routers idle most cycles).
     Sparse { cycles: u64, period: u64, seed: u64 },
-    /// §3 boundary-edge traffic from [`super::traffic::boundary_edge_traffic`]:
-    /// `dense` packets per neuron when `dense > 0`, otherwise rate-coded
-    /// spiking at `activity` over `ticks`. Sources sit on the East boundary
-    /// column of chip 0; destinations on the topology's last chip.
-    Boundary { neurons: usize, dense: usize, activity: f64, ticks: u32, seed: u64 },
+    /// §3 boundary-edge traffic, generated through a boundary codec
+    /// ([`super::traffic::codec_edge_traffic`]). `codec` selects the
+    /// encoding; the legacy `dense` field sets the dense packets-per-neuron
+    /// (and, absent an explicit `codec` in JSON, the back-compat default:
+    /// `dense > 0` means [`CodecId::Dense`], otherwise [`CodecId::Rate`]).
+    /// Sources sit on the East boundary column of chip 0; destinations on
+    /// the topology's last chip.
+    Boundary {
+        neurons: usize,
+        dense: usize,
+        activity: f64,
+        ticks: u32,
+        seed: u64,
+        codec: CodecId,
+    },
+}
+
+impl TrafficSpec {
+    /// The back-compat codec rule for pre-codec boundary descriptions:
+    /// `dense > 0` selects the dense encoding, anything else rate coding.
+    pub fn legacy_boundary_codec(dense: usize) -> CodecId {
+        if dense > 0 {
+            CodecId::Dense
+        } else {
+            CodecId::Rate
+        }
+    }
 }
 
 /// Result of one scenario run.
@@ -215,9 +238,12 @@ impl Scenario {
                     .map(|t| (t, self.random_transfer(&mut rng)))
                     .collect()
             }
-            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed } => {
+            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec } => {
                 let last = self.topology.chips() - 1;
-                boundary_edge_traffic(neurons, dense, activity, ticks, self.topology.dim(), seed)
+                // the legacy `dense` packets-per-neuron parameterize the
+                // dense codec as a bit width; other codecs ignore it
+                let bits = dense.max(1) as u32 * 8;
+                codec_edge_traffic(codec, neurons, activity, ticks, bits, self.topology.dim(), seed)
                     .into_iter()
                     .map(|t| {
                         (0, Transfer { src_chip: 0, src: t.src, dest_chip: last, dest: t.dest })
@@ -320,14 +346,17 @@ impl Scenario {
                 ("period", Json::num(period as f64)),
                 ("seed", Json::num(seed as f64)),
             ]),
-            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed } => Json::obj(vec![
-                ("kind", Json::str("boundary")),
-                ("neurons", Json::num(neurons as f64)),
-                ("dense", Json::num(dense as f64)),
-                ("activity", Json::num(activity)),
-                ("ticks", Json::num(ticks as f64)),
-                ("seed", Json::num(seed as f64)),
-            ]),
+            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec } => {
+                Json::obj(vec![
+                    ("kind", Json::str("boundary")),
+                    ("neurons", Json::num(neurons as f64)),
+                    ("dense", Json::num(dense as f64)),
+                    ("activity", Json::num(activity)),
+                    ("ticks", Json::num(ticks as f64)),
+                    ("seed", Json::num(seed as f64)),
+                    ("codec", Json::str(codec.as_str())),
+                ])
+            }
         };
         Json::obj(vec![
             ("schema", Json::str("scenario/v1")),
@@ -405,16 +434,34 @@ impl Scenario {
                 period: field_u64("period")?,
                 seed: field_u64("seed")?,
             },
-            "boundary" => TrafficSpec::Boundary {
-                neurons: field_usize("neurons")?,
-                dense: field_usize("dense")?,
-                activity: tr
-                    .get("activity")
-                    .and_then(Json::as_f64)
-                    .ok_or_else(|| anyhow!("scenario: traffic.activity missing"))?,
-                ticks: field_u64("ticks")? as u32,
-                seed: field_u64("seed")?,
-            },
+            "boundary" => {
+                let dense = field_usize("dense")?;
+                // `codec` is optional for back-compat: pre-codec documents
+                // keep their exact meaning (dense > 0 -> dense, else rate);
+                // an unknown codec name is an error, not a silent default
+                let codec = match tr.get("codec") {
+                    None => TrafficSpec::legacy_boundary_codec(dense),
+                    Some(c) => {
+                        let name = c.as_str().ok_or_else(|| {
+                            anyhow!("scenario: traffic.codec must be a string")
+                        })?;
+                        CodecId::parse(name).ok_or_else(|| {
+                            anyhow!("scenario: unknown traffic.codec {name:?}")
+                        })?
+                    }
+                };
+                TrafficSpec::Boundary {
+                    neurons: field_usize("neurons")?,
+                    dense,
+                    activity: tr
+                        .get("activity")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("scenario: traffic.activity missing"))?,
+                    ticks: field_u64("ticks")? as u32,
+                    seed: field_u64("seed")?,
+                    codec,
+                }
+            }
             other => return Err(anyhow!("scenario: unknown traffic kind {other:?}")),
         };
         let max_cycles = match j.get("max_cycles").and_then(Json::as_f64) {
@@ -494,6 +541,7 @@ mod tests {
             activity: 0.0,
             ticks: 0,
             seed: 2,
+            codec: CodecId::Dense,
         });
         let sched = sc.schedule();
         assert_eq!(sched.len(), 16);
@@ -553,6 +601,51 @@ mod tests {
         .unwrap();
         assert!(!sc.telemetry);
         assert_eq!(sc.max_cycles, DEFAULT_MAX_CYCLES);
+    }
+
+    #[test]
+    fn boundary_codec_field_is_backward_compatible() {
+        // pre-codec documents (no "codec" key) keep their exact meaning:
+        // dense > 0 -> dense encoding, dense == 0 -> rate coding
+        let old_rate = r#"{"topology": {"kind": "duplex", "dim": 8},
+            "traffic": {"kind": "boundary", "neurons": 64, "dense": 0,
+                        "activity": 0.5, "ticks": 8, "seed": 7}}"#;
+        let sc = Scenario::from_json_str(old_rate).unwrap();
+        let TrafficSpec::Boundary { codec, .. } = sc.traffic else { panic!("boundary") };
+        assert_eq!(codec, CodecId::Rate);
+        let explicit = sc.to_json().to_string_pretty();
+        assert!(explicit.contains("\"codec\""), "serialization names the codec");
+        let back = Scenario::from_json_str(&explicit).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.run().stats, sc.run().stats, "legacy doc replays identically");
+
+        let old_dense = r#"{"topology": {"kind": "duplex", "dim": 8},
+            "traffic": {"kind": "boundary", "neurons": 64, "dense": 2,
+                        "activity": 0.0, "ticks": 0, "seed": 7}}"#;
+        let sc = Scenario::from_json_str(old_dense).unwrap();
+        let TrafficSpec::Boundary { codec, .. } = sc.traffic else { panic!("boundary") };
+        assert_eq!(codec, CodecId::Dense);
+        assert_eq!(sc.schedule().len(), 128, "2 packets per neuron, deterministic");
+
+        // every codec id round-trips; unknown names are rejected
+        for id in CodecId::ALL {
+            let sc = Scenario::duplex(4).traffic(TrafficSpec::Boundary {
+                neurons: 8,
+                dense: 0,
+                activity: 0.3,
+                ticks: 4,
+                seed: 1,
+                codec: id,
+            });
+            let back = Scenario::from_json_str(&sc.to_json().to_string_pretty()).unwrap();
+            assert_eq!(back, sc, "{id}");
+        }
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1, "codec": "morse"}}"#
+        )
+        .is_err(), "unknown codec must error");
     }
 
     #[test]

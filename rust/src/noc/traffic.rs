@@ -1,20 +1,26 @@
 //! Traffic generation: turn a layer edge's packet counts into concrete
-//! (src, dest) injections for the cycle-level simulators — dense edges emit
-//! one packet per activation slot, spiking edges Bernoulli-sample events at
-//! the layer's firing activity over T ticks (rate coding, Eq. 2).
+//! (src, dest) injections for the cycle-level simulators. The event sets
+//! are owned by the boundary codecs ([`crate::codec`]): dense edges emit
+//! one packet per activation slot, rate-coded edges Bernoulli-sample events
+//! at the layer's firing activity over T ticks (Eq. 2), and the temporal /
+//! top-k-delta codecs filter that same fire pattern (TTFS first-fires,
+//! rising edges). This module keeps the legacy two-mode entry point and the
+//! analytic convergence check.
 
-use crate::arch::chip::Coord;
-use crate::util::rng::Rng;
+use crate::codec::{BoundaryCodec, CodecId, DenseCodec, RateCodec};
 
 use super::duplex::CrossTraffic;
 
-/// Generate cross-die traffic for one boundary edge.
+/// Generate cross-die traffic for one boundary edge (legacy two-mode
+/// surface, kept for the pre-codec callers and the scenario back-compat
+/// rule: `dense > 0` selects [`DenseCodec`], otherwise [`RateCodec`]).
 ///
 /// * `neurons` — source-layer neuron count mapped on the boundary cores;
 /// * `dense_packets_per_neuron` — ceil(bits/8) for dense, 0 for spiking;
 /// * `activity`, `ticks` — spiking parameters (used when dense == 0);
 /// * neuron i sources from boundary row `i % dim` (the paper's 8 peripheral
-///   ports) and targets the mirrored tile on the far chip.
+///   ports) and targets the mirrored tile on the far chip
+///   ([`crate::codec::edge_endpoints`]).
 pub fn boundary_edge_traffic(
     neurons: usize,
     dense_packets_per_neuron: usize,
@@ -23,26 +29,28 @@ pub fn boundary_edge_traffic(
     dim: usize,
     seed: u64,
 ) -> Vec<CrossTraffic> {
-    let mut rng = Rng::new(seed);
-    let mut out = Vec::new();
-    for i in 0..neurons {
-        let row = i % dim;
-        let src = Coord::new(dim - 1, row);
-        let dest = Coord::new(i / dim % dim, row);
-        if dense_packets_per_neuron > 0 {
-            for _ in 0..dense_packets_per_neuron {
-                out.push(CrossTraffic { src, dest });
-            }
-        } else {
-            // rate-coded: a spike event per tick with probability `activity`
-            for _ in 0..ticks {
-                if rng.chance(activity) {
-                    out.push(CrossTraffic { src, dest });
-                }
-            }
-        }
+    if dense_packets_per_neuron > 0 {
+        // DenseCodec derives packets-per-neuron as ceil(bits/8)
+        let bits = dense_packets_per_neuron as u32 * 8;
+        DenseCodec.edge_traffic(neurons, activity, ticks, bits, dim, seed)
+    } else {
+        RateCodec.edge_traffic(neurons, activity, ticks, 8, dim, seed)
     }
-    out
+}
+
+/// Generate one boundary edge's traffic through an arbitrary codec handle
+/// — the codec-aware successor of [`boundary_edge_traffic`], used by
+/// [`super::scenario::TrafficSpec::Boundary`].
+pub fn codec_edge_traffic(
+    codec: CodecId,
+    neurons: usize,
+    activity: f64,
+    ticks: u32,
+    bits: u32,
+    dim: usize,
+    seed: u64,
+) -> Vec<CrossTraffic> {
+    codec.codec().edge_traffic(neurons, activity, ticks, bits, dim, seed)
 }
 
 /// Expected packet count for a spiking edge (the analytic model's number) —
@@ -136,5 +144,30 @@ mod tests {
         let a = boundary_edge_traffic(100, 0, 0.3, 8, 8, 11);
         let b = boundary_edge_traffic(100, 0, 0.3, 8, 8, 11);
         assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn codec_path_reproduces_legacy_two_mode_traffic() {
+        // the legacy entry point and the codec-aware one must agree event
+        // for event on the two pre-codec encodings (same RNG draw order)
+        for seed in [1u64, 9, 77] {
+            let legacy_rate = boundary_edge_traffic(200, 0, 0.25, 8, 8, seed);
+            let codec_rate = codec_edge_traffic(CodecId::Rate, 200, 0.25, 8, 8, 8, seed);
+            assert_eq!(legacy_rate, codec_rate, "seed {seed}");
+            let legacy_dense = boundary_edge_traffic(200, 4, 0.0, 0, 8, seed);
+            let codec_dense = codec_edge_traffic(CodecId::Dense, 200, 0.0, 0, 32, 8, seed);
+            assert_eq!(legacy_dense, codec_dense, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn new_codecs_thin_the_rate_event_set() {
+        let n = 512;
+        let rate = codec_edge_traffic(CodecId::Rate, n, 0.2, 8, 8, 8, 5);
+        let topk = codec_edge_traffic(CodecId::TopKDelta, n, 0.2, 8, 8, 8, 5);
+        let ttfs = codec_edge_traffic(CodecId::Temporal, n, 0.2, 8, 8, 8, 5);
+        assert!(rate.len() >= topk.len() && topk.len() >= ttfs.len());
+        assert!(ttfs.len() <= n, "TTFS emits at most one event per neuron");
+        assert!(!ttfs.is_empty(), "activity 0.2 over 8 ticks must fire");
     }
 }

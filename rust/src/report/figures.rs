@@ -6,6 +6,7 @@
 
 use crate::analytic::{efficiency_gain, simulate, simulate_variants, speedup, SimReport};
 use crate::arch::params::{ArchConfig, Variant};
+use crate::codec::CodecId;
 use crate::model::networks;
 use crate::noc::{Scenario, TrafficSpec};
 use crate::sparsity::SparsityProfile;
@@ -108,6 +109,35 @@ pub fn tail_latency_rows(packets: usize, seed: u64) -> Vec<TailRow> {
 /// the cycle engine against the Eq. 8/9 closed-form crossing floor.
 pub fn fig_tail_latency(packets: usize, seed: u64) -> Table {
     table5_tail_latency(&tail_latency_rows(packets, seed))
+}
+
+/// Fig. 14 (repo-added): the codec sweep — per-inference HNN boundary
+/// packets and total latency for each boundary codec across the activation
+/// sparsity axis, on one benchmark network. This is the figure the
+/// `BoundaryCodec` axis exists for: encoding choice moves the whole
+/// bandwidth/latency trade-off at fixed sparsity, and every row is the
+/// same analytic pipeline with only [`ArchConfig::boundary_codec`] swapped.
+pub fn fig14_codec_sweep(net_name: &str, sparsities: &[f64]) -> Table {
+    let net = networks::by_name(net_name).unwrap();
+    let mut t = Table::new(
+        format!("Fig 14: boundary-codec sweep — {net_name} (HNN, boundary packets | cycles)"),
+        &[
+            "sparsity", "dense pkts", "dense cyc", "rate pkts", "rate cyc", "topk pkts",
+            "topk cyc", "ttfs pkts", "ttfs cyc",
+        ],
+    );
+    for &s in sparsities {
+        let mut row = vec![format!("{s:.3}")];
+        for id in CodecId::ALL {
+            let cfg = ArchConfig::baseline(Variant::Hnn).with_boundary_codec(id);
+            let profile = SparsityProfile::uniform(net.layers.len(), 1.0 - s);
+            let rep = simulate(&net, &cfg, &profile);
+            row.push(format!("{}", rep.boundary_packets));
+            row.push(format!("{}", rep.latency.total_cycles));
+        }
+        t.row(row);
+    }
+    t
 }
 
 /// Fig. 10: latency-per-inference speedup (x) vs ANN at base parameters
@@ -322,6 +352,24 @@ mod tests {
         assert!(s.contains("duplex"));
         assert!(s.contains("chain8"));
         assert!(!s.contains("NO"), "no topology may undercut the Eq. 8 floor:\n{s}");
+    }
+
+    #[test]
+    fn fig14_codec_columns_ordered_and_sparsity_monotone() {
+        // the matched-activity regime (a x T <= ceil(bits/8), i.e. sparsity
+        // >= 0.875 at T=8/8-bit) where the full acceptance ordering holds;
+        // below it dense loses to rate by construction (a x T > 1)
+        let t = fig14_codec_sweep("ms-resnet18", &[0.9, 0.95, 0.99]);
+        assert_eq!(t.rows.len(), 3);
+        for row in &t.rows {
+            // packet columns sit at 1, 3, 5, 7: dense >= rate >= topk >= ttfs
+            let pkts: Vec<u64> =
+                [1, 3, 5, 7].iter().map(|&i| row[i].parse().unwrap()).collect();
+            assert!(pkts.windows(2).all(|w| w[0] >= w[1]), "{row:?}");
+        }
+        // rate-codec boundary packets shrink as sparsity grows
+        let rate_pkts: Vec<u64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(rate_pkts.windows(2).all(|w| w[1] <= w[0]), "{rate_pkts:?}");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::analytic::latency::{crossing_floor_cycles, tail_vs_floor, TailLatency
 use crate::arch::core::{chip_sram_bytes, CoreSpec};
 use crate::arch::packet;
 use crate::arch::params::{ArchConfig, Variant};
+use crate::codec::CodecId;
 use crate::util::table::Table;
 
 /// Table 1: Architectural Parameters.
@@ -142,6 +143,36 @@ pub fn table4(rows: &[Table4Row]) -> Table {
     t
 }
 
+/// Table 6 (repo-added): per-codec boundary bandwidth for one reference
+/// edge — the packet count each [`CodecId`] charges analytically, its
+/// useful payload width, the resulting payload bits on the wire, and the
+/// fraction of the dense baseline. Rows follow [`CodecId::ALL`] (densest
+/// first), so a rendered table is itself the acceptance ordering
+/// `dense >= rate >= topk-delta >= temporal` at the given activity.
+pub fn table6_codec_bandwidth(neurons: u64, activity: f64, ticks: u32, bits: u32) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Table 6: boundary bandwidth per codec — {neurons} neurons, \
+             activity {activity}, T={ticks}, {bits}-bit"
+        ),
+        &["codec", "packets/edge", "payload b/pkt", "payload bits", "vs dense"],
+    );
+    let dense_pkts = CodecId::Dense.codec().packets_per_edge(neurons, activity, ticks, bits);
+    for id in CodecId::ALL {
+        let c = id.codec();
+        let pkts = c.packets_per_edge(neurons, activity, ticks, bits);
+        let pbits = c.payload_bits(bits);
+        t.row(vec![
+            id.to_string(),
+            format!("{pkts}"),
+            format!("{pbits}"),
+            format!("{}", pkts * pbits as u64),
+            format!("{:.3}", pkts as f64 / dense_pkts.max(1) as f64),
+        ]);
+    }
+    t
+}
+
 /// One measured tail-latency row: a topology's per-packet distribution
 /// (from cycle-engine telemetry) against its analytic crossing floor.
 pub struct TailRow {
@@ -212,6 +243,19 @@ mod tests {
         assert!(s.contains("yes"));
         assert!(s.contains("NO"));
         assert!(s.contains("76"), "single-crossing floor column");
+    }
+
+    #[test]
+    fn table6_rows_ordered_densest_first() {
+        let t = table6_codec_bandwidth(256, 0.1, 8, 8);
+        assert_eq!(t.rows.len(), 4);
+        let pkts: Vec<u64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(pkts.windows(2).all(|w| w[0] >= w[1]), "{pkts:?}");
+        // the two legacy locks: 256 dense, 205 rate packets
+        assert_eq!(pkts[0], 256);
+        assert_eq!(pkts[1], 205);
+        // dense ratio column anchors at 1.000
+        assert_eq!(t.rows[0][4], "1.000");
     }
 
     #[test]

@@ -21,6 +21,12 @@ impl SparsityProfile {
     /// trained model's eval step), mapped onto the layers in `layer_map`
     /// (rate k applies to layer `layer_map[k]`); other layers fall back to
     /// `default_activity`.
+    ///
+    /// A `layer_map` entry `>= n_layers` is a caller bug (the map and the
+    /// network disagree about the layer count): it trips a `debug_assert`
+    /// in debug builds, and in release builds the out-of-range rate is
+    /// *skipped* — the corresponding layer keeps `default_activity` — so a
+    /// stale map can never scribble a measured rate onto the wrong layer.
     pub fn from_rates(
         n_layers: usize,
         rates: &[f64],
@@ -29,6 +35,10 @@ impl SparsityProfile {
     ) -> Self {
         let mut activity = vec![default_activity; n_layers];
         for (k, &layer) in layer_map.iter().enumerate() {
+            debug_assert!(
+                layer < n_layers,
+                "from_rates: layer_map[{k}] = {layer} out of range for {n_layers} layers"
+            );
             if layer < n_layers {
                 if let Some(&r) = rates.get(k) {
                     activity[layer] = r.clamp(0.0, 1.0);
@@ -138,6 +148,32 @@ mod tests {
         assert_eq!(p.activity_of(3), 0.2);
         assert_eq!(p.activity_of(0), 0.5);
         assert_eq!(p.activity_of(100), 0.5); // clamped lookup
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of range")]
+    fn from_rates_out_of_range_layer_map_asserts_in_debug() {
+        // regression: this used to be silently discarded in all builds
+        SparsityProfile::from_rates(4, &[0.9], &[7], 0.1);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn from_rates_out_of_range_layer_map_skipped_in_release() {
+        // release builds skip the bad entry: no rate lands on a wrong
+        // layer, every layer keeps the default
+        let p = SparsityProfile::from_rates(4, &[0.9], &[7], 0.1);
+        assert!(p.activity.iter().all(|&a| a == 0.1), "{:?}", p.activity);
+    }
+
+    #[test]
+    fn from_rates_in_range_entries_unaffected_by_guard() {
+        // the guard changes nothing for well-formed maps, including the
+        // boundary index n_layers - 1 and rates shorter than the map
+        let p = SparsityProfile::from_rates(4, &[0.3], &[3, 2], 0.1);
+        assert_eq!(p.activity_of(3), 0.3);
+        assert_eq!(p.activity_of(2), 0.1, "map entry without a rate keeps the default");
     }
 
     #[test]

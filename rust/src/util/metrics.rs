@@ -3,8 +3,11 @@
 //!
 //! Latency histograms live in [`crate::util::stats::LatencyHist`] — the one
 //! streaming-percentile implementation in the crate, shared by the cycle
-//! engines' telemetry and the serving example. (This module used to carry a
-//! second, coarser log2-bucketed histogram; it was redundant and removed.)
+//! engines' telemetry and the serving example. (This module used to be a
+//! crate-root `metrics` module carrying a second, coarser log2-bucketed
+//! histogram; after PR 3 deleted that histogram only [`Counter`] remained,
+//! so what's left lives with the other dependency-free substrates here and
+//! re-exports as [`crate::util::Counter`].)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

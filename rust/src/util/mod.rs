@@ -6,6 +6,9 @@
 
 pub mod bench;
 pub mod json;
+pub mod metrics;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+pub use metrics::Counter;

@@ -22,6 +22,14 @@ and the scenario-derived form the Scenario-based bench emits (labels like
 cases the gate does not examine). Whatever the labelling, the latest
 speedup records must cover mesh dims {8, 16, 32} exactly — a partial rerun
 cannot sneak a stale dim past the floor.
+
+Codec-suffixed labels (`noc/mesh16/sparse/speedup/rate`, `mesh16-topk-delta`
+— one record per boundary codec, see EXPERIMENTS.md §Codec) are accepted as
+*extra* records: those appended by the latest run are held to the same 5x
+floor, but they can never stand in for the default-lineage dim coverage —
+only unsuffixed records vouch for the {8, 16, 32} floor, so adding codec
+cases cannot weaken the gate, and a codec case a past run emitted but the
+bench no longer produces is not gated forever.
 """
 
 import json
@@ -37,6 +45,22 @@ TELEMETRY_CEILING = 1.05  # telemetry-on may cost at most 5% vs NoopSink
 # scenario labels), wherever they sit in the record name
 MESH_DIM_RE = re.compile(r"mesh-?(\d+)")
 
+# a codec-suffixed speedup label carries one of the boundary-codec ids —
+# including every alias spelling CodecId::parse accepts (spike, ttfs,
+# delta, topk) — as its own `/`- or `-`-separated segment (never a
+# substring of another word); longest alternatives first so "topk-delta"
+# wins over "topk"/"delta"
+CODEC_RE = re.compile(
+    r"(?:^|[/-])(topk-delta|temporal|dense|spike|delta|topk|rate|ttfs)(?:$|[/-])"
+)
+
+
+def codec_of(name):
+    """The codec segment of a bench-record name, or None for the default
+    (unsuffixed) lineage."""
+    m = CODEC_RE.search(name)
+    return m.group(1) if m else None
+
 
 def load(path):
     try:
@@ -50,11 +74,15 @@ def load(path):
 
 
 def check_speedups(path, records):
-    speedups = [r for r in records if r.get("unit") == "x-vs-ref"]
+    all_speedups = [r for r in records if r.get("unit") == "x-vs-ref"]
+    # codec-suffixed records ride along (floor-checked below) but only the
+    # default lineage may satisfy the dim-coverage requirement
+    speedups = [r for r in all_speedups if codec_of(r.get("name", "")) is None]
     if len(speedups) < EXPECTED:
         sys.exit(
-            f"{path}: expected >= {EXPECTED} x-vs-ref records, found "
-            f"{len(speedups)} — bench did not complete"
+            f"{path}: expected >= {EXPECTED} default-lineage x-vs-ref records, found "
+            f"{len(speedups)} (codec-suffixed records cannot vouch for dim "
+            "coverage) — bench did not complete"
         )
     latest = speedups[-EXPECTED:]  # this run's three mesh dims
     dims = []
@@ -89,7 +117,32 @@ def check_speedups(path, records):
             failed.append(r["name"])
     if failed:
         sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
-    print(f"speedup gate passed: all {EXPECTED} sparse cases >= {FLOOR}x")
+
+    # codec-suffixed lineages: this run's latest record per (codec, dim) is
+    # held to the same floor — extra coverage may only strengthen the gate.
+    # Only codec records appended at or after this run's default lineage
+    # count (the trajectory is append-only, so earlier indices belong to
+    # prior runs): a codec case that a past run emitted and the bench no
+    # longer produces must not be gated forever.
+    run_start = next(i for i in range(len(records) - 1, -1, -1) if records[i] is latest[0])
+    latest_codec = {}
+    for i, r in enumerate(records):
+        if i < run_start or r.get("unit") != "x-vs-ref" or codec_of(r.get("name", "")) is None:
+            continue
+        m = MESH_DIM_RE.search(r.get("name", ""))
+        if not m:
+            continue  # codec-labelled chain/duplex cases are not gated
+        latest_codec[(codec_of(r["name"]), int(m.group(1)))] = r
+    for (codec, dim), r in sorted(latest_codec.items()):
+        ok = r["throughput"] >= FLOOR
+        verdict = "OK" if ok else f"BELOW {FLOOR}x FLOOR"
+        print(f"{r['name']}: {r['throughput']:.2f}x vs reference  [{verdict}]")
+        if not ok:
+            failed.append(r["name"])
+    if failed:
+        sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
+    extra = f" (+{len(latest_codec)} codec cases)" if latest_codec else ""
+    print(f"speedup gate passed: all {EXPECTED} sparse cases >= {FLOOR}x{extra}")
 
 
 def check_telemetry_overhead(path, records):

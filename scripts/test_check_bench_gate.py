@@ -23,6 +23,16 @@ CASES = {
     # scenario-derived labels (mesh-16, chain4x8, duplex8) alongside v1/v2
     # names must be accepted by both gates
     "scenario_labels_pass.json": (True, "speedup gate passed"),
+    # codec-suffixed speedup records (EXPERIMENTS.md §Codec) ride along as
+    # extra floor-checked cases next to an intact default lineage
+    "codec_labels_pass.json": (True, "codec cases"),
+    # ... but a codec case below the floor still fails the gate
+    "codec_below_floor.json": (False, "below the 5x acceptance floor"),
+    # ... and codec records alone can never satisfy the dim coverage
+    "codec_only_speedups.json": (False, "bench did not complete"),
+    # a below-floor codec case from a *prior* run (no longer emitted by the
+    # bench) must not be gated forever once a clean run lands on top
+    "codec_stale_then_pass.json": (True, "speedup gate passed"),
     "fail_speedup.json": (False, "below the 5x acceptance floor"),
     "fail_overhead.json": (False, "exceeds the 1.05x (5%) acceptance ceiling"),
     "incomplete.json": (False, "bench did not complete"),
