@@ -1,6 +1,7 @@
 //! Architectural parameters — Table 1 of the paper, plus the sweep axes of
 //! Figs. 11/13 (bit-width, NoC dimensions, neuron grouping).
 
+use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::codec::CodecId;
@@ -68,10 +69,18 @@ pub struct ArchConfig {
     pub input_activity: f64,
     /// Scheduler max delay in ticks (4-bit delivery time -> 16).
     pub max_delay_ticks: u32,
-    /// Boundary traffic encoding for spiking edges (paper baseline: rate
-    /// coding, Eq. 2). Dense edges always use [`CodecId::Dense`]; this
-    /// selects what SNN edges and HNN die-crossing edges emit.
+    /// *Default* boundary traffic encoding for spiking edges (paper
+    /// baseline: rate coding, Eq. 2). Dense edges always use
+    /// [`CodecId::Dense`]; this selects what SNN edges and HNN die-crossing
+    /// edges emit unless [`ArchConfig::codec_overrides`] names the layer.
     pub boundary_codec: CodecId,
+    /// Per-layer codec overrides for spiking edges (layer index -> codec) —
+    /// the learned *mixed* assignment of `codec::assign`. A layer absent
+    /// from the map uses [`ArchConfig::boundary_codec`]; an empty map is
+    /// exactly the pre-assignment uniform behaviour (locked bit-identical
+    /// by `rust/tests/codec_regression.rs`). Overrides never re-type dense
+    /// (non-spiking) edges.
+    pub codec_overrides: BTreeMap<usize, CodecId>,
 }
 
 impl ArchConfig {
@@ -89,7 +98,14 @@ impl ArchConfig {
             input_activity: 0.10,
             max_delay_ticks: 16,
             boundary_codec: CodecId::Rate,
+            codec_overrides: BTreeMap::new(),
         }
+    }
+
+    /// Codec a spiking edge out of `layer` uses: the per-layer override if
+    /// one is set, the [`ArchConfig::boundary_codec`] default otherwise.
+    pub fn codec_for_layer(&self, layer: usize) -> CodecId {
+        self.codec_overrides.get(&layer).copied().unwrap_or(self.boundary_codec)
     }
 
     /// Total cores per chip.
@@ -176,6 +192,11 @@ impl ArchConfig {
         self.boundary_codec = codec;
         self
     }
+
+    pub fn with_codec_overrides(mut self, overrides: BTreeMap<usize, CodecId>) -> Self {
+        self.codec_overrides = overrides;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -231,6 +252,23 @@ mod tests {
         assert_eq!(c.emio_mesh_ports(), 64);
         assert_eq!(c.emio_pad_ports(), 8);
         assert_eq!(c.emio_mux_ratio(), 8);
+    }
+
+    #[test]
+    fn codec_overrides_shadow_the_default_per_layer() {
+        let mut overrides = BTreeMap::new();
+        overrides.insert(3usize, CodecId::Temporal);
+        overrides.insert(7usize, CodecId::Dense);
+        let cfg = ArchConfig::baseline(Variant::Hnn).with_codec_overrides(overrides);
+        assert_eq!(cfg.codec_for_layer(3), CodecId::Temporal);
+        assert_eq!(cfg.codec_for_layer(7), CodecId::Dense);
+        assert_eq!(cfg.codec_for_layer(0), CodecId::Rate, "default applies elsewhere");
+        // an empty map is exactly the uniform default
+        let uniform = ArchConfig::baseline(Variant::Hnn);
+        assert!(uniform.codec_overrides.is_empty());
+        for i in 0..16 {
+            assert_eq!(uniform.codec_for_layer(i), uniform.boundary_codec);
+        }
     }
 
     #[test]

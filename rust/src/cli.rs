@@ -104,7 +104,7 @@ USAGE: spikelink <command> [options]
 
 COMMANDS:
   report            regenerate paper tables/figures from the analytic engine
-                      --table 1|2|3|6  --figure 7|8|9|10|11|12|13|14  (default: all)
+                      --table 1|2|3|6|7  --figure 7|8|9|10|11|12|13|14|15  (default: all)
                       --out DIR       also write CSVs (default results/)
                       --runs DIR      run records for fig 9 (default results/runs)
   simulate          one (network, variant) analytic simulation
@@ -112,11 +112,26 @@ COMMANDS:
                       --variant ann|snn|hnn  --bits N  --dim N  --grouping N
                       --activity F    uniform firing activity (default 0.10)
                       --codec dense|rate|topk-delta|temporal   boundary codec
+                      --mixed         learn a per-edge codec assignment first
+                        (assign-codecs) and simulate under it
                       --sparsity-from FILE   use measured rates from a run JSON
                       --verbose       dump the per-layer workload table
   sweep             sweep an axis and print speedup/efficiency vs ANN
                       --model NAME  --axis bits|dim|grouping|sparsity|codec
+                        (the codec axis adds a codec=mixed row: the learned
+                         per-edge assignment vs the uniform codecs)
                       --codec NAME    pin the boundary codec on non-codec axes
+  assign-codecs     learn a per-boundary-edge codec assignment (greedy +
+                    simulated annealing over the analytic energy x latency
+                    objective, Table 7 output)
+                      --model NAME  --variant snn|hnn (default hnn)
+                      --activity F | --sparsity-from FILE | --imbalanced [SEED]
+                        (lognormal per-layer profile around --activity)
+                      --seed N        SA proposal stream (default 42)
+                      --sa-iters N    annealing proposals (default 200)
+                      --threshold F   fidelity: activity above F forces dense
+                        (default 0.5)
+                      --save FILE     write the assignment JSON (assign/v1)
   train             run the AOT train-step loop (needs `make artifacts`)
                       --model hnn_lm|ann_lm|snn_lm|hnn_vision|...
                       --steps N (default 200)  --lam F  --budget F
@@ -134,7 +149,9 @@ COMMANDS:
                       --packets N  --cycles N --period N  --neurons N --dense N
                       --activity F --ticks N  --seed N  --max-cycles N
                       --codec dense|rate|topk-delta|temporal   boundary-traffic
-                        encoding (default: dense if --dense > 0, else rate)
+                        encoding (default: dense if --dense > 0, else rate;
+                        scenario files may instead carry a per-edge "codecs"
+                        map — the mixed-assignment replay)
                       --reference          run the retained naive engine instead
                       --no-telemetry       skip per-packet records (no tail quantiles)
                       --save FILE          write the scenario JSON for reproduction

@@ -41,11 +41,34 @@
 //! `a x T <= ceil(bits/8)` (always true at the paper's matched operating
 //! point, a = 0.10, T = 8, 8-bit).
 
+pub mod assign;
+
 use std::fmt;
 
 use crate::arch::chip::Coord;
 use crate::noc::duplex::CrossTraffic;
 use crate::util::rng::Rng;
+
+/// Validate a raw firing-activity value at the codec boundary — the single
+/// validation point for every path that reaches a codec with an activity
+/// the type system cannot vouch for (CLI flags, scenario JSON, hand-built
+/// configs). `SparsityProfile` clamps its own entries, but raw callers may
+/// hand a codec NaN, a negative, or a value above 1; each of those would
+/// silently flow through the `f64 -> u64` saturating casts in
+/// `packets_per_edge` and skew packet counts. Convention matches
+/// `SparsityProfile::from_rates`: a `debug_assert` trips in debug builds,
+/// release builds clamp to `[0, 1]` (NaN becomes 0 — a silent edge).
+pub fn validated_activity(activity: f64) -> f64 {
+    debug_assert!(
+        (0.0..=1.0).contains(&activity),
+        "codec activity {activity} outside [0, 1]"
+    );
+    if activity.is_nan() {
+        0.0
+    } else {
+        activity.clamp(0.0, 1.0)
+    }
+}
 
 /// Stable identifier of a built-in boundary codec. `Copy` so partitioned
 /// layers and scenarios can carry a codec handle by value;
@@ -187,6 +210,7 @@ fn filtered_spike_traffic(
     seed: u64,
     keep: impl Fn(bool, bool) -> bool,
 ) -> Vec<CrossTraffic> {
+    let activity = validated_activity(activity);
     let mut rng = Rng::new(seed);
     let mut out = Vec::new();
     for i in 0..neurons {
@@ -208,6 +232,13 @@ fn filtered_spike_traffic(
 /// `TrafficMode::Dense`, reborn: one packet per activation byte
 /// (`ceil(bits/8)` per neuron, 8-bit payload each, §5.1 "zero-skipping is
 /// not implemented in the ANN cores").
+///
+/// **Zero-width rule**: `bits == 0` means an *empty* edge — zero packets in
+/// both the closed form and the sampled event set. (The sampled path used
+/// to floor at one packet per neuron while the closed form charged zero;
+/// the scenario layer rejects the one JSON shape that could reach the
+/// mismatch, an explicit `"codec": "dense"` with `"dense": 0` — see
+/// `noc::scenario`.)
 pub struct DenseCodec;
 
 impl BoundaryCodec for DenseCodec {
@@ -232,7 +263,9 @@ impl BoundaryCodec for DenseCodec {
         dim: usize,
         _seed: u64,
     ) -> Vec<CrossTraffic> {
-        let per_neuron = (bits as usize).div_ceil(8).max(1);
+        // one packet per activation byte — zero-width edges emit nothing,
+        // exactly as `packets_per_edge` charges nothing
+        let per_neuron = (bits as usize).div_ceil(8);
         let mut out = Vec::with_capacity(neurons * per_neuron);
         for i in 0..neurons {
             let (src, dest) = edge_endpoints(i, dim);
@@ -254,6 +287,7 @@ impl BoundaryCodec for RateCodec {
     }
 
     fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, _bits: u32) -> u64 {
+        let activity = validated_activity(activity);
         (neurons as f64 * activity * ticks as f64).round() as u64
     }
 
@@ -288,9 +322,15 @@ pub struct TopKDeltaCodec;
 impl TopKDeltaCodec {
     /// Per-tick transmission budget the learnable threshold is trained to:
     /// `k = ceil(activity x neurons)`, driven by the layer's
-    /// `SparsityProfile` activity (never below 1 on a non-empty edge).
+    /// `SparsityProfile` activity (never below 1 on a non-empty *firing*
+    /// edge). A silent edge (`activity == 0`) gets a **zero** budget,
+    /// matching the zero packets [`BoundaryCodec::packets_per_edge`]
+    /// charges it — the old `.max(1)` floor reported a training budget for
+    /// traffic that cannot exist, contradicting the packet model any
+    /// consumer (e.g. an assignment objective) would rank edges by.
     pub fn budget_k(neurons: u64, activity: f64) -> u64 {
-        if neurons == 0 {
+        let activity = validated_activity(activity);
+        if neurons == 0 || activity <= 0.0 {
             return 0;
         }
         ((neurons as f64 * activity).ceil() as u64).max(1)
@@ -305,6 +345,7 @@ impl BoundaryCodec for TopKDeltaCodec {
     /// Expected rising edges: the first tick fires fresh with probability
     /// `a`; each later tick is a rising edge with probability `a x (1-a)`.
     fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, _bits: u32) -> u64 {
+        let activity = validated_activity(activity);
         if ticks == 0 {
             return 0;
         }
@@ -346,6 +387,7 @@ impl BoundaryCodec for TemporalCodec {
     }
 
     fn packets_per_edge(&self, neurons: u64, activity: f64, ticks: u32, _bits: u32) -> u64 {
+        let activity = validated_activity(activity);
         let p_any = 1.0 - (1.0 - activity).powi(ticks as i32);
         (neurons as f64 * p_any).round() as u64
     }
@@ -452,12 +494,82 @@ mod tests {
     #[test]
     fn topk_delta_budget_tracks_profile_activity() {
         assert_eq!(TopKDeltaCodec::budget_k(256, 0.1), 26); // ceil(25.6)
-        assert_eq!(TopKDeltaCodec::budget_k(256, 0.0), 1); // floor of 1
         assert_eq!(TopKDeltaCodec::budget_k(0, 0.5), 0);
+        // the floor of 1 applies to firing edges only (tiny positive
+        // activity still budgets one slot)
+        assert_eq!(TopKDeltaCodec::budget_k(256, 1e-9), 1);
         // expected rising edges per tick N x a x (1-a) never exceed k
         for &a in &[0.01, 0.1, 0.5, 0.9] {
             let expect_per_tick = 256.0 * a * (1.0 - a);
             assert!(expect_per_tick <= TopKDeltaCodec::budget_k(256, a) as f64);
+        }
+    }
+
+    #[test]
+    fn topk_delta_budget_is_zero_for_a_silent_edge() {
+        // regression: `.max(1)` used to hand a silent edge (activity 0) a
+        // budget of 1 while `packets_per_edge` correctly charged 0 packets,
+        // so the assignment objective would mis-rank it
+        assert_eq!(TopKDeltaCodec::budget_k(256, 0.0), 0);
+        assert_eq!(TopKDeltaCodec.packets_per_edge(256, 0.0, 8, 8), 0);
+        assert_eq!(TopKDeltaCodec::budget_k(1_000_000, 0.0), 0);
+    }
+
+    #[test]
+    fn dense_zero_width_edge_is_empty_in_both_worlds() {
+        // regression: edge_traffic used to floor at 1 packet/neuron while
+        // packets_per_edge charged 0 — the analytic and sampled counts for
+        // a zero-width dense edge must agree (both empty)
+        assert_eq!(DenseCodec.packets_per_edge(256, 0.0, 8, 0), 0);
+        assert!(DenseCodec.edge_traffic(256, 0.0, 8, 0, 8, 1).is_empty());
+        // any positive width keeps the ceil(bits/8) >= 1 behaviour
+        assert_eq!(DenseCodec.edge_traffic(16, 0.0, 8, 4, 8, 1).len(), 16);
+        assert_eq!(DenseCodec.packets_per_edge(16, 0.0, 8, 4), 16);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn out_of_range_activity_asserts_in_debug() {
+        RateCodec.packets_per_edge(256, 1.5, 8, 8);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn nan_activity_asserts_in_debug() {
+        TemporalCodec.packets_per_edge(256, f64::NAN, 8, 8);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn negative_activity_asserts_in_debug_traffic_path() {
+        TopKDeltaCodec.edge_traffic(16, -0.25, 8, 8, 8, 1);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn out_of_range_activity_clamps_in_release() {
+        // release builds clamp at the codec boundary instead of saturating
+        // garbage through the f64 -> u64 casts: NaN is a silent edge,
+        // negatives clamp to 0, >1 clamps to the dense limit of the codec
+        assert_eq!(RateCodec.packets_per_edge(256, f64::NAN, 8, 8), 0);
+        assert_eq!(RateCodec.packets_per_edge(256, -3.0, 8, 8), 0);
+        assert_eq!(
+            RateCodec.packets_per_edge(256, 7.5, 8, 8),
+            RateCodec.packets_per_edge(256, 1.0, 8, 8)
+        );
+        assert_eq!(TemporalCodec.packets_per_edge(64, 42.0, 8, 8), 64);
+        assert_eq!(TopKDeltaCodec::budget_k(256, -1.0), 0);
+        assert!(RateCodec.edge_traffic(16, -1.0, 8, 8, 8, 1).is_empty());
+        assert_eq!(RateCodec.edge_traffic(16, 2.0, 8, 8, 8, 1).len(), 16 * 8);
+    }
+
+    #[test]
+    fn validated_activity_passes_in_range_values_through() {
+        for &a in &[0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(validated_activity(a), a);
         }
     }
 

@@ -31,7 +31,12 @@
 //! temporal built-ins) owns packet counts, payload widths, energy/latency
 //! hooks, and seeded cycle-sim traffic for every boundary edge, from the
 //! partitioner down to `spikelink noc-sim --codec` (see EXPERIMENTS.md
-//! §Codec; the old two-variant `TrafficMode` enum is gone).
+//! §Codec; the old two-variant `TrafficMode` enum is gone). On top of it,
+//! [`codec::assign`] *learns* a per-boundary-edge codec assignment (mixed
+//! codecs across edges, greedy + simulated annealing over the analytic
+//! energy x latency objective) into `ArchConfig::codec_overrides`, with a
+//! per-edge `codecs` map in scenario JSON and the `spikelink
+//! assign-codecs` / `simulate --mixed` CLI surfaces.
 
 pub mod analytic;
 pub mod arch;

@@ -6,6 +6,7 @@ use anyhow::{anyhow, Result};
 
 use spikelink::analytic::{self, simulate, simulate_variants};
 use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::codec::assign::{self, AssignConfig};
 use spikelink::codec::CodecId;
 use spikelink::model::networks;
 use spikelink::report::{self, figures, tables};
@@ -41,6 +42,7 @@ fn run(args: &cli::Args) -> Result<()> {
         "report" => cmd_report(args),
         "simulate" => cmd_simulate(args),
         "sweep" => cmd_sweep(args),
+        "assign-codecs" => cmd_assign_codecs(args),
         "train" => cmd_train(args),
         "eval" => cmd_eval(args),
         "table4" => cmd_table4(args),
@@ -141,6 +143,18 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
             &figures::fig14_codec_sweep("ms-resnet18", &[0.9, 0.95, 0.975, 0.99]),
         )?;
     }
+    if all || table == Some(7) {
+        emit(
+            "table7_codec_assignment",
+            &tables::table7_codec_assignment(&figures::demo_assignment("ms-resnet18", 42)),
+        )?;
+    }
+    if all || figure == Some(15) {
+        emit(
+            "fig15_mixed_frontier",
+            &figures::fig15_mixed_frontier("ms-resnet18", &[0.75, 0.9, 0.95, 0.99]),
+        )?;
+    }
     if all {
         let (speed, eff, _) = figures::headline_claims();
         println!(
@@ -183,8 +197,23 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
     let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let variant = Variant::parse(&args.str_or("variant", "hnn"))
         .ok_or_else(|| anyhow!("--variant must be ann|snn|hnn"))?;
-    let cfg = arch_from(args, variant)?;
+    let mut cfg = arch_from(args, variant)?;
     let profile = profile_from(args, net.layers.len(), &cfg)?;
+    // --mixed: run the codec-assignment optimizer first and simulate under
+    // the learned per-edge assignment instead of the uniform default
+    if args.has_flag("mixed") {
+        let a = assign::assign(&net, &cfg, &profile, &assign_config_from(args)?);
+        let (ucodec, uedp) = a.best_uniform();
+        println!(
+            "mixed assignment : default {} + {} override(s), EDP {:.4e} \
+             ({:+.2}% vs best uniform {ucodec})",
+            a.default_codec,
+            a.overrides.len(),
+            a.edp,
+            -100.0 * a.improvement_over(uedp),
+        );
+        cfg = a.apply_to(&cfg);
+    }
     let rep = simulate(&net, &cfg, &profile);
 
     println!("network          : {}", rep.network);
@@ -286,10 +315,146 @@ fn cmd_sweep(args: &cli::Args) -> Result<()> {
             for codec in CodecId::ALL {
                 push(format!("codec={codec}"), base().with_boundary_codec(codec));
             }
+            // the learned mixed assignment rides along as a fifth row:
+            // optimize the per-edge codecs for SNN and HNN separately
+            // (codec::assign) against the same ANN baseline the uniform
+            // rows use
+            let acfg = assign_config_from(args)?;
+            let mixed = |variant: Variant| {
+                let mut cfg = base();
+                cfg.variant = variant;
+                let profile =
+                    SparsityProfile::uniform(net.layers.len(), cfg.input_activity);
+                let a = assign::assign(&net, &cfg, &profile, &acfg);
+                simulate(&net, &a.apply_to(&cfg), &profile)
+            };
+            let ann = {
+                let cfg = base(); // baseline() is the ANN variant
+                let profile =
+                    SparsityProfile::uniform(net.layers.len(), cfg.input_activity);
+                simulate(&net, &cfg, &profile)
+            };
+            let (snn, hnn) = (mixed(Variant::Snn), mixed(Variant::Hnn));
+            t.row(vec![
+                "codec=mixed".into(),
+                format!("{:.2}", analytic::speedup(&ann, &snn)),
+                format!("{:.2}", analytic::speedup(&ann, &hnn)),
+                format!("{:.2}", analytic::efficiency_gain(&ann, &snn)),
+                format!("{:.2}", analytic::efficiency_gain(&ann, &hnn)),
+            ]);
         }
         other => return Err(anyhow!("unknown axis {other}")),
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// assign-codecs
+// ---------------------------------------------------------------------------
+
+fn assign_config_from(args: &cli::Args) -> Result<AssignConfig> {
+    let defaults = AssignConfig::default();
+    let acfg = AssignConfig {
+        seed: args.usize_or("seed", defaults.seed as usize)? as u64,
+        sa_iters: args.usize_or("sa-iters", defaults.sa_iters)?,
+        dense_threshold: args.f64_or("threshold", defaults.dense_threshold)?,
+        ..defaults
+    };
+    if !(0.0..=1.0).contains(&acfg.dense_threshold) {
+        return Err(anyhow!("--threshold must be in [0, 1], got {}", acfg.dense_threshold));
+    }
+    Ok(acfg)
+}
+
+/// Learn a per-boundary-edge codec assignment (greedy + simulated
+/// annealing over the analytic energy x latency objective) and print the
+/// Table 7 per-edge view plus the mixed-vs-uniform comparison.
+fn cmd_assign_codecs(args: &cli::Args) -> Result<()> {
+    let model = args.str_or("model", "ms-resnet18");
+    let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let variant = Variant::parse(&args.str_or("variant", "hnn"))
+        .ok_or_else(|| anyhow!("--variant must be ann|snn|hnn"))?;
+    if variant == Variant::Ann {
+        return Err(anyhow!("--variant ann has no spiking boundary edges to assign"));
+    }
+    let cfg = arch_from(args, variant)?;
+    // --imbalanced draws a heterogeneous (lognormal) per-layer profile
+    // around --activity, the regime where the fidelity constraint bites;
+    // --sparsity-from / --activity keep their `simulate` meanings
+    let profile = if args.has_flag("imbalanced") || args.get("imbalanced").is_some() {
+        let seed = args.usize_or("imbalanced", 42)? as u64;
+        SparsityProfile::synthetic_imbalanced(net.layers.len(), cfg.input_activity, seed)
+    } else {
+        profile_from(args, net.layers.len(), &cfg)?
+    };
+    let acfg = assign_config_from(args)?;
+    let a = assign::assign(&net, &cfg, &profile, &acfg);
+
+    println!("{}", tables::table7_codec_assignment(&a).render());
+    if a.edges.is_empty() {
+        println!("{model} ({variant}) fits its chips without a die crossing — nothing to assign");
+        return Ok(());
+    }
+    let (ucodec, uedp) = a.best_uniform();
+    let forced = a.edges.iter().filter(|e| e.fidelity_forced).count();
+    println!(
+        "assignment: default {} + {} override(s) over {} edges ({forced} fidelity-forced), \
+         {} objective evaluations",
+        a.default_codec,
+        a.overrides.len(),
+        a.edges.len(),
+        a.evaluations,
+    );
+    println!(
+        "EDP: mixed {:.4e} vs best uniform {ucodec} {:.4e} ({:+.2}%) vs uniform dense {:.4e} \
+         ({:+.2}%)",
+        a.edp,
+        uedp,
+        -100.0 * a.improvement_over(uedp),
+        a.uniform_edp[0].1,
+        -100.0 * a.improvement_over(a.uniform_edp[0].1),
+    );
+    if forced == 0 && a.edp > uedp {
+        return Err(anyhow!(
+            "mixed EDP {} above the best uniform {} with no fidelity forcing — optimizer bug",
+            a.edp,
+            uedp
+        ));
+    }
+
+    if let Some(out) = args.get("save") {
+        let overrides = Json::Obj(
+            a.overrides
+                .iter()
+                .map(|(layer, codec)| (layer.to_string(), Json::str(codec.as_str())))
+                .collect(),
+        );
+        let uniform: Vec<(&str, Json)> = a
+            .uniform_edp
+            .iter()
+            .map(|(codec, edp)| (codec.as_str(), Json::num(*edp)))
+            .collect();
+        let j = Json::obj(vec![
+            ("schema", Json::str("assign/v1")),
+            ("model", Json::str(net.name.clone())),
+            ("variant", Json::str(variant.as_str())),
+            ("default", Json::str(a.default_codec.as_str())),
+            ("overrides", overrides),
+            ("edp", Json::num(a.edp)),
+            ("uniform_edp", Json::obj(uniform)),
+            ("evaluations", Json::num(a.evaluations as f64)),
+            ("seed", Json::num(acfg.seed as f64)),
+            ("threshold", Json::num(acfg.dense_threshold)),
+        ]);
+        if let Some(parent) = Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(out, j.to_string_pretty())?;
+        println!("assignment written to {out}");
+    }
     Ok(())
 }
 
@@ -451,13 +616,24 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
                 let dense = args.usize_or("dense", 0)?;
                 let codec = codec_from(args)?
                     .unwrap_or_else(|| TrafficSpec::legacy_boundary_codec(dense));
+                if codec == CodecId::Dense && dense == 0 {
+                    return Err(anyhow!(
+                        "--codec dense requires --dense >= 1 (packets per neuron); \
+                         a zero-width dense edge is empty"
+                    ));
+                }
+                let activity = args.f64_or("activity", 0.1)?;
+                if !(0.0..=1.0).contains(&activity) {
+                    return Err(anyhow!("--activity must be in [0, 1], got {activity}"));
+                }
                 TrafficSpec::Boundary {
                     neurons: args.usize_or("neurons", 256)?,
                     dense,
-                    activity: args.f64_or("activity", 0.1)?,
+                    activity,
                     ticks: args.u32_or("ticks", 8)?,
                     seed,
                     codec,
+                    codecs: Default::default(),
                 }
             }
             other => {
@@ -491,8 +667,15 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         sc.label(),
         if reference { "reference" } else { "optimized" },
     );
-    if let TrafficSpec::Boundary { codec, .. } = sc.traffic {
-        println!("codec           : {codec}");
+    if let TrafficSpec::Boundary { codec, codecs, .. } = &sc.traffic {
+        if codecs.is_empty() {
+            println!("codec           : {codec}");
+        } else {
+            let per_edge: Vec<String> = (0..sc.topology.chips().saturating_sub(1))
+                .map(|e| format!("{e}:{}", codecs.get(&e).copied().unwrap_or(*codec)))
+                .collect();
+            println!("codecs          : {}", per_edge.join(" "));
+        }
     }
     println!("injected        : {}", s.injected);
     println!("delivered       : {}", s.delivered);

@@ -47,9 +47,16 @@ pub struct Partition {
 }
 
 /// Build the partition for a mapped network under a variant config.
+///
+/// Spiking edges resolve their codec through [`ArchConfig::codec_for_layer`]
+/// — the uniform [`ArchConfig::boundary_codec`] default unless the config
+/// carries a per-layer override (the learned mixed assignment of
+/// [`crate::codec::assign`]). The codec only re-types the wire format of an
+/// edge; the *compute mode* stays tied to placement (a boundary layer runs
+/// on the peripheral spiking cores even when its egress is overridden to
+/// dense by the payload-fidelity constraint).
 pub fn partition(net: &Network, mapping: &Mapping, cfg: &ArchConfig) -> Partition {
     let n = net.layers.len();
-    let spike = cfg.boundary_codec;
     let mut layers = Vec::with_capacity(n);
     for i in 0..n {
         let (crosses, crossings) = if i + 1 < n {
@@ -59,13 +66,13 @@ pub fn partition(net: &Network, mapping: &Mapping, cfg: &ArchConfig) -> Partitio
         };
         let (compute, egress) = match cfg.variant {
             Variant::Ann => (ComputeMode::Mac, CodecId::Dense),
-            Variant::Snn => (ComputeMode::Acc, spike),
+            Variant::Snn => (ComputeMode::Acc, cfg.codec_for_layer(i)),
             Variant::Hnn => {
                 // A layer computes on spiking cores when its egress crosses
                 // the die (it lives on the peripheral ring feeding the EMIO);
                 // all other layers stay dense on interior cores.
                 if crosses {
-                    (ComputeMode::Acc, spike)
+                    (ComputeMode::Acc, cfg.codec_for_layer(i))
                 } else {
                     (ComputeMode::Mac, CodecId::Dense)
                 }
@@ -173,6 +180,33 @@ mod tests {
         assert!(p.layers.iter().all(|l| l.egress == CodecId::TopKDelta));
         // ANN ignores the boundary codec entirely
         let cfg = ArchConfig::baseline(Variant::Ann).with_boundary_codec(CodecId::Temporal);
+        let p = partition(&net, &map_network(&net, &cfg), &cfg);
+        assert!(p.layers.iter().all(|l| l.egress == CodecId::Dense));
+    }
+
+    #[test]
+    fn per_layer_overrides_retype_only_their_spiking_edges() {
+        use std::collections::BTreeMap;
+        let net = big_net();
+        // HNN: the single crossing edge (layer 63) overridden to temporal
+        let mut ov = BTreeMap::new();
+        ov.insert(63usize, CodecId::Temporal);
+        ov.insert(10usize, CodecId::Temporal); // non-crossing: must stay dense
+        let cfg = ArchConfig::baseline(Variant::Hnn).with_codec_overrides(ov.clone());
+        let p = partition(&net, &map_network(&net, &cfg), &cfg);
+        assert_eq!(p.layers[63].egress, CodecId::Temporal);
+        assert_eq!(p.layers[63].compute, ComputeMode::Acc, "compute mode tied to placement");
+        assert_eq!(p.layers[10].egress, CodecId::Dense, "override cannot re-type a dense edge");
+        // SNN: every edge is spiking, so both overrides land
+        let cfg = ArchConfig::baseline(Variant::Snn).with_codec_overrides(ov);
+        let p = partition(&net, &map_network(&net, &cfg), &cfg);
+        assert_eq!(p.layers[63].egress, CodecId::Temporal);
+        assert_eq!(p.layers[10].egress, CodecId::Temporal);
+        assert_eq!(p.layers[0].egress, CodecId::Rate, "others keep the default");
+        // ANN ignores overrides entirely
+        let mut ov = BTreeMap::new();
+        ov.insert(63usize, CodecId::Temporal);
+        let cfg = ArchConfig::baseline(Variant::Ann).with_codec_overrides(ov);
         let p = partition(&net, &map_network(&net, &cfg), &cfg);
         assert!(p.layers.iter().all(|l| l.egress == CodecId::Dense));
     }

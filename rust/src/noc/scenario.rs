@@ -22,6 +22,8 @@
 //! Seeds are stored as JSON numbers; keep them below 2^53 so the round trip
 //! is exact.
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, Result};
 
 use crate::analytic::latency::TailLatency;
@@ -83,7 +85,7 @@ impl Topology {
 
 /// Seeded, deterministic traffic specification. Every variant expands to
 /// the same `(cycle, Transfer)` schedule for the same seed and topology.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TrafficSpec {
     /// `packets` uniform random transfers, all present at cycle 0 (random
     /// tiles; chains draw a random eastward chip span per packet).
@@ -100,8 +102,21 @@ pub enum TrafficSpec {
     /// encoding; the legacy `dense` field sets the dense packets-per-neuron
     /// (and, absent an explicit `codec` in JSON, the back-compat default:
     /// `dense > 0` means [`CodecId::Dense`], otherwise [`CodecId::Rate`]).
-    /// Sources sit on the East boundary column of chip 0; destinations on
-    /// the topology's last chip.
+    ///
+    /// **Uniform mode** (`codecs` empty — the pre-assignment behaviour,
+    /// bit-identical): one edge of `neurons` neurons spanning the whole
+    /// topology; sources sit on the East boundary column of chip 0,
+    /// destinations on the last chip.
+    ///
+    /// **Mixed mode** (`codecs` non-empty — the learned-assignment replay
+    /// of `codec::assign`): *every* die boundary `e` (chip `e` -> `e + 1`)
+    /// carries its own edge of `neurons` neurons; boundary `e` uses
+    /// `codecs[e]` when present and the scalar `codec` otherwise, with the
+    /// per-edge seed `seed ^ (e << 32)` (boundary 0 therefore replays the
+    /// scalar traffic exactly, so a duplex `{"0": c}` map equals
+    /// `"codec": c`). An explicit dense codec — scalar or per-edge — with
+    /// `dense == 0` is rejected at the JSON layer (a zero-width dense edge
+    /// is empty under the codec zero-width rule; see [`crate::codec`]).
     Boundary {
         neurons: usize,
         dense: usize,
@@ -109,6 +124,9 @@ pub enum TrafficSpec {
         ticks: u32,
         seed: u64,
         codec: CodecId,
+        /// Per-boundary codec overrides (boundary index -> codec); empty
+        /// means the uniform whole-span edge above.
+        codecs: BTreeMap<usize, CodecId>,
     },
 }
 
@@ -134,7 +152,7 @@ pub struct ScenarioResult {
 }
 
 /// A reproducible simulation scenario: topology + traffic + run options.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
     pub topology: Topology,
     pub traffic: TrafficSpec,
@@ -173,7 +191,25 @@ impl Scenario {
     }
 
     /// Replace the traffic specification.
+    ///
+    /// Boundary specs are validated here so an invalid one cannot exist in
+    /// a `Scenario` (and every serialized scenario therefore round-trips):
+    /// an explicit dense codec — scalar or per-edge — needs `dense >= 1`
+    /// (the zero-width rule `from_json` also enforces), and `activity`
+    /// must be a probability.
     pub fn traffic(mut self, spec: TrafficSpec) -> Self {
+        if let TrafficSpec::Boundary { dense, activity, codec, codecs, .. } = &spec {
+            assert!(
+                *dense >= 1
+                    || (*codec != CodecId::Dense
+                        && !codecs.values().any(|&c| c == CodecId::Dense)),
+                "explicit dense codec requires dense >= 1 (a zero-width dense edge is empty)"
+            );
+            assert!(
+                (0.0..=1.0).contains(activity),
+                "boundary activity must be in [0, 1], got {activity}"
+            );
+        }
         self.traffic = spec;
         self
     }
@@ -222,33 +258,57 @@ impl Scenario {
     /// Expand the traffic spec into the deterministic injection schedule:
     /// ascending `(cycle, transfer)` pairs.
     pub fn schedule(&self) -> Vec<(u64, Transfer)> {
-        match self.traffic {
+        match &self.traffic {
             TrafficSpec::Uniform { packets, seed } => {
-                let mut rng = Rng::new(seed);
-                (0..packets).map(|_| (0, self.random_transfer(&mut rng))).collect()
+                let mut rng = Rng::new(*seed);
+                (0..*packets).map(|_| (0, self.random_transfer(&mut rng))).collect()
             }
             TrafficSpec::FullSpan { packets, seed } => {
-                let mut rng = Rng::new(seed);
-                (0..packets).map(|_| (0, self.span_transfer(&mut rng))).collect()
+                let mut rng = Rng::new(*seed);
+                (0..*packets).map(|_| (0, self.span_transfer(&mut rng))).collect()
             }
             TrafficSpec::Sparse { cycles, period, seed } => {
-                let mut rng = Rng::new(seed);
-                (0..cycles)
-                    .step_by(period.max(1) as usize)
+                let mut rng = Rng::new(*seed);
+                (0..*cycles)
+                    .step_by((*period).max(1) as usize)
                     .map(|t| (t, self.random_transfer(&mut rng)))
                     .collect()
             }
-            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec } => {
-                let last = self.topology.chips() - 1;
+            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec, codecs } => {
                 // the legacy `dense` packets-per-neuron parameterize the
-                // dense codec as a bit width; other codecs ignore it
-                let bits = dense.max(1) as u32 * 8;
-                codec_edge_traffic(codec, neurons, activity, ticks, bits, self.topology.dim(), seed)
-                    .into_iter()
-                    .map(|t| {
-                        (0, Transfer { src_chip: 0, src: t.src, dest_chip: last, dest: t.dest })
-                    })
-                    .collect()
+                // dense codec as a bit width; other codecs ignore it. A
+                // zero width means an *empty* dense edge (codec zero-width
+                // rule) — the JSON layer rejects the explicit-dense shape
+                // that could request it.
+                let bits = *dense as u32 * 8;
+                let dim = self.topology.dim();
+                if codecs.is_empty() {
+                    // uniform: one edge spanning the whole topology
+                    let last = self.topology.chips() - 1;
+                    codec_edge_traffic(*codec, *neurons, *activity, *ticks, bits, dim, *seed)
+                        .into_iter()
+                        .map(|t| {
+                            (0, Transfer { src_chip: 0, src: t.src, dest_chip: last, dest: t.dest })
+                        })
+                        .collect()
+                } else {
+                    // mixed: every die boundary carries its own edge with
+                    // its own codec and a stable per-boundary seed
+                    let mut out = Vec::new();
+                    for e in 0..self.topology.chips() - 1 {
+                        let c = codecs.get(&e).copied().unwrap_or(*codec);
+                        let edge_seed = seed ^ ((e as u64) << 32);
+                        for t in
+                            codec_edge_traffic(c, *neurons, *activity, *ticks, bits, dim, edge_seed)
+                        {
+                            out.push((
+                                0,
+                                Transfer { src_chip: e, src: t.src, dest_chip: e + 1, dest: t.dest },
+                            ));
+                        }
+                    }
+                    out
+                }
             }
         }
     }
@@ -329,33 +389,47 @@ impl Scenario {
                 ("dim", Json::num(dim as f64)),
             ]),
         };
-        let traffic = match self.traffic {
+        let traffic = match &self.traffic {
             TrafficSpec::Uniform { packets, seed } => Json::obj(vec![
                 ("kind", Json::str("uniform")),
-                ("packets", Json::num(packets as f64)),
-                ("seed", Json::num(seed as f64)),
+                ("packets", Json::num(*packets as f64)),
+                ("seed", Json::num(*seed as f64)),
             ]),
             TrafficSpec::FullSpan { packets, seed } => Json::obj(vec![
                 ("kind", Json::str("full-span")),
-                ("packets", Json::num(packets as f64)),
-                ("seed", Json::num(seed as f64)),
+                ("packets", Json::num(*packets as f64)),
+                ("seed", Json::num(*seed as f64)),
             ]),
             TrafficSpec::Sparse { cycles, period, seed } => Json::obj(vec![
                 ("kind", Json::str("sparse")),
-                ("cycles", Json::num(cycles as f64)),
-                ("period", Json::num(period as f64)),
-                ("seed", Json::num(seed as f64)),
+                ("cycles", Json::num(*cycles as f64)),
+                ("period", Json::num(*period as f64)),
+                ("seed", Json::num(*seed as f64)),
             ]),
-            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec } => {
-                Json::obj(vec![
+            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec, codecs } => {
+                let mut fields = vec![
                     ("kind", Json::str("boundary")),
-                    ("neurons", Json::num(neurons as f64)),
-                    ("dense", Json::num(dense as f64)),
-                    ("activity", Json::num(activity)),
-                    ("ticks", Json::num(ticks as f64)),
-                    ("seed", Json::num(seed as f64)),
+                    ("neurons", Json::num(*neurons as f64)),
+                    ("dense", Json::num(*dense as f64)),
+                    ("activity", Json::num(*activity)),
+                    ("ticks", Json::num(*ticks as f64)),
+                    ("seed", Json::num(*seed as f64)),
                     ("codec", Json::str(codec.as_str())),
-                ])
+                ];
+                if !codecs.is_empty() {
+                    // the per-edge map serializes with string keys (JSON
+                    // object keys are strings); parsing restores the usize
+                    fields.push((
+                        "codecs",
+                        Json::Obj(
+                            codecs
+                                .iter()
+                                .map(|(e, c)| (e.to_string(), Json::str(c.as_str())))
+                                .collect(),
+                        ),
+                    ));
+                }
+                Json::obj(fields)
             }
         };
         Json::obj(vec![
@@ -450,16 +524,69 @@ impl Scenario {
                         })?
                     }
                 };
+                // optional per-edge map (mixed mode): boundary index ->
+                // codec; indices must name real die boundaries of the
+                // parsed topology
+                let mut codecs = BTreeMap::new();
+                if let Some(map) = tr.get("codecs") {
+                    let obj = map.as_obj().ok_or_else(|| {
+                        anyhow!("scenario: traffic.codecs must be an object of edge -> codec")
+                    })?;
+                    let n_edges = topology.chips().saturating_sub(1);
+                    for (key, val) in obj {
+                        let e: usize = key.parse().map_err(|_| {
+                            anyhow!("scenario: traffic.codecs key {key:?} is not an edge index")
+                        })?;
+                        if e >= n_edges {
+                            return Err(anyhow!(
+                                "scenario: traffic.codecs edge {e} out of range — the topology \
+                                 has {n_edges} die boundaries"
+                            ));
+                        }
+                        let name = val.as_str().ok_or_else(|| {
+                            anyhow!("scenario: traffic.codecs[{key}] must be a codec name")
+                        })?;
+                        let c = CodecId::parse(name).ok_or_else(|| {
+                            anyhow!("scenario: unknown traffic.codecs[{key}] {name:?}")
+                        })?;
+                        codecs.insert(e, c);
+                    }
+                }
+                // an explicit dense codec with a zero `dense` width would
+                // generate an empty edge (codec zero-width rule) while the
+                // document *looks* like it requests traffic: reject the
+                // shape instead of silently flooring or silencing it
+                if dense == 0 {
+                    let scalar_dense = tr.get("codec").is_some() && codec == CodecId::Dense;
+                    let edge_dense = codecs.values().any(|&c| c == CodecId::Dense);
+                    if scalar_dense || edge_dense {
+                        return Err(anyhow!(
+                            "scenario: explicit dense codec requires dense >= 1 (the \
+                             packets-per-neuron width); dense: 0 would make the edge empty"
+                        ));
+                    }
+                }
+                let activity = tr
+                    .get("activity")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("scenario: traffic.activity missing"))?;
+                // reject out-of-range activities at parse time (the CLI
+                // flag path does the same); letting them through would
+                // only trip `codec::validated_activity`'s debug_assert
+                // mid-run instead of erroring on the malformed document
+                if !(0.0..=1.0).contains(&activity) {
+                    return Err(anyhow!(
+                        "scenario: traffic.activity must be in [0, 1], got {activity}"
+                    ));
+                }
                 TrafficSpec::Boundary {
                     neurons: field_usize("neurons")?,
                     dense,
-                    activity: tr
-                        .get("activity")
-                        .and_then(Json::as_f64)
-                        .ok_or_else(|| anyhow!("scenario: traffic.activity missing"))?,
+                    activity,
                     ticks: field_u64("ticks")? as u32,
                     seed: field_u64("seed")?,
                     codec,
+                    codecs,
                 }
             }
             other => return Err(anyhow!("scenario: unknown traffic kind {other:?}")),
@@ -542,6 +669,7 @@ mod tests {
             ticks: 0,
             seed: 2,
             codec: CodecId::Dense,
+            codecs: BTreeMap::new(),
         });
         let sched = sc.schedule();
         assert_eq!(sched.len(), 16);
@@ -611,8 +739,8 @@ mod tests {
             "traffic": {"kind": "boundary", "neurons": 64, "dense": 0,
                         "activity": 0.5, "ticks": 8, "seed": 7}}"#;
         let sc = Scenario::from_json_str(old_rate).unwrap();
-        let TrafficSpec::Boundary { codec, .. } = sc.traffic else { panic!("boundary") };
-        assert_eq!(codec, CodecId::Rate);
+        let TrafficSpec::Boundary { codec, .. } = &sc.traffic else { panic!("boundary") };
+        assert_eq!(*codec, CodecId::Rate);
         let explicit = sc.to_json().to_string_pretty();
         assert!(explicit.contains("\"codec\""), "serialization names the codec");
         let back = Scenario::from_json_str(&explicit).unwrap();
@@ -623,19 +751,21 @@ mod tests {
             "traffic": {"kind": "boundary", "neurons": 64, "dense": 2,
                         "activity": 0.0, "ticks": 0, "seed": 7}}"#;
         let sc = Scenario::from_json_str(old_dense).unwrap();
-        let TrafficSpec::Boundary { codec, .. } = sc.traffic else { panic!("boundary") };
-        assert_eq!(codec, CodecId::Dense);
+        let TrafficSpec::Boundary { codec, .. } = &sc.traffic else { panic!("boundary") };
+        assert_eq!(*codec, CodecId::Dense);
         assert_eq!(sc.schedule().len(), 128, "2 packets per neuron, deterministic");
 
-        // every codec id round-trips; unknown names are rejected
+        // every codec id round-trips; unknown names are rejected (an
+        // explicit dense codec needs dense >= 1 — the zero-width rule)
         for id in CodecId::ALL {
             let sc = Scenario::duplex(4).traffic(TrafficSpec::Boundary {
                 neurons: 8,
-                dense: 0,
+                dense: if id == CodecId::Dense { 1 } else { 0 },
                 activity: 0.3,
                 ticks: 4,
                 seed: 1,
                 codec: id,
+                codecs: BTreeMap::new(),
             });
             let back = Scenario::from_json_str(&sc.to_json().to_string_pretty()).unwrap();
             assert_eq!(back, sc, "{id}");
@@ -646,6 +776,193 @@ mod tests {
                             "activity": 0.1, "ticks": 8, "seed": 1, "codec": "morse"}}"#
         )
         .is_err(), "unknown codec must error");
+    }
+
+    #[test]
+    fn mixed_codecs_map_round_trips_and_generates_per_edge_traffic() {
+        // the learned-assignment replay path: a 4-chip chain whose three
+        // boundaries carry three different codecs
+        let mut codecs = BTreeMap::new();
+        codecs.insert(0usize, CodecId::Dense);
+        codecs.insert(2usize, CodecId::Temporal);
+        let sc = Scenario::chain(4, 8).traffic(TrafficSpec::Boundary {
+            neurons: 16,
+            dense: 1,
+            activity: 0.2,
+            ticks: 8,
+            seed: 5,
+            codec: CodecId::Rate, // boundary 1 falls back to the scalar
+            codecs,
+        });
+        let text = sc.to_json().to_string_pretty();
+        assert!(text.contains("\"codecs\""), "mixed maps serialize: {text}");
+        let back = Scenario::from_json_str(&text).expect("mixed map parses");
+        assert_eq!(back, sc);
+        assert_eq!(back.schedule(), sc.schedule());
+
+        // per-edge structure: every boundary e ships chip e -> e + 1, and
+        // the dense boundary emits exactly neurons x dense packets
+        let sched = sc.schedule();
+        for e in 0..3usize {
+            let edge: Vec<_> = sched.iter().filter(|(_, t)| t.src_chip == e).collect();
+            assert!(!edge.is_empty(), "boundary {e} generated no traffic");
+            assert!(edge.iter().all(|(c, t)| *c == 0 && t.dest_chip == e + 1));
+        }
+        assert_eq!(sched.iter().filter(|(_, t)| t.src_chip == 0).count(), 16);
+        // temporal fires at most once per neuron
+        assert!(sched.iter().filter(|(_, t)| t.src_chip == 2).count() <= 16);
+        // and the run drains on both engines with identical stats
+        let (a, r) = (sc.run(), sc.run_reference());
+        assert_eq!(a.stats, r.stats);
+        assert_eq!(a.stats.injected, a.stats.delivered);
+    }
+
+    #[test]
+    fn duplex_single_entry_map_equals_the_scalar_codec() {
+        // boundary 0 uses the scalar seed, so {"0": c} on a duplex replays
+        // the uniform scenario exactly, packet for packet
+        let uniform = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 64,
+            dense: 0,
+            activity: 0.3,
+            ticks: 8,
+            seed: 11,
+            codec: CodecId::TopKDelta,
+            codecs: BTreeMap::new(),
+        });
+        let mut codecs = BTreeMap::new();
+        codecs.insert(0usize, CodecId::TopKDelta);
+        let mixed = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 64,
+            dense: 0,
+            activity: 0.3,
+            ticks: 8,
+            seed: 11,
+            codec: CodecId::Rate,
+            codecs,
+        });
+        assert_eq!(uniform.schedule(), mixed.schedule());
+        assert_eq!(uniform.run().stats, mixed.run().stats);
+    }
+
+    #[test]
+    fn mixed_codecs_map_is_validated() {
+        // edge index past the topology's last boundary
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"1": "rate"}}}"#
+        )
+        .is_err(), "duplex has exactly one boundary (index 0)");
+        // non-integer key
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "chain", "chips": 3, "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"first": "rate"}}}"#
+        )
+        .is_err(), "codecs keys must be edge indices");
+        // unknown codec name inside the map
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "chain", "chips": 3, "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": "morse"}}}"#
+        )
+        .is_err(), "unknown codec in the map must error");
+        // a valid map parses and lands in the spec
+        let sc = Scenario::from_json_str(
+            r#"{"topology": {"kind": "chain", "chips": 3, "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": "temporal", "1": "topk-delta"}}}"#,
+        )
+        .unwrap();
+        let TrafficSpec::Boundary { codecs, .. } = &sc.traffic else { panic!("boundary") };
+        assert_eq!(codecs.get(&0), Some(&CodecId::Temporal));
+        assert_eq!(codecs.get(&1), Some(&CodecId::TopKDelta));
+    }
+
+    #[test]
+    fn explicit_dense_codec_with_zero_width_is_rejected() {
+        // regression for the `bits = dense.max(1) * 8` fudge: an explicit
+        // dense codec with dense: 0 used to silently generate 8-bit
+        // traffic; the documented rule now rejects the shape (scalar...)
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1, "codec": "dense"}}"#
+        )
+        .is_err(), "explicit dense codec requires dense >= 1");
+        // (...and per-edge)
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "chain", "chips": 3, "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"1": "dense"}}}"#
+        )
+        .is_err(), "per-edge dense codec requires dense >= 1");
+        // out-of-range activity is a parse error, not a mid-run panic
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 1.5, "ticks": 8, "seed": 1}}"#
+        )
+        .is_err(), "activity above 1 must be rejected");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": -0.2, "ticks": 8, "seed": 1}}"#
+        )
+        .is_err(), "negative activity must be rejected");
+        // the legacy shape (no codec key, dense: 0) still means rate coding
+        let sc = Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1}}"#,
+        )
+        .unwrap();
+        let TrafficSpec::Boundary { codec, .. } = &sc.traffic else { panic!("boundary") };
+        assert_eq!(*codec, CodecId::Rate);
+        // and dense >= 1 with an explicit dense codec is accepted
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 2,
+                            "activity": 0.1, "ticks": 8, "seed": 1, "codec": "dense"}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "dense >= 1")]
+    fn builder_rejects_zero_width_dense_codec() {
+        // the builder enforces the same zero-width rule as from_json, so an
+        // invalid Boundary spec cannot exist in a Scenario (and to_json
+        // output always round-trips)
+        let _ = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 8,
+            dense: 0,
+            activity: 0.1,
+            ticks: 8,
+            seed: 1,
+            codec: CodecId::Dense,
+            codecs: BTreeMap::new(),
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "activity must be in [0, 1]")]
+    fn builder_rejects_out_of_range_activity() {
+        let _ = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 8,
+            dense: 0,
+            activity: 1.5,
+            ticks: 8,
+            seed: 1,
+            codec: CodecId::Rate,
+            codecs: BTreeMap::new(),
+        });
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::analytic::latency::{crossing_floor_cycles, tail_vs_floor, TailLatency
 use crate::arch::core::{chip_sram_bytes, CoreSpec};
 use crate::arch::packet;
 use crate::arch::params::{ArchConfig, Variant};
+use crate::codec::assign::Assignment;
 use crate::codec::CodecId;
 use crate::util::table::Table;
 
@@ -173,6 +174,59 @@ pub fn table6_codec_bandwidth(neurons: u64, activity: f64, ticks: u32, bits: u32
     t
 }
 
+/// Table 7 (repo-added): the learned per-edge codec assignment of
+/// [`crate::codec::assign`] — one row per boundary edge with the activity
+/// that drove the choice, the chosen codec, and the boundary packets it
+/// charges; edges the payload-fidelity constraint forced dense are marked.
+/// The footer rows quote the mixed EDP against every uniform single-codec
+/// EDP, so a rendered table is the mixed-vs-uniform acceptance comparison.
+pub fn table7_codec_assignment(a: &Assignment) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Table 7: learned per-edge codec assignment — default {}, {} edges",
+            a.default_codec,
+            a.edges.len()
+        ),
+        &["layer", "name", "activity", "neurons", "crossings", "codec", "boundary pkts", "fidelity"],
+    );
+    for e in &a.edges {
+        t.row(vec![
+            format!("{}", e.layer_idx),
+            e.name.clone(),
+            format!("{:.3}", e.activity),
+            format!("{}", e.neurons),
+            format!("{}", e.die_crossings),
+            e.codec.to_string(),
+            format!("{}", e.boundary_packets),
+            if e.fidelity_forced { "dense forced".into() } else { "free".into() },
+        ]);
+    }
+    let (ucodec, uedp) = a.best_uniform();
+    t.row(vec![
+        "-".into(),
+        "mixed (this assignment)".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "mixed".into(),
+        format!("EDP {:.4e}", a.edp),
+        format!("{:+.2}% vs best uniform", -100.0 * a.improvement_over(uedp)),
+    ]);
+    for &(codec, edp) in &a.uniform_edp {
+        t.row(vec![
+            "-".into(),
+            format!("uniform {codec}"),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            codec.to_string(),
+            format!("EDP {edp:.4e}"),
+            if codec == ucodec { "best uniform".into() } else { String::new() },
+        ]);
+    }
+    t
+}
+
 /// One measured tail-latency row: a topology's per-packet distribution
 /// (from cycle-engine telemetry) against its analytic crossing floor.
 pub struct TailRow {
@@ -256,6 +310,55 @@ mod tests {
         assert_eq!(pkts[1], 205);
         // dense ratio column anchors at 1.000
         assert_eq!(t.rows[0][4], "1.000");
+    }
+
+    #[test]
+    fn table7_lists_edges_and_the_uniform_comparison() {
+        use crate::codec::assign::EdgeAssignment;
+        use std::collections::BTreeMap;
+        let mut overrides = BTreeMap::new();
+        overrides.insert(3usize, CodecId::Dense);
+        let a = Assignment {
+            default_codec: CodecId::Temporal,
+            overrides,
+            edges: vec![
+                EdgeAssignment {
+                    layer_idx: 1,
+                    name: "l1".into(),
+                    activity: 0.1,
+                    neurons: 256,
+                    die_crossings: 1,
+                    codec: CodecId::Temporal,
+                    boundary_packets: 146,
+                    fidelity_forced: false,
+                },
+                EdgeAssignment {
+                    layer_idx: 3,
+                    name: "l3".into(),
+                    activity: 0.7,
+                    neurons: 256,
+                    die_crossings: 1,
+                    codec: CodecId::Dense,
+                    boundary_packets: 256,
+                    fidelity_forced: true,
+                },
+            ],
+            edp: 90.0,
+            uniform_edp: vec![
+                (CodecId::Dense, 200.0),
+                (CodecId::Rate, 150.0),
+                (CodecId::TopKDelta, 120.0),
+                (CodecId::Temporal, 100.0),
+            ],
+            evaluations: 12,
+        };
+        let t = table7_codec_assignment(&a);
+        assert_eq!(t.rows.len(), 2 + 1 + 4, "edges + mixed row + four uniforms");
+        let s = t.render();
+        assert!(s.contains("dense forced"));
+        assert!(s.contains("best uniform"));
+        assert!(s.contains("mixed"));
+        assert!(!t.to_csv().is_empty());
     }
 
     #[test]

@@ -11,9 +11,12 @@
 //! temporal` at matched activity, analytically and as sampled by the cycle
 //! simulator (the ISSUE acceptance criterion behind `noc-sim --codec`).
 
+use std::collections::BTreeMap;
+
 use spikelink::analytic::workload::{dense_packets_per_neuron, spike_packets_per_neuron};
 use spikelink::analytic::{simulate, simulate_variants};
 use spikelink::arch::params::{ArchConfig, Variant};
+use spikelink::codec::assign::{self, AssignConfig};
 use spikelink::codec::CodecId;
 use spikelink::model::layer::{Layer, LayerKind, Network};
 use spikelink::model::networks;
@@ -145,11 +148,14 @@ fn four_codec_boundary_runs_ordered_at_matched_activity() {
     for codec in CodecId::ALL {
         let sc = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
             neurons: 256,
-            dense: 0,
+            // the dense codec reads its width from `dense` (zero-width
+            // edges are empty); spiking codecs ignore the field
+            dense: if codec == CodecId::Dense { 1 } else { 0 },
             activity: 0.1,
             ticks: 8,
             seed: 3,
             codec,
+            codecs: std::collections::BTreeMap::new(),
         });
         let res = sc.run();
         assert!(res.stats.delivered > 0, "{codec}: no packets delivered");
@@ -162,4 +168,83 @@ fn four_codec_boundary_runs_ordered_at_matched_activity() {
     );
     // the spiking codecs genuinely thin the traffic (strict at 10%)
     assert!(delivered[1] > delivered[2] && delivered[2] > delivered[3], "{delivered:?}");
+}
+
+// ---------------------------------------------------------------------------
+// PR 5: per-edge codec assignment — the uniform defaults must not move
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_override_map_is_bit_identical_to_uniform_defaults() {
+    // lifting `boundary_codec` into default + override map must leave
+    // every uniform output untouched: an absent map, an explicitly empty
+    // map, and a map that names every layer with the default codec all
+    // produce identical per-layer workloads, latency, and energy
+    let net = networks::msresnet18();
+    for variant in Variant::ALL {
+        let base = ArchConfig::baseline(variant);
+        let profile = SparsityProfile::uniform(net.layers.len(), 0.1);
+        let plain = simulate(&net, &base, &profile);
+        let empty = simulate(&net, &base.clone().with_codec_overrides(BTreeMap::new()), &profile);
+        let explicit: BTreeMap<usize, CodecId> =
+            (0..net.layers.len()).map(|i| (i, base.boundary_codec)).collect();
+        let named = simulate(&net, &base.clone().with_codec_overrides(explicit), &profile);
+        for (a, b) in [(&plain, &empty), (&plain, &named)] {
+            assert_eq!(a.works, b.works, "{variant}: per-layer workloads drifted");
+            assert_eq!(a.latency, b.latency, "{variant}: latency drifted");
+            assert_eq!(a.energy, b.energy, "{variant}: energy drifted");
+            assert_eq!(a.boundary_packets, b.boundary_packets, "{variant}");
+        }
+    }
+}
+
+#[test]
+fn empty_codecs_map_replays_the_uniform_scenario_bit_identically() {
+    // the scenario side of the same lock: a Boundary spec with an empty
+    // per-edge map is the pre-assignment uniform span, schedule and stats
+    let uniform = Scenario::duplex(8).with_telemetry().traffic(TrafficSpec::Boundary {
+        neurons: 128,
+        dense: 0,
+        activity: 0.2,
+        ticks: 8,
+        seed: 11,
+        codec: CodecId::Rate,
+        codecs: BTreeMap::new(),
+    });
+    let legacy_events = boundary_edge_traffic(128, 0, 0.2, 8, 8, 11);
+    let sched = uniform.schedule();
+    assert_eq!(sched.len(), legacy_events.len());
+    for ((cycle, tr), ev) in sched.iter().zip(&legacy_events) {
+        assert_eq!(*cycle, 0);
+        assert_eq!((tr.src, tr.dest), (ev.src, ev.dest));
+    }
+    // and the serialized form parses back without growing a codecs key
+    let text = uniform.to_json().to_string_pretty();
+    assert!(!text.contains("codecs"), "empty maps must not serialize: {text}");
+    assert_eq!(Scenario::from_json_str(&text).unwrap(), uniform);
+}
+
+#[test]
+fn mixed_assignment_acceptance_on_reference_networks() {
+    // the PR acceptance criterion, end to end: on a multi-chip reference
+    // network the learned mixed assignment's analytic energy x latency is
+    // at or below the best uniform single-codec run, deterministically
+    let acfg = AssignConfig { sa_iters: 60, ..AssignConfig::default() };
+    for name in ["ms-resnet18", "rwkv-6l-512"] {
+        let net = networks::by_name(name).unwrap();
+        let cfg = ArchConfig::baseline(Variant::Hnn);
+        let profile = SparsityProfile::uniform(net.layers.len(), 0.1);
+        let a = assign::assign(&net, &cfg, &profile, &acfg);
+        let b = assign::assign(&net, &cfg, &profile, &acfg);
+        assert_eq!(a, b, "{name}: fixed seed must reproduce the assignment");
+        let (ucodec, uedp) = a.best_uniform();
+        assert!(
+            a.edp <= uedp,
+            "{name}: mixed EDP {} above best uniform {ucodec} {uedp}",
+            a.edp
+        );
+        // the assignment replays through the analytic engine exactly
+        let rep = simulate(&net, &a.apply_to(&cfg), &profile);
+        assert!((assign::edp(&rep) - a.edp).abs() <= a.edp * 1e-12, "{name}");
+    }
 }

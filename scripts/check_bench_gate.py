@@ -30,6 +30,12 @@ floor, but they can never stand in for the default-lineage dim coverage —
 only unsuffixed records vouch for the {8, 16, 32} floor, so adding codec
 cases cannot weaken the gate, and a codec case a past run emitted but the
 bench no longer produces is not gated forever.
+
+`mixed`-suffixed labels (`noc/mesh16/sparse/speedup/mixed`, `mesh16-mixed`
+— a learned per-edge codec assignment, see EXPERIMENTS.md §Codec
+"Per-edge assignment") follow exactly the same rules as the codec
+suffixes: latest-run only, floor-checked, never a substitute for the
+default-lineage dim coverage.
 """
 
 import json
@@ -47,11 +53,11 @@ MESH_DIM_RE = re.compile(r"mesh-?(\d+)")
 
 # a codec-suffixed speedup label carries one of the boundary-codec ids —
 # including every alias spelling CodecId::parse accepts (spike, ttfs,
-# delta, topk) — as its own `/`- or `-`-separated segment (never a
-# substring of another word); longest alternatives first so "topk-delta"
-# wins over "topk"/"delta"
+# delta, topk) and the `mixed` learned-assignment label — as its own `/`-
+# or `-`-separated segment (never a substring of another word); longest
+# alternatives first so "topk-delta" wins over "topk"/"delta"
 CODEC_RE = re.compile(
-    r"(?:^|[/-])(topk-delta|temporal|dense|spike|delta|topk|rate|ttfs)(?:$|[/-])"
+    r"(?:^|[/-])(topk-delta|temporal|dense|spike|delta|mixed|topk|rate|ttfs)(?:$|[/-])"
 )
 
 

@@ -33,6 +33,11 @@ CASES = {
     # a below-floor codec case from a *prior* run (no longer emitted by the
     # bench) must not be gated forever once a clean run lands on top
     "codec_stale_then_pass.json": (True, "speedup gate passed"),
+    # `mixed`-suffixed labels (learned per-edge codec assignment) follow
+    # the codec-suffix rules: accepted next to an intact default lineage...
+    "mixed_labels_pass.json": (True, "codec cases"),
+    # ...but still held to the 5x floor
+    "mixed_below_floor.json": (False, "below the 5x acceptance floor"),
     "fail_speedup.json": (False, "below the 5x acceptance floor"),
     "fail_overhead.json": (False, "exceeds the 1.05x (5%) acceptance ceiling"),
     "incomplete.json": (False, "bench did not complete"),
