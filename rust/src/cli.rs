@@ -104,7 +104,7 @@ USAGE: spikelink <command> [options]
 
 COMMANDS:
   report            regenerate paper tables/figures from the analytic engine
-                      --table 1|2|3|6|7  --figure 7|8|9|10|11|12|13|14|15  (default: all)
+                      --table 1|2|3|6|7  --figure 7|8|9|10|11|12|13|14|15|16  (default: all)
                       --out DIR       also write CSVs (default results/)
                       --runs DIR      run records for fig 9 (default results/runs)
   simulate          one (network, variant) analytic simulation
@@ -117,9 +117,11 @@ COMMANDS:
                       --sparsity-from FILE   use measured rates from a run JSON
                       --verbose       dump the per-layer workload table
   sweep             sweep an axis and print speedup/efficiency vs ANN
-                      --model NAME  --axis bits|dim|grouping|sparsity|codec
+                      --model NAME  --axis bits|dim|grouping|sparsity|codec|fault
                         (the codec axis adds a codec=mixed row: the learned
-                         per-edge assignment vs the uniform codecs)
+                         per-edge assignment vs the uniform codecs; the fault
+                         axis prints codec degradation under seeded link
+                         faults — the cycle-level Fig 16 table)
                       --codec NAME    pin the boundary codec on non-codec axes
   assign-codecs     learn a per-boundary-edge codec assignment (greedy +
                     simulated annealing over the analytic energy x latency
@@ -152,6 +154,15 @@ COMMANDS:
                         encoding (default: dense if --dense > 0, else rate;
                         scenario files may instead carry a per-edge "codecs"
                         map — the mixed-assignment replay)
+                      --faults FILE        seeded fault plan (the scenario/v1 faults
+                        block as its own JSON document; see EXPERIMENTS.md §Faults)
+                      --ber F              uniform per-frame corruption probability
+                      --fault-seed N       fault-plan seed (default 0)
+                      --max-retries N      re-send budget per corrupted frame (default 3)
+                      --drop-corrupted     discard corrupted frames instead of retrying
+                      --link-down F:U[:E][,...]  outage window(s) [FROM, UNTIL) on edge E
+                        (fault flags conflict with a --scenario file that
+                         carries its own faults block)
                       --reference          run the retained naive engine instead
                       --no-telemetry       skip per-packet records (no tail quantiles)
                       --save FILE          write the scenario JSON for reproduction

@@ -155,6 +155,9 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
             &figures::fig15_mixed_frontier("ms-resnet18", &[0.75, 0.9, 0.95, 0.99]),
         )?;
     }
+    if all || figure == Some(16) {
+        emit("fig16_fault_degradation", &figures::fig16_fault_degradation(FAULT_SWEEP_BERS))?;
+    }
     if all {
         let (speed, eff, _) = figures::headline_claims();
         println!(
@@ -260,10 +263,20 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
 // sweep
 // ---------------------------------------------------------------------------
 
+/// Bit-error rates of the fault-degradation sweep (`sweep --axis fault`,
+/// `report --figure 16`): the fault-free baseline plus three decades.
+const FAULT_SWEEP_BERS: &[f64] = &[0.0, 0.001, 0.01, 0.05];
+
 fn cmd_sweep(args: &cli::Args) -> Result<()> {
     let model = args.str_or("model", "ms-resnet18");
     let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let axis = args.str_or("axis", "bits");
+    // the fault axis is a cycle-level sweep (codec degradation under seeded
+    // link faults), not an analytic speedup table — handle it on its own
+    if axis == "fault" {
+        println!("{}", figures::fig16_fault_degradation(FAULT_SWEEP_BERS).render());
+        return Ok(());
+    }
     // --codec pins the boundary encoding for every swept point (the codec
     // axis instead sweeps it, one row per codec)
     let pinned_codec = codec_from(args)?;
@@ -574,9 +587,9 @@ fn cmd_table4(args: &cli::Args) -> Result<()> {
 /// flags — and print the unified `NocStats` plus measured tail percentiles.
 fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
     use spikelink::noc::scenario::DEFAULT_MAX_CYCLES;
-    use spikelink::noc::{Scenario, TrafficSpec};
+    use spikelink::noc::{DrainOutcome, FaultPlan, Scenario, TrafficSpec};
 
-    let sc = if let Some(path) = args.get("scenario") {
+    let mut sc = if let Some(path) = args.get("scenario") {
         if args.get("codec").is_some() {
             return Err(anyhow!(
                 "--codec cannot override a --scenario file; set the codec in its traffic object"
@@ -654,6 +667,61 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         sc
     };
 
+    // -- fault flags: a seeded plan from --faults FILE and/or inline flags,
+    // merged onto the scenario (a --scenario file that already carries its
+    // own faults block conflicts — edit the file instead)
+    let fault_flags = args.get("faults").is_some()
+        || args.get("ber").is_some()
+        || args.get("fault-seed").is_some()
+        || args.get("max-retries").is_some()
+        || args.has_flag("drop-corrupted")
+        || args.get("link-down").is_some();
+    if fault_flags {
+        if sc.faults.is_some() {
+            return Err(anyhow!(
+                "the --scenario file already carries a faults block; drop the fault flags \
+                 or edit the file"
+            ));
+        }
+        let mut plan = if let Some(path) = args.get("faults") {
+            let text = std::fs::read_to_string(path)?;
+            let j = json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            FaultPlan::from_json(&j).map_err(|e| anyhow!("{path}: {e}"))?
+        } else {
+            FaultPlan::default()
+        };
+        plan.ber = args.f64_or("ber", plan.ber)?;
+        plan.seed = args.usize_or("fault-seed", plan.seed as usize)? as u64;
+        plan.max_retries = args.u32_or("max-retries", plan.max_retries)?;
+        if args.has_flag("drop-corrupted") {
+            plan.drop_corrupted = true;
+        }
+        if let Some(spec) = args.get("link-down") {
+            for win in spec.split(',') {
+                let parts: Vec<&str> = win.split(':').collect();
+                let nums: Result<Vec<u64>> = parts
+                    .iter()
+                    .map(|p| {
+                        p.parse::<u64>()
+                            .map_err(|_| anyhow!("--link-down expects integers, got {p:?}"))
+                    })
+                    .collect();
+                let nums = nums?;
+                let (from, until, edge) = match nums.as_slice() {
+                    [f, u] => (*f, *u, 0usize),
+                    [f, u, e] => (*f, *u, *e as usize),
+                    _ => {
+                        return Err(anyhow!(
+                            "--link-down expects FROM:UNTIL[:EDGE] windows, got {win:?}"
+                        ))
+                    }
+                };
+                plan.link_down.push(spikelink::noc::faults::LinkDown { edge, from, until });
+            }
+        }
+        sc = sc.try_with_faults(plan)?;
+    }
+
     if let Some(out) = args.get("save") {
         std::fs::write(out, sc.to_json().to_string_pretty())?;
         println!("scenario written to {out}");
@@ -677,6 +745,30 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
             println!("codecs          : {}", per_edge.join(" "));
         }
     }
+    if let Some(plan) = &sc.faults {
+        println!(
+            "fault plan      : seed {} ber {} max_retries {} ({} mode){}{}{}",
+            plan.seed,
+            plan.ber,
+            plan.max_retries,
+            if plan.drop_corrupted { "drop" } else { "retry" },
+            if plan.link_down.is_empty() {
+                String::new()
+            } else {
+                format!(", {} link-down window(s)", plan.link_down.len())
+            },
+            if plan.stalls.is_empty() {
+                String::new()
+            } else {
+                format!(", {} stall window(s)", plan.stalls.len())
+            },
+            if plan.hotspots.is_empty() {
+                String::new()
+            } else {
+                format!(", {} hotspot burst(s)", plan.hotspots.len())
+            },
+        );
+    }
     println!("injected        : {}", s.injected);
     println!("delivered       : {}", s.delivered);
     println!("cycles          : {}", s.cycles);
@@ -689,6 +781,22 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
             t.p50, t.p99, t.p999, t.mean, t.samples
         ),
         None => println!("latency tail    : n/a (telemetry off)"),
+    }
+    if sc.faults.is_some() {
+        let f = s.faults;
+        println!("delivered frac  : {:.4}", s.delivered_fraction());
+        println!(
+            "faults          : corrupted {}  retried {}  dropped {}  link-down cycles {}  \
+             stall cycles {}",
+            f.corrupted, f.retried, f.dropped, f.link_down_cycles, f.stall_cycles
+        );
+    }
+    if res.outcome == DrainOutcome::TimedOut {
+        println!(
+            "WARNING         : drain timed out at the {}-cycle cap with {} packet(s) stranded",
+            sc.max_cycles,
+            s.injected - s.delivered - s.faults.dropped
+        );
     }
     Ok(())
 }

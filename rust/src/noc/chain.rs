@@ -22,6 +22,7 @@ use crate::util::stats::LatencyHist;
 
 use super::emio::{EmioLink, LANES};
 use super::engine::{CycleEngine, NocStats, Transfer};
+use super::faults::{FaultOp, FaultSink, FaultStats};
 use super::mesh::Mesh;
 use super::router::Flit;
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
@@ -236,12 +237,22 @@ impl<S: TelemetrySink> CycleEngine for Chain<S> {
     }
 
     fn stats(&self) -> NocStats {
+        // faults are re-summed from chips + links every call (never cached
+        // in self.stats — Chain::run reassigns that field)
+        let mut faults = FaultStats::default();
+        for m in &self.chips {
+            faults.absorb(&m.stats.faults);
+        }
+        for l in &self.links {
+            faults.absorb(&l.fault_stats());
+        }
         NocStats {
             injected: self.stats.injected,
             delivered: self.chips.iter().map(|m| m.stats.delivered).sum(),
             total_hops: self.chips.iter().map(|m| m.stats.total_hops).sum(),
             total_latency: self.chips.iter().map(|m| m.stats.total_latency).sum(),
             cycles: self.now,
+            faults,
         }
     }
 
@@ -251,6 +262,36 @@ impl<S: TelemetrySink> CycleEngine for Chain<S> {
 
     fn latency_hist(&self) -> LatencyHist {
         Chain::latency_hist(self)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            FaultOp::Policy { seed, max_retries, drop_corrupted } => {
+                for (c, l) in self.links.iter_mut().enumerate() {
+                    l.fault_policy(c, seed, max_retries, drop_corrupted);
+                }
+            }
+            FaultOp::BitError { edge, rate } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].set_ber(edge, rate);
+            }
+            FaultOp::LinkDown { edge, from, until } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].add_outage(edge, from, until);
+            }
+            FaultOp::Stall { chip, router, from, until } => {
+                assert!(chip < self.chips.len(), "chain engine: chip {chip} out of range");
+                self.chips[chip].add_stall(router, from, until);
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        let mut events = Vec::new();
+        for l in &self.links {
+            events.extend_from_slice(l.fault_events());
+        }
+        FaultSink { stats: CycleEngine::stats(self).faults, events }.finish()
     }
 }
 

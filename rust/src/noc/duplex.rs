@@ -10,6 +10,7 @@ use crate::util::stats::LatencyHist;
 
 use super::emio::EmioLink;
 use super::engine::{CycleEngine, NocStats, Transfer};
+use super::faults::{FaultOp, FaultSink};
 use super::mesh::Mesh;
 use super::router::Flit;
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
@@ -169,12 +170,16 @@ impl<S: TelemetrySink> CycleEngine for Duplex<S> {
     }
 
     fn stats(&self) -> NocStats {
+        let mut faults = self.a.stats.faults;
+        faults.absorb(&self.b.stats.faults);
+        faults.absorb(&self.link.fault_stats());
         NocStats {
             injected: self.tracked.len() as u64,
             delivered: self.b.stats.delivered,
             total_hops: self.b.stats.total_hops,
             total_latency: self.b.stats.total_latency,
             cycles: self.now,
+            faults,
         }
     }
 
@@ -184,6 +189,35 @@ impl<S: TelemetrySink> CycleEngine for Duplex<S> {
 
     fn latency_hist(&self) -> LatencyHist {
         Duplex::latency_hist(self)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            FaultOp::Policy { seed, max_retries, drop_corrupted } => {
+                self.link.fault_policy(0, seed, max_retries, drop_corrupted);
+            }
+            FaultOp::BitError { edge, rate } => {
+                assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
+                self.link.set_ber(0, rate);
+            }
+            FaultOp::LinkDown { edge, from, until } => {
+                assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
+                self.link.add_outage(0, from, until);
+            }
+            FaultOp::Stall { chip, router, from, until } => {
+                let m = match chip {
+                    0 => &mut self.a,
+                    1 => &mut self.b,
+                    _ => panic!("duplex engine: stall chip must be 0 or 1"),
+                };
+                m.add_stall(router, from, until);
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        FaultSink { stats: self.stats().faults, events: self.link.fault_events().to_vec() }
+            .finish()
     }
 }
 

@@ -15,10 +15,22 @@
 //!
 //! A lone frame therefore crosses in `38 + 38 = 76` cycles — the synthesized
 //! RTL figure the paper reports.
+//!
+//! **Fault injection** (see [`super::faults`]): a link optionally carries a
+//! [`LinkFaults`] state. During a link-down window (plus credit recovery)
+//! the pad transmits nothing; a frame crossing the pad may be corrupted by
+//! the seeded bit-error RNG and is then either re-sent through the merge
+//! FIFO (bounded retries — the fault costs latency, not the packet) or
+//! dropped. A link without fault state (`faults: None`, the default) runs
+//! the exact pre-fault fast path, bit-identically. Both engine families
+//! share this one implementation, so they stay in lockstep under identical
+//! fault plans by construction.
 
 use std::collections::VecDeque;
 
 use crate::arch::packet::Packet;
+
+use super::faults::{FaultEvent, FaultStats, LinkFaults, PadVerdict};
 
 /// SerDes serialization depth (cycles per frame in a lane).
 pub const SER_CYCLES: u64 = 38;
@@ -36,6 +48,9 @@ pub struct Frame {
     pub id: u64,
     /// Cycle the frame entered a serializer lane.
     pub entered_at: u64,
+    /// Times this frame was re-sent after pad corruption (0 on a clean
+    /// link; bounded by the fault policy's retry budget).
+    pub retries: u32,
 }
 
 #[derive(Debug, Clone)]
@@ -60,6 +75,8 @@ pub struct EmioLink {
     rr: usize,
     /// Total frames accepted.
     pub accepted: u64,
+    /// Fault state; `None` (the default) is the pristine fast path.
+    faults: Option<LinkFaults>,
 }
 
 impl Default for EmioLink {
@@ -79,7 +96,39 @@ impl EmioLink {
             delivered: Vec::new(),
             rr: 0,
             accepted: 0,
+            faults: None,
         }
+    }
+
+    fn faults_mut(&mut self, edge: usize) -> &mut LinkFaults {
+        self.faults.get_or_insert_with(|| LinkFaults::new(edge, 0))
+    }
+
+    /// Seed the corruption RNG of this link (die boundary `edge`) and set
+    /// the retry policy. Must precede `set_ber` for a replayable stream —
+    /// [`super::faults::FaultPlan::ops`] guarantees the order.
+    pub fn fault_policy(&mut self, edge: usize, seed: u64, max_retries: u32, drop_corrupted: bool) {
+        self.faults_mut(edge).set_policy(seed, max_retries, drop_corrupted);
+    }
+
+    /// Set the per-frame corruption probability of this link.
+    pub fn set_ber(&mut self, edge: usize, rate: f64) {
+        self.faults_mut(edge).set_ber(rate);
+    }
+
+    /// Add a `[from, until)` outage window to this link.
+    pub fn add_outage(&mut self, edge: usize, from: u64, until: u64) {
+        self.faults_mut(edge).add_outage(from, until);
+    }
+
+    /// Fault counters of this link (zero when no fault state exists).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.as_ref().map(|f| f.stats).unwrap_or_default()
+    }
+
+    /// Per-incident fault events of this link (empty when clean).
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        self.faults.as_ref().map(|f| f.events.as_slice()).unwrap_or(&[])
     }
 
     /// Offer a packet to boundary lane `lane` (the source boundary core's
@@ -90,6 +139,7 @@ impl EmioLink {
             wire: pkt.encode_d2d(lane as u8),
             id,
             entered_at: now,
+            retries: 0,
         });
         self.accepted += 1;
     }
@@ -114,10 +164,29 @@ impl EmioLink {
         }
         // 2. pad: one frame per cycle leaves the merge FIFO and enters the
         //    deserializer pipeline (round-robin is inherent in FIFO order;
-        //    rr retained for lane fairness bookkeeping).
+        //    rr retained for lane fairness bookkeeping). During an outage
+        //    window (plus credit recovery) the pad transmits nothing; a
+        //    crossing frame may be corrupted and then retried or dropped.
         self.rr = (self.rr + 1) % LANES;
-        if let Some(f) = self.merge.pop_front() {
-            self.in_flight.push_back((f, now + DES_CYCLES));
+        match &mut self.faults {
+            Some(lf) if lf.pad_blocked(now) => lf.note_blocked_cycle(),
+            Some(lf) => {
+                if let Some(mut f) = self.merge.pop_front() {
+                    match lf.pad_crossing(now, f.id, f.retries) {
+                        PadVerdict::Clean => self.in_flight.push_back((f, now + DES_CYCLES)),
+                        PadVerdict::Retry => {
+                            f.retries += 1;
+                            self.merge.push_back(f);
+                        }
+                        PadVerdict::Drop => {}
+                    }
+                }
+            }
+            None => {
+                if let Some(f) = self.merge.pop_front() {
+                    self.in_flight.push_back((f, now + DES_CYCLES));
+                }
+            }
         }
         // 3. deserializer exit: deliver everything whose pipeline time is up
         while let Some((_, t)) = self.in_flight.front() {
@@ -222,5 +291,69 @@ mod tests {
         let mut sorted = ids.clone();
         sorted.sort_unstable();
         assert_eq!(ids, sorted);
+    }
+
+    #[test]
+    fn outage_delays_but_never_loses_frames() {
+        use crate::noc::faults::CREDIT_RECOVERY_CYCLES;
+        let mut clean = EmioLink::new();
+        let mut faulty = EmioLink::new();
+        let p = Packet::spike(1, 0, 7, 3);
+        // outage covers the cycle the lone frame would cross the pad
+        faulty.add_outage(0, SER_CYCLES, SER_CYCLES + 100);
+        clean.inject(0, &p, 1, 0);
+        faulty.inject(0, &p, 1, 0);
+        let clean_done = run_until_empty(&mut clean, 0);
+        let faulty_done = run_until_empty(&mut faulty, 0);
+        assert_eq!(faulty.delivered.len(), 1, "an outage must not lose the frame");
+        assert!(
+            faulty_done >= clean_done + 100 && faulty_done <= clean_done + 100 + CREDIT_RECOVERY_CYCLES + 1,
+            "clean={clean_done} faulty={faulty_done}"
+        );
+        assert!(faulty.fault_stats().link_down_cycles > 0);
+    }
+
+    #[test]
+    fn certain_corruption_retries_until_budget_then_drops() {
+        let mut link = EmioLink::new();
+        link.fault_policy(0, 1, 2, false);
+        link.set_ber(0, 1.0); // every pad crossing corrupts
+        link.inject(0, &Packet::spike(1, 0, 0, 0), 9, 0);
+        run_until_empty(&mut link, 0);
+        assert!(link.delivered.is_empty(), "certain corruption must eventually drop");
+        let fs = link.fault_stats();
+        assert_eq!((fs.corrupted, fs.retried, fs.dropped), (3, 2, 1));
+        assert_eq!(link.fault_events().len(), 3);
+    }
+
+    #[test]
+    fn drop_corrupted_discards_on_first_corruption() {
+        let mut link = EmioLink::new();
+        link.fault_policy(0, 1, 3, true);
+        link.set_ber(0, 1.0);
+        link.inject(0, &Packet::spike(1, 0, 0, 0), 9, 0);
+        run_until_empty(&mut link, 0);
+        assert!(link.delivered.is_empty());
+        let fs = link.fault_stats();
+        assert_eq!((fs.corrupted, fs.retried, fs.dropped), (1, 0, 1));
+    }
+
+    #[test]
+    fn zero_rate_fault_state_is_behavior_neutral() {
+        // fault state with an all-zero plan must not change delivery timing
+        let mut clean = EmioLink::new();
+        let mut zeroed = EmioLink::new();
+        zeroed.fault_policy(0, 42, 3, false);
+        zeroed.set_ber(0, 0.0);
+        for i in 0..20 {
+            let p = Packet::spike(1, 0, (i % 8) as u8, 0);
+            clean.inject(i as usize % 8, &p, i, 0);
+            zeroed.inject(i as usize % 8, &p, i, 0);
+        }
+        let a = run_until_empty(&mut clean, 0);
+        let b = run_until_empty(&mut zeroed, 0);
+        assert_eq!(a, b);
+        assert_eq!(clean.delivered, zeroed.delivered);
+        assert!(zeroed.fault_stats().is_zero());
     }
 }

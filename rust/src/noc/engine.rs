@@ -21,6 +21,7 @@ use crate::util::stats::LatencyHist;
 
 use super::chain::ChainTraffic;
 use super::duplex::CrossTraffic;
+use super::faults::{FaultOp, FaultSink, FaultStats};
 use super::router::Flit;
 use super::telemetry::Delivery;
 
@@ -41,6 +42,8 @@ pub struct NocStats {
     pub total_hops: u64,
     pub total_latency: u64,
     pub cycles: u64,
+    /// Fault counters (all-zero on a clean run; see [`super::faults`]).
+    pub faults: FaultStats,
 }
 
 impl NocStats {
@@ -70,6 +73,27 @@ impl NocStats {
             self.delivered as f64 / self.cycles as f64
         }
     }
+
+    /// Fraction of injected packets that arrived (1.0 before any
+    /// injection). Below 1.0 only when faults drop corrupted frames or a
+    /// drain timed out with packets stranded.
+    pub fn delivered_fraction(&self) -> f64 {
+        if self.injected == 0 {
+            1.0
+        } else {
+            self.delivered as f64 / self.injected as f64
+        }
+    }
+}
+
+/// How a bounded drain ([`CycleEngine::drain`]) ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOutcome {
+    /// The topology emptied: every surviving packet was delivered.
+    Drained,
+    /// The cycle cap elapsed with packets still in flight — e.g. a
+    /// permanent link-down stranding traffic behind a dead pad.
+    TimedOut,
 }
 
 /// One topology-agnostic transfer: a packet from a tile on `src_chip` to a
@@ -170,14 +194,39 @@ pub trait CycleEngine {
         panic!("this CycleEngine assigns its own packet ids (single-mesh engines only)");
     }
 
-    /// Run until the topology drains or `max_cycles` further cycles elapse;
-    /// returns the final stats.
-    fn run_until_drained(&mut self, max_cycles: u64) -> NocStats {
+    /// Apply one fault directive (seeded corruption policy, bit-error
+    /// rate, link-down window, router stall window). Inject faults before
+    /// stepping; engines without a fault surface panic.
+    fn inject_fault(&mut self, op: FaultOp) {
+        let _ = op;
+        panic!("this CycleEngine does not support fault injection");
+    }
+
+    /// Merged fault telemetry: counters plus the per-incident event log in
+    /// canonical `(cycle, edge, id)` order. Empty on engines without fault
+    /// state — and on faulted engines before any fault fires.
+    fn fault_sink(&self) -> FaultSink {
+        FaultSink::default()
+    }
+
+    /// Run until the topology drains or `max_cycles` further cycles
+    /// elapse; returns the final stats and whether the drain completed.
+    /// The cap turns a permanent link-down (which can never drain) into a
+    /// reported [`DrainOutcome::TimedOut`] instead of a hang.
+    fn drain(&mut self, max_cycles: u64) -> (NocStats, DrainOutcome) {
         let start = self.now();
         while self.backlog() > 0 && self.now() - start < max_cycles {
             self.step();
         }
-        self.stats()
+        let outcome =
+            if self.backlog() == 0 { DrainOutcome::Drained } else { DrainOutcome::TimedOut };
+        (self.stats(), outcome)
+    }
+
+    /// [`CycleEngine::drain`] without the outcome, for callers that only
+    /// want the stats.
+    fn run_until_drained(&mut self, max_cycles: u64) -> NocStats {
+        self.drain(max_cycles).0
     }
 }
 
@@ -263,6 +312,7 @@ impl From<ChainStats> for NocStats {
             total_hops: 0, // the old shape never carried hops
             total_latency: s.total_latency,
             cycles: s.cycles,
+            faults: FaultStats::default(),
         }
     }
 }
@@ -279,8 +329,14 @@ mod tests {
         assert_eq!(z.avg_hops(), 0.0);
         assert_eq!(z.avg_latency(), 0.0);
         assert_eq!(z.throughput(), 0.0);
-        let s =
-            NocStats { injected: 4, delivered: 4, total_hops: 10, total_latency: 100, cycles: 50 };
+        let s = NocStats {
+            injected: 4,
+            delivered: 4,
+            total_hops: 10,
+            total_latency: 100,
+            cycles: 50,
+            ..NocStats::default()
+        };
         assert!((s.avg_hops() - 2.5).abs() < 1e-12);
         assert!((s.avg_latency() - 25.0).abs() < 1e-12);
         assert!((s.throughput() - 0.08).abs() < 1e-12);
@@ -307,8 +363,14 @@ mod tests {
 
     #[test]
     fn legacy_stat_shims_convert() {
-        let s =
-            NocStats { injected: 4, delivered: 4, total_hops: 9, total_latency: 100, cycles: 50 };
+        let s = NocStats {
+            injected: 4,
+            delivered: 4,
+            total_hops: 9,
+            total_latency: 100,
+            cycles: 50,
+            ..NocStats::default()
+        };
         let d = DuplexStats::from(s);
         assert_eq!(d.latencies, vec![25]);
         assert!((d.avg_latency() - 25.0).abs() < 1e-12);

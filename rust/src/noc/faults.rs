@@ -1,0 +1,758 @@
+//! Seeded, deterministic fault injection across the die-to-die fabric.
+//!
+//! A [`FaultPlan`] describes every fault a run suffers — link-down windows
+//! on EMIO edges, per-edge flit bit-error rates, router stall windows, and
+//! hot-spot traffic bursts — from one seed, so a faulted run is exactly as
+//! replayable as a clean one. The plan expands to [`FaultOp`]s
+//! ([`FaultPlan::ops`]) that [`super::engine::CycleEngine::inject_fault`]
+//! routes into the engines; the per-edge fault state itself lives inside
+//! [`super::emio::EmioLink`] ([`LinkFaults`]), which both engine families
+//! share, so the optimized and reference engines stay in lockstep under
+//! identical plans by construction. Only router stalls need dual
+//! implementations (`Mesh` vs `RefMesh`) — both count a stall cycle for
+//! exactly the routers with a non-empty backlog.
+//!
+//! **Retry/timeout semantics** (the graceful-degradation guarantee): a
+//! corrupted frame is re-sent through the merge FIFO up to `max_retries`
+//! times — faults cost latency, not packets — unless `drop_corrupted` is
+//! set (the spiking-codec interpretation: a corrupted event is worthless
+//! and discarded). After a link-down window the pad stays blocked for
+//! [`CREDIT_RECOVERY_CYCLES`] while flow-control credits re-establish.
+//! Bounded retries keep every faulted run drainable; a *permanent* outage
+//! is the one case that cannot drain, which the
+//! [`super::engine::DrainOutcome`] cap reports instead of hanging.
+//!
+//! An all-zero plan ([`FaultPlan::is_zero`]) injects nothing and consumes
+//! no RNG draws, so clean runs stay bit-identical to pre-fault behaviour.
+//! Schema (`faults` block of scenario/v1) and the degradation-sweep
+//! methodology are documented in EXPERIMENTS.md §Faults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Pad cycles lost after an outage window ends, while link-level
+/// flow-control credits re-establish.
+pub const CREDIT_RECOVERY_CYCLES: u64 = 4;
+
+/// Default bounded re-send budget per corrupted frame.
+pub const DEFAULT_MAX_RETRIES: u32 = 3;
+
+/// Derive the per-edge corruption RNG seed from a plan seed. Both engine
+/// families call this same helper, so their draw streams are identical.
+pub fn link_rng_seed(seed: u64, edge: usize) -> u64 {
+    seed ^ (edge as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+// ---------------------------------------------------------------------------
+// counters, events, sink
+// ---------------------------------------------------------------------------
+
+/// Aggregate fault counters, carried inside
+/// [`super::engine::NocStats::faults`] and compared per-op by the lockstep
+/// harness. `corrupted == retried + dropped` (every corruption is resolved
+/// one way or the other).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames whose payload a bit error corrupted at the pad.
+    pub corrupted: u64,
+    /// Corrupted frames re-sent through the merge FIFO.
+    pub retried: u64,
+    /// Corrupted frames discarded (`drop_corrupted` or retry budget spent).
+    pub dropped: u64,
+    /// Pad cycles lost to link-down windows (credit recovery included).
+    pub link_down_cycles: u64,
+    /// Router-cycles lost to stall windows (backlogged routers only).
+    pub stall_cycles: u64,
+}
+
+impl FaultStats {
+    /// Fold another counter set into this one (topology aggregation).
+    pub fn absorb(&mut self, o: &FaultStats) {
+        self.corrupted += o.corrupted;
+        self.retried += o.retried;
+        self.dropped += o.dropped;
+        self.link_down_cycles += o.link_down_cycles;
+        self.stall_cycles += o.stall_cycles;
+    }
+
+    /// True when no fault was ever observed.
+    pub fn is_zero(&self) -> bool {
+        *self == FaultStats::default()
+    }
+}
+
+/// How one corruption incident was resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Re-sent through the merge FIFO (costs queueing + another pad cycle).
+    Retried,
+    /// Discarded — the packet will never arrive.
+    Dropped,
+}
+
+/// One per-frame fault incident, for the telemetry view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub cycle: u64,
+    /// Die boundary index (0 = the link leaving chip 0).
+    pub edge: usize,
+    /// The corrupted frame's packet id.
+    pub id: u64,
+    pub kind: FaultKind,
+}
+
+/// Merged fault telemetry of one engine: counters plus the per-incident
+/// event log, ordered by `(cycle, edge, id)`. Asserted equal across engine
+/// families after every lockstep op.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSink {
+    pub stats: FaultStats,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSink {
+    /// Canonical event order shared by both engine families.
+    pub fn finish(mut self) -> FaultSink {
+        self.events.sort_by_key(|e| (e.cycle, e.edge, e.id));
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault ops — the engine-facing vocabulary
+// ---------------------------------------------------------------------------
+
+/// One fault directive, applied identically to both engines of a lockstep
+/// pair via [`super::engine::CycleEngine::inject_fault`]. A [`FaultPlan`]
+/// expands to these ([`FaultPlan::ops`]); the fuzz harness also generates
+/// them directly. `Policy` must precede the link ops it parameterizes —
+/// `ops()` guarantees the order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultOp {
+    /// Seed the per-edge corruption RNGs and set the retry policy.
+    Policy { seed: u64, max_retries: u32, drop_corrupted: bool },
+    /// Per-frame corruption probability on one EMIO edge.
+    BitError { edge: usize, rate: f64 },
+    /// The pad of `edge` transmits nothing in `[from, until)` (plus
+    /// [`CREDIT_RECOVERY_CYCLES`] of credit recovery afterwards).
+    LinkDown { edge: usize, from: u64, until: u64 },
+    /// Routers on `chip` (all of them, or just `router` as a row-major
+    /// index) skip arbitration while the clock is in `[from, until)`.
+    Stall { chip: usize, router: Option<usize>, from: u64, until: u64 },
+}
+
+// ---------------------------------------------------------------------------
+// per-link fault state (lives inside EmioLink, shared by both families)
+// ---------------------------------------------------------------------------
+
+/// Resolution of one frame offered to the pad (see
+/// [`LinkFaults::pad_crossing`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PadVerdict {
+    /// Uncorrupted: enter the deserializer pipeline.
+    Clean,
+    /// Corrupted, retry budget left: re-queue in the merge FIFO.
+    Retry,
+    /// Corrupted, dropped: the frame vanishes.
+    Drop,
+}
+
+/// Fault state of one [`super::emio::EmioLink`]. `None` on a clean link —
+/// the fault-free fast path is untouched and bit-identical.
+#[derive(Debug, Clone)]
+pub struct LinkFaults {
+    rng: Rng,
+    ber: f64,
+    max_retries: u32,
+    drop_corrupted: bool,
+    edge: usize,
+    /// `[from, until)` outage windows (absolute cycles).
+    outages: Vec<(u64, u64)>,
+    pub stats: FaultStats,
+    pub events: Vec<FaultEvent>,
+}
+
+impl LinkFaults {
+    /// Fault state for die boundary `edge` under plan seed `seed`.
+    pub fn new(edge: usize, seed: u64) -> Self {
+        LinkFaults {
+            rng: Rng::new(link_rng_seed(seed, edge)),
+            ber: 0.0,
+            max_retries: DEFAULT_MAX_RETRIES,
+            drop_corrupted: false,
+            edge,
+            outages: Vec::new(),
+            stats: FaultStats::default(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Re-seed the corruption RNG and set the retry policy (the
+    /// [`FaultOp::Policy`] handler).
+    pub fn set_policy(&mut self, seed: u64, max_retries: u32, drop_corrupted: bool) {
+        self.rng = Rng::new(link_rng_seed(seed, self.edge));
+        self.max_retries = max_retries;
+        self.drop_corrupted = drop_corrupted;
+    }
+
+    /// Set the per-frame corruption probability.
+    pub fn set_ber(&mut self, rate: f64) {
+        self.ber = rate;
+    }
+
+    /// Add an outage window `[from, until)`.
+    pub fn add_outage(&mut self, from: u64, until: u64) {
+        self.outages.push((from, until));
+    }
+
+    /// Pad blocked at `now` — inside an outage window or its credit
+    /// recovery tail.
+    pub fn pad_blocked(&self, now: u64) -> bool {
+        self.outages
+            .iter()
+            .any(|&(from, until)| from <= now && now < until.saturating_add(CREDIT_RECOVERY_CYCLES))
+    }
+
+    /// Account one blocked pad cycle.
+    pub fn note_blocked_cycle(&mut self) {
+        self.stats.link_down_cycles += 1;
+    }
+
+    /// Decide the fate of a frame crossing the pad at `now`. The RNG is
+    /// only consulted when `ber > 0`, so a zero-rate plan consumes no
+    /// draws (bit-identity with clean runs).
+    pub fn pad_crossing(&mut self, now: u64, id: u64, retries: u32) -> PadVerdict {
+        if self.ber <= 0.0 || !self.rng.chance(self.ber) {
+            return PadVerdict::Clean;
+        }
+        self.stats.corrupted += 1;
+        if self.drop_corrupted || retries >= self.max_retries {
+            self.stats.dropped += 1;
+            self.events.push(FaultEvent { cycle: now, edge: self.edge, id, kind: FaultKind::Dropped });
+            PadVerdict::Drop
+        } else {
+            self.stats.retried += 1;
+            self.events.push(FaultEvent { cycle: now, edge: self.edge, id, kind: FaultKind::Retried });
+            PadVerdict::Retry
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the plan
+// ---------------------------------------------------------------------------
+
+/// One link-down window in a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkDown {
+    pub edge: usize,
+    pub from: u64,
+    pub until: u64,
+}
+
+/// One router stall window in a plan (`router: None` stalls the chip).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallSpec {
+    pub chip: usize,
+    pub router: Option<usize>,
+    pub from: u64,
+    pub until: u64,
+}
+
+/// One hot-spot burst: `packets` transfers converging on tile `(x, y)` of
+/// `chip` at cycle `at` (sources drawn from the plan seed). Expanded into
+/// the injection schedule by [`super::scenario::Scenario::schedule`], not
+/// into engine ops — a burst is traffic, not link state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HotSpot {
+    pub at: u64,
+    pub packets: usize,
+    pub chip: usize,
+    pub x: usize,
+    pub y: usize,
+}
+
+/// A seeded, replayable fault plan (the scenario/v1 `faults` block; see
+/// EXPERIMENTS.md §Faults). The default plan is all-zero: no faults, no
+/// RNG draws, bit-identical runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of every per-edge corruption RNG and the hot-spot source draw.
+    pub seed: u64,
+    /// Bounded re-send budget per corrupted frame.
+    pub max_retries: u32,
+    /// Discard corrupted frames instead of retrying (the spiking-codec
+    /// event-drop interpretation).
+    pub drop_corrupted: bool,
+    /// Uniform per-frame corruption probability across all edges.
+    pub ber: f64,
+    /// Per-edge overrides of `ber` (edge index -> rate).
+    pub bers: BTreeMap<usize, f64>,
+    pub link_down: Vec<LinkDown>,
+    pub stalls: Vec<StallSpec>,
+    pub hotspots: Vec<HotSpot>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            max_retries: DEFAULT_MAX_RETRIES,
+            drop_corrupted: false,
+            ber: 0.0,
+            bers: BTreeMap::new(),
+            link_down: Vec::new(),
+            stalls: Vec::new(),
+            hotspots: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan with one uniform bit-error rate (the degradation-sweep axis).
+    pub fn with_ber(seed: u64, ber: f64) -> Self {
+        FaultPlan { seed, ber, ..FaultPlan::default() }
+    }
+
+    /// True when the plan cannot affect a run at all.
+    pub fn is_zero(&self) -> bool {
+        self.ber == 0.0
+            && self.bers.values().all(|&r| r == 0.0)
+            && self.link_down.is_empty()
+            && self.stalls.is_empty()
+            && self.hotspots.is_empty()
+    }
+
+    fn any_link_faults(&self) -> bool {
+        self.ber > 0.0 || self.bers.values().any(|&r| r > 0.0) || !self.link_down.is_empty()
+    }
+
+    /// Expand into engine ops for a topology with `n_edges` die
+    /// boundaries. `Policy` is emitted first so every per-edge RNG stream
+    /// is seeded before a `BitError` arrives; zero-rate edges emit nothing.
+    pub fn ops(&self, n_edges: usize) -> Vec<FaultOp> {
+        let mut out = Vec::new();
+        if self.any_link_faults() {
+            out.push(FaultOp::Policy {
+                seed: self.seed,
+                max_retries: self.max_retries,
+                drop_corrupted: self.drop_corrupted,
+            });
+        }
+        for e in 0..n_edges {
+            let rate = self.bers.get(&e).copied().unwrap_or(self.ber);
+            if rate > 0.0 {
+                out.push(FaultOp::BitError { edge: e, rate });
+            }
+        }
+        for d in &self.link_down {
+            out.push(FaultOp::LinkDown { edge: d.edge, from: d.from, until: d.until });
+        }
+        for s in &self.stalls {
+            out.push(FaultOp::Stall { chip: s.chip, router: s.router, from: s.from, until: s.until });
+        }
+        out
+    }
+
+    /// Validate against a topology of `chips` chips of `dim` x `dim`
+    /// routers. Used by both the scenario builder (panic) and the JSON
+    /// layer (error).
+    pub fn validate(&self, chips: usize, dim: usize) -> Result<()> {
+        let n_edges = chips.saturating_sub(1);
+        let rate_ok = |r: f64| (0.0..=1.0).contains(&r);
+        if !rate_ok(self.ber) {
+            return Err(anyhow!("faults: ber must be in [0, 1], got {}", self.ber));
+        }
+        if n_edges == 0 && self.any_link_faults() {
+            return Err(anyhow!("faults: link faults on a mesh topology (no EMIO edges)"));
+        }
+        for (&e, &r) in &self.bers {
+            if e >= n_edges {
+                return Err(anyhow!(
+                    "faults: bers edge {e} out of range — the topology has {n_edges} die boundaries"
+                ));
+            }
+            if !rate_ok(r) {
+                return Err(anyhow!("faults: bers[{e}] must be in [0, 1], got {r}"));
+            }
+        }
+        for d in &self.link_down {
+            if d.edge >= n_edges {
+                return Err(anyhow!(
+                    "faults: link_down edge {} out of range — the topology has {n_edges} die \
+                     boundaries",
+                    d.edge
+                ));
+            }
+            if d.from >= d.until {
+                return Err(anyhow!(
+                    "faults: link_down window needs from < until, got [{}, {})",
+                    d.from,
+                    d.until
+                ));
+            }
+        }
+        for s in &self.stalls {
+            if s.chip >= chips {
+                return Err(anyhow!(
+                    "faults: stall chip {} out of range — the topology has {chips} chips",
+                    s.chip
+                ));
+            }
+            if let Some(r) = s.router {
+                if r >= dim * dim {
+                    return Err(anyhow!(
+                        "faults: stall router {r} out of range — each chip has {} routers",
+                        dim * dim
+                    ));
+                }
+            }
+            if s.from >= s.until {
+                return Err(anyhow!(
+                    "faults: stall window needs from < until, got [{}, {})",
+                    s.from,
+                    s.until
+                ));
+            }
+        }
+        for h in &self.hotspots {
+            if h.chip >= chips {
+                return Err(anyhow!(
+                    "faults: hotspot chip {} out of range — the topology has {chips} chips",
+                    h.chip
+                ));
+            }
+            if h.x >= dim || h.y >= dim {
+                return Err(anyhow!(
+                    "faults: hotspot tile ({}, {}) outside the {dim} x {dim} mesh",
+                    h.x,
+                    h.y
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    /// Serialize as the scenario/v1 `faults` block.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("max_retries", Json::num(self.max_retries as f64)),
+            ("drop_corrupted", Json::Bool(self.drop_corrupted)),
+            ("ber", Json::num(self.ber)),
+        ];
+        if !self.bers.is_empty() {
+            fields.push((
+                "bers",
+                Json::Obj(self.bers.iter().map(|(e, r)| (e.to_string(), Json::num(*r))).collect()),
+            ));
+        }
+        if !self.link_down.is_empty() {
+            fields.push((
+                "link_down",
+                Json::arr(self.link_down.iter().map(|d| {
+                    Json::obj(vec![
+                        ("edge", Json::num(d.edge as f64)),
+                        ("from", Json::num(d.from as f64)),
+                        ("until", Json::num(d.until as f64)),
+                    ])
+                })),
+            ));
+        }
+        if !self.stalls.is_empty() {
+            fields.push((
+                "stalls",
+                Json::arr(self.stalls.iter().map(|s| {
+                    let mut f = vec![("chip", Json::num(s.chip as f64))];
+                    if let Some(r) = s.router {
+                        f.push(("router", Json::num(r as f64)));
+                    }
+                    f.push(("from", Json::num(s.from as f64)));
+                    f.push(("until", Json::num(s.until as f64)));
+                    Json::obj(f)
+                })),
+            ));
+        }
+        if !self.hotspots.is_empty() {
+            fields.push((
+                "hotspots",
+                Json::arr(self.hotspots.iter().map(|h| {
+                    Json::obj(vec![
+                        ("at", Json::num(h.at as f64)),
+                        ("packets", Json::num(h.packets as f64)),
+                        ("chip", Json::num(h.chip as f64)),
+                        ("x", Json::num(h.x as f64)),
+                        ("y", Json::num(h.y as f64)),
+                    ])
+                })),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a `faults` block. Unknown keys are rejected (a typo'd field
+    /// must not silently no-op); topology validation is the caller's job
+    /// ([`FaultPlan::validate`]).
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        check_keys(
+            j,
+            &["seed", "max_retries", "drop_corrupted", "ber", "bers", "link_down", "stalls", "hotspots"],
+            "faults",
+        )?;
+        let mut plan = FaultPlan {
+            seed: opt_u64(j, "faults.seed")?.unwrap_or(0),
+            max_retries: opt_u64(j, "faults.max_retries")?
+                .map(|n| n as u32)
+                .unwrap_or(DEFAULT_MAX_RETRIES),
+            drop_corrupted: j.get("drop_corrupted").and_then(Json::as_bool).unwrap_or(false),
+            ber: j.get("ber").and_then(Json::as_f64).unwrap_or(0.0),
+            ..FaultPlan::default()
+        };
+        if let Some(map) = j.get("bers") {
+            let obj = map
+                .as_obj()
+                .ok_or_else(|| anyhow!("faults: bers must be an object of edge -> rate"))?;
+            for (key, val) in obj {
+                let e: usize = key
+                    .parse()
+                    .map_err(|_| anyhow!("faults: bers key {key:?} is not an edge index"))?;
+                let r = val
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("faults: bers[{key}] must be a number"))?;
+                plan.bers.insert(e, r);
+            }
+        }
+        if let Some(arr) = j.get("link_down") {
+            let items = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("faults: link_down must be an array of windows"))?;
+            for it in items {
+                check_keys(it, &["edge", "from", "until"], "faults.link_down")?;
+                plan.link_down.push(LinkDown {
+                    edge: req_u64(it, "faults.link_down", "edge")? as usize,
+                    from: req_u64(it, "faults.link_down", "from")?,
+                    until: req_u64(it, "faults.link_down", "until")?,
+                });
+            }
+        }
+        if let Some(arr) = j.get("stalls") {
+            let items = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("faults: stalls must be an array of windows"))?;
+            for it in items {
+                check_keys(it, &["chip", "router", "from", "until"], "faults.stalls")?;
+                let router = match it.get("router") {
+                    None => None,
+                    Some(_) => Some(req_u64(it, "faults.stalls", "router")? as usize),
+                };
+                plan.stalls.push(StallSpec {
+                    chip: req_u64(it, "faults.stalls", "chip")? as usize,
+                    router,
+                    from: req_u64(it, "faults.stalls", "from")?,
+                    until: req_u64(it, "faults.stalls", "until")?,
+                });
+            }
+        }
+        if let Some(arr) = j.get("hotspots") {
+            let items = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("faults: hotspots must be an array of bursts"))?;
+            for it in items {
+                check_keys(it, &["at", "packets", "chip", "x", "y"], "faults.hotspots")?;
+                plan.hotspots.push(HotSpot {
+                    at: req_u64(it, "faults.hotspots", "at")?,
+                    packets: req_u64(it, "faults.hotspots", "packets")? as usize,
+                    chip: req_u64(it, "faults.hotspots", "chip")? as usize,
+                    x: req_u64(it, "faults.hotspots", "x")? as usize,
+                    y: req_u64(it, "faults.hotspots", "y")? as usize,
+                });
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Reject unknown keys in a JSON object — a typo'd `"fualts"` block or a
+/// misspelled field must error, not silently no-op. Shared by the faults
+/// block and the scenario top level.
+pub(crate) fn check_keys(j: &Json, allowed: &[&str], ctx: &str) -> Result<()> {
+    if let Some(obj) = j.as_obj() {
+        for k in obj.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(anyhow!("{ctx}: unknown key {k:?} (allowed: {allowed:?})"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Optional non-negative-integer field (rejects negatives and fractions —
+/// a coerced value would silently run a different plan than the file says).
+fn opt_u64(j: &Json, field: &str) -> Result<Option<u64>> {
+    match j.get(field.rsplit('.').next().unwrap()).and_then(Json::as_f64) {
+        None => Ok(None),
+        Some(n) if n < 0.0 || n.fract() != 0.0 => {
+            Err(anyhow!("{field} must be a non-negative integer, got {n}"))
+        }
+        Some(n) => Ok(Some(n as u64)),
+    }
+}
+
+/// Required non-negative-integer field of a nested block item.
+fn req_u64(j: &Json, ctx: &str, name: &str) -> Result<u64> {
+    match j.get(name).and_then(Json::as_f64) {
+        None => Err(anyhow!("{ctx}: {name} missing")),
+        Some(n) if n < 0.0 || n.fract() != 0.0 => {
+            Err(anyhow!("{ctx}: {name} must be a non-negative integer, got {n}"))
+        }
+        Some(n) => Ok(n as u64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_zero_and_emits_no_ops() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_zero());
+        assert!(plan.ops(4).is_empty(), "an all-zero plan must inject nothing");
+        assert!(plan.validate(8, 8).is_ok());
+    }
+
+    #[test]
+    fn ops_emit_policy_before_link_ops() {
+        let mut plan = FaultPlan::with_ber(7, 0.1);
+        plan.bers.insert(1, 0.0); // zero-rate override: edge 1 emits nothing
+        plan.link_down.push(LinkDown { edge: 0, from: 10, until: 20 });
+        plan.stalls.push(StallSpec { chip: 0, router: None, from: 5, until: 9 });
+        let ops = plan.ops(3);
+        assert!(matches!(ops[0], FaultOp::Policy { seed: 7, .. }));
+        let bit_errors: Vec<usize> = ops
+            .iter()
+            .filter_map(|op| match op {
+                FaultOp::BitError { edge, .. } => Some(*edge),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(bit_errors, vec![0, 2], "edge 1's zero override is skipped");
+        assert!(ops.iter().any(|op| matches!(op, FaultOp::LinkDown { edge: 0, from: 10, until: 20 })));
+        assert!(ops.iter().any(|op| matches!(op, FaultOp::Stall { chip: 0, router: None, .. })));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_shapes() {
+        let bad_ber = FaultPlan { ber: 1.5, ..FaultPlan::default() };
+        assert!(bad_ber.validate(2, 8).is_err());
+        let mesh_link = FaultPlan::with_ber(1, 0.1);
+        assert!(mesh_link.validate(1, 8).is_err(), "mesh has no EMIO edges");
+        let mut far_edge = FaultPlan::default();
+        far_edge.link_down.push(LinkDown { edge: 1, from: 0, until: 5 });
+        assert!(far_edge.validate(2, 8).is_err(), "duplex has one edge (index 0)");
+        let mut empty_window = FaultPlan::default();
+        empty_window.stalls.push(StallSpec { chip: 0, router: None, from: 5, until: 5 });
+        assert!(empty_window.validate(1, 8).is_err(), "empty window");
+        let mut far_router = FaultPlan::default();
+        far_router.stalls.push(StallSpec { chip: 0, router: Some(64), from: 0, until: 5 });
+        assert!(far_router.validate(1, 8).is_err(), "router index past dim^2");
+        let mut far_tile = FaultPlan::default();
+        far_tile.hotspots.push(HotSpot { at: 0, packets: 4, chip: 0, x: 8, y: 0 });
+        assert!(far_tile.validate(1, 8).is_err(), "tile outside the mesh");
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let mut plan = FaultPlan {
+            seed: 42,
+            max_retries: 2,
+            drop_corrupted: true,
+            ber: 0.05,
+            ..FaultPlan::default()
+        };
+        plan.bers.insert(1, 0.25);
+        plan.link_down.push(LinkDown { edge: 0, from: 100, until: 300 });
+        plan.stalls.push(StallSpec { chip: 1, router: Some(9), from: 10, until: 20 });
+        plan.stalls.push(StallSpec { chip: 0, router: None, from: 0, until: 4 });
+        plan.hotspots.push(HotSpot { at: 50, packets: 32, chip: 2, x: 3, y: 4 });
+        let back = FaultPlan::from_json(&plan.to_json()).expect("round trip parses");
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn json_rejects_unknown_and_malformed_fields() {
+        let parse = |s: &str| FaultPlan::from_json(&crate::util::json::parse(s).unwrap());
+        assert!(parse(r#"{"ber": 0.1, "bre": 0.2}"#).is_err(), "typo'd key");
+        assert!(parse(r#"{"seed": -1}"#).is_err(), "negative seed");
+        assert!(parse(r#"{"max_retries": 1.5}"#).is_err(), "fractional retries");
+        assert!(parse(r#"{"link_down": [{"edge": 0, "from": 1}]}"#).is_err(), "missing until");
+        assert!(parse(r#"{"link_down": [{"edge": 0, "from": 1, "till": 9}]}"#).is_err());
+        assert!(parse(r#"{"stalls": [{"chip": 0, "from": 1, "until": 2, "core": 3}]}"#).is_err());
+        assert!(parse(r#"{"bers": {"one": 0.1}}"#).is_err(), "non-integer edge key");
+        let plan = parse(r#"{"ber": 0.1}"#).unwrap();
+        assert_eq!(plan.max_retries, DEFAULT_MAX_RETRIES);
+        assert!(!plan.drop_corrupted);
+    }
+
+    #[test]
+    fn link_faults_retry_then_drop_when_budget_spent() {
+        let mut lf = LinkFaults::new(0, 1);
+        lf.set_policy(1, 2, false);
+        lf.set_ber(1.0); // every crossing corrupts
+        assert_eq!(lf.pad_crossing(10, 7, 0), PadVerdict::Retry);
+        assert_eq!(lf.pad_crossing(11, 7, 1), PadVerdict::Retry);
+        assert_eq!(lf.pad_crossing(12, 7, 2), PadVerdict::Drop, "budget of 2 spent");
+        assert_eq!(lf.stats.corrupted, 3);
+        assert_eq!(lf.stats.retried, 2);
+        assert_eq!(lf.stats.dropped, 1);
+        assert_eq!(lf.events.len(), 3);
+        assert_eq!(lf.events[2].kind, FaultKind::Dropped);
+        // drop_corrupted short-circuits the budget entirely
+        let mut drop = LinkFaults::new(0, 1);
+        drop.set_policy(1, 3, true);
+        drop.set_ber(1.0);
+        assert_eq!(drop.pad_crossing(0, 1, 0), PadVerdict::Drop);
+    }
+
+    #[test]
+    fn zero_ber_consumes_no_rng_draws() {
+        let mut a = LinkFaults::new(0, 9);
+        a.set_ber(0.0);
+        for i in 0..100 {
+            assert_eq!(a.pad_crossing(i, i, 0), PadVerdict::Clean);
+        }
+        // the RNG stream is untouched: switching the rate on later yields
+        // the same draws as a fresh fault state at the same rate
+        a.set_ber(0.5);
+        let mut b = LinkFaults::new(0, 9);
+        b.set_ber(0.5);
+        for i in 0..100 {
+            assert_eq!(a.pad_crossing(i, i, 0), b.pad_crossing(i, i, 0));
+        }
+    }
+
+    #[test]
+    fn outage_blocks_pad_through_credit_recovery() {
+        let mut lf = LinkFaults::new(0, 1);
+        lf.add_outage(10, 20);
+        assert!(!lf.pad_blocked(9));
+        assert!(lf.pad_blocked(10));
+        assert!(lf.pad_blocked(19));
+        // the window is over, but credits are still re-establishing
+        assert!(lf.pad_blocked(20));
+        assert!(lf.pad_blocked(20 + CREDIT_RECOVERY_CYCLES - 1));
+        assert!(!lf.pad_blocked(20 + CREDIT_RECOVERY_CYCLES));
+    }
+
+    #[test]
+    fn per_edge_rng_streams_differ_but_replay() {
+        assert_ne!(link_rng_seed(5, 0), link_rng_seed(5, 1));
+        assert_eq!(link_rng_seed(5, 3), link_rng_seed(5, 3));
+    }
+}

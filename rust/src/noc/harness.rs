@@ -12,7 +12,8 @@
 //!
 //! No per-topology driver loop exists anywhere else in the repo.
 
-use super::engine::{CycleEngine, NocStats, Transfer};
+use super::engine::{CycleEngine, DrainOutcome, NocStats, Transfer};
+use super::faults::FaultOp;
 use super::router::Flit;
 
 /// One scripted operation, applied identically to both engines of a
@@ -26,6 +27,9 @@ pub enum Op {
     InjectWithId(Transfer, u64),
     /// Raw cross-die arrival at a West-edge row (single-mesh engines only).
     WestEdge(usize, Flit),
+    /// Apply one fault directive (seeded, so both engines suffer identical
+    /// faults — see [`super::faults`]).
+    Fault(FaultOp),
     /// Advance one global clock cycle.
     Step,
     /// Bounded drain burst (`run_until_drained` with this cycle cap).
@@ -42,6 +46,11 @@ where
     assert_eq!(opt.now(), reference.now(), "{ctx}: clocks diverged");
     assert_eq!(opt.backlog(), reference.backlog(), "{ctx}: backlogs diverged");
     assert_eq!(opt.stats(), reference.stats(), "{ctx}: stats diverged");
+    assert_eq!(
+        opt.fault_sink(),
+        reference.fault_sink(),
+        "{ctx}: fault telemetry diverged"
+    );
     assert_eq!(
         opt.deliveries(),
         reference.deliveries(),
@@ -75,6 +84,10 @@ pub fn lockstep<E: CycleEngine, R: CycleEngine>(
                 opt.inject_west_edge(row, flit);
                 reference.inject_west_edge(row, flit);
             }
+            Op::Fault(f) => {
+                opt.inject_fault(f);
+                reference.inject_fault(f);
+            }
             Op::Step => {
                 opt.step();
                 reference.step();
@@ -97,12 +110,14 @@ pub fn lockstep<E: CycleEngine, R: CycleEngine>(
 
 /// Play a timed injection schedule — ascending `(cycle, transfer)` pairs,
 /// each injected when the engine clock reaches its cycle — then drain with
-/// a `max_cycles` cap. Returns the final stats.
+/// a `max_cycles` cap. Returns the final stats and the drain outcome
+/// ([`DrainOutcome::TimedOut`] when the cap elapsed with packets stranded,
+/// e.g. behind a permanent link-down).
 pub fn run_schedule<E: CycleEngine + ?Sized>(
     e: &mut E,
     sched: &[(u64, Transfer)],
     max_cycles: u64,
-) -> NocStats {
+) -> (NocStats, DrainOutcome) {
     let mut next = 0usize;
     while next < sched.len() {
         while next < sched.len() && sched[next].0 <= e.now() {
@@ -111,7 +126,7 @@ pub fn run_schedule<E: CycleEngine + ?Sized>(
         }
         e.step();
     }
-    e.run_until_drained(max_cycles)
+    e.drain(max_cycles)
 }
 
 #[cfg(test)]
@@ -151,8 +166,9 @@ mod tests {
             (0, Transfer::local(Coord::new(0, 0), Coord::new(0, 0))),
             (5, Transfer::local(Coord::new(3, 3), Coord::new(3, 3))),
         ];
-        let stats = run_schedule(&mut m, &sched, 1_000);
+        let (stats, outcome) = run_schedule(&mut m, &sched, 1_000);
         assert_eq!(stats.delivered, 2);
+        assert_eq!(outcome, DrainOutcome::Drained);
         // first packet ejects at cycle 1; second injects at 5, ejects at 6
         assert_eq!(stats.total_latency, 2);
         assert!(stats.cycles >= 6);
@@ -161,8 +177,26 @@ mod tests {
     #[test]
     fn run_schedule_empty_is_a_noop() {
         let mut m = Mesh::new(4);
-        let stats = run_schedule(&mut m, &[], 1_000);
+        let (stats, outcome) = run_schedule(&mut m, &[], 1_000);
         assert_eq!(stats.delivered, 0);
         assert_eq!(stats.cycles, 0);
+        assert_eq!(outcome, DrainOutcome::Drained);
+    }
+
+    #[test]
+    fn drain_cap_reports_timed_out_with_packets_stranded() {
+        use super::super::duplex::Duplex;
+        use super::super::faults::FaultOp;
+        // a permanent outage on the one duplex edge strands the packet in
+        // the link forever; the cap must report TimedOut, not hang
+        let mut d = Duplex::new(8);
+        d.inject_fault(FaultOp::LinkDown { edge: 0, from: 0, until: u64::MAX });
+        let sched = [(0, Transfer::crossing(Coord::new(7, 3), Coord::new(0, 3)))];
+        let (stats, outcome) = run_schedule(&mut d, &sched, 5_000);
+        assert_eq!(outcome, DrainOutcome::TimedOut);
+        assert_eq!(stats.delivered, 0);
+        assert_eq!(stats.injected, 1);
+        assert!(d.backlog() > 0, "the packet is still stranded");
+        assert!(stats.faults.link_down_cycles > 0);
     }
 }

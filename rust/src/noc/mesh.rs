@@ -14,6 +14,7 @@ use crate::arch::packet::Packet;
 use crate::util::stats::LatencyHist;
 
 use super::engine::{CycleEngine, NocStats, Transfer};
+use super::faults::{FaultOp, FaultSink};
 use super::router::{Flit, Port, Router};
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
 use super::worklist::DirtySet;
@@ -39,6 +40,11 @@ pub struct Mesh<S: TelemetrySink = NoopSink> {
     /// Entries within a cycle are in ascending router-index (row-major)
     /// order, matching the reference engine's scan order.
     pub east_egress: Vec<(usize, Flit)>, // (row, flit)
+    /// Stall-fault windows `(from, until, router)` — while the clock is in
+    /// `[from, until)`, the named router (or every router when `None`)
+    /// skips arbitration for the cycle (see [`super::faults`]). Empty on a
+    /// clean mesh: the hot path pays one `is_empty` check.
+    stalls: Vec<(u64, u64, Option<u32>)>,
     /// Exactly the routers holding at least one queued flit.
     active: DirtySet,
     /// O(1) total queued flits across all routers.
@@ -73,6 +79,7 @@ impl<S: TelemetrySink> Mesh<S> {
             now: 0,
             next_id: 0,
             east_egress: Vec::new(),
+            stalls: Vec::new(),
             active: DirtySet::new(dim * dim),
             queued: 0,
             next_active: DirtySet::new(dim * dim),
@@ -138,6 +145,22 @@ impl<S: TelemetrySink> Mesh<S> {
         self.stats.injected += 1;
     }
 
+    /// Add a stall-fault window: router `router` (row-major index; `None`
+    /// stalls the whole chip) skips arbitration while the clock is in
+    /// `[from, until)`.
+    pub fn add_stall(&mut self, router: Option<usize>, from: u64, until: u64) {
+        self.stalls.push((from, until, router.map(|r| r as u32)));
+    }
+
+    /// Router `i` is inside a stall window at the current (post-increment)
+    /// clock. Both engine families call this on exactly the routers with a
+    /// non-empty backlog, so the stall-cycle counters stay in lockstep.
+    fn stalled(&self, i: usize) -> bool {
+        self.stalls
+            .iter()
+            .any(|&(from, until, r)| from <= self.now && self.now < until && r.map_or(true, |r| r as usize == i))
+    }
+
     /// Advance one cycle: every *active* router arbitrates, transfers land
     /// in the neighbours' input FIFOs for the *next* cycle.
     pub fn step(&mut self) {
@@ -157,6 +180,13 @@ impl<S: TelemetrySink> Mesh<S> {
         self.active.for_each(|i| order.push(i as u32));
         for &ii in &order {
             let i = ii as usize;
+            // a stalled router skips arbitration this cycle but stays on
+            // the worklist — its backlog is untouched
+            if !self.stalls.is_empty() && self.stalled(i) {
+                self.stats.faults.stall_cycles += 1;
+                next.insert(i);
+                continue;
+            }
             let x = i % dim;
             let y = i / dim;
             grants.clear();
@@ -283,6 +313,24 @@ impl<S: TelemetrySink> CycleEngine for Mesh<S> {
             "mesh engine: single-chip transfers only"
         );
         Mesh::inject_with_id(self, t.src, t.dest, id)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            // the policy seeds per-edge link RNGs; a single mesh has none
+            FaultOp::Policy { .. } => {}
+            FaultOp::Stall { chip, router, from, until } => {
+                assert_eq!(chip, 0, "mesh engine: single-chip stall only");
+                self.add_stall(router, from, until);
+            }
+            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } => {
+                panic!("mesh engine has no EMIO edges for link faults");
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        FaultSink { stats: self.stats.faults, events: Vec::new() }
     }
 }
 
@@ -476,6 +524,40 @@ mod tests {
             assert_eq!(m.backlog(), 5 - seen as usize, "cycle {cycle}");
         }
         assert_eq!(m.backlog(), 0);
+    }
+
+    #[test]
+    fn stall_window_adds_exactly_its_latency() {
+        // a chip-wide stall over [1, 11) freezes the lone packet for 10
+        // cycles; hops stay minimal, latency grows by the window length
+        let mut clean = Mesh::new(8);
+        let mut stalled = Mesh::new(8);
+        stalled.add_stall(None, 1, 11);
+        clean.inject(Coord::new(1, 1), Coord::new(5, 4));
+        stalled.inject(Coord::new(1, 1), Coord::new(5, 4));
+        clean.run_to_drain(1_000);
+        stalled.run_to_drain(1_000);
+        assert_eq!(stalled.stats.delivered, 1);
+        assert_eq!(stalled.stats.total_hops, clean.stats.total_hops);
+        assert_eq!(stalled.stats.total_latency, clean.stats.total_latency + 10);
+        assert_eq!(stalled.stats.faults.stall_cycles, 10);
+        assert!(clean.stats.faults.is_zero());
+    }
+
+    #[test]
+    fn single_router_stall_only_freezes_that_router() {
+        // stall the source router of packet A; packet B elsewhere is free
+        let mut m = Mesh::new(8);
+        let src_a = Coord::new(0, 0);
+        m.add_stall(Some(0), 1, 21); // router (0, 0), row-major index 0
+        m.inject(src_a, Coord::new(3, 0));
+        m.inject(Coord::new(0, 7), Coord::new(3, 7));
+        m.run_to_drain(1_000);
+        assert_eq!(m.stats.delivered, 2);
+        assert_eq!(m.stats.faults.stall_cycles, 20);
+        let slow = m.stats.total_latency;
+        // packet B took 4 cycles; packet A took 4 + 20
+        assert_eq!(slow, 4 + 4 + 20);
     }
 
     #[test]

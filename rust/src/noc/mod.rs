@@ -39,6 +39,9 @@
 //!   worklist scheduling and an O(1) backlog counter;
 //! * [`emio`]   — the §3.4 merge/SerDes/split die-to-die block
 //!   (validates the 76-cycle single-packet RTL figure);
+//! * [`faults`] — seeded fault plans (link-down windows, bit-error rates,
+//!   stall windows, hot-spot bursts) with bounded-retry/credit-recovery
+//!   semantics, threaded through both engine families in lockstep;
 //! * [`duplex`] — two chips + one EMIO link, end-to-end;
 //! * [`chain`]  — C chips in a directional-X chain with repeater hops;
 //! * [`reference`] — the retained naive engines (full-scan, `VecDeque`
@@ -59,6 +62,7 @@ pub mod core_sim;
 pub mod duplex;
 pub mod emio;
 pub mod engine;
+pub mod faults;
 pub mod fifo;
 pub mod harness;
 pub mod mesh;
@@ -73,7 +77,10 @@ pub mod worklist;
 pub use chain::{Chain, ChainTraffic};
 pub use duplex::{CrossTraffic, Duplex};
 pub use emio::EmioLink;
-pub use engine::{ChainStats, CycleEngine, DuplexStats, MeshStats, NocStats, Transfer};
+pub use engine::{
+    ChainStats, CycleEngine, DrainOutcome, DuplexStats, MeshStats, NocStats, Transfer,
+};
+pub use faults::{FaultEvent, FaultKind, FaultOp, FaultPlan, FaultSink, FaultStats};
 pub use harness::{lockstep, run_schedule, Op};
 pub use mesh::Mesh;
 pub use reference::{RefChain, RefDuplex, RefMesh};

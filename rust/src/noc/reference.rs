@@ -30,6 +30,7 @@ use super::chain::ChainTraffic;
 use super::duplex::CrossTraffic;
 use super::emio::{EmioLink, Frame, LANES};
 use super::engine::{CycleEngine, NocStats, Transfer};
+use super::faults::{FaultOp, FaultSink, FaultStats};
 use super::router::{route_xy, Flit, Port, IN_PORTS};
 use super::telemetry::{Delivery, NoopSink, TelemetrySink};
 
@@ -99,6 +100,10 @@ pub struct RefMesh<S: TelemetrySink = NoopSink> {
     now: u64,
     next_id: u64,
     pub east_egress: Vec<(usize, Flit)>,
+    /// Stall-fault windows `(from, until, router)` — same semantics as the
+    /// optimized mesh's windows: a stalled backlogged router skips
+    /// arbitration for the cycle and counts one stall cycle.
+    stalls: Vec<(u64, u64, Option<u32>)>,
     grants: Vec<(Port, Flit)>,
     moves: Vec<(usize, Port, Flit)>,
 }
@@ -122,9 +127,21 @@ impl<S: TelemetrySink> RefMesh<S> {
             now: 0,
             next_id: 0,
             east_egress: Vec::new(),
+            stalls: Vec::new(),
             grants: Vec::new(),
             moves: Vec::new(),
         }
+    }
+
+    /// Add a stall-fault window — mirrors `Mesh::add_stall`.
+    pub fn add_stall(&mut self, router: Option<usize>, from: u64, until: u64) {
+        self.stalls.push((from, until, router.map(|r| r as u32)));
+    }
+
+    fn stalled(&self, i: usize) -> bool {
+        self.stalls
+            .iter()
+            .any(|&(from, until, r)| from <= self.now && self.now < until && r.map_or(true, |r| r as usize == i))
     }
 
     pub fn now(&self) -> u64 {
@@ -166,14 +183,20 @@ impl<S: TelemetrySink> RefMesh<S> {
         let mut moves = std::mem::take(&mut self.moves);
         let mut grants = std::mem::take(&mut self.grants);
         moves.clear();
-        for (i, r) in self.routers.iter_mut().enumerate() {
-            if r.backlog() == 0 {
+        for i in 0..self.routers.len() {
+            if self.routers[i].backlog() == 0 {
                 continue; // idle router: skip arbitration (but pay the scan)
+            }
+            // stall check after the idle skip: both engine families count a
+            // stall cycle for exactly the backlogged routers
+            if !self.stalls.is_empty() && self.stalled(i) {
+                self.stats.faults.stall_cycles += 1;
+                continue;
             }
             let x = i % dim;
             let y = i / dim;
             grants.clear();
-            r.step_into(&mut grants);
+            self.routers[i].step_into(&mut grants);
             for (out_p, flit) in grants.drain(..) {
                 match out_p {
                     Port::East if x + 1 < dim => moves.push((i + 1, Port::West, flit)),
@@ -267,6 +290,23 @@ impl<S: TelemetrySink> CycleEngine for RefMesh<S> {
             "mesh engine: single-chip transfers only"
         );
         RefMesh::inject_with_id(self, t.src, t.dest, id)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            FaultOp::Policy { .. } => {}
+            FaultOp::Stall { chip, router, from, until } => {
+                assert_eq!(chip, 0, "mesh engine: single-chip stall only");
+                self.add_stall(router, from, until);
+            }
+            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } => {
+                panic!("mesh engine has no EMIO edges for link faults");
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        FaultSink { stats: self.stats.faults, events: Vec::new() }
     }
 }
 
@@ -399,12 +439,16 @@ impl<S: TelemetrySink> CycleEngine for RefDuplex<S> {
     }
 
     fn stats(&self) -> NocStats {
+        let mut faults = self.a.stats.faults;
+        faults.absorb(&self.b.stats.faults);
+        faults.absorb(&self.link.fault_stats());
         NocStats {
             injected: self.tracked.len() as u64,
             delivered: self.b.stats.delivered,
             total_hops: self.b.stats.total_hops,
             total_latency: self.b.stats.total_latency,
             cycles: self.now,
+            faults,
         }
     }
 
@@ -414,6 +458,35 @@ impl<S: TelemetrySink> CycleEngine for RefDuplex<S> {
 
     fn latency_hist(&self) -> LatencyHist {
         RefDuplex::latency_hist(self)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            FaultOp::Policy { seed, max_retries, drop_corrupted } => {
+                self.link.fault_policy(0, seed, max_retries, drop_corrupted);
+            }
+            FaultOp::BitError { edge, rate } => {
+                assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
+                self.link.set_ber(0, rate);
+            }
+            FaultOp::LinkDown { edge, from, until } => {
+                assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
+                self.link.add_outage(0, from, until);
+            }
+            FaultOp::Stall { chip, router, from, until } => {
+                let m = match chip {
+                    0 => &mut self.a,
+                    1 => &mut self.b,
+                    _ => panic!("duplex engine: stall chip must be 0 or 1"),
+                };
+                m.add_stall(router, from, until);
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        FaultSink { stats: self.stats().faults, events: self.link.fault_events().to_vec() }
+            .finish()
     }
 }
 
@@ -573,12 +646,20 @@ impl<S: TelemetrySink> CycleEngine for RefChain<S> {
     }
 
     fn stats(&self) -> NocStats {
+        let mut faults = FaultStats::default();
+        for m in &self.chips {
+            faults.absorb(&m.stats.faults);
+        }
+        for l in &self.links {
+            faults.absorb(&l.fault_stats());
+        }
         NocStats {
             injected: self.stats.injected,
             delivered: self.chips.iter().map(|m| m.stats.delivered).sum(),
             total_hops: self.chips.iter().map(|m| m.stats.total_hops).sum(),
             total_latency: self.chips.iter().map(|m| m.stats.total_latency).sum(),
             cycles: self.now,
+            faults,
         }
     }
 
@@ -588,6 +669,36 @@ impl<S: TelemetrySink> CycleEngine for RefChain<S> {
 
     fn latency_hist(&self) -> LatencyHist {
         RefChain::latency_hist(self)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            FaultOp::Policy { seed, max_retries, drop_corrupted } => {
+                for (c, l) in self.links.iter_mut().enumerate() {
+                    l.fault_policy(c, seed, max_retries, drop_corrupted);
+                }
+            }
+            FaultOp::BitError { edge, rate } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].set_ber(edge, rate);
+            }
+            FaultOp::LinkDown { edge, from, until } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].add_outage(edge, from, until);
+            }
+            FaultOp::Stall { chip, router, from, until } => {
+                assert!(chip < self.chips.len(), "chain engine: chip {chip} out of range");
+                self.chips[chip].add_stall(router, from, until);
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        let mut events = Vec::new();
+        for l in &self.links {
+            events.extend_from_slice(l.fault_events());
+        }
+        FaultSink { stats: self.stats().faults, events }.finish()
     }
 }
 

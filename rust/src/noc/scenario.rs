@@ -34,7 +34,8 @@ use crate::util::rng::Rng;
 
 use super::chain::Chain;
 use super::duplex::Duplex;
-use super::engine::{CycleEngine, NocStats, Transfer};
+use super::engine::{CycleEngine, DrainOutcome, NocStats, Transfer};
+use super::faults::{check_keys, FaultPlan};
 use super::harness::run_schedule;
 use super::mesh::Mesh;
 use super::reference::{RefChain, RefDuplex, RefMesh};
@@ -43,6 +44,10 @@ use super::traffic::codec_edge_traffic;
 
 /// Default drain cap for scenario runs (cycles after the last injection).
 pub const DEFAULT_MAX_CYCLES: u64 = 100_000_000;
+
+/// Salt decorrelating the hot-spot source draw from the per-edge link
+/// corruption RNGs (which mix the same plan seed).
+const HOTSPOT_SEED_SALT: u64 = 0x9D5C_02A7_31E6_84B3;
 
 /// Which engine family a scenario instantiates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -149,6 +154,10 @@ pub struct ScenarioResult {
     /// Measured tail quantiles — present when the scenario ran with
     /// telemetry and delivered at least one packet.
     pub tail: Option<TailLatency>,
+    /// Whether the post-injection drain finished within `max_cycles`
+    /// ([`DrainOutcome::TimedOut`] means packets were still stranded, e.g.
+    /// behind a permanent link-down window).
+    pub outcome: DrainOutcome,
 }
 
 /// A reproducible simulation scenario: topology + traffic + run options.
@@ -160,6 +169,10 @@ pub struct Scenario {
     pub telemetry: bool,
     /// Drain cap passed to `run_until_drained` after the last injection.
     pub max_cycles: u64,
+    /// Seeded fault plan ([`super::faults`]); `None` — the common case —
+    /// keeps the run on the fault-free code paths, bit-identical to
+    /// pre-fault behaviour.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Scenario {
@@ -169,6 +182,7 @@ impl Scenario {
             traffic: TrafficSpec::Uniform { packets: 1024, seed: 1 },
             telemetry: false,
             max_cycles: DEFAULT_MAX_CYCLES,
+            faults: None,
         }
     }
 
@@ -226,6 +240,25 @@ impl Scenario {
         self
     }
 
+    /// Attach a seeded fault plan, validated against the topology so an
+    /// invalid plan cannot exist in a `Scenario` (`from_json` enforces the
+    /// same rules as a parse error).
+    pub fn with_faults(self, plan: FaultPlan) -> Self {
+        match self.try_with_faults(plan) {
+            Ok(sc) => sc,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`Scenario::with_faults`] for document-driven callers
+    /// (`spikelink noc-sim --faults`): an invalid plan is a user error, not
+    /// a programming error.
+    pub fn try_with_faults(mut self, plan: FaultPlan) -> Result<Self> {
+        validate_faults(&self.topology, &plan)?;
+        self.faults = Some(plan);
+        Ok(self)
+    }
+
     /// Scenario-derived case label (see [`Topology::label`]).
     pub fn label(&self) -> String {
         self.topology.label()
@@ -256,8 +289,45 @@ impl Scenario {
     }
 
     /// Expand the traffic spec into the deterministic injection schedule:
-    /// ascending `(cycle, transfer)` pairs.
+    /// ascending `(cycle, transfer)` pairs. Hot-spot bursts from the fault
+    /// plan merge in here — a burst is traffic, not link state.
     pub fn schedule(&self) -> Vec<(u64, Transfer)> {
+        let mut sched = self.traffic_schedule();
+        if let Some(plan) = &self.faults {
+            if !plan.hotspots.is_empty() {
+                self.merge_hotspots(plan, &mut sched);
+            }
+        }
+        sched
+    }
+
+    /// Expand hot-spot bursts into the schedule: `packets` transfers
+    /// converging on the burst tile, sources drawn from the plan seed,
+    /// followed by a stable re-sort by cycle. Hotspot-free plans never
+    /// reach this, so their schedules stay bit-identical to clean runs.
+    fn merge_hotspots(&self, plan: &FaultPlan, sched: &mut Vec<(u64, Transfer)>) {
+        let dim = self.topology.dim();
+        let mut rng = Rng::new(plan.seed ^ HOTSPOT_SEED_SALT);
+        for h in &plan.hotspots {
+            let dest = Coord::new(h.x, h.y);
+            for _ in 0..h.packets {
+                let src = Coord::new(rng.range(0, dim), rng.range(0, dim));
+                let t = match self.topology {
+                    Topology::Mesh { .. } => Transfer::local(src, dest),
+                    // validated: duplex bursts target chip 1 (0 -> 1 crossing)
+                    Topology::Duplex { .. } => Transfer::crossing(src, dest),
+                    Topology::Chain { .. } => {
+                        let src_chip = rng.range(0, h.chip + 1); // eastward span
+                        Transfer { src_chip, src, dest_chip: h.chip, dest }
+                    }
+                };
+                sched.push((h.at, t));
+            }
+        }
+        sched.sort_by_key(|&(c, _)| c); // stable: base traffic stays first
+    }
+
+    fn traffic_schedule(&self) -> Vec<(u64, Transfer)> {
         match &self.traffic {
             TrafficSpec::Uniform { packets, seed } => {
                 let mut rng = Rng::new(*seed);
@@ -348,14 +418,19 @@ impl Scenario {
     }
 
     fn run_on(&self, e: &mut dyn CycleEngine) -> ScenarioResult {
-        let stats = run_schedule(&mut *e, &self.schedule(), self.max_cycles);
+        if let Some(plan) = &self.faults {
+            for op in plan.ops(self.topology.chips() - 1) {
+                e.inject_fault(op);
+            }
+        }
+        let (stats, outcome) = run_schedule(&mut *e, &self.schedule(), self.max_cycles);
         let hist = e.latency_hist();
         let tail = if self.telemetry && !hist.is_empty() {
             Some(TailLatency::from_hist(&hist))
         } else {
             None
         };
-        ScenarioResult { stats, tail }
+        ScenarioResult { stats, tail, outcome }
     }
 
     /// Build the optimized engine, play the schedule, drain, and report.
@@ -432,17 +507,28 @@ impl Scenario {
                 Json::obj(fields)
             }
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::str("scenario/v1")),
             ("topology", topology),
             ("traffic", traffic),
             ("telemetry", Json::Bool(self.telemetry)),
             ("max_cycles", Json::num(self.max_cycles as f64)),
-        ])
+        ];
+        if let Some(plan) = &self.faults {
+            fields.push(("faults", plan.to_json()));
+        }
+        Json::obj(fields)
     }
 
-    /// Parse a `scenario/v1` document.
+    /// Parse a `scenario/v1` document. Unknown keys — top-level and inside
+    /// every block — are rejected: a typo'd `"fualts"` block or a
+    /// misspelled field must error, not silently no-op.
     pub fn from_json(j: &Json) -> Result<Scenario> {
+        check_keys(
+            j,
+            &["schema", "topology", "traffic", "telemetry", "max_cycles", "faults"],
+            "scenario",
+        )?;
         if let Some(schema) = j.get("schema").and_then(Json::as_str) {
             if schema != "scenario/v1" {
                 return Err(anyhow!("unsupported scenario schema {schema:?}"));
@@ -453,6 +539,9 @@ impl Scenario {
             .get("kind")
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("scenario: topology.kind missing"))?;
+        let topo_allowed: &[&str] =
+            if kind == "chain" { &["kind", "chips", "dim"] } else { &["kind", "dim"] };
+        check_keys(topo, topo_allowed, "scenario.topology")?;
         let dim = topo
             .get("dim")
             .and_then(Json::as_usize)
@@ -480,6 +569,17 @@ impl Scenario {
             .get("kind")
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("scenario: traffic.kind missing"))?;
+        match tkind {
+            "uniform" | "full-span" => check_keys(tr, &["kind", "packets", "seed"], "scenario.traffic")?,
+            "sparse" => check_keys(tr, &["kind", "cycles", "period", "seed"], "scenario.traffic")?,
+            "boundary" => check_keys(
+                tr,
+                &["kind", "neurons", "dense", "activity", "ticks", "seed", "codec", "codecs"],
+                "scenario.traffic",
+            )?,
+            // unknown kinds fall through to the error below
+            _ => {}
+        }
         // Reject negative or fractional numbers instead of letting `as u64`
         // coerce them — a coerced seed/cycle count would silently run a
         // *different* scenario than the file describes.
@@ -595,11 +695,20 @@ impl Scenario {
             None => DEFAULT_MAX_CYCLES,
             some => non_negative("max_cycles", some)?,
         };
+        let faults = match j.get("faults") {
+            None => None,
+            Some(fj) => {
+                let plan = FaultPlan::from_json(fj)?;
+                validate_faults(&topology, &plan)?;
+                Some(plan)
+            }
+        };
         Ok(Scenario {
             topology,
             traffic,
             telemetry: j.get("telemetry").and_then(Json::as_bool).unwrap_or(false),
             max_cycles,
+            faults,
         })
     }
 
@@ -608,6 +717,25 @@ impl Scenario {
         let j = json::parse(text).map_err(|e| anyhow!("scenario JSON: {e}"))?;
         Self::from_json(&j)
     }
+}
+
+/// Topology-aware fault-plan validation shared by [`Scenario::with_faults`]
+/// (panics) and [`Scenario::from_json`] (errors). On top of
+/// [`FaultPlan::validate`]: duplex hot-spots must target chip 1, because the
+/// duplex engine only represents 0 -> 1 crossings — a chip-0 burst has no
+/// expressible transfer.
+fn validate_faults(topology: &Topology, plan: &FaultPlan) -> Result<()> {
+    plan.validate(topology.chips(), topology.dim())?;
+    if matches!(topology, Topology::Duplex { .. }) {
+        for h in &plan.hotspots {
+            if h.chip != 1 {
+                return Err(anyhow!(
+                    "faults: duplex hotspots must target chip 1 (transfers cross 0 -> 1)"
+                ));
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -971,5 +1099,169 @@ mod tests {
         let res = sc.run();
         assert_eq!(res.stats.delivered, 8);
         assert!(res.tail.is_none());
+        assert_eq!(res.outcome, DrainOutcome::Drained);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_at_every_level() {
+        // a typo'd top-level "fualts" block must error, not silently no-op
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1},
+                "fualts": {"ber": 0.5}}"#
+        )
+        .is_err(), "typo'd faults block");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8, "wraparound": true},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1}}"#
+        )
+        .is_err(), "unknown topology key");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "chips": 2, "dim": 8},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1}}"#
+        )
+        .is_err(), "chips on a mesh topology");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1, "sede": 2}}"#
+        )
+        .is_err(), "typo'd traffic key");
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1},
+                "faults": {"ber": 0.1, "bre": 0.2}}"#
+        )
+        .is_err(), "typo'd key inside the faults block");
+        // and the strictness does not reject any valid document shape
+        assert!(Scenario::from_json_str(
+            r#"{"schema": "scenario/v1",
+                "topology": {"kind": "chain", "chips": 3, "dim": 8},
+                "traffic": {"kind": "sparse", "cycles": 100, "period": 10, "seed": 3},
+                "telemetry": true, "max_cycles": 1000,
+                "faults": {"ber": 0.01}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn faults_block_round_trips_and_is_topology_validated() {
+        use super::super::faults::{HotSpot, LinkDown, StallSpec};
+        let mut plan = FaultPlan::with_ber(3, 0.02);
+        plan.link_down.push(LinkDown { edge: 0, from: 50, until: 90 });
+        plan.stalls.push(StallSpec { chip: 1, router: Some(3), from: 10, until: 30 });
+        plan.hotspots.push(HotSpot { at: 5, packets: 8, chip: 1, x: 2, y: 2 });
+        let sc = Scenario::duplex(8)
+            .traffic(TrafficSpec::Uniform { packets: 16, seed: 4 })
+            .with_faults(plan);
+        let text = sc.to_json().to_string_pretty();
+        assert!(text.contains("\"faults\""), "faults block serializes: {text}");
+        let back = Scenario::from_json_str(&text).expect("faulted scenario parses");
+        assert_eq!(back, sc);
+        assert_eq!(back.schedule(), sc.schedule());
+        // ...and a fault-free scenario serializes without the block
+        let clean = Scenario::duplex(8).to_json().to_string_pretty();
+        assert!(!clean.contains("\"faults\""));
+
+        // link faults on a single mesh are rejected (no EMIO edges)
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "mesh", "dim": 8},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1},
+                "faults": {"ber": 0.1}}"#
+        )
+        .is_err(), "mesh has no EMIO edges");
+        // duplex hotspots must land on chip 1 (transfers cross 0 -> 1)
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "uniform", "packets": 1, "seed": 1},
+                "faults": {"hotspots": [{"at": 0, "packets": 4, "chip": 0, "x": 1, "y": 1}]}}"#
+        )
+        .is_err(), "duplex hotspot on chip 0");
+    }
+
+    #[test]
+    fn zero_fault_plan_is_behavior_neutral() {
+        let clean = Scenario::duplex(8)
+            .with_telemetry()
+            .traffic(TrafficSpec::Uniform { packets: 32, seed: 6 });
+        let zeroed = clean.clone().with_faults(FaultPlan::default());
+        let (a, b) = (clean.run(), zeroed.run());
+        assert_eq!(a.stats, b.stats, "an all-zero plan must be bit-identical");
+        assert_eq!(a.tail, b.tail);
+        assert_eq!(b.outcome, DrainOutcome::Drained);
+        assert!(b.stats.faults.is_zero());
+        assert_eq!(b.stats.delivered_fraction(), 1.0);
+    }
+
+    #[test]
+    fn faulted_runs_stay_in_lockstep_and_degrade_gracefully() {
+        // retry mode: faults cost latency, not packets — everything not
+        // dropped by a spent retry budget still arrives
+        let retry = Scenario::duplex(8)
+            .with_telemetry()
+            .traffic(TrafficSpec::Uniform { packets: 48, seed: 8 })
+            .with_faults(FaultPlan::with_ber(21, 0.5));
+        let (a, r) = (retry.run(), retry.run_reference());
+        assert_eq!(a.stats, r.stats, "faulted engines diverged");
+        assert_eq!(a.tail, r.tail);
+        assert_eq!(a.outcome, DrainOutcome::Drained);
+        assert!(a.stats.faults.corrupted > 0 && a.stats.faults.retried > 0);
+        assert_eq!(a.stats.faults.corrupted, a.stats.faults.retried + a.stats.faults.dropped);
+        assert_eq!(a.stats.delivered + a.stats.faults.dropped, a.stats.injected);
+
+        // drop mode: every corruption costs a packet, and the delivered
+        // fraction reports the loss
+        let drop = Scenario::duplex(8)
+            .traffic(TrafficSpec::Uniform { packets: 48, seed: 8 })
+            .with_faults(FaultPlan { drop_corrupted: true, ..FaultPlan::with_ber(21, 0.5) });
+        let d = drop.run();
+        assert_eq!(d.stats, drop.run_reference().stats);
+        assert_eq!(d.stats.delivered + d.stats.faults.dropped, d.stats.injected);
+        assert!(d.stats.faults.dropped > 0);
+        assert!(d.stats.delivered_fraction() < 1.0);
+    }
+
+    #[test]
+    fn hotspot_bursts_merge_into_the_schedule_in_cycle_order() {
+        use super::super::faults::HotSpot;
+        let mut plan = FaultPlan::default();
+        plan.hotspots.push(HotSpot { at: 40, packets: 6, chip: 2, x: 3, y: 3 });
+        let sc = Scenario::chain(3, 8)
+            .traffic(TrafficSpec::Sparse { cycles: 100, period: 10, seed: 3 })
+            .with_faults(plan);
+        let sched = sc.schedule();
+        assert_eq!(sched.len(), 10 + 6);
+        assert!(sched.windows(2).all(|w| w[0].0 <= w[1].0), "schedule stays sorted");
+        let burst: Vec<_> = sched.iter().filter(|(c, _)| *c == 40).collect();
+        // the sparse stream also fires at cycle 40: its packet + the burst
+        assert_eq!(burst.len(), 7);
+        assert!(
+            burst
+                .iter()
+                .filter(|(_, t)| t.dest_chip == 2 && t.dest == Coord::new(3, 3))
+                .count()
+                >= 6
+        );
+        assert!(sched.iter().all(|(_, t)| t.src_chip <= t.dest_chip), "eastward spans only");
+        // and the burst drains identically on both engine families
+        let (a, r) = (sc.run(), sc.run_reference());
+        assert_eq!(a.stats, r.stats);
+        assert_eq!(a.stats.injected, 16);
+        assert_eq!(a.stats.injected, a.stats.delivered);
+    }
+
+    #[test]
+    fn permanent_outage_reports_timed_out() {
+        use super::super::faults::LinkDown;
+        let mut plan = FaultPlan::default();
+        plan.link_down.push(LinkDown { edge: 0, from: 0, until: u64::MAX });
+        let sc = Scenario::duplex(8)
+            .traffic(TrafficSpec::Uniform { packets: 4, seed: 2 })
+            .with_faults(plan)
+            .with_max_cycles(5_000);
+        let res = sc.run();
+        assert_eq!(res.outcome, DrainOutcome::TimedOut);
+        assert_eq!(res.stats.delivered, 0);
+        assert!(res.stats.faults.link_down_cycles > 0);
+        assert!(res.stats.delivered_fraction() < 1.0);
     }
 }

@@ -9,7 +9,7 @@ use crate::arch::params::{ArchConfig, Variant};
 use crate::codec::assign::{self, AssignConfig, Assignment};
 use crate::codec::CodecId;
 use crate::model::networks;
-use crate::noc::{Scenario, TrafficSpec};
+use crate::noc::{FaultPlan, Scenario, TrafficSpec};
 use crate::sparsity::SparsityProfile;
 use crate::util::stats;
 use crate::util::table::Table;
@@ -185,6 +185,64 @@ pub fn fig15_mixed_frontier(net_name: &str, sparsities: &[f64]) -> Table {
         row.push(ucodec.to_string());
         row.push(format!("{forced}"));
         t.row(row);
+    }
+    t
+}
+
+/// Fig. 16 (repo-added): codec degradation under seeded link faults — the
+/// `sweep --axis fault` table. For every boundary codec x bit-error rate,
+/// one seeded duplex boundary scenario runs twice through the cycle
+/// engine: in *drop* mode (`drop_corrupted`, the spiking-codec event-drop
+/// interpretation — the delivered fraction reports the loss) and in
+/// *retry* mode (bounded re-send — faults cost latency, visible in the
+/// tail quantiles, not packets). The zero-rate row is the fault-free
+/// baseline, bit-identical to a plan-free run.
+pub fn fig16_fault_degradation(bers: &[f64]) -> Table {
+    let mut t = Table::new(
+        "Fig 16: codec degradation under link faults — duplex8 boundary traffic \
+         (drop mode: delivered; retry mode: tail latency)",
+        &[
+            "codec", "ber", "injected", "delivered %", "dropped", "retry p50", "retry p99",
+            "retried",
+        ],
+    );
+    for codec in CodecId::ALL {
+        for &ber in bers {
+            let base = Scenario::duplex(8).with_telemetry().traffic(TrafficSpec::Boundary {
+                neurons: 256,
+                dense: if codec == CodecId::Dense { 1 } else { 0 },
+                activity: 0.1,
+                ticks: 8,
+                seed: 5,
+                codec,
+                codecs: Default::default(),
+            });
+            let (drop_res, retry_res) = if ber > 0.0 {
+                let drop_plan = FaultPlan {
+                    drop_corrupted: true,
+                    max_retries: 0,
+                    ..FaultPlan::with_ber(17, ber)
+                };
+                (
+                    base.clone().with_faults(drop_plan).run(),
+                    base.clone().with_faults(FaultPlan::with_ber(17, ber)).run(),
+                )
+            } else {
+                let clean = base.run();
+                (clean, clean)
+            };
+            let tail = retry_res.tail;
+            t.row(vec![
+                codec.to_string(),
+                format!("{ber}"),
+                format!("{}", drop_res.stats.injected),
+                format!("{:.1}", 100.0 * drop_res.stats.delivered_fraction()),
+                format!("{}", drop_res.stats.faults.dropped),
+                tail.map(|x| x.p50.to_string()).unwrap_or_else(|| "-".into()),
+                tail.map(|x| x.p99.to_string()).unwrap_or_else(|| "-".into()),
+                format!("{}", retry_res.stats.faults.retried),
+            ]);
+        }
     }
     t
 }
@@ -440,6 +498,24 @@ mod tests {
             forced_low_sparsity >= forced_high_sparsity,
             "fidelity forcing must not grow with sparsity"
         );
+    }
+
+    #[test]
+    fn fig16_degradation_monotone_in_ber() {
+        let t = fig16_fault_degradation(&[0.0, 0.05, 0.5]);
+        assert_eq!(t.rows.len(), CodecId::ALL.len() * 3);
+        for chunk in t.rows.chunks(3) {
+            // drop-mode delivered fraction (col 3) never improves with ber:
+            // in drop mode every frame crosses the pad exactly once in a
+            // fault-independent order, so the corrupted set only grows
+            let fracs: Vec<f64> = chunk.iter().map(|r| r[3].parse().unwrap()).collect();
+            assert!(fracs[0] >= fracs[1] && fracs[1] >= fracs[2], "{fracs:?}");
+            // the zero-rate row is fault-free...
+            assert_eq!(chunk[0][4], "0", "{:?}", chunk[0]);
+            assert_eq!(chunk[0][7], "0", "{:?}", chunk[0]);
+            // ...and a 50% BER certainly retries something in retry mode
+            assert!(chunk[2][7].parse::<u64>().unwrap() > 0, "{:?}", chunk[2]);
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use spikelink::arch::chip::Coord;
 use spikelink::noc::reference::{RefChain, RefDuplex, RefMesh};
 use spikelink::noc::router::Flit;
-use spikelink::noc::{lockstep, Chain, DeliverySink, Duplex, Mesh, Op, Transfer};
+use spikelink::noc::{lockstep, Chain, DeliverySink, Duplex, FaultOp, Mesh, Op, Transfer};
 
 /// Minimal 64-bit LCG (Knuth MMIX constants). Deliberately *not* the
 /// crate's xoshiro [`spikelink::util::rng::Rng`]: the fuzzer's schedule
@@ -228,5 +228,207 @@ fn fuzz_chain_case(seed: u64) {
 fn fuzz_chain_differential() {
     for i in 0..fuzz_iters() {
         fuzz_chain_case(0xC4A1_0000 + i);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// faults: the same differential harness with Op::Fault interleaved.
+// Every window is finite, so the final drain must still terminate; link
+// faults are seeded through Op::Fault(Policy), so both engines suffer
+// byte-identical corruption streams.
+// ---------------------------------------------------------------------------
+
+const FUZZ_BER_RATES: [f64; 4] = [0.0, 0.05, 0.2, 0.5];
+
+fn fault_policy(rng: &mut Lcg) -> Op {
+    Op::Fault(FaultOp::Policy {
+        seed: rng.next(),
+        max_retries: rng.below(5) as u32,
+        drop_corrupted: rng.below(2) == 0,
+    })
+}
+
+fn mesh_fault_ops(rng: &mut Lcg, dim: usize) -> Vec<Op> {
+    let mut ops = mesh_ops(rng, dim);
+    // splice finite stall windows (chip-wide and single-router) between
+    // the traffic ops; insertion index < len keeps the final Drain last
+    for _ in 0..1 + rng.below(4) {
+        let from = rng.below(2_000);
+        let until = from + 1 + rng.below(2_000);
+        let router =
+            if rng.below(2) == 0 { Some(rng.below((dim * dim) as u64) as usize) } else { None };
+        let at = rng.below(ops.len() as u64) as usize;
+        ops.insert(at, Op::Fault(FaultOp::Stall { chip: 0, router, from, until }));
+    }
+    ops
+}
+
+fn fuzz_mesh_fault_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let mut m = Mesh::with_sink(dim, DeliverySink::new());
+    let mut r = RefMesh::with_sink(dim, DeliverySink::new());
+    let ops = mesh_fault_ops(&mut rng, dim);
+    lockstep(&mut m, &mut r, &ops, &format!("mesh-faults dim={dim} seed={seed:#x}"));
+    // stalls delay but never lose packets: the drain must still complete
+    assert_eq!(m.backlog(), 0, "seed={seed:#x}: mesh failed to drain past the stall windows");
+    assert_eq!(m.east_egress, r.east_egress, "seed={seed:#x}: east egress diverged");
+}
+
+#[test]
+fn fuzz_mesh_fault_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_mesh_fault_case(0x57A1_1000 + i);
+    }
+}
+
+fn duplex_fault_ops(rng: &mut Lcg, dim: usize) -> Vec<Op> {
+    let mut ops = duplex_ops(rng, dim);
+    for _ in 0..1 + rng.below(4) {
+        let from = rng.below(3_000);
+        let until = from + 1 + rng.below(3_000);
+        let f = match rng.below(3) {
+            0 => FaultOp::BitError { edge: 0, rate: FUZZ_BER_RATES[rng.below(4) as usize] },
+            1 => FaultOp::LinkDown { edge: 0, from, until },
+            _ => FaultOp::Stall { chip: rng.below(2) as usize, router: None, from, until },
+        };
+        let at = rng.below(ops.len() as u64) as usize;
+        ops.insert(at, Op::Fault(f));
+    }
+    // policy first: the pad RNG must be seeded before any BitError bites
+    ops.insert(0, fault_policy(rng));
+    ops
+}
+
+fn fuzz_duplex_fault_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let dim = 1 + rng.below(8) as usize;
+    let mut d = Duplex::<DeliverySink>::with_sinks(dim);
+    let mut r = RefDuplex::<DeliverySink>::with_sinks(dim);
+    let ops = duplex_fault_ops(&mut rng, dim);
+    let ctx = format!("duplex-faults dim={dim} seed={seed:#x}");
+    let stats = lockstep(&mut d, &mut r, &ops, &ctx);
+    // graceful degradation: every packet delivers or is counted dropped
+    assert_eq!(stats.delivered + stats.faults.dropped, stats.injected, "{ctx}: packets leaked");
+    assert_eq!(
+        stats.faults.corrupted,
+        stats.faults.retried + stats.faults.dropped,
+        "{ctx}: corruption accounting broke"
+    );
+    assert_eq!(d.link.pending(), r.link.pending(), "{ctx}: link diverged");
+    // delivered packets still pay the SerDes floor (retries only add)
+    assert!(d.deliveries().iter().all(|x| x.latency() >= 76), "{ctx}: floor undercut");
+}
+
+#[test]
+fn fuzz_duplex_fault_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_duplex_fault_case(0xBADC_0DE0 + i);
+    }
+}
+
+fn chain_fault_ops(rng: &mut Lcg, chips: usize, dim: usize) -> Vec<Op> {
+    let mut ops = chain_ops(rng, chips, dim);
+    let n_edges = (chips - 1) as u64;
+    for _ in 0..1 + rng.below(4) {
+        let from = rng.below(3_000);
+        let until = from + 1 + rng.below(3_000);
+        let f = match rng.below(3) {
+            0 if n_edges > 0 => FaultOp::BitError {
+                edge: rng.below(n_edges) as usize,
+                rate: FUZZ_BER_RATES[rng.below(4) as usize],
+            },
+            1 if n_edges > 0 => {
+                FaultOp::LinkDown { edge: rng.below(n_edges) as usize, from, until }
+            }
+            _ => FaultOp::Stall {
+                chip: rng.below(chips as u64) as usize,
+                router: Some(rng.below((dim * dim) as u64) as usize),
+                from,
+                until,
+            },
+        };
+        let at = rng.below(ops.len() as u64) as usize;
+        ops.insert(at, Op::Fault(f));
+    }
+    ops.insert(0, fault_policy(rng));
+    ops
+}
+
+fn fuzz_chain_fault_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let chips = 1 + rng.below(6) as usize; // 1..=6
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let mut c = Chain::<DeliverySink>::with_sinks(chips, dim);
+    let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
+    let ops = chain_fault_ops(&mut rng, chips, dim);
+    let ctx = format!("chain-faults chips={chips} dim={dim} seed={seed:#x}");
+    let stats = lockstep(&mut c, &mut r, &ops, &ctx);
+    assert_eq!(stats.delivered + stats.faults.dropped, stats.injected, "{ctx}: packets leaked");
+    assert_eq!(
+        stats.faults.corrupted,
+        stats.faults.retried + stats.faults.dropped,
+        "{ctx}: corruption accounting broke"
+    );
+    for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
+        assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} stats diverged");
+        assert_eq!(mc.sink.deliveries, mr.sink.deliveries, "{ctx}: chip {i} records diverged");
+    }
+    // delivered packets pay the floor per crossing even under retries
+    for d in &c.deliveries() {
+        assert!(
+            d.latency() >= 76 * d.crossings as u64,
+            "{ctx}: id {} undercut the SerDes floor",
+            d.id
+        );
+    }
+}
+
+#[test]
+fn fuzz_chain_fault_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_chain_fault_case(0xC4A1_FA00 + i);
+    }
+}
+
+#[test]
+fn zero_rate_fault_ops_are_bit_identical_to_clean_runs() {
+    // the acceptance criterion: fault plumbing at rate 0 consumes no RNG
+    // draws and must not perturb behaviour at all — same stats, same
+    // per-packet records as a script with no fault ops
+    for i in 0..fuzz_iters() {
+        let seed = 0xFA01_7000 + i;
+        let mut rng_a = Lcg::new(seed);
+        let dim_a = 1 + rng_a.below(8) as usize;
+        let base = duplex_ops(&mut rng_a, dim_a);
+        let mut rng_b = Lcg::new(seed);
+        let dim_b = 1 + rng_b.below(8) as usize;
+        assert_eq!(dim_a, dim_b);
+        let mut with_faults = base.clone();
+        with_faults.insert(
+            0,
+            Op::Fault(FaultOp::Policy { seed: 7, max_retries: 1, drop_corrupted: true }),
+        );
+        with_faults.insert(1, Op::Fault(FaultOp::BitError { edge: 0, rate: 0.0 }));
+
+        let mut clean = Duplex::<DeliverySink>::with_sinks(dim_a);
+        let mut clean_ref = RefDuplex::<DeliverySink>::with_sinks(dim_a);
+        let clean_stats =
+            lockstep(&mut clean, &mut clean_ref, &base, &format!("clean seed={seed:#x}"));
+        let mut faulted = Duplex::<DeliverySink>::with_sinks(dim_b);
+        let mut faulted_ref = RefDuplex::<DeliverySink>::with_sinks(dim_b);
+        let faulted_stats = lockstep(
+            &mut faulted,
+            &mut faulted_ref,
+            &with_faults,
+            &format!("zero-rate seed={seed:#x}"),
+        );
+        assert_eq!(clean_stats, faulted_stats, "seed={seed:#x}: zero-rate faults moved stats");
+        assert_eq!(
+            clean.deliveries(),
+            faulted.deliveries(),
+            "seed={seed:#x}: zero-rate faults moved per-packet records"
+        );
+        assert!(faulted_stats.faults.is_zero());
     }
 }

@@ -36,6 +36,13 @@ bench no longer produces is not gated forever.
 "Per-edge assignment") follow exactly the same rules as the codec
 suffixes: latest-run only, floor-checked, never a substitute for the
 default-lineage dim coverage.
+
+`fault`-suffixed labels (`noc/mesh16/sparse/speedup/fault-ber0.01`,
+`mesh16-fault` — runs under a seeded fault plan, see EXPERIMENTS.md
+§Faults) are the third suffix family with the same rules: a faulted run
+appended by the latest bench is floor-checked like any other case, but a
+degraded-fabric number can never vouch for the clean {8, 16, 32} dim
+coverage the gate was written around.
 """
 
 import json
@@ -60,11 +67,19 @@ CODEC_RE = re.compile(
     r"(?:^|[/-])(topk-delta|temporal|dense|spike|delta|mixed|topk|rate|ttfs)(?:$|[/-])"
 )
 
+# a fault-suffixed label starts a segment with "fault" and runs to the next
+# `/` (the tag keeps any qualifier: fault, fault-ber0.01, fault-seed7);
+# the segment anchor keeps "default" and friends from matching
+FAULT_RE = re.compile(r"(?:^|[/-])(fault[^/]*)")
 
-def codec_of(name):
-    """The codec segment of a bench-record name, or None for the default
-    (unsuffixed) lineage."""
+
+def suffix_of(name):
+    """The codec or fault segment of a bench-record name, or None for the
+    default (unsuffixed) lineage."""
     m = CODEC_RE.search(name)
+    if m:
+        return m.group(1)
+    m = FAULT_RE.search(name)
     return m.group(1) if m else None
 
 
@@ -81,13 +96,13 @@ def load(path):
 
 def check_speedups(path, records):
     all_speedups = [r for r in records if r.get("unit") == "x-vs-ref"]
-    # codec-suffixed records ride along (floor-checked below) but only the
-    # default lineage may satisfy the dim-coverage requirement
-    speedups = [r for r in all_speedups if codec_of(r.get("name", "")) is None]
+    # codec- and fault-suffixed records ride along (floor-checked below) but
+    # only the default lineage may satisfy the dim-coverage requirement
+    speedups = [r for r in all_speedups if suffix_of(r.get("name", "")) is None]
     if len(speedups) < EXPECTED:
         sys.exit(
             f"{path}: expected >= {EXPECTED} default-lineage x-vs-ref records, found "
-            f"{len(speedups)} (codec-suffixed records cannot vouch for dim "
+            f"{len(speedups)} (codec- or fault-suffixed records cannot vouch for dim "
             "coverage) — bench did not complete"
         )
     latest = speedups[-EXPECTED:]  # this run's three mesh dims
@@ -124,22 +139,22 @@ def check_speedups(path, records):
     if failed:
         sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
 
-    # codec-suffixed lineages: this run's latest record per (codec, dim) is
-    # held to the same floor — extra coverage may only strengthen the gate.
-    # Only codec records appended at or after this run's default lineage
-    # count (the trajectory is append-only, so earlier indices belong to
-    # prior runs): a codec case that a past run emitted and the bench no
-    # longer produces must not be gated forever.
+    # suffixed lineages (codec or fault): this run's latest record per
+    # (suffix, dim) is held to the same floor — extra coverage may only
+    # strengthen the gate. Only suffixed records appended at or after this
+    # run's default lineage count (the trajectory is append-only, so earlier
+    # indices belong to prior runs): a suffixed case that a past run emitted
+    # and the bench no longer produces must not be gated forever.
     run_start = next(i for i in range(len(records) - 1, -1, -1) if records[i] is latest[0])
-    latest_codec = {}
+    latest_suffixed = {}
     for i, r in enumerate(records):
-        if i < run_start or r.get("unit") != "x-vs-ref" or codec_of(r.get("name", "")) is None:
+        if i < run_start or r.get("unit") != "x-vs-ref" or suffix_of(r.get("name", "")) is None:
             continue
         m = MESH_DIM_RE.search(r.get("name", ""))
         if not m:
-            continue  # codec-labelled chain/duplex cases are not gated
-        latest_codec[(codec_of(r["name"]), int(m.group(1)))] = r
-    for (codec, dim), r in sorted(latest_codec.items()):
+            continue  # suffix-labelled chain/duplex cases are not gated
+        latest_suffixed[(suffix_of(r["name"]), int(m.group(1)))] = r
+    for (_suffix, _dim), r in sorted(latest_suffixed.items()):
         ok = r["throughput"] >= FLOOR
         verdict = "OK" if ok else f"BELOW {FLOOR}x FLOOR"
         print(f"{r['name']}: {r['throughput']:.2f}x vs reference  [{verdict}]")
@@ -147,7 +162,7 @@ def check_speedups(path, records):
             failed.append(r["name"])
     if failed:
         sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
-    extra = f" (+{len(latest_codec)} codec cases)" if latest_codec else ""
+    extra = f" (+{len(latest_suffixed)} suffixed cases)" if latest_suffixed else ""
     print(f"speedup gate passed: all {EXPECTED} sparse cases >= {FLOOR}x{extra}")
 
 

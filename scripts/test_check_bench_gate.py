@@ -25,7 +25,7 @@ CASES = {
     "scenario_labels_pass.json": (True, "speedup gate passed"),
     # codec-suffixed speedup records (EXPERIMENTS.md §Codec) ride along as
     # extra floor-checked cases next to an intact default lineage
-    "codec_labels_pass.json": (True, "codec cases"),
+    "codec_labels_pass.json": (True, "suffixed cases"),
     # ... but a codec case below the floor still fails the gate
     "codec_below_floor.json": (False, "below the 5x acceptance floor"),
     # ... and codec records alone can never satisfy the dim coverage
@@ -35,9 +35,17 @@ CASES = {
     "codec_stale_then_pass.json": (True, "speedup gate passed"),
     # `mixed`-suffixed labels (learned per-edge codec assignment) follow
     # the codec-suffix rules: accepted next to an intact default lineage...
-    "mixed_labels_pass.json": (True, "codec cases"),
+    "mixed_labels_pass.json": (True, "suffixed cases"),
     # ...but still held to the 5x floor
     "mixed_below_floor.json": (False, "below the 5x acceptance floor"),
+    # fault-suffixed labels (seeded fault-plan runs, EXPERIMENTS.md §Faults)
+    # are the third suffix family: extra floor-checked cases next to an
+    # intact default lineage...
+    "fault_labels_pass.json": (True, "suffixed cases"),
+    # ...held to the same 5x floor...
+    "fault_below_floor.json": (False, "below the 5x acceptance floor"),
+    # ...and never a substitute for the clean-run dim coverage
+    "fault_only_speedups.json": (False, "bench did not complete"),
     "fail_speedup.json": (False, "below the 5x acceptance floor"),
     "fail_overhead.json": (False, "exceeds the 1.05x (5%) acceptance ceiling"),
     "incomplete.json": (False, "bench did not complete"),
