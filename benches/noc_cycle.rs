@@ -13,6 +13,10 @@
 //!     over 20k cycles (the paper's spike-traffic regime);
 //!   * `noc/mesh{8,16,32}/saturating` — 8·dim² packets at cycle 0;
 //!   * `noc/chain{2,4,8}x8/512-transfers` — 512 eastward transfers;
+//!   * `noc/chain{8,16}x8/1m-transfers/{serial,parallel}` — one million
+//!     eastward transfers on the serial engine and the threaded stepper,
+//!     with the ratio recorded as `.../parallel-vs-serial` (unit
+//!     `x-vs-serial`, floor-gated >= 0.5x by scripts/check_bench_gate.py);
 //!   * `noc/duplex8/2k-die-crossings` — 2048 die crossings.
 //!
 //! Every measurement is appended to BENCH_noc_cycle.json (schema bench/v2)
@@ -30,7 +34,8 @@ use std::path::Path;
 
 use spikelink::noc::reference::{RefChain, RefMesh};
 use spikelink::noc::{
-    run_schedule, Chain, CycleEngine, DeliverySink, Duplex, Mesh, Scenario, Transfer, TrafficSpec,
+    run_schedule, Chain, CycleEngine, DeliverySink, Duplex, Mesh, ParallelChain, Scenario,
+    Transfer, TrafficSpec,
 };
 use spikelink::util::bench::{append_json, bench, black_box, BenchRecord};
 
@@ -163,6 +168,40 @@ fn main() {
                 .with_latency(h.p50(), h.p99(), h.p999()),
         );
         records.push(BenchRecord::new(ref_, ref_tput, "transfers/s"));
+    }
+
+    // --- parallel chain: million-packet scale, threaded vs serial ---------
+    // The chain is the only topology whose chips couple solely through EMIO
+    // frames, so it is the one the threaded stepper parallelizes; the
+    // 512-transfer loads above are barrier-dominated, so the parallel engine
+    // is measured at million-packet scale only. The ratio lands as a
+    // `parallel-vs-serial` record (unit `x-vs-serial`), floor-gated >= 0.5x
+    // by scripts/check_bench_gate.py — threading must never cost more than
+    // half the serial throughput, and the trajectory tracks the real gain.
+    for &chips in &[8usize, 16] {
+        let sc = Scenario::chain(chips, 8)
+            .traffic(TrafficSpec::Uniform { packets: 1_000_000, seed: 17 });
+        let label = sc.label(); // "chain8x8", "chain16x8"
+        let load = sc.schedule();
+        let n = load.len() as f64;
+        let serial = bench(&format!("noc/{label}/1m-transfers/serial"), 1, 3, || {
+            drive(Chain::new(chips, 8), &load);
+        });
+        // threads = 0: one worker per chip, capped at the machine's cores
+        let par = bench(&format!("noc/{label}/1m-transfers/parallel"), 1, 3, || {
+            drive(ParallelChain::with_threads(chips, 8, 0), &load);
+        });
+        let speedup = serial.median_ns / par.median_ns;
+        println!(
+            "{label} 1m-transfers: serial {:.2} M/s, parallel {:.2} M/s ({speedup:.2}x)",
+            n / (serial.median_ns / 1e9) / 1e6,
+            n / (par.median_ns / 1e9) / 1e6
+        );
+        records.push(BenchRecord::new(serial.clone(), n / (serial.median_ns / 1e9), "transfers/s"));
+        records.push(BenchRecord::new(par.clone(), n / (par.median_ns / 1e9), "transfers/s"));
+        let mut sp = par;
+        sp.name = format!("noc/{label}/1m-transfers/parallel-vs-serial");
+        records.push(BenchRecord::new(sp, speedup, "x-vs-serial"));
     }
 
     // --- duplex: 2048 boundary crossings ----------------------------------

@@ -163,7 +163,10 @@ COMMANDS:
                       --link-down F:U[:E][,...]  outage window(s) [FROM, UNTIL) on edge E
                         (fault flags conflict with a --scenario file that
                          carries its own faults block)
-                      --reference          run the retained naive engine instead
+                      --engine serial|parallel|reference  cycle engine (default serial)
+                      --threads N          parallel-engine workers (0 = auto-detect;
+                                           only valid with --engine parallel)
+                      --reference          alias for --engine reference
                       --no-telemetry       skip per-packet records (no tail quantiles)
                       --save FILE          write the scenario JSON for reproduction
   help              this text

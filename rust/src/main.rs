@@ -727,14 +727,26 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         println!("scenario written to {out}");
     }
 
-    let reference = args.has_flag("reference");
-    let res = if reference { sc.run_reference() } else { sc.run() };
+    let engine = if args.has_flag("reference") {
+        if args.get("engine").is_some() {
+            return Err(anyhow!("--reference is an alias for --engine reference; pass only one"));
+        }
+        "reference".to_string()
+    } else {
+        args.str_or("engine", "serial")
+    };
+    let threads = args.usize_or("threads", 0)?;
+    if args.get("threads").is_some() && engine != "parallel" {
+        return Err(anyhow!("--threads only applies to --engine parallel"));
+    }
+    let res = match engine.as_str() {
+        "serial" => sc.run(),
+        "parallel" => sc.run_parallel(threads),
+        "reference" => sc.run_reference(),
+        other => return Err(anyhow!("--engine must be serial|parallel|reference, got {other}")),
+    };
     let s = res.stats;
-    println!(
-        "scenario        : {} ({} engine)",
-        sc.label(),
-        if reference { "reference" } else { "optimized" },
-    );
+    println!("scenario        : {} ({engine} engine)", sc.label());
     if let TrafficSpec::Boundary { codec, codecs, .. } = &sc.traffic {
         if codecs.is_empty() {
             println!("codec           : {codec}");

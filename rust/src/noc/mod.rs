@@ -37,6 +37,12 @@
 //!   O(active routers) instead of O(dim²);
 //! * [`mesh`]   — a synchronous N x N mesh of routers (one chip) with
 //!   worklist scheduling and an O(1) backlog counter;
+//! * [`soa`]    — the same mesh with struct-of-arrays scheduling state
+//!   (flat credit/backlog/dirty arrays, vectorizable credit reset),
+//!   bit-identical to [`mesh`];
+//! * [`parallel`] — the multi-threaded chain stepper (one worker per chip
+//!   block, barrier per cycle, double-buffered EMIO mailboxes),
+//!   bit-identical to [`chain`] at any thread count;
 //! * [`emio`]   — the §3.4 merge/SerDes/split die-to-die block
 //!   (validates the 76-cycle single-packet RTL figure);
 //! * [`faults`] — seeded fault plans (link-down windows, bit-error rates,
@@ -67,9 +73,11 @@ pub mod fifo;
 pub mod harness;
 pub mod mesh;
 pub mod model_sim;
+pub mod parallel;
 pub mod reference;
 pub mod router;
 pub mod scenario;
+pub mod soa;
 pub mod telemetry;
 pub mod traffic;
 pub mod worklist;
@@ -83,7 +91,9 @@ pub use engine::{
 pub use faults::{FaultEvent, FaultKind, FaultOp, FaultPlan, FaultSink, FaultStats};
 pub use harness::{lockstep, run_schedule, Op};
 pub use mesh::Mesh;
+pub use parallel::ParallelChain;
 pub use reference::{RefChain, RefDuplex, RefMesh};
 pub use router::{route_xy, Flit, Port, Router};
 pub use scenario::{Scenario, ScenarioResult, Topology, TrafficSpec};
+pub use soa::SoaMesh;
 pub use telemetry::{Delivery, DeliverySink, NoopSink, TelemetrySink};

@@ -1,0 +1,667 @@
+//! Multi-threaded chain stepper: the directional-X chain of
+//! [`super::chain`] with one worker per contiguous block of chips, a
+//! barrier per cycle, and EMIO frames handed between workers through
+//! double-buffered mailboxes — **bit-identical** to the serial engine by
+//! construction.
+//!
+//! ## Why the cut is safe
+//!
+//! Chips couple *only* through EMIO frames (the paper's premise: dense
+//! local traffic, sparse boundary traffic), and the serial
+//! [`super::chain::Chain::step`] already runs in two phases — every chip
+//! steps and hands its East egress to its link, then every link steps and
+//! hands its arrivals to the next chip. Within a phase, chips (and links)
+//! touch disjoint state: a link reads one upstream mailbox, advances its
+//! own queues, and injects into its one downstream chip, and a packet id
+//! can cross at most one link per cycle, so per-id `crossings` counters
+//! never contend. Splitting the chips across workers with a barrier
+//! between the two phases therefore reproduces the serial schedule
+//! exactly — the mailbox a chip fills in phase A is read by its
+//! (possibly different-worker) consumer only after the barrier, which is
+//! the double-buffering that makes a cycle's sends visible next phase,
+//! never mid-phase.
+//!
+//! ## Determinism contract
+//!
+//! For any fault plan and injection schedule, stats, per-packet delivery
+//! records, latency histograms, and fault-sink event order are identical
+//! across thread counts (1, 2, 4, ...) and identical to the serial
+//! [`super::chain::Chain`] and the naive [`super::reference::RefChain`].
+//! Per-chip histograms merge losslessly ([`LatencyHist::merge`] is
+//! bin-wise addition — see the order-independence property test in
+//! `util::stats`), delivery views sort by `(delivered_at, id)`, and fault
+//! events sort by `(cycle, edge, id)`, so no observable output depends on
+//! which worker processed what. The fuzz lockstep suite in
+//! `rust/tests/fuzz_noc.rs` enforces this per-op against the reference.
+//!
+//! Threading applies to [`CycleEngine::drain`] (the bulk of any run —
+//! `run_schedule` injects at most a few ops per cycle and then drains);
+//! single-cycle [`CycleEngine::step`] calls run the serial path, which is
+//! the same code a 1-thread drain runs.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::arch::chip::Coord;
+use crate::arch::packet::Packet;
+use crate::util::stats::LatencyHist;
+
+use super::chain::ChainTraffic;
+use super::emio::{EmioLink, LANES};
+use super::engine::{CycleEngine, DrainOutcome, NocStats, Transfer};
+use super::faults::{FaultOp, FaultSink, FaultStats};
+use super::router::Flit;
+use super::soa::SoaMesh;
+use super::telemetry::{Delivery, NoopSink, TelemetrySink};
+
+/// Per-packet tracking record, indexed by chain id. The routing fields are
+/// written once at injection (before any stepping) and only read by
+/// workers; `crossings` is the one field workers write, and since a packet
+/// id crosses at most one link per cycle the atomic is uncontended — it
+/// exists to make the sharing explicit, not to arbitrate races.
+struct TrackedShared {
+    injected_at: u64,
+    dest_chip: u32,
+    dest: Coord,
+    crossings: AtomicU32,
+}
+
+/// A worker's slice of the topology: a contiguous block of chips plus the
+/// links *feeding* those chips (link `c` is owned by the owner of chip
+/// `c + 1`, so fault state and delivery ownership move cleanly downstream).
+struct WorkerPart<'a, S: TelemetrySink> {
+    chip_lo: usize,
+    chips: &'a mut [SoaMesh<S>],
+    link_lo: usize,
+    links: &'a mut [EmioLink],
+}
+
+/// C chips + C-1 eastward EMIO links, stepped by up to `threads` workers.
+///
+/// Drop-in counterpart of [`super::chain::Chain`] (same constructors, same
+/// [`CycleEngine`] contract, same fault surface); per-chip meshes are the
+/// struct-of-arrays [`SoaMesh`] so each worker's credit/arbitration pass
+/// vectorizes.
+pub struct ParallelChain<S: TelemetrySink + Send = NoopSink> {
+    pub chips: Vec<SoaMesh<S>>,
+    links: Vec<EmioLink>,
+    dim: usize,
+    threads: usize,
+    now: u64,
+    /// Flat id -> record table (chain ids are dense and sequential).
+    tracked: Vec<TrackedShared>,
+    pub stats: NocStats,
+    /// scratch buffers reused across cycles of the serial path
+    egress_buf: Vec<(usize, Flit)>,
+    frames_buf: Vec<(super::emio::Frame, u64)>,
+}
+
+impl ParallelChain<NoopSink> {
+    /// A telemetry-free parallel chain with automatic thread selection.
+    pub fn new(n_chips: usize, dim: usize) -> Self {
+        Self::with_threads(n_chips, dim, 0)
+    }
+}
+
+impl<S: TelemetrySink + Send> ParallelChain<S> {
+    /// A chain whose meshes record into per-chip `S::default()` sinks,
+    /// with automatic thread selection.
+    pub fn with_sinks(n_chips: usize, dim: usize) -> Self {
+        Self::with_sinks_and_threads(n_chips, dim, 0)
+    }
+
+    /// `threads == 0` selects [`std::thread::available_parallelism`];
+    /// whatever the request, the drain never spawns more workers than
+    /// chips. Thread count affects wall-clock only, never results.
+    pub fn with_threads(n_chips: usize, dim: usize, threads: usize) -> Self {
+        Self::with_sinks_and_threads(n_chips, dim, threads)
+    }
+
+    /// Telemetry sinks + explicit thread count.
+    pub fn with_sinks_and_threads(n_chips: usize, dim: usize, threads: usize) -> Self {
+        assert!(n_chips >= 1);
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        ParallelChain {
+            chips: (0..n_chips).map(|_| SoaMesh::with_sink(dim, S::default())).collect(),
+            links: (0..n_chips.saturating_sub(1)).map(|_| EmioLink::new()).collect(),
+            dim,
+            threads,
+            now: 0,
+            tracked: Vec::new(),
+            stats: NocStats::default(),
+            egress_buf: Vec::new(),
+            frames_buf: Vec::new(),
+        }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// The configured worker budget (resolved; never 0).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Merged per-packet delivery records across all chips, die-crossing
+    /// counts patched from the tracked table, ordered by (delivered_at, id).
+    pub fn deliveries(&self) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        for m in &self.chips {
+            out.extend_from_slice(m.sink.deliveries());
+        }
+        for d in &mut out {
+            d.crossings = self
+                .tracked
+                .get(d.id as usize)
+                .map(|t| t.crossings.load(Ordering::Relaxed))
+                .unwrap_or(0);
+        }
+        out.sort_by_key(|d| (d.delivered_at, d.id));
+        out
+    }
+
+    /// Merged end-to-end latency histogram across all chips.
+    pub fn latency_hist(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for m in &self.chips {
+            if let Some(mh) = m.sink.hist() {
+                h.merge(mh);
+            }
+        }
+        h
+    }
+
+    /// Die crossings a delivered packet has made so far (by chain id).
+    pub fn crossings_of(&self, id: u64) -> usize {
+        self.tracked
+            .get(id as usize)
+            .map(|t| t.crossings.load(Ordering::Relaxed) as usize)
+            .unwrap_or(0)
+    }
+
+    /// Inject a transfer (destination chip must be >= source chip — the
+    /// directional-X mapping flows East).
+    pub fn inject(&mut self, t: ChainTraffic) -> u64 {
+        assert!(t.dest_chip >= t.src_chip, "directional-X: eastward only");
+        assert!(t.dest_chip < self.n_chips());
+        let id = self.tracked.len() as u64;
+        self.tracked.push(TrackedShared {
+            injected_at: self.now,
+            dest_chip: t.dest_chip as u32,
+            dest: t.dest,
+            crossings: AtomicU32::new(0),
+        });
+        let target = if t.dest_chip == t.src_chip {
+            t.dest // same-chip: the mesh delivers it directly
+        } else {
+            Coord::new(self.dim, t.src.y as usize) // head for the East edge
+        };
+        self.chips[t.src_chip].inject_with_id(t.src, target, id);
+        self.stats.injected += 1;
+        id
+    }
+
+    /// One global clock, serially (mirrors [`super::chain::Chain::step`];
+    /// the threaded path lives in the drain, where the cycles are).
+    pub fn step(&mut self) {
+        self.now += 1;
+        let n = self.n_chips();
+        for c in 0..n {
+            self.chips[c].step();
+            // east egress -> link c (if any)
+            self.egress_buf.clear();
+            self.egress_buf.append(&mut self.chips[c].east_egress);
+            if c + 1 < n {
+                for (row, flit) in self.egress_buf.drain(..) {
+                    // flit.id IS the chain id: no per-chip remap lookup
+                    let pkt = Packet::spike(0, 0, 0, 0);
+                    self.links[c].inject(row % LANES, &pkt, flit.id, self.now);
+                }
+            } else {
+                self.egress_buf.clear(); // nothing East of the last chip
+            }
+        }
+        // links advance; arrivals enter the next chip
+        for c in 0..self.links.len() {
+            self.links[c].step(self.now);
+            self.frames_buf.clear();
+            self.frames_buf.append(&mut self.links[c].delivered);
+            for (frame, _) in &self.frames_buf {
+                let Some(tr) = self.tracked.get_mut(frame.id as usize) else {
+                    continue;
+                };
+                *tr.crossings.get_mut() += 1;
+                let arriving_chip = c + 1;
+                let (_, port) = Packet::decode_d2d(frame.wire);
+                let row = port as usize % self.dim;
+                let target = if tr.dest_chip as usize == arriving_chip {
+                    tr.dest
+                } else {
+                    // repeater: keep heading East
+                    Coord::new(self.dim, row)
+                };
+                let flit = Flit {
+                    id: frame.id,
+                    dest: target,
+                    wire: frame.wire,
+                    injected_at: tr.injected_at,
+                    hops: 0,
+                };
+                self.chips[arriving_chip].inject_west_edge(row, flit);
+            }
+        }
+        self.stats.cycles = self.now;
+    }
+
+    /// Total work left anywhere in the chain — O(chips + links).
+    pub fn pending(&self) -> usize {
+        self.chips.iter().map(|m| m.backlog()).sum::<usize>()
+            + self.links.iter().map(|l| l.pending()).sum::<usize>()
+    }
+
+    /// Run to drain (bounded, threaded); returns aggregate stats.
+    pub fn run(&mut self, max_cycles: u64) -> NocStats {
+        let stats = CycleEngine::run_until_drained(self, max_cycles);
+        self.stats = stats;
+        stats
+    }
+
+    /// Frames accepted by link `i` (test/diagnostic hook).
+    pub fn link_accepted(&self, i: usize) -> u64 {
+        self.links[i].accepted
+    }
+
+    /// The threaded drain loop: `workers` scoped threads, two barriers per
+    /// cycle (chip phase -> link phase -> backlog consensus). Workers agree
+    /// on when to stop via parity-indexed backlog accumulators: cycle `k`
+    /// sums into `acc[k % 2]`, every worker reads the identical total after
+    /// the second barrier, and the *other* slot is zeroed for the next
+    /// cycle — writes to a slot are always barrier-separated from its reads.
+    fn drain_threaded(&mut self, workers: usize, max_cycles: u64) {
+        if self.pending() == 0 || max_cycles == 0 {
+            return;
+        }
+        let n = self.chips.len();
+        let dim = self.dim;
+        let start_now = self.now;
+        // contiguous chip ranges, one per worker; worker k also owns the
+        // links feeding its chips: [max(lo,1)-1, hi-1) — consecutive
+        // ranges, so chips and links both split into disjoint &mut slices
+        let mut bounds = vec![0usize; workers + 1];
+        for k in 0..workers {
+            bounds[k + 1] = bounds[k] + n / workers + usize::from(k < n % workers);
+        }
+        // one mailbox per link: (row, chain id) pairs in egress order,
+        // written by the upstream chip's worker in phase A, drained by the
+        // downstream chip's worker in phase B — never both in one phase
+        let outboxes: Vec<Mutex<Vec<(usize, u64)>>> =
+            (0..self.links.len()).map(|_| Mutex::new(Vec::new())).collect();
+        let barrier = Barrier::new(workers);
+        let acc = [AtomicU64::new(0), AtomicU64::new(0)];
+        let tracked = &self.tracked[..];
+        let mut parts: Vec<WorkerPart<'_, S>> = Vec::with_capacity(workers);
+        let mut chip_rest: &mut [SoaMesh<S>] = &mut self.chips;
+        let mut link_rest: &mut [EmioLink] = &mut self.links;
+        let mut link_cursor = 0usize;
+        for k in 0..workers {
+            let (lo, hi) = (bounds[k], bounds[k + 1]);
+            let (chips, rest) = chip_rest.split_at_mut(hi - lo);
+            chip_rest = rest;
+            let link_lo = if lo == 0 { 0 } else { lo - 1 };
+            let link_hi = hi - 1;
+            debug_assert_eq!(link_lo, link_cursor);
+            let (links, lrest) = link_rest.split_at_mut(link_hi - link_lo);
+            link_rest = lrest;
+            link_cursor = link_hi;
+            parts.push(WorkerPart { chip_lo: lo, chips, link_lo, links });
+        }
+        std::thread::scope(|scope| {
+            for part in parts {
+                let (outboxes, barrier, acc) = (&outboxes, &barrier, &acc);
+                scope.spawn(move || {
+                    let WorkerPart { chip_lo, chips, link_lo, links } = part;
+                    let pkt = Packet::spike(0, 0, 0, 0);
+                    let mut cycle = 0u64;
+                    loop {
+                        let now = start_now + cycle + 1;
+                        // phase A: owned chips step; East egress lands in
+                        // the downstream mailbox (read only after the
+                        // barrier — the double-buffer handoff)
+                        for (off, mesh) in chips.iter_mut().enumerate() {
+                            let c = chip_lo + off;
+                            mesh.step();
+                            if c < outboxes.len() {
+                                let mut mailbox = outboxes[c].lock().unwrap();
+                                for (row, flit) in mesh.east_egress.drain(..) {
+                                    mailbox.push((row, flit.id));
+                                }
+                            } else {
+                                // nothing East of the last chip
+                                mesh.east_egress.clear();
+                            }
+                        }
+                        barrier.wait();
+                        // phase B: owned links ingest their mailbox,
+                        // advance, and deliver into the downstream chip
+                        let mut local_backlog = 0u64;
+                        for (off, link) in links.iter_mut().enumerate() {
+                            let e = link_lo + off;
+                            {
+                                let mut mailbox = outboxes[e].lock().unwrap();
+                                for (row, id) in mailbox.drain(..) {
+                                    link.inject(row % LANES, &pkt, id, now);
+                                }
+                            }
+                            link.step(now);
+                            let arriving_chip = e + 1;
+                            let mesh = &mut chips[arriving_chip - chip_lo];
+                            for (frame, _) in link.delivered.drain(..) {
+                                let Some(tr) = tracked.get(frame.id as usize) else {
+                                    continue;
+                                };
+                                tr.crossings.fetch_add(1, Ordering::Relaxed);
+                                let (_, port) = Packet::decode_d2d(frame.wire);
+                                let row = port as usize % dim;
+                                let target = if tr.dest_chip as usize == arriving_chip {
+                                    tr.dest
+                                } else {
+                                    // repeater: keep heading East
+                                    Coord::new(dim, row)
+                                };
+                                let flit = Flit {
+                                    id: frame.id,
+                                    dest: target,
+                                    wire: frame.wire,
+                                    injected_at: tr.injected_at,
+                                    hops: 0,
+                                };
+                                mesh.inject_west_edge(row, flit);
+                            }
+                            local_backlog += link.pending() as u64;
+                        }
+                        for mesh in chips.iter() {
+                            local_backlog += mesh.backlog() as u64;
+                        }
+                        let parity = (cycle & 1) as usize;
+                        acc[parity].fetch_add(local_backlog, Ordering::Relaxed);
+                        barrier.wait();
+                        // every worker reads the same total -> same call
+                        let total = acc[parity].load(Ordering::Relaxed);
+                        acc[1 - parity].store(0, Ordering::Relaxed);
+                        cycle += 1;
+                        if total == 0 || cycle >= max_cycles {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        // chips carry the clock through the scope (chip now == chain now)
+        self.now = self.chips[0].now();
+        self.stats.cycles = self.now;
+    }
+}
+
+/// The unified engine surface: eastward transfers across any chip span,
+/// same contract as the serial [`super::chain::Chain`].
+impl<S: TelemetrySink + Send> CycleEngine for ParallelChain<S> {
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        ParallelChain::inject(self, ChainTraffic::from(t))
+    }
+
+    fn step(&mut self) {
+        ParallelChain::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        ParallelChain::pending(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        // faults are re-summed from chips + links every call (never cached
+        // in self.stats — ParallelChain::run reassigns that field)
+        let mut faults = FaultStats::default();
+        for m in &self.chips {
+            faults.absorb(&m.stats.faults);
+        }
+        for l in &self.links {
+            faults.absorb(&l.fault_stats());
+        }
+        NocStats {
+            injected: self.stats.injected,
+            delivered: self.chips.iter().map(|m| m.stats.delivered).sum(),
+            total_hops: self.chips.iter().map(|m| m.stats.total_hops).sum(),
+            total_latency: self.chips.iter().map(|m| m.stats.total_latency).sum(),
+            cycles: self.now,
+            faults,
+        }
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        ParallelChain::deliveries(self)
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        ParallelChain::latency_hist(self)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            FaultOp::Policy { seed, max_retries, drop_corrupted } => {
+                for (c, l) in self.links.iter_mut().enumerate() {
+                    l.fault_policy(c, seed, max_retries, drop_corrupted);
+                }
+            }
+            FaultOp::BitError { edge, rate } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].set_ber(edge, rate);
+            }
+            FaultOp::LinkDown { edge, from, until } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].add_outage(edge, from, until);
+            }
+            FaultOp::Stall { chip, router, from, until } => {
+                assert!(chip < self.chips.len(), "chain engine: chip {chip} out of range");
+                self.chips[chip].add_stall(router, from, until);
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        let mut events = Vec::new();
+        for l in &self.links {
+            events.extend_from_slice(l.fault_events());
+        }
+        FaultSink { stats: CycleEngine::stats(self).faults, events }.finish()
+    }
+
+    /// The threaded override: a multi-chip chain with a multi-thread
+    /// budget drains under scoped workers; everything else (1 chip, 1
+    /// thread) runs the serial loop the default impl would run.
+    fn drain(&mut self, max_cycles: u64) -> (NocStats, DrainOutcome) {
+        let workers = self.threads.min(self.chips.len());
+        if workers <= 1 {
+            let start = self.now;
+            while self.pending() > 0 && self.now - start < max_cycles {
+                self.step();
+            }
+        } else {
+            self.drain_threaded(workers, max_cycles);
+        }
+        let outcome =
+            if self.pending() == 0 { DrainOutcome::Drained } else { DrainOutcome::TimedOut };
+        (CycleEngine::stats(self), outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::chain::Chain;
+    use super::super::telemetry::DeliverySink;
+    use super::*;
+
+    /// Drive the same eastbound traffic through the serial chain and a
+    /// parallel chain at `threads`, drain both, and assert the whole
+    /// observable surface matches bit-for-bit.
+    fn assert_matches_serial(
+        chips: usize,
+        dim: usize,
+        threads: usize,
+        traffic: &[ChainTraffic],
+    ) -> NocStats {
+        let mut serial = Chain::<DeliverySink>::with_sinks(chips, dim);
+        let mut par = ParallelChain::<DeliverySink>::with_sinks_and_threads(chips, dim, threads);
+        for &t in traffic {
+            assert_eq!(serial.inject(t), par.inject(t));
+        }
+        let (s_stats, s_out) = CycleEngine::drain(&mut serial, 10_000_000);
+        let (p_stats, p_out) = CycleEngine::drain(&mut par, 10_000_000);
+        assert_eq!(p_out, s_out);
+        assert_eq!(p_stats, s_stats, "threads={threads}");
+        assert_eq!(CycleEngine::now(&par), CycleEngine::now(&serial));
+        assert_eq!(par.deliveries(), serial.deliveries(), "threads={threads}");
+        assert_eq!(par.latency_hist(), serial.latency_hist());
+        assert_eq!(CycleEngine::fault_sink(&par), CycleEngine::fault_sink(&serial));
+        p_stats
+    }
+
+    fn mixed_traffic(chips: usize, dim: usize) -> Vec<ChainTraffic> {
+        (0..120usize)
+            .map(|i| {
+                let src_chip = i % chips;
+                ChainTraffic {
+                    src_chip,
+                    src: Coord::new(i % dim, (i / 3) % dim),
+                    dest_chip: src_chip + (i % (chips - src_chip)),
+                    dest: Coord::new((i * 7) % dim, (i * 5) % dim),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_across_thread_counts() {
+        let traffic = mixed_traffic(5, 8);
+        let one = assert_matches_serial(5, 8, 1, &traffic);
+        let two = assert_matches_serial(5, 8, 2, &traffic);
+        let four = assert_matches_serial(5, 8, 4, &traffic);
+        assert_eq!(one, two);
+        assert_eq!(two, four);
+        assert_eq!(one.delivered, 120);
+    }
+
+    #[test]
+    fn more_workers_than_chips_is_capped_and_identical() {
+        let traffic = mixed_traffic(3, 4);
+        let stats = assert_matches_serial(3, 4, 64, &traffic);
+        assert_eq!(stats.delivered, 120);
+    }
+
+    #[test]
+    fn one_crossing_pays_one_serdes() {
+        let mut ch = ParallelChain::with_threads(2, 8, 2);
+        let id = ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 3),
+            dest_chip: 1,
+            dest: Coord::new(0, 3),
+        });
+        let stats = ch.run(10_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.crossings_of(id), 1);
+        let lat = stats.avg_latency();
+        assert!(lat >= 76.0 && lat <= 76.0 + 8.0, "lat={lat}");
+    }
+
+    #[test]
+    fn repeater_chip_passes_through() {
+        let mut ch = ParallelChain::with_threads(3, 8, 3);
+        ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(7, 4),
+            dest_chip: 2,
+            dest: Coord::new(3, 2),
+        });
+        let stats = ch.run(100_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.chips[1].stats.delivered, 0, "repeater must not eject");
+        assert_eq!(ch.chips[2].stats.delivered, 1);
+    }
+
+    #[test]
+    fn fault_plan_replays_identically_under_threads() {
+        let ops = [
+            FaultOp::Policy { seed: 0xFA17, max_retries: 2, drop_corrupted: false },
+            FaultOp::BitError { edge: 1, rate: 0.2 },
+            FaultOp::LinkDown { edge: 0, from: 40, until: 160 },
+            FaultOp::Stall { chip: 2, router: None, from: 10, until: 30 },
+        ];
+        let traffic = mixed_traffic(4, 8);
+        for threads in [1, 2, 4] {
+            let mut serial = Chain::<DeliverySink>::with_sinks(4, 8);
+            let mut par =
+                ParallelChain::<DeliverySink>::with_sinks_and_threads(4, 8, threads);
+            for op in ops {
+                CycleEngine::inject_fault(&mut serial, op);
+                CycleEngine::inject_fault(&mut par, op);
+            }
+            for &t in &traffic {
+                serial.inject(t);
+                par.inject(t);
+            }
+            let s = CycleEngine::drain(&mut serial, 10_000_000);
+            let p = CycleEngine::drain(&mut par, 10_000_000);
+            assert_eq!(p, s, "threads={threads}");
+            assert_eq!(par.deliveries(), serial.deliveries(), "threads={threads}");
+            let (sf, pf) =
+                (CycleEngine::fault_sink(&serial), CycleEngine::fault_sink(&par));
+            assert_eq!(pf, sf, "fault event order must survive threading");
+            assert!(pf.stats.corrupted > 0, "the BER edge must have fired");
+        }
+    }
+
+    #[test]
+    fn single_chip_chain_runs_serial_path() {
+        let mut ch = ParallelChain::with_threads(1, 8, 4);
+        ch.inject(ChainTraffic {
+            src_chip: 0,
+            src: Coord::new(0, 0),
+            dest_chip: 0,
+            dest: Coord::new(5, 5),
+        });
+        let stats = ch.run(10_000);
+        assert_eq!(stats.delivered, 1);
+        assert_eq!(ch.n_chips(), 1);
+    }
+
+    #[test]
+    fn threaded_drain_respects_cycle_cap() {
+        // a permanent outage strands the packet; the capped drain must
+        // stop at exactly the cap and report TimedOut, like the serial
+        let mut serial = Chain::new(3, 4);
+        let mut par = ParallelChain::with_threads(3, 4, 3);
+        for e in [&mut serial as &mut dyn CycleEngine, &mut par as &mut dyn CycleEngine] {
+            e.inject_fault(FaultOp::LinkDown { edge: 0, from: 0, until: u64::MAX });
+            e.inject(Transfer {
+                src_chip: 0,
+                src: Coord::new(3, 0),
+                dest_chip: 1,
+                dest: Coord::new(0, 0),
+            });
+        }
+        let (s_stats, s_out) = CycleEngine::drain(&mut serial, 500);
+        let (p_stats, p_out) = CycleEngine::drain(&mut par, 500);
+        assert_eq!((p_stats, p_out), (s_stats, s_out));
+        assert_eq!(p_out, DrainOutcome::TimedOut);
+        assert_eq!(CycleEngine::now(&par), 500);
+    }
+}

@@ -26,6 +26,15 @@ pub enum Port {
 
 pub const IN_PORTS: [Port; 5] = [Port::East, Port::West, Port::North, Port::South, Port::Local];
 
+/// All five output ports free — the per-cycle reset value of a router's
+/// credit mask (bit `i` set means the output at `port_idx` `i` is still
+/// available this cycle). The struct-of-arrays mesh ([`super::soa`]) keeps
+/// one mask per router in a flat array so the reset is a single
+/// `fill(ALL_CREDITS)` pass over contiguous bytes (autovectorizes), while
+/// [`Router::step_into`] burns a local mask — both run the exact same
+/// arbitration loop, [`Router::step_with_credits`].
+pub const ALL_CREDITS: u8 = 0b1_1111;
+
 /// A packet in flight inside one chip's mesh. Packed `Copy` value — the
 /// compile-time assertion below pins it to at most 32 bytes so FIFO slots
 /// stay half-a-cache-line and moves are plain memcpys.
@@ -115,17 +124,32 @@ impl Router {
     /// pairs to be delivered to neighbours next cycle; locally-destined
     /// packets are appended to `ejected`.
     pub fn step_into(&mut self, out: &mut Vec<(Port, Flit)>, ejected: &mut Vec<Flit>) {
-        let mut granted = [false; 5]; // output-port grants this cycle
+        let mut credits = ALL_CREDITS;
+        self.step_with_credits(&mut credits, out, ejected);
+    }
+
+    /// The arbitration loop behind [`Router::step_into`], operating on an
+    /// externally-held credit mask (one [`ALL_CREDITS`] byte per router;
+    /// see the constant's docs). A grant clears the output's credit bit; a
+    /// head packet whose output has no credit left waits for next cycle.
+    /// Both the AoS and SoA meshes call this one function, so their
+    /// arbitration semantics cannot diverge.
+    pub fn step_with_credits(
+        &mut self,
+        credits: &mut u8,
+        out: &mut Vec<(Port, Flit)>,
+        ejected: &mut Vec<Flit>,
+    ) {
         for in_p in IN_PORTS {
             let qi = Self::port_idx(in_p);
             // peek: decide output for the head packet
             let Some(head) = self.inq[qi].front() else { continue };
             let out_p = route_xy(self.at, head.dest);
             let oi = Self::port_idx(out_p);
-            if granted[oi] {
+            if *credits & (1 << oi) == 0 {
                 continue; // output busy this cycle; head waits
             }
-            granted[oi] = true;
+            *credits &= !(1 << oi);
             let mut flit = self.inq[qi].pop_front().unwrap();
             self.queued -= 1;
             if out_p == Port::Local {
@@ -213,6 +237,45 @@ mod tests {
         r.push(Port::Local, flit(Coord::new(4, 0))); // South
         let (out, _) = r.step();
         assert_eq!(out.len(), 4); // all four distinct outputs granted
+    }
+
+    #[test]
+    fn spent_credit_blocks_grant_until_reset() {
+        // a pre-cleared East credit must stall East traffic this cycle and
+        // release it after the mask resets — the SoA mesh's per-cycle
+        // `fill(ALL_CREDITS)` is exactly that reset
+        let mut r = Router::new(Coord::new(0, 0));
+        r.push(Port::Local, flit(Coord::new(3, 0))); // wants East (bit 0)
+        let mut credits = ALL_CREDITS & !1;
+        let (mut out, mut ej) = (Vec::new(), Vec::new());
+        r.step_with_credits(&mut credits, &mut out, &mut ej);
+        assert!(out.is_empty() && ej.is_empty());
+        assert_eq!(r.backlog(), 1);
+        credits = ALL_CREDITS;
+        r.step_with_credits(&mut credits, &mut out, &mut ej);
+        assert_eq!(out.len(), 1);
+        assert_eq!(credits, ALL_CREDITS & !1, "the grant burns the East credit");
+    }
+
+    #[test]
+    fn step_into_equals_fresh_credit_mask() {
+        // the delegation contract: step_into == step_with_credits(ALL_CREDITS)
+        let load = |r: &mut Router| {
+            r.push(Port::West, flit(Coord::new(2, 0)));
+            r.push(Port::Local, flit(Coord::new(3, 0)));
+            r.push(Port::North, flit(Coord::new(0, 0)));
+        };
+        let mut a = Router::new(Coord::new(0, 0));
+        let mut b = Router::new(Coord::new(0, 0));
+        load(&mut a);
+        load(&mut b);
+        let (out_a, ej_a) = a.step();
+        let mut credits = ALL_CREDITS;
+        let (mut out_b, mut ej_b) = (Vec::new(), Vec::new());
+        b.step_with_credits(&mut credits, &mut out_b, &mut ej_b);
+        assert_eq!(out_a, out_b);
+        assert_eq!(ej_a, ej_b);
+        assert_eq!(a.backlog(), b.backlog());
     }
 
     #[test]

@@ -38,7 +38,9 @@ use super::engine::{CycleEngine, DrainOutcome, NocStats, Transfer};
 use super::faults::{check_keys, FaultPlan};
 use super::harness::run_schedule;
 use super::mesh::Mesh;
+use super::parallel::ParallelChain;
 use super::reference::{RefChain, RefDuplex, RefMesh};
+use super::soa::SoaMesh;
 use super::telemetry::DeliverySink;
 use super::traffic::codec_edge_traffic;
 
@@ -417,6 +419,30 @@ impl Scenario {
         }
     }
 
+    /// Instantiate the parallel engine family for this scenario: the
+    /// multi-threaded [`ParallelChain`] for chains (SoA meshes per chip,
+    /// `threads == 0` selects the hardware parallelism), the SoA
+    /// [`SoaMesh`] for single meshes. A duplex has one chip per phase to
+    /// give a worker, so it falls back to the serial optimized engine —
+    /// all three choices honour the same determinism contract: results are
+    /// bit-identical to [`Scenario::build`] at any thread count.
+    pub fn build_parallel(&self, threads: usize) -> Box<dyn CycleEngine> {
+        match (self.topology, self.telemetry) {
+            (Topology::Mesh { dim }, false) => Box::new(SoaMesh::new(dim)),
+            (Topology::Mesh { dim }, true) => {
+                Box::new(SoaMesh::with_sink(dim, DeliverySink::new()))
+            }
+            (Topology::Duplex { dim }, false) => Box::new(Duplex::new(dim)),
+            (Topology::Duplex { dim }, true) => Box::new(Duplex::<DeliverySink>::with_sinks(dim)),
+            (Topology::Chain { chips, dim }, false) => {
+                Box::new(ParallelChain::with_threads(chips, dim, threads))
+            }
+            (Topology::Chain { chips, dim }, true) => {
+                Box::new(ParallelChain::<DeliverySink>::with_sinks_and_threads(chips, dim, threads))
+            }
+        }
+    }
+
     fn run_on(&self, e: &mut dyn CycleEngine) -> ScenarioResult {
         if let Some(plan) = &self.faults {
             for op in plan.ops(self.topology.chips() - 1) {
@@ -442,6 +468,14 @@ impl Scenario {
     /// Same run on the naive reference engine.
     pub fn run_reference(&self) -> ScenarioResult {
         let mut e = self.build_reference();
+        self.run_on(&mut *e)
+    }
+
+    /// Same run on the parallel engine family ([`Scenario::build_parallel`];
+    /// `threads == 0` selects the hardware parallelism). Bit-identical to
+    /// [`Scenario::run`] — thread count changes wall-clock, never results.
+    pub fn run_parallel(&self, threads: usize) -> ScenarioResult {
+        let mut e = self.build_parallel(threads);
         self.run_on(&mut *e)
     }
 
@@ -1263,5 +1297,105 @@ mod tests {
         assert_eq!(res.stats.delivered, 0);
         assert!(res.stats.faults.link_down_cycles > 0);
         assert!(res.stats.delivered_fraction() < 1.0);
+    }
+
+    #[test]
+    fn combined_feature_scenario_round_trips_as_one_document() {
+        use super::super::faults::{HotSpot, LinkDown, StallSpec};
+        // every scenario/v1 axis in ONE document: chain topology, boundary
+        // traffic with a per-edge codecs map, telemetry, an explicit cycle
+        // cap, and a fault plan exercising every block (ber + per-edge bers
+        // + link-down window + stall window + hotspot burst). The axes were
+        // previously only round-tripped in isolation.
+        let mut codecs = BTreeMap::new();
+        codecs.insert(0usize, CodecId::Dense);
+        codecs.insert(1usize, CodecId::TopKDelta);
+        codecs.insert(2usize, CodecId::Temporal);
+        let mut plan = FaultPlan::with_ber(3, 0.02);
+        plan.bers.insert(1, 0.1);
+        plan.link_down.push(LinkDown { edge: 0, from: 50, until: 90 });
+        plan.stalls.push(StallSpec { chip: 1, router: Some(3), from: 10, until: 30 });
+        plan.hotspots.push(HotSpot { at: 5, packets: 8, chip: 1, x: 2, y: 2 });
+        let sc = Scenario::chain(4, 8)
+            .with_telemetry()
+            .traffic(TrafficSpec::Boundary {
+                neurons: 16,
+                dense: 1,
+                activity: 0.2,
+                ticks: 8,
+                seed: 5,
+                codec: CodecId::Rate,
+                codecs,
+            })
+            .with_max_cycles(2_000_000)
+            .with_faults(plan);
+        let text = sc.to_json().to_string_pretty();
+        for key in ["\"codecs\"", "\"faults\"", "\"telemetry\"", "\"bers\"", "\"hotspots\""] {
+            assert!(text.contains(key), "{key} missing from the combined doc: {text}");
+        }
+        let back = Scenario::from_json_str(&text).expect("combined doc parses");
+        assert_eq!(back, sc);
+        assert_eq!(back.schedule(), sc.schedule());
+        // and the replay stays bit-identical across engine families
+        let (a, r) = (sc.run(), back.run_reference());
+        assert_eq!(a.stats, r.stats);
+        assert_eq!(a.tail, r.tail);
+        assert!(a.tail.is_some(), "telemetry survived the combination");
+        assert!(a.stats.faults.corrupted > 0, "the ber block survived the combination");
+    }
+
+    #[test]
+    fn unknown_keys_stay_rejected_in_combined_documents() {
+        // reject-unknown-key must survive the combination of every feature:
+        // the fully-loaded document parses, and the same document with one
+        // typo'd key per level errors instead of silently dropping the key.
+        let valid = r#"{"schema": "scenario/v1",
+            "topology": {"kind": "chain", "chips": 4, "dim": 8},
+            "traffic": {"kind": "boundary", "neurons": 16, "dense": 1,
+                        "activity": 0.2, "ticks": 8, "seed": 5,
+                        "codec": "rate", "codecs": {"0": "dense", "2": "temporal"}},
+            "telemetry": true, "max_cycles": 2000000,
+            "faults": {"seed": 3, "ber": 0.02, "bers": {"1": 0.1},
+                       "link_down": [{"edge": 0, "from": 50, "until": 90}],
+                       "stalls": [{"chip": 1, "router": 3, "from": 10, "until": 30}],
+                       "hotspots": [{"at": 5, "packets": 8, "chip": 1, "x": 2, "y": 2}]}}"#;
+        assert!(Scenario::from_json_str(valid).is_ok(), "the fully-loaded document is valid");
+        for (level, broken) in [
+            ("top level", valid.replace("\"telemetry\"", "\"telemetyr\"")),
+            ("traffic", valid.replace("\"ticks\"", "\"tikcs\"")),
+            ("traffic codecs", valid.replace("\"2\": \"temporal\"", "\"2\": \"morse\"")),
+            ("faults", valid.replace("\"ber\":", "\"bre\":")),
+            ("faults.stalls", valid.replace("\"router\"", "\"core\"")),
+            ("faults.hotspots", valid.replace("\"packets\"", "\"pakcets\"")),
+        ] {
+            assert!(Scenario::from_json_str(&broken).is_err(), "typo at {level} must error");
+        }
+    }
+
+    #[test]
+    fn parallel_engine_replays_scenarios_identically() {
+        use super::super::faults::LinkDown;
+        // the Scenario surface drives the threaded chain stepper with zero
+        // new driver code; results must be bit-identical to the serial
+        // engine at every thread count, faults and telemetry included
+        let mut plan = FaultPlan::with_ber(7, 0.05);
+        plan.link_down.push(LinkDown { edge: 1, from: 100, until: 400 });
+        let sc = Scenario::chain(4, 8)
+            .with_telemetry()
+            .traffic(TrafficSpec::FullSpan { packets: 48, seed: 13 })
+            .with_faults(plan);
+        let serial = sc.run();
+        for threads in [1, 2, 4] {
+            let par = sc.run_parallel(threads);
+            assert_eq!(par.stats, serial.stats, "threads={threads}: stats diverged");
+            assert_eq!(par.tail, serial.tail, "threads={threads}: tail diverged");
+            assert_eq!(par.outcome, serial.outcome);
+        }
+        // non-chain topologies keep working through build_parallel's
+        // single-threaded fallbacks
+        let mesh = Scenario::mesh(8).traffic(TrafficSpec::Uniform { packets: 32, seed: 3 });
+        assert_eq!(mesh.run_parallel(4).stats, mesh.run().stats);
+        let duplex = Scenario::duplex(8).traffic(TrafficSpec::Uniform { packets: 32, seed: 3 });
+        assert_eq!(duplex.run_parallel(4).stats, duplex.run().stats);
     }
 }

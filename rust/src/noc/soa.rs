@@ -1,0 +1,469 @@
+//! Struct-of-arrays mesh: the worklist engine of [`super::mesh`] with its
+//! per-router *scheduling* state — credit masks, backlog counters, dirty
+//! flags — hoisted out of the router structs into flat parallel arrays
+//! ([`SoaState`]).
+//!
+//! Why: the per-cycle credit/arbitration pass of the AoS mesh resets one
+//! stack-local mask per visited router, so nothing about the reset is
+//! vectorizable and the backlog re-check (`routers[i].backlog()`) chases a
+//! pointer per router. Here the reset is one `credits.fill(ALL_CREDITS)`
+//! over contiguous bytes (a memset the compiler autovectorizes) and the
+//! re-dirty decision reads `backlog[i]` from a flat `u32` array — the
+//! struct-of-arrays move from the ROADMAP perf item, with the KLU sparse
+//! kernels of `spicy_simulate` as the layout reference.
+//!
+//! Semantics are **bit-for-bit** those of [`super::mesh::Mesh`]: both
+//! engines arbitrate through the one shared
+//! [`super::router::Router::step_with_credits`] loop, visit dirty routers
+//! in the same ascending order, and apply moves/ejections in the same
+//! phases. The lockstep tests below and the SoA differential suite in
+//! `rust/tests/fuzz_noc.rs` hold that line; [`super::parallel`] builds its
+//! per-chip workers on this mesh.
+
+use crate::arch::chip::Coord;
+use crate::arch::packet::Packet;
+use crate::util::stats::LatencyHist;
+
+use super::engine::{CycleEngine, NocStats, Transfer};
+use super::faults::{FaultOp, FaultSink};
+use super::router::{Flit, Port, Router, ALL_CREDITS};
+use super::telemetry::{Delivery, NoopSink, TelemetrySink};
+use super::worklist::DirtySet;
+
+/// Flat per-router scheduling state (struct-of-arrays): index `i` is the
+/// row-major router index. `credits[i]` is router `i`'s output-credit mask
+/// for the current cycle, `backlog[i]` its queued-flit count, and `dirty`
+/// exactly the routers with `backlog[i] > 0`.
+#[derive(Debug, Clone)]
+pub struct SoaState {
+    /// Per-router output-credit masks, reset to
+    /// [`ALL_CREDITS`](super::router::ALL_CREDITS) in one flat pass per
+    /// cycle.
+    pub credits: Vec<u8>,
+    /// Per-router queued-flit counters (mirrors `Router::backlog`, flat).
+    pub backlog: Vec<u32>,
+    /// Exactly the routers holding at least one queued flit.
+    dirty: DirtySet,
+    /// Next cycle's dirty set (double-buffered scratch).
+    next_dirty: DirtySet,
+}
+
+impl SoaState {
+    fn new(n: usize) -> Self {
+        SoaState {
+            credits: vec![ALL_CREDITS; n],
+            backlog: vec![0; n],
+            dirty: DirtySet::new(n),
+            next_dirty: DirtySet::new(n),
+        }
+    }
+}
+
+/// An N x N mesh with SoA scheduling state — the drop-in counterpart of
+/// [`super::mesh::Mesh`] (same constructors, same public surface, same
+/// [`CycleEngine`] impl, bit-identical behaviour).
+#[derive(Debug, Clone)]
+pub struct SoaMesh<S: TelemetrySink = NoopSink> {
+    pub dim: usize,
+    routers: Vec<Router>,
+    pub stats: NocStats,
+    /// Per-packet delivery observer (a [`NoopSink`] unless constructed via
+    /// [`SoaMesh::with_sink`]).
+    pub sink: S,
+    now: u64,
+    next_id: u64,
+    /// Packets that exited the East edge, ascending router-index order
+    /// within a cycle (see [`super::mesh::Mesh::east_egress`]).
+    pub east_egress: Vec<(usize, Flit)>, // (row, flit)
+    /// Stall-fault windows `(from, until, router)` (see [`super::faults`]).
+    stalls: Vec<(u64, u64, Option<u32>)>,
+    /// The flat scheduling state.
+    soa: SoaState,
+    /// O(1) total queued flits across all routers.
+    queued: usize,
+    /// Scratch buffers reused every cycle (allocation-free stepping).
+    order: Vec<u32>,
+    grants: Vec<(Port, Flit)>,
+    moves: Vec<(usize, Port, Flit)>,
+    ejected: Vec<Flit>,
+}
+
+impl SoaMesh<NoopSink> {
+    /// A telemetry-free SoA mesh.
+    pub fn new(dim: usize) -> Self {
+        Self::with_sink(dim, NoopSink)
+    }
+}
+
+impl<S: TelemetrySink> SoaMesh<S> {
+    /// A mesh recording per-packet deliveries into `sink`.
+    pub fn with_sink(dim: usize, sink: S) -> Self {
+        let routers = (0..dim * dim)
+            .map(|i| Router::new(Coord::new(i % dim, i / dim)))
+            .collect();
+        SoaMesh {
+            dim,
+            routers,
+            stats: NocStats::default(),
+            sink,
+            now: 0,
+            next_id: 0,
+            east_egress: Vec::new(),
+            stalls: Vec::new(),
+            soa: SoaState::new(dim * dim),
+            queued: 0,
+            order: Vec::new(),
+            grants: Vec::new(),
+            moves: Vec::new(),
+            ejected: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn idx(&self, c: Coord) -> usize {
+        c.y as usize * self.dim + c.x as usize
+    }
+
+    /// See [`super::mesh::Mesh::inject`].
+    pub fn inject(&mut self, src: Coord, dest: Coord) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.inject_with_id(src, dest, id);
+        id
+    }
+
+    /// See [`super::mesh::Mesh::inject_with_id`] (same 9-bit wire-field
+    /// clamp semantics; routing always follows `Flit::dest`).
+    pub fn inject_with_id(&mut self, src: Coord, dest: Coord, id: u64) {
+        let dx = dest.x as i32 - src.x as i32;
+        let dy = dest.y as i32 - src.y as i32;
+        debug_assert!(
+            (-256..=255).contains(&dx) && (-256..=255).contains(&dy),
+            "route offset ({dx}, {dy}) exceeds the 9-bit wire field and would be clamped \
+             in the encoded word (delivery still follows Flit::dest)"
+        );
+        let pkt = Packet::activation(dx.clamp(-256, 255), dy.clamp(-256, 255), 0, 0);
+        let flit = Flit { id, dest, wire: pkt.encode(), injected_at: self.now, hops: 0 };
+        let i = self.idx(src);
+        self.routers[i].push(Port::Local, flit);
+        self.soa.backlog[i] += 1;
+        self.soa.dirty.insert(i);
+        self.queued += 1;
+        self.stats.injected += 1;
+    }
+
+    /// See [`super::mesh::Mesh::inject_west_edge`].
+    pub fn inject_west_edge(&mut self, row: usize, mut flit: Flit) {
+        flit.injected_at = flit.injected_at.min(self.now);
+        let i = self.idx(Coord::new(0, row));
+        self.routers[i].push(Port::West, flit);
+        self.soa.backlog[i] += 1;
+        self.soa.dirty.insert(i);
+        self.queued += 1;
+        self.stats.injected += 1;
+    }
+
+    /// See [`super::mesh::Mesh::add_stall`].
+    pub fn add_stall(&mut self, router: Option<usize>, from: u64, until: u64) {
+        self.stalls.push((from, until, router.map(|r| r as u32)));
+    }
+
+    fn stalled(&self, i: usize) -> bool {
+        self.stalls
+            .iter()
+            .any(|&(from, until, r)| from <= self.now && self.now < until && r.map_or(true, |r| r as usize == i))
+    }
+
+    /// Advance one cycle — the same phases as [`super::mesh::Mesh::step`],
+    /// with the scheduling reads/writes going through [`SoaState`].
+    pub fn step(&mut self) {
+        self.now += 1;
+        self.stats.cycles = self.now;
+        let dim = self.dim;
+        // the SoA payoff: one contiguous credit reset for the whole grid
+        // instead of a stack-local mask per visited router
+        self.soa.credits.fill(ALL_CREDITS);
+        let mut order = std::mem::take(&mut self.order);
+        let mut grants = std::mem::take(&mut self.grants);
+        let mut moves = std::mem::take(&mut self.moves);
+        let mut ejected = std::mem::take(&mut self.ejected);
+        let mut next = std::mem::take(&mut self.soa.next_dirty);
+        order.clear();
+        moves.clear();
+        ejected.clear();
+        next.clear();
+        // snapshot the worklist in ascending (row-major) order
+        self.soa.dirty.for_each(|i| order.push(i as u32));
+        for &ii in &order {
+            let i = ii as usize;
+            // a stalled router skips arbitration this cycle but stays on
+            // the worklist — its backlog is untouched
+            if !self.stalls.is_empty() && self.stalled(i) {
+                self.stats.faults.stall_cycles += 1;
+                next.insert(i);
+                continue;
+            }
+            let x = i % dim;
+            let y = i / dim;
+            grants.clear();
+            let ejected_before = ejected.len();
+            self.routers[i].step_with_credits(&mut self.soa.credits[i], &mut grants, &mut ejected);
+            let popped = grants.len() + (ejected.len() - ejected_before);
+            self.soa.backlog[i] -= popped as u32;
+            debug_assert_eq!(self.soa.backlog[i] as usize, self.routers[i].backlog());
+            for (out_p, flit) in grants.drain(..) {
+                match out_p {
+                    Port::East if x + 1 < dim => {
+                        moves.push((i + 1, Port::West, flit));
+                    }
+                    Port::East => {
+                        // boundary egress: leaves the chip Eastward
+                        self.east_egress.push((y, flit));
+                        self.queued -= 1;
+                    }
+                    Port::West if x > 0 => {
+                        moves.push((i - 1, Port::East, flit));
+                    }
+                    Port::West => {
+                        self.queued -= 1; // dropped at the chip edge (no West link)
+                    }
+                    Port::North if y + 1 < dim => {
+                        moves.push((i + dim, Port::South, flit));
+                    }
+                    Port::South if y > 0 => {
+                        moves.push((i - dim, Port::North, flit));
+                    }
+                    _ => {
+                        self.queued -= 1; // off-mesh vertical: dropped
+                    }
+                }
+            }
+            if self.soa.backlog[i] > 0 {
+                next.insert(i); // loser heads wait for the next cycle
+            }
+        }
+        for (i, p, f) in moves.drain(..) {
+            self.routers[i].push(p, f);
+            self.soa.backlog[i] += 1;
+            next.insert(i);
+        }
+        // collect ejections
+        self.queued -= ejected.len();
+        for f in ejected.drain(..) {
+            self.stats.delivered += 1;
+            self.stats.total_hops += f.hops as u64;
+            self.stats.total_latency += self.now - f.injected_at;
+            self.sink.delivered(Delivery {
+                id: f.id,
+                injected_at: f.injected_at,
+                delivered_at: self.now,
+                crossings: 0,
+                hops: f.hops,
+            });
+        }
+        self.order = order;
+        self.grants = grants;
+        self.moves = moves;
+        self.ejected = ejected;
+        // `next` becomes the live worklist; the old one is next cycle's scratch
+        self.soa.next_dirty = std::mem::replace(&mut self.soa.dirty, next);
+    }
+
+    /// Total queued packets across all routers — O(1).
+    pub fn backlog(&self) -> usize {
+        self.queued
+    }
+
+    /// Run until the mesh drains (or `max_cycles` elapses). Returns cycles.
+    pub fn run_to_drain(&mut self, max_cycles: u64) -> u64 {
+        let start = self.now;
+        while self.backlog() > 0 && self.now - start < max_cycles {
+            self.step();
+        }
+        self.now - start
+    }
+}
+
+/// The unified engine surface — identical contract to the AoS
+/// [`super::mesh::Mesh`] impl (single-chip transfers only).
+impl<S: TelemetrySink> CycleEngine for SoaMesh<S> {
+    fn now(&self) -> u64 {
+        SoaMesh::now(self)
+    }
+
+    fn inject(&mut self, t: Transfer) -> u64 {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 0),
+            "mesh engine: single-chip transfers only"
+        );
+        SoaMesh::inject(self, t.src, t.dest)
+    }
+
+    fn step(&mut self) {
+        SoaMesh::step(self)
+    }
+
+    fn backlog(&self) -> usize {
+        SoaMesh::backlog(self)
+    }
+
+    fn stats(&self) -> NocStats {
+        self.stats
+    }
+
+    fn deliveries(&self) -> Vec<Delivery> {
+        self.sink.deliveries().to_vec()
+    }
+
+    fn latency_hist(&self) -> LatencyHist {
+        self.sink.hist().cloned().unwrap_or_default()
+    }
+
+    fn inject_west_edge(&mut self, row: usize, flit: Flit) {
+        SoaMesh::inject_west_edge(self, row, flit)
+    }
+
+    fn inject_with_id(&mut self, t: Transfer, id: u64) {
+        assert_eq!(
+            (t.src_chip, t.dest_chip),
+            (0, 0),
+            "mesh engine: single-chip transfers only"
+        );
+        SoaMesh::inject_with_id(self, t.src, t.dest, id)
+    }
+
+    fn inject_fault(&mut self, op: FaultOp) {
+        match op {
+            // the policy seeds per-edge link RNGs; a single mesh has none
+            FaultOp::Policy { .. } => {}
+            FaultOp::Stall { chip, router, from, until } => {
+                assert_eq!(chip, 0, "mesh engine: single-chip stall only");
+                self.add_stall(router, from, until);
+            }
+            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } => {
+                panic!("mesh engine has no EMIO edges for link faults");
+            }
+        }
+    }
+
+    fn fault_sink(&self) -> FaultSink {
+        FaultSink { stats: self.stats.faults, events: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mesh::Mesh;
+    use super::super::telemetry::DeliverySink;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Step both meshes one cycle and assert the full observable surface.
+    fn assert_cycle_identical(aos: &mut Mesh<DeliverySink>, soa: &mut SoaMesh<DeliverySink>) {
+        aos.step();
+        soa.step();
+        assert_eq!(soa.now(), aos.now());
+        assert_eq!(soa.backlog(), aos.backlog());
+        assert_eq!(soa.stats, aos.stats);
+        assert_eq!(soa.east_egress, aos.east_egress);
+        assert_eq!(soa.sink.deliveries, aos.sink.deliveries);
+    }
+
+    #[test]
+    fn soa_mesh_matches_aos_mesh_on_random_load() {
+        let mut rng = Rng::new(0x50A_0001);
+        let mut aos = Mesh::with_sink(8, DeliverySink::new());
+        let mut soa = SoaMesh::with_sink(8, DeliverySink::new());
+        for step in 0..400u32 {
+            if step % 3 != 2 {
+                let s = Coord::new(rng.range(0, 8), rng.range(0, 8));
+                let d = Coord::new(rng.range(0, 9), rng.range(0, 8)); // x==8: egress
+                aos.inject(s, d);
+                soa.inject(s, d);
+            }
+            assert_cycle_identical(&mut aos, &mut soa);
+        }
+        while aos.backlog() > 0 {
+            assert_cycle_identical(&mut aos, &mut soa);
+        }
+        assert!(aos.stats.delivered > 0);
+        assert_eq!(soa.sink.hist, aos.sink.hist);
+    }
+
+    #[test]
+    fn stall_windows_count_identically() {
+        let mut aos = Mesh::with_sink(8, DeliverySink::new());
+        let mut soa = SoaMesh::with_sink(8, DeliverySink::new());
+        // a chip-wide window plus a single-router window, overlapping
+        aos.add_stall(None, 1, 11);
+        soa.add_stall(None, 1, 11);
+        aos.add_stall(Some(0), 5, 25);
+        soa.add_stall(Some(0), 5, 25);
+        aos.inject(Coord::new(0, 0), Coord::new(3, 0));
+        soa.inject(Coord::new(0, 0), Coord::new(3, 0));
+        aos.inject(Coord::new(0, 7), Coord::new(3, 7));
+        soa.inject(Coord::new(0, 7), Coord::new(3, 7));
+        while aos.backlog() > 0 {
+            assert_cycle_identical(&mut aos, &mut soa);
+        }
+        assert_eq!(soa.stats.delivered, 2);
+        assert!(soa.stats.faults.stall_cycles > 0);
+        assert_eq!(soa.stats.faults, aos.stats.faults);
+    }
+
+    #[test]
+    fn west_edge_ingress_and_backlog_counters_match() {
+        let mut aos = Mesh::with_sink(4, DeliverySink::new());
+        let mut soa = SoaMesh::with_sink(4, DeliverySink::new());
+        for row in 0..4usize {
+            let flit = Flit {
+                id: 100 + row as u64,
+                dest: Coord::new(3, row),
+                wire: 0,
+                injected_at: 0,
+                hops: 0,
+            };
+            aos.inject_west_edge(row, flit);
+            soa.inject_west_edge(row, flit);
+        }
+        while aos.backlog() > 0 {
+            assert_cycle_identical(&mut aos, &mut soa);
+        }
+        assert_eq!(soa.stats.delivered, 4);
+    }
+
+    #[test]
+    fn dim1_mesh_delivers_and_egresses() {
+        let mut m = SoaMesh::new(1);
+        m.inject(Coord::new(0, 0), Coord::new(0, 0));
+        m.run_to_drain(100);
+        assert_eq!(m.stats.delivered, 1);
+        assert_eq!(m.stats.total_latency, 1);
+        m.inject(Coord::new(0, 0), Coord::new(1, 0));
+        m.run_to_drain(100);
+        assert_eq!(m.east_egress.len(), 1);
+        assert_eq!(m.backlog(), 0);
+    }
+
+    #[test]
+    fn saturating_grid_drains_identically() {
+        let dim = 8;
+        let mut aos = Mesh::with_sink(dim, DeliverySink::new());
+        let mut soa = SoaMesh::with_sink(dim, DeliverySink::new());
+        for y in 0..dim {
+            for x in 0..dim {
+                let (s, d) = (Coord::new(x, y), Coord::new(dim - 1 - x, dim - 1 - y));
+                aos.inject(s, d);
+                soa.inject(s, d);
+            }
+        }
+        while aos.backlog() > 0 {
+            assert_cycle_identical(&mut aos, &mut soa);
+        }
+        assert_eq!(soa.stats.delivered, (dim * dim) as u64);
+    }
+}

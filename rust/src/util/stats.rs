@@ -430,4 +430,73 @@ mod tests {
             }
         }
     }
+
+    #[test]
+    fn hist_merge_is_associative_commutative_and_order_independent() {
+        // the parallel chain engine folds per-chip histograms in partition
+        // order, which changes with the thread count; bins are plain u64
+        // sums, so ANY partition of one delivery stream merged in ANY order
+        // must reproduce the serial histogram exactly — counts, extrema,
+        // and every quantile. This is the determinism contract that lets
+        // `ParallelChain::latency_hist` stay thread-count-invariant.
+        let mut rng = crate::util::rng::Rng::new(0x7157);
+        for case in 0..10u64 {
+            let n = 200 + rng.range(0, 1_500);
+            let stream: Vec<u64> = (0..n)
+                .map(|_| {
+                    let e = rng.range(0, 22) as u32;
+                    rng.below(1u64 << e.max(1))
+                })
+                .collect();
+            let mut serial = LatencyHist::new();
+            for &v in &stream {
+                serial.record(v);
+            }
+
+            for threads in 1..=5usize {
+                // two partition shapes: contiguous per-thread chunks (what
+                // the worker split produces) and round-robin interleaving
+                let mut chunked = vec![LatencyHist::new(); threads];
+                let per = n.div_ceil(threads);
+                let mut robin = vec![LatencyHist::new(); threads];
+                for (i, &v) in stream.iter().enumerate() {
+                    chunked[(i / per).min(threads - 1)].record(v);
+                    robin[i % threads].record(v);
+                }
+                for shards in [&chunked, &robin] {
+                    // commutative + order-independent: every rotation of the
+                    // shard order folds to the same histogram
+                    for rot in 0..threads {
+                        let mut merged = LatencyHist::new();
+                        for k in 0..threads {
+                            merged.merge(&shards[(k + rot) % threads]);
+                        }
+                        assert_eq!(merged, serial, "case {case} threads={threads} rot={rot}");
+                        assert_eq!(merged.p50(), serial.p50());
+                        assert_eq!(merged.p99(), serial.p99());
+                        assert_eq!(merged.p999(), serial.p999());
+                        assert_eq!(merged.min(), serial.min());
+                        assert_eq!(merged.max(), serial.max());
+                    }
+                }
+            }
+
+            // associative: (a . b) . c == a . (b . c) on a random 3-way cut
+            let cut1 = 1 + (rng.below((n - 2) as u64) as usize);
+            let cut2 = cut1 + 1 + (rng.below((n - cut1 - 1) as u64) as usize);
+            let mut parts = [LatencyHist::new(), LatencyHist::new(), LatencyHist::new()];
+            for (i, &v) in stream.iter().enumerate() {
+                parts[usize::from(i >= cut1) + usize::from(i >= cut2)].record(v);
+            }
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            let mut bc = parts[1].clone();
+            bc.merge(&parts[2]);
+            let mut right = parts[0].clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "case {case}: merge is not associative");
+            assert_eq!(left, serial, "case {case}: 3-way cut lost samples");
+        }
+    }
 }

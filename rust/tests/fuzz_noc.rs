@@ -23,7 +23,10 @@
 use spikelink::arch::chip::Coord;
 use spikelink::noc::reference::{RefChain, RefDuplex, RefMesh};
 use spikelink::noc::router::Flit;
-use spikelink::noc::{lockstep, Chain, DeliverySink, Duplex, FaultOp, Mesh, Op, Transfer};
+use spikelink::noc::{
+    lockstep, Chain, CycleEngine, DeliverySink, Duplex, FaultOp, Mesh, Op, ParallelChain, SoaMesh,
+    Transfer,
+};
 
 /// Minimal 64-bit LCG (Knuth MMIX constants). Deliberately *not* the
 /// crate's xoshiro [`spikelink::util::rng::Rng`]: the fuzzer's schedule
@@ -388,6 +391,159 @@ fn fuzz_chain_fault_case(seed: u64) {
 fn fuzz_chain_fault_differential() {
     for i in 0..fuzz_iters() {
         fuzz_chain_fault_case(0xC4A1_FA00 + i);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel engines: the threaded chain stepper and the SoA mesh replay the
+// exact same op scripts (same seed bases, so byte-identical schedules) against
+// the same naive oracles, with per-op equality of clock / backlog / stats /
+// per-packet records / fault-sink order enforced by `lockstep`. threads ∈
+// {1, 2, 4} covers the serial fallback (1), uneven chip splits (2), and the
+// widest split the 8-chip cap sees (4).
+// ---------------------------------------------------------------------------
+
+const FUZZ_THREADS: [usize; 3] = [1, 2, 4];
+
+fn fuzz_parallel_chain_case(seed: u64, threads: usize) {
+    let mut rng = Lcg::new(seed);
+    let chips = 1 + rng.below(8) as usize; // 1..=8
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let mut c = ParallelChain::<DeliverySink>::with_sinks_and_threads(chips, dim, threads);
+    let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
+    let ops = chain_ops(&mut rng, chips, dim);
+    let ctx = format!("parallel-chain chips={chips} dim={dim} threads={threads} seed={seed:#x}");
+    let stats = lockstep(&mut c, &mut r, &ops, &ctx);
+    assert_eq!(stats.delivered, stats.injected, "{ctx}: chain lost packets");
+    // per-chip internals the trait surface cannot see
+    for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
+        assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} stats diverged");
+        assert_eq!(mc.sink.deliveries, mr.sink.deliveries, "{ctx}: chip {i} records diverged");
+    }
+    for d in &c.deliveries() {
+        assert_eq!(
+            d.crossings as usize,
+            c.crossings_of(d.id),
+            "{ctx}: patched crossings disagree with tracked table"
+        );
+        assert!(
+            d.latency() >= 76 * d.crossings as u64,
+            "{ctx}: id {} undercut the SerDes floor",
+            d.id
+        );
+    }
+}
+
+#[test]
+fn fuzz_parallel_chain_differential() {
+    for threads in FUZZ_THREADS {
+        for i in 0..fuzz_iters() {
+            fuzz_parallel_chain_case(0xC4A1_0000 + i, threads);
+        }
+    }
+}
+
+fn fuzz_parallel_chain_fault_case(seed: u64, threads: usize) {
+    let mut rng = Lcg::new(seed);
+    let chips = 1 + rng.below(6) as usize; // 1..=6
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let mut c = ParallelChain::<DeliverySink>::with_sinks_and_threads(chips, dim, threads);
+    let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
+    let ops = chain_fault_ops(&mut rng, chips, dim);
+    let ctx = format!(
+        "parallel-chain-faults chips={chips} dim={dim} threads={threads} seed={seed:#x}"
+    );
+    let stats = lockstep(&mut c, &mut r, &ops, &ctx);
+    assert_eq!(stats.delivered + stats.faults.dropped, stats.injected, "{ctx}: packets leaked");
+    assert_eq!(
+        stats.faults.corrupted,
+        stats.faults.retried + stats.faults.dropped,
+        "{ctx}: corruption accounting broke"
+    );
+    for (i, (mc, mr)) in c.chips.iter().zip(r.chips.iter()).enumerate() {
+        assert_eq!(mc.stats, mr.stats, "{ctx}: chip {i} stats diverged");
+        assert_eq!(mc.sink.deliveries, mr.sink.deliveries, "{ctx}: chip {i} records diverged");
+    }
+    for d in &c.deliveries() {
+        assert!(
+            d.latency() >= 76 * d.crossings as u64,
+            "{ctx}: id {} undercut the SerDes floor",
+            d.id
+        );
+    }
+}
+
+#[test]
+fn fuzz_parallel_chain_fault_differential() {
+    for threads in FUZZ_THREADS {
+        for i in 0..fuzz_iters() {
+            fuzz_parallel_chain_fault_case(0xC4A1_FA00 + i, threads);
+        }
+    }
+}
+
+fn fuzz_soa_mesh_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let dim = 1 + rng.below(16) as usize; // 1..=16
+    let mut m = SoaMesh::with_sink(dim, DeliverySink::new());
+    let mut r = RefMesh::with_sink(dim, DeliverySink::new());
+    let ops = mesh_ops(&mut rng, dim);
+    lockstep(&mut m, &mut r, &ops, &format!("soa-mesh dim={dim} seed={seed:#x}"));
+    assert_eq!(m.backlog(), 0, "seed={seed:#x}: SoA mesh failed to drain");
+    assert_eq!(m.east_egress, r.east_egress, "seed={seed:#x}: east egress diverged");
+}
+
+#[test]
+fn fuzz_soa_mesh_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_soa_mesh_case(0x5EED_0000 + i);
+    }
+}
+
+fn fuzz_soa_mesh_fault_case(seed: u64) {
+    let mut rng = Lcg::new(seed);
+    let dim = 1 + rng.below(8) as usize; // 1..=8
+    let mut m = SoaMesh::with_sink(dim, DeliverySink::new());
+    let mut r = RefMesh::with_sink(dim, DeliverySink::new());
+    let ops = mesh_fault_ops(&mut rng, dim);
+    lockstep(&mut m, &mut r, &ops, &format!("soa-mesh-faults dim={dim} seed={seed:#x}"));
+    assert_eq!(m.backlog(), 0, "seed={seed:#x}: SoA mesh failed to drain past the stalls");
+    assert_eq!(m.east_egress, r.east_egress, "seed={seed:#x}: east egress diverged");
+}
+
+#[test]
+fn fuzz_soa_mesh_fault_differential() {
+    for i in 0..fuzz_iters() {
+        fuzz_soa_mesh_fault_case(0x57A1_1000 + i);
+    }
+}
+
+#[test]
+fn parallel_chain_thread_counts_agree_with_each_other() {
+    // the headline determinism contract, end to end on the fuzz scripts:
+    // the SAME script replayed at threads 1 / 2 / 4 yields bit-identical
+    // stats, per-packet records, and fault-sink events — not just
+    // equivalence to the oracle, but equality across schedules.
+    for i in 0..fuzz_iters() {
+        let seed = 0xC4A1_FA00 + i;
+        let mut runs = Vec::new();
+        for threads in FUZZ_THREADS {
+            let mut rng = Lcg::new(seed);
+            let chips = 1 + rng.below(6) as usize;
+            let dim = 1 + rng.below(8) as usize;
+            let ops = chain_fault_ops(&mut rng, chips, dim);
+            let mut c = ParallelChain::<DeliverySink>::with_sinks_and_threads(chips, dim, threads);
+            let mut r = RefChain::<DeliverySink>::with_sinks(chips, dim);
+            let ctx = format!("threads-agree chips={chips} dim={dim} threads={threads}");
+            let stats = lockstep(&mut c, &mut r, &ops, &ctx);
+            runs.push((stats, c.deliveries(), c.fault_sink()));
+        }
+        let (s1, d1, f1) = &runs[0];
+        for (s, d, f) in &runs[1..] {
+            assert_eq!(s, s1, "seed={seed:#x}: stats diverged across thread counts");
+            assert_eq!(d, d1, "seed={seed:#x}: records diverged across thread counts");
+            assert_eq!(f, f1, "seed={seed:#x}: fault events diverged across thread counts");
+        }
     }
 }
 

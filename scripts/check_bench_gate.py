@@ -43,6 +43,15 @@ default-lineage dim coverage.
 appended by the latest bench is floor-checked like any other case, but a
 degraded-fabric number can never vouch for the clean {8, 16, 32} dim
 coverage the gate was written around.
+
+`parallel-vs-serial` records (`noc/chain8x8/1m-transfers/parallel-vs-serial`,
+unit "x-vs-serial" — the threaded chain stepper's throughput over the serial
+engine's on the identical load, see EXPERIMENTS.md §Perf "Parallel engine")
+are a floor-checked *extra* family like the suffixes: those appended by the
+latest run must stay >= 0.5x (threading may never cost more than half the
+serial throughput), they can never vouch for the default-lineage mesh dim
+coverage (a different unit entirely), and a parallel case a past run emitted
+but the bench no longer produces is not gated forever.
 """
 
 import json
@@ -53,6 +62,7 @@ FLOOR = 5.0
 EXPECTED = 3  # sparse speedup records per bench run: mesh dims 8, 16, 32
 EXPECTED_DIMS = {8, 16, 32}
 TELEMETRY_CEILING = 1.05  # telemetry-on may cost at most 5% vs NoopSink
+PARALLEL_FLOOR = 0.5  # the threaded stepper may cost at most 2x vs serial
 
 # matches "mesh16" (v1/v2 and scenario labels) and "mesh-16" (hyphenated
 # scenario labels), wherever they sit in the record name
@@ -164,6 +174,38 @@ def check_speedups(path, records):
         sys.exit("sparse-load speedup below the 5x acceptance floor: " + ", ".join(failed))
     extra = f" (+{len(latest_suffixed)} suffixed cases)" if latest_suffixed else ""
     print(f"speedup gate passed: all {EXPECTED} sparse cases >= {FLOOR}x{extra}")
+    return run_start
+
+
+def check_parallel_vs_serial(path, records, run_start):
+    """Floor-check this run's `parallel-vs-serial` records (unit
+    "x-vs-serial"). Like the codec/mixed/fault suffix families the records
+    are extras: absence is fine (older trajectories predate the parallel
+    engine, and a case a past run emitted is not gated forever), only
+    records appended at or after this run's default lineage are examined
+    (latest per name), and they never vouch for the x-vs-ref dim coverage —
+    the unit alone keeps them out of `check_speedups`."""
+    latest = {}
+    for r in records[run_start:]:
+        if r.get("unit") == "x-vs-serial":
+            latest[r.get("name", "")] = r
+    if not latest:
+        print("parallel gate skipped: no x-vs-serial records in this run")
+        return
+    failed = []
+    for name in sorted(latest):
+        r = latest[name]
+        ok = r["throughput"] >= PARALLEL_FLOOR
+        verdict = "OK" if ok else f"BELOW {PARALLEL_FLOOR}x FLOOR"
+        print(f"{name}: {r['throughput']:.2f}x vs serial  [{verdict}]")
+        if not ok:
+            failed.append(name)
+    if failed:
+        sys.exit(
+            f"parallel-vs-serial speedup below the {PARALLEL_FLOOR}x acceptance floor: "
+            + ", ".join(failed)
+        )
+    print(f"parallel gate passed: {len(latest)} parallel-vs-serial case(s) >= {PARALLEL_FLOOR}x")
 
 
 def check_telemetry_overhead(path, records):
@@ -188,7 +230,8 @@ def check_telemetry_overhead(path, records):
 
 def main(path: str) -> None:
     records = load(path)
-    check_speedups(path, records)
+    run_start = check_speedups(path, records)
+    check_parallel_vs_serial(path, records, run_start)
     check_telemetry_overhead(path, records)
 
 

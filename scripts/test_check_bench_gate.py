@@ -46,6 +46,16 @@ CASES = {
     "fault_below_floor.json": (False, "below the 5x acceptance floor"),
     # ...and never a substitute for the clean-run dim coverage
     "fault_only_speedups.json": (False, "bench did not complete"),
+    # parallel-vs-serial records (threaded chain stepper, unit x-vs-serial)
+    # are the fourth extra family: floor-checked next to an intact default
+    # lineage...
+    "parallel_labels_pass.json": (True, "parallel gate passed"),
+    # ...held to the 0.5x floor (threading must never halve throughput)...
+    "parallel_below_floor.json": (False, "below the 0.5x acceptance floor"),
+    # ...a stale below-floor record from a prior run is not gated forever...
+    "parallel_stale_ignored.json": (True, "parallel gate passed"),
+    # ...and x-vs-serial records alone can never satisfy the dim coverage
+    "parallel_only_speedups.json": (False, "bench did not complete"),
     "fail_speedup.json": (False, "below the 5x acceptance floor"),
     "fail_overhead.json": (False, "exceeds the 1.05x (5%) acceptance ceiling"),
     "incomplete.json": (False, "bench did not complete"),
@@ -115,6 +125,18 @@ class GateFixtureTests(unittest.TestCase):
         self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
         self.assertIn("noc/scenario/mesh-32/sparse/speedup", proc.stdout)
         self.assertIn("24.00x vs reference", proc.stdout)
+
+    def test_stale_parallel_record_does_not_leak(self):
+        # the prior run's 0.30x record must not appear in the fresh verdict
+        proc = run_gate("parallel_stale_ignored.json")
+        combined = proc.stdout + proc.stderr
+        self.assertEqual(proc.returncode, 0, combined)
+        self.assertNotIn("0.30x", combined, "stale parallel record leaked into the verdict")
+        self.assertIn("1.50x vs serial", combined)
+
+    def test_parallel_failure_names_the_case(self):
+        proc = run_gate("parallel_below_floor.json")
+        self.assertIn("noc/chain16x8/1m-transfers/parallel-vs-serial", proc.stdout + proc.stderr)
 
     def test_dim_coverage_failure_names_the_dims(self):
         proc = run_gate("wrong_dims.json")
