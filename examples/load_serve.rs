@@ -1,0 +1,146 @@
+//! Load test for `spikelink serve`: start the service in-process on an
+//! ephemeral port, hammer `POST /simulate` from many client threads cycling
+//! a small pool of distinct scenarios (so the first touch of each runs a
+//! cycle engine and everything after is answered from the keyed result
+//! cache, with identical concurrent misses dedup-batched onto one run),
+//! exercise the `/assign` cache, and persist a `serve/p99` record to
+//! `BENCH_noc_cycle.json`.
+//!
+//! The record's unit is `req/s` — deliberately not `x-vs-ref`, so the
+//! bench gate's speedup-floor checks ignore it (see EXPERIMENTS.md §Serve).
+//!
+//! Run: `cargo run --release --example load_serve -- [threads] [requests_per_thread]`
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::time::Instant;
+
+use spikelink::serve::{ServeConfig, Server};
+use spikelink::util::bench::{append_json, BenchRecord, Measurement};
+use spikelink::util::json;
+use spikelink::util::stats::{self, LatencyHist};
+
+/// The distinct scenario pool every client thread cycles through.
+const SCENARIOS: [&str; 4] = [
+    r#"{"schema":"scenario/v1","topology":{"kind":"mesh","dim":4},
+        "traffic":{"kind":"uniform","packets":64,"seed":1},"telemetry":true}"#,
+    r#"{"schema":"scenario/v1","topology":{"kind":"mesh","dim":6},
+        "traffic":{"kind":"full-span","packets":48,"seed":2},"telemetry":true}"#,
+    r#"{"schema":"scenario/v1","topology":{"kind":"chain","chips":4,"dim":4},
+        "traffic":{"kind":"boundary","neurons":128,"dense":0,"activity":0.2,
+                   "ticks":4,"seed":3,"codec":"rate"},"telemetry":true}"#,
+    r#"{"schema":"scenario/v1","topology":{"kind":"duplex","dim":4},
+        "traffic":{"kind":"uniform","packets":32,"seed":4},"telemetry":true}"#,
+];
+
+const ASSIGN: &str = r#"{"schema":"assign-request/v1","model":"rwkv","sa_iters":100}"#;
+
+/// One request per connection (the service answers `Connection: close`).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("unparseable response: {raw:?}"))?;
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let threads: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let per_thread: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(250);
+    let total = threads * per_thread;
+
+    let server = Server::start(ServeConfig { port: 0, ..ServeConfig::default() })?;
+    let addr = server.addr();
+    println!("load_serve: {threads} threads x {per_thread} requests against {addr}");
+
+    // timed section: concurrent /simulate over the scenario pool
+    let t_start = Instant::now();
+    let clients: Vec<_> = (0..threads)
+        .map(|t| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
+                let mut samples = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    let body = SCENARIOS[(t + i) % SCENARIOS.len()];
+                    let t0 = Instant::now();
+                    let (status, resp) = http(addr, "POST", "/simulate", body)?;
+                    samples.push(t0.elapsed().as_nanos() as u64);
+                    if status != 200 {
+                        anyhow::bail!("client {t} request {i}: HTTP {status}: {resp}");
+                    }
+                }
+                Ok(samples)
+            })
+        })
+        .collect();
+    let mut hist = LatencyHist::new();
+    let mut ns: Vec<f64> = Vec::with_capacity(total);
+    for c in clients {
+        let samples = c.join().expect("client thread panicked")?;
+        for s in samples {
+            hist.record(s);
+            ns.push(s as f64);
+        }
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+    let req_per_s = total as f64 / wall;
+    println!(
+        "simulate: {total} requests in {wall:.2}s = {req_per_s:.0} req/s \
+         (p50 {:.2}ms p99 {:.2}ms p999 {:.2}ms)",
+        hist.p50() as f64 / 1e6,
+        hist.p99() as f64 / 1e6,
+        hist.p999() as f64 / 1e6,
+    );
+
+    // the /assign cache: the first request anneals, the repeat must not
+    let (s1, a1) = http(addr, "POST", "/assign", ASSIGN)?;
+    let (s2, a2) = http(addr, "POST", "/assign", ASSIGN)?;
+    anyhow::ensure!(s1 == 200 && s2 == 200, "assign failed: {s1} {a1} / {s2} {a2}");
+    let cached = json::parse(&a2)
+        .map_err(|e| anyhow::anyhow!("assign response JSON: {e}"))?
+        .get("cached")
+        .and_then(|c| c.as_bool())
+        .unwrap_or(false);
+    anyhow::ensure!(cached, "repeated /assign was not served from cache: {a2}");
+    println!("assign: repeat served from cache (no annealing search)");
+
+    let (sm, metrics) = http(addr, "GET", "/metrics", "")?;
+    anyhow::ensure!(sm == 200, "metrics failed: HTTP {sm}");
+    println!("metrics:\n{metrics}");
+
+    let (ss, _) = http(addr, "POST", "/shutdown", "")?;
+    anyhow::ensure!(ss == 200, "shutdown failed: HTTP {ss}");
+    server.join();
+    println!("load_serve: clean shutdown");
+
+    let m = Measurement {
+        name: "serve/p99".to_string(),
+        iters: total,
+        median_ns: stats::median(&ns),
+        mean_ns: stats::mean(&ns),
+        p10_ns: stats::percentile(&ns, 10.0),
+        p90_ns: stats::percentile(&ns, 90.0),
+    };
+    let rec = BenchRecord::new(m, req_per_s, "req/s").with_latency(
+        hist.p50(),
+        hist.p99(),
+        hist.p999(),
+    );
+    if let Err(e) = append_json(Path::new("BENCH_noc_cycle.json"), &[rec]) {
+        eprintln!("error: writing BENCH_noc_cycle.json: {e}");
+        std::process::exit(1);
+    }
+    println!("appended serve/p99 record to BENCH_noc_cycle.json");
+    Ok(())
+}

@@ -2,17 +2,21 @@
 //! the AOT-compiled `predict` executable — the Layer-3 pattern (vLLM-router
 //! style) on this paper's models. Python is nowhere in this process.
 //!
-//! A producer thread emits single-sequence requests at a configurable rate;
-//! the batcher coalesces up to `batch` of them (padding with repeats) and
-//! runs one PJRT execution per batch; per-request latency is recorded.
+//! The batching core is the crate's own [`spikelink::serve::BatchQueue`] —
+//! the same bounded queue `spikelink serve` coalesces HTTP scenario
+//! requests on (one batching implementation in the crate). A producer
+//! thread pushes single-sequence requests at a configurable rate; the
+//! executor thread takes up to `batch` of them per wakeup (padding with
+//! repeats) and runs one PJRT execution per batch; per-request latency is
+//! recorded.
 //!
 //! Run: `make artifacts && cargo run --release --example serve -- [n_requests]`
 
-use std::collections::VecDeque;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use spikelink::runtime::{Engine, Manifest, Tensor};
+use spikelink::serve::BatchQueue;
 use spikelink::train::corpus;
 use spikelink::util::stats::{self, LatencyHist};
 use spikelink::util::Counter;
@@ -27,32 +31,40 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load("artifacts")?;
     let engine = Engine::cpu()?;
     let model = manifest.model("hnn_lm")?;
-    let batch = model.cfg_usize("batch").unwrap_or(16);
+    let batch = model.cfg_usize("batch").unwrap_or(16).max(1);
     let seq = model.cfg_usize("seq_len").unwrap_or(64);
     let exe = engine.load("hnn_lm.predict", model.fns.get("predict").unwrap())?;
     let theta = Tensor::F32(manifest.load_init_theta(model)?);
 
-    // producer: requests arrive with small jitter; the lock-free ingress
+    // producer: requests arrive with small jitter through the bounded queue
+    // (a full queue back-pressures the producer); the lock-free ingress
     // counter is the ops-facing metric the batcher reconciles against
-    let (tx, rx) = mpsc::channel::<Request>();
+    let queue = Arc::new(BatchQueue::<Request>::new(batch * 8));
     let produced = Arc::new(Counter::default());
     let producer = {
+        let queue = queue.clone();
         let produced = produced.clone();
         std::thread::spawn(move || {
             let mut c = corpus::generate(100_000, 7);
             for i in 0..n_requests {
                 let (x, _) = c.batch(1, seq);
-                tx.send(Request { x, t0: Instant::now() }).ok();
+                let mut req = Request { x, t0: Instant::now() };
+                while let Err(back) = queue.push(req) {
+                    req = back;
+                    std::thread::sleep(Duration::from_micros(50));
+                }
                 produced.inc();
                 if i % 8 == 0 {
                     std::thread::sleep(Duration::from_micros(200));
                 }
             }
+            // drains stragglers, then signals the executor to exit
+            queue.close();
         })
     };
 
-    // batcher/executor loop
-    let mut pending: VecDeque<Request> = VecDeque::new();
+    // batcher/executor loop: blocks on the queue, takes up to `batch` per
+    // wakeup, exits when the producer closes and the queue drains
     let mut latencies_ms: Vec<f64> = Vec::new();
     // Streaming percentiles over nanosecond samples — the same LatencyHist
     // the cycle engines' telemetry uses (one histogram impl in the crate).
@@ -60,18 +72,8 @@ fn main() -> anyhow::Result<()> {
     let mut batches = 0usize;
     let t_start = Instant::now();
     let mut done = 0usize;
-    while done < n_requests {
-        // drain the channel (non-blocking-ish)
-        while let Ok(r) = rx.try_recv() {
-            pending.push_back(r);
-        }
-        if pending.is_empty() {
-            std::thread::sleep(Duration::from_micros(50));
-            continue;
-        }
-        // dynamic batch: take up to `batch`, pad by repeating the last
-        let take = pending.len().min(batch);
-        let reqs: Vec<Request> = pending.drain(..take).collect();
+    while let Some(reqs) = queue.take_batch(batch) {
+        // dynamic batch: pad to a full batch by repeating the last request
         let mut x = Vec::with_capacity(batch * seq);
         for r in &reqs {
             x.extend_from_slice(&r.x);

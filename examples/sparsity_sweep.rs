@@ -54,6 +54,7 @@ fn measured_tail(codec: CodecId, activity: f64) -> (u64, u64, u64) {
         seed: 7,
         codec,
         codecs: BTreeMap::new(),
+        activities: BTreeMap::new(),
     });
     let res = sc.run();
     let tail = res.tail.expect("boundary traffic at these activities delivers packets");
@@ -255,6 +256,7 @@ fn main() -> anyhow::Result<()> {
             seed: 9,
             codec: CodecId::Rate,
             codecs,
+            activities: BTreeMap::new(),
         });
         let res = sc.run();
         let tail = res.tail.expect("every boundary edge delivers");

@@ -169,6 +169,19 @@ COMMANDS:
                       --reference          alias for --engine reference
                       --no-telemetry       skip per-packet records (no tail quantiles)
                       --save FILE          write the scenario JSON for reproduction
+  serve             run the scenario service on 127.0.0.1 (HTTP/1.1, std-only):
+                    POST /simulate (scenario/v1; identical queued scenarios are
+                    batched onto one engine run and results cached by canonical
+                    hash), POST /assign (cached codec assignment — a repeat
+                    skips the annealing search), GET /metrics, POST /shutdown
+                    (graceful drain). See EXPERIMENTS.md §Serve.
+                      --port N        listen port (default 7878; 0 = ephemeral)
+                      --workers N     connection workers (default 4)
+                      --engines N     engine runners (default 2)
+                      --threads N     threads per engine run (0 = auto)
+                      --batch N       max requests per engine batch (default 16)
+                      --queue-cap N   queue bound before 503 (default 256)
+                      --max-body N    request-body byte limit (default 1 MiB)
   help              this text
 ";
 

@@ -38,6 +38,7 @@ use crate::model::layer::Network;
 use crate::model::mapping::{map_network, Mapping};
 use crate::model::partition::partition;
 use crate::sparsity::SparsityProfile;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The assignment objective: energy x latency (EDP), in joule-cycles.
@@ -149,6 +150,32 @@ impl Assignment {
         cfg.clone()
             .with_boundary_codec(self.default_codec)
             .with_codec_overrides(self.overrides.clone())
+    }
+
+    /// Serialize the result core as the `assign/v1` document: `schema`,
+    /// `default`, `overrides` (layer index → codec name), `edp`,
+    /// `uniform_edp` (codec name → EDP), and `evaluations`. Callers with
+    /// run context (`spikelink assign-codecs --save`, the `spikelink
+    /// serve` `/assign` endpoint) insert their extra keys — model,
+    /// variant, optimizer seed/threshold — into the returned [`Json::Obj`]
+    /// so the cacheable result shape is defined in exactly one place.
+    pub fn to_json(&self) -> Json {
+        let overrides = Json::Obj(
+            self.overrides
+                .iter()
+                .map(|(layer, codec)| (layer.to_string(), Json::str(codec.as_str())))
+                .collect(),
+        );
+        let uniform: Vec<(&str, Json)> =
+            self.uniform_edp.iter().map(|(codec, edp)| (codec.as_str(), Json::num(*edp))).collect();
+        Json::obj(vec![
+            ("schema", Json::str("assign/v1")),
+            ("default", Json::str(self.default_codec.as_str())),
+            ("overrides", overrides),
+            ("edp", Json::num(self.edp)),
+            ("uniform_edp", Json::obj(uniform)),
+            ("evaluations", Json::num(self.evaluations as f64)),
+        ])
     }
 }
 
@@ -419,6 +446,36 @@ mod tests {
         assert!(a.edges.is_empty());
         assert!(a.overrides.is_empty());
         assert_eq!(a.edp, a.best_uniform().1, "nothing to optimize");
+    }
+
+    #[test]
+    fn to_json_carries_the_full_result_core() {
+        let net = networks::msresnet18();
+        let cfg = ArchConfig::baseline(Variant::Hnn);
+        let profile = SparsityProfile::synthetic_imbalanced(net.layers.len(), 0.25, 42);
+        let a = assign(&net, &cfg, &profile, &quick());
+        let j = a.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "assign/v1");
+        assert_eq!(j.get("default").unwrap().as_str().unwrap(), a.default_codec.as_str());
+        assert_eq!(j.get("edp").unwrap().as_f64().unwrap(), a.edp);
+        assert_eq!(
+            j.get("evaluations").unwrap().as_f64().unwrap() as usize,
+            a.evaluations
+        );
+        let overrides = j.get("overrides").unwrap().as_obj().unwrap();
+        assert_eq!(overrides.len(), a.overrides.len());
+        for (layer, codec) in &a.overrides {
+            let got = overrides.get(&layer.to_string()).unwrap().as_str().unwrap();
+            assert_eq!(got, codec.as_str(), "layer {layer}");
+        }
+        let uniform = j.get("uniform_edp").unwrap().as_obj().unwrap();
+        assert_eq!(uniform.len(), CodecId::ALL.len());
+        for (codec, edp) in &a.uniform_edp {
+            assert_eq!(uniform.get(codec.as_str()).unwrap().as_f64().unwrap(), *edp);
+        }
+        // the document is deterministic text: same assignment, same bytes
+        // (the property the serve-side assignment cache leans on)
+        assert_eq!(j.to_string_compact(), a.to_json().to_string_compact());
     }
 
     #[test]

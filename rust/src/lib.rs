@@ -37,6 +37,13 @@
 //! energy x latency objective) into `ArchConfig::codec_overrides`, with a
 //! per-edge `codecs` map in scenario JSON and the `spikelink
 //! assign-codecs` / `simulate --mixed` CLI surfaces.
+//!
+//! [`serve`] puts all of it behind a network surface: `spikelink serve`
+//! is a std-only HTTP service that answers `scenario/v1` documents
+//! (`POST /simulate`, batched onto a pool of `Send` cycle engines) and
+//! codec-assignment requests (`POST /assign`, cached so a repeat skips
+//! the annealing search), with live metrics at `GET /metrics` — see
+//! EXPERIMENTS.md §Serve.
 
 pub mod analytic;
 pub mod arch;
@@ -45,6 +52,7 @@ pub mod model;
 pub mod noc;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod train;
 pub mod util;

@@ -48,6 +48,7 @@ fn run(args: &cli::Args) -> Result<()> {
         "table4" => cmd_table4(args),
         "noc-validate" => cmd_noc_validate(),
         "noc-sim" => cmd_noc_sim(args),
+        "serve" => cmd_serve(args),
         "" | "help" => {
             print!("{}", cli::HELP);
             Ok(())
@@ -437,29 +438,15 @@ fn cmd_assign_codecs(args: &cli::Args) -> Result<()> {
     }
 
     if let Some(out) = args.get("save") {
-        let overrides = Json::Obj(
-            a.overrides
-                .iter()
-                .map(|(layer, codec)| (layer.to_string(), Json::str(codec.as_str())))
-                .collect(),
-        );
-        let uniform: Vec<(&str, Json)> = a
-            .uniform_edp
-            .iter()
-            .map(|(codec, edp)| (codec.as_str(), Json::num(*edp)))
-            .collect();
-        let j = Json::obj(vec![
-            ("schema", Json::str("assign/v1")),
-            ("model", Json::str(net.name.clone())),
-            ("variant", Json::str(variant.as_str())),
-            ("default", Json::str(a.default_codec.as_str())),
-            ("overrides", overrides),
-            ("edp", Json::num(a.edp)),
-            ("uniform_edp", Json::obj(uniform)),
-            ("evaluations", Json::num(a.evaluations as f64)),
-            ("seed", Json::num(acfg.seed as f64)),
-            ("threshold", Json::num(acfg.dense_threshold)),
-        ]);
+        // the result core comes from `Assignment::to_json` (shared with the
+        // serve `/assign` endpoint); this command adds its run context
+        let mut j = a.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("model".into(), Json::str(net.name.clone()));
+            map.insert("variant".into(), Json::str(variant.as_str()));
+            map.insert("seed".into(), Json::num(acfg.seed as f64));
+            map.insert("threshold".into(), Json::num(acfg.dense_threshold));
+        }
         if let Some(parent) = Path::new(out).parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
@@ -647,6 +634,7 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
                     seed,
                     codec,
                     codecs: Default::default(),
+                    activities: Default::default(),
                 }
             }
             other => {
@@ -868,5 +856,40 @@ fn cmd_noc_validate() -> Result<()> {
         spike,
         (100.0 * (1.0 - spike as f64 / dense as f64)) as i64
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+/// Start the scenario service (`spikelink::serve`) and block until a
+/// `POST /shutdown` drains it. The first stdout line is the contract the
+/// CI smoke step greps for: `listening on 127.0.0.1:PORT`.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    use spikelink::serve::{ServeConfig, Server};
+
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        port: args.usize_or("port", 7878)? as u16,
+        workers: args.usize_or("workers", defaults.workers)?,
+        engines: args.usize_or("engines", defaults.engines)?,
+        engine_threads: args.usize_or("threads", defaults.engine_threads)?,
+        batch_max: args.usize_or("batch", defaults.batch_max)?,
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?,
+        max_body: args.usize_or("max-body", defaults.max_body)?,
+        ..defaults
+    };
+    if cfg.workers == 0 || cfg.engines == 0 {
+        return Err(anyhow!("--workers and --engines must be >= 1"));
+    }
+    if cfg.batch_max == 0 || cfg.queue_cap == 0 {
+        return Err(anyhow!("--batch and --queue-cap must be >= 1"));
+    }
+    let server = Server::start(cfg)?;
+    println!("listening on {}", server.addr());
+    println!("endpoints: POST /simulate  POST /assign  GET /metrics  POST /shutdown");
+    server.join();
+    println!("serve: clean shutdown");
     Ok(())
 }

@@ -134,6 +134,14 @@ pub enum TrafficSpec {
         /// Per-boundary codec overrides (boundary index -> codec); empty
         /// means the uniform whole-span edge above.
         codecs: BTreeMap<usize, CodecId>,
+        /// Per-boundary firing-rate overrides (boundary index -> activity
+        /// in `[0, 1]`); boundaries without an entry use the scalar
+        /// `activity`. Every key must also appear in `codecs` — in JSON an
+        /// override rides inside the `codecs` map as the object form
+        /// `{"edge": {"codec": "...", "activity": a}}` (the legacy string
+        /// form stays valid), so an activity without a codec entry has no
+        /// serializable shape.
+        activities: BTreeMap<usize, f64>,
     },
 }
 
@@ -214,7 +222,7 @@ impl Scenario {
     /// (the zero-width rule `from_json` also enforces), and `activity`
     /// must be a probability.
     pub fn traffic(mut self, spec: TrafficSpec) -> Self {
-        if let TrafficSpec::Boundary { dense, activity, codec, codecs, .. } = &spec {
+        if let TrafficSpec::Boundary { dense, activity, codec, codecs, activities, .. } = &spec {
             assert!(
                 *dense >= 1
                     || (*codec != CodecId::Dense
@@ -225,6 +233,17 @@ impl Scenario {
                 (0.0..=1.0).contains(activity),
                 "boundary activity must be in [0, 1], got {activity}"
             );
+            for (e, a) in activities {
+                assert!(
+                    (0.0..=1.0).contains(a),
+                    "boundary {e} activity must be in [0, 1], got {a}"
+                );
+                assert!(
+                    codecs.contains_key(e),
+                    "boundary {e} activity override needs a codecs entry (JSON carries the \
+                     override inside the codecs map, so this shape would not round-trip)"
+                );
+            }
         }
         self.traffic = spec;
         self
@@ -346,7 +365,16 @@ impl Scenario {
                     .map(|t| (t, self.random_transfer(&mut rng)))
                     .collect()
             }
-            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec, codecs } => {
+            TrafficSpec::Boundary {
+                neurons,
+                dense,
+                activity,
+                ticks,
+                seed,
+                codec,
+                codecs,
+                activities,
+            } => {
                 // the legacy `dense` packets-per-neuron parameterize the
                 // dense codec as a bit width; other codecs ignore it. A
                 // zero width means an *empty* dense edge (codec zero-width
@@ -356,6 +384,8 @@ impl Scenario {
                 let dim = self.topology.dim();
                 if codecs.is_empty() {
                     // uniform: one edge spanning the whole topology
+                    // (activities is empty here by the builder/parse
+                    // invariant: its keys are a subset of codecs')
                     let last = self.topology.chips() - 1;
                     codec_edge_traffic(*codec, *neurons, *activity, *ticks, bits, dim, *seed)
                         .into_iter()
@@ -365,14 +395,14 @@ impl Scenario {
                         .collect()
                 } else {
                     // mixed: every die boundary carries its own edge with
-                    // its own codec and a stable per-boundary seed
+                    // its own codec, its own firing rate when overridden,
+                    // and a stable per-boundary seed
                     let mut out = Vec::new();
                     for e in 0..self.topology.chips() - 1 {
                         let c = codecs.get(&e).copied().unwrap_or(*codec);
+                        let a = activities.get(&e).copied().unwrap_or(*activity);
                         let edge_seed = seed ^ ((e as u64) << 32);
-                        for t in
-                            codec_edge_traffic(c, *neurons, *activity, *ticks, bits, dim, edge_seed)
-                        {
+                        for t in codec_edge_traffic(c, *neurons, a, *ticks, bits, dim, edge_seed) {
                             out.push((
                                 0,
                                 Transfer { src_chip: e, src: t.src, dest_chip: e + 1, dest: t.dest },
@@ -388,7 +418,13 @@ impl Scenario {
     // -- engine construction ------------------------------------------------
 
     /// Instantiate the optimized (worklist) engine for this scenario.
-    pub fn build(&self) -> Box<dyn CycleEngine> {
+    ///
+    /// All three `build*` constructors hand back `Box<dyn CycleEngine +
+    /// Send>`: every engine is plain owned state (flat arrays, ring
+    /// buffers, mutex-guarded mailboxes), so a built engine may move to a
+    /// worker thread — the property the `spikelink serve` engine pool
+    /// ([`crate::serve`]) relies on.
+    pub fn build(&self) -> Box<dyn CycleEngine + Send> {
         match (self.topology, self.telemetry) {
             (Topology::Mesh { dim }, false) => Box::new(Mesh::new(dim)),
             (Topology::Mesh { dim }, true) => Box::new(Mesh::with_sink(dim, DeliverySink::new())),
@@ -402,7 +438,7 @@ impl Scenario {
     }
 
     /// Instantiate the retained naive reference engine for this scenario.
-    pub fn build_reference(&self) -> Box<dyn CycleEngine> {
+    pub fn build_reference(&self) -> Box<dyn CycleEngine + Send> {
         match (self.topology, self.telemetry) {
             (Topology::Mesh { dim }, false) => Box::new(RefMesh::new(dim)),
             (Topology::Mesh { dim }, true) => {
@@ -426,7 +462,7 @@ impl Scenario {
     /// give a worker, so it falls back to the serial optimized engine —
     /// all three choices honour the same determinism contract: results are
     /// bit-identical to [`Scenario::build`] at any thread count.
-    pub fn build_parallel(&self, threads: usize) -> Box<dyn CycleEngine> {
+    pub fn build_parallel(&self, threads: usize) -> Box<dyn CycleEngine + Send> {
         match (self.topology, self.telemetry) {
             (Topology::Mesh { dim }, false) => Box::new(SoaMesh::new(dim)),
             (Topology::Mesh { dim }, true) => {
@@ -515,7 +551,16 @@ impl Scenario {
                 ("period", Json::num(*period as f64)),
                 ("seed", Json::num(*seed as f64)),
             ]),
-            TrafficSpec::Boundary { neurons, dense, activity, ticks, seed, codec, codecs } => {
+            TrafficSpec::Boundary {
+                neurons,
+                dense,
+                activity,
+                ticks,
+                seed,
+                codec,
+                codecs,
+                activities,
+            } => {
                 let mut fields = vec![
                     ("kind", Json::str("boundary")),
                     ("neurons", Json::num(*neurons as f64)),
@@ -527,13 +572,26 @@ impl Scenario {
                 ];
                 if !codecs.is_empty() {
                     // the per-edge map serializes with string keys (JSON
-                    // object keys are strings); parsing restores the usize
+                    // object keys are strings); parsing restores the usize.
+                    // Edges with an activity override use the object form
+                    // {"codec": ..., "activity": ...}; the rest keep the
+                    // legacy string form so pre-override documents
+                    // round-trip byte-identically.
                     fields.push((
                         "codecs",
                         Json::Obj(
                             codecs
                                 .iter()
-                                .map(|(e, c)| (e.to_string(), Json::str(c.as_str())))
+                                .map(|(e, c)| {
+                                    let val = match activities.get(e) {
+                                        Some(a) => Json::obj(vec![
+                                            ("codec", Json::str(c.as_str())),
+                                            ("activity", Json::num(*a)),
+                                        ]),
+                                        None => Json::str(c.as_str()),
+                                    };
+                                    (e.to_string(), val)
+                                })
                                 .collect(),
                         ),
                     ));
@@ -659,9 +717,12 @@ impl Scenario {
                     }
                 };
                 // optional per-edge map (mixed mode): boundary index ->
-                // codec; indices must name real die boundaries of the
-                // parsed topology
+                // codec, either the legacy string form ("rate") or the
+                // object form {"codec": "rate", "activity": 0.3} carrying a
+                // per-edge firing-rate override; indices must name real die
+                // boundaries of the parsed topology
                 let mut codecs = BTreeMap::new();
+                let mut activities = BTreeMap::new();
                 if let Some(map) = tr.get("codecs") {
                     let obj = map.as_obj().ok_or_else(|| {
                         anyhow!("scenario: traffic.codecs must be an object of edge -> codec")
@@ -677,9 +738,45 @@ impl Scenario {
                                  has {n_edges} die boundaries"
                             ));
                         }
-                        let name = val.as_str().ok_or_else(|| {
-                            anyhow!("scenario: traffic.codecs[{key}] must be a codec name")
-                        })?;
+                        let name = match val {
+                            Json::Str(name) => name.as_str(),
+                            Json::Obj(_) => {
+                                check_keys(
+                                    val,
+                                    &["codec", "activity"],
+                                    &format!("scenario.traffic.codecs[{key}]"),
+                                )?;
+                                let name =
+                                    val.get("codec").and_then(Json::as_str).ok_or_else(|| {
+                                        anyhow!(
+                                            "scenario: traffic.codecs[{key}] object form needs \
+                                             a \"codec\" name"
+                                        )
+                                    })?;
+                                if let Some(aj) = val.get("activity") {
+                                    let a = aj.as_f64().ok_or_else(|| {
+                                        anyhow!(
+                                            "scenario: traffic.codecs[{key}].activity must be \
+                                             a number"
+                                        )
+                                    })?;
+                                    if !(0.0..=1.0).contains(&a) {
+                                        return Err(anyhow!(
+                                            "scenario: traffic.codecs[{key}].activity must be \
+                                             in [0, 1], got {a}"
+                                        ));
+                                    }
+                                    activities.insert(e, a);
+                                }
+                                name
+                            }
+                            _ => {
+                                return Err(anyhow!(
+                                    "scenario: traffic.codecs[{key}] must be a codec name or a \
+                                     {{\"codec\", \"activity\"}} object"
+                                ))
+                            }
+                        };
                         let c = CodecId::parse(name).ok_or_else(|| {
                             anyhow!("scenario: unknown traffic.codecs[{key}] {name:?}")
                         })?;
@@ -721,6 +818,7 @@ impl Scenario {
                     seed: field_u64("seed")?,
                     codec,
                     codecs,
+                    activities,
                 }
             }
             other => return Err(anyhow!("scenario: unknown traffic kind {other:?}")),
@@ -751,6 +849,41 @@ impl Scenario {
         let j = json::parse(text).map_err(|e| anyhow!("scenario JSON: {e}"))?;
         Self::from_json(&j)
     }
+
+    // -- canonical form -----------------------------------------------------
+
+    /// The canonical serialization of this scenario: compact `scenario/v1`
+    /// JSON with every optional field normalized by construction — object
+    /// keys are sorted ([`Json::Obj`] is a `BTreeMap`), defaulted fields
+    /// (`telemetry`, `max_cycles`) are always emitted, and empty optional
+    /// blocks (`codecs`, `faults`) are always omitted. Two documents that
+    /// parse to equal `Scenario` values therefore produce byte-identical
+    /// canonical text — e.g. an absent `codecs` map and an explicit empty
+    /// one — which makes this the cache key of the `spikelink serve`
+    /// result cache ([`crate::serve`]).
+    pub fn canonical_json(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// FNV-1a hash of [`Scenario::canonical_json`]: a stable 64-bit digest
+    /// of the scenario's semantics (stable across runs and platforms,
+    /// unlike `DefaultHasher`). Used to pick a shard in the serve cache;
+    /// the full canonical string disambiguates collisions.
+    pub fn canonical_hash(&self) -> u64 {
+        fnv1a(self.canonical_json().as_bytes())
+    }
+}
+
+/// FNV-1a, 64-bit: tiny, dependency-free, and stable across runs — the
+/// properties a persistent/portable cache key needs. Crate-visible so the
+/// serve cache ([`crate::serve::cache`]) shards by the same digest.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Topology-aware fault-plan validation shared by [`Scenario::with_faults`]
@@ -832,6 +965,7 @@ mod tests {
             seed: 2,
             codec: CodecId::Dense,
             codecs: BTreeMap::new(),
+            activities: BTreeMap::new(),
         });
         let sched = sc.schedule();
         assert_eq!(sched.len(), 16);
@@ -928,6 +1062,7 @@ mod tests {
                 seed: 1,
                 codec: id,
                 codecs: BTreeMap::new(),
+                activities: BTreeMap::new(),
             });
             let back = Scenario::from_json_str(&sc.to_json().to_string_pretty()).unwrap();
             assert_eq!(back, sc, "{id}");
@@ -955,6 +1090,7 @@ mod tests {
             seed: 5,
             codec: CodecId::Rate, // boundary 1 falls back to the scalar
             codecs,
+            activities: BTreeMap::new(),
         });
         let text = sc.to_json().to_string_pretty();
         assert!(text.contains("\"codecs\""), "mixed maps serialize: {text}");
@@ -991,6 +1127,7 @@ mod tests {
             seed: 11,
             codec: CodecId::TopKDelta,
             codecs: BTreeMap::new(),
+            activities: BTreeMap::new(),
         });
         let mut codecs = BTreeMap::new();
         codecs.insert(0usize, CodecId::TopKDelta);
@@ -1002,6 +1139,7 @@ mod tests {
             seed: 11,
             codec: CodecId::Rate,
             codecs,
+            activities: BTreeMap::new(),
         });
         assert_eq!(uniform.schedule(), mixed.schedule());
         assert_eq!(uniform.run().stats, mixed.run().stats);
@@ -1110,6 +1248,7 @@ mod tests {
             seed: 1,
             codec: CodecId::Dense,
             codecs: BTreeMap::new(),
+            activities: BTreeMap::new(),
         });
     }
 
@@ -1124,6 +1263,7 @@ mod tests {
             seed: 1,
             codec: CodecId::Rate,
             codecs: BTreeMap::new(),
+            activities: BTreeMap::new(),
         });
     }
 
@@ -1326,6 +1466,7 @@ mod tests {
                 seed: 5,
                 codec: CodecId::Rate,
                 codecs,
+                activities: BTreeMap::new(),
             })
             .with_max_cycles(2_000_000)
             .with_faults(plan);
@@ -1397,5 +1538,192 @@ mod tests {
         assert_eq!(mesh.run_parallel(4).stats, mesh.run().stats);
         let duplex = Scenario::duplex(8).traffic(TrafficSpec::Uniform { packets: 32, seed: 3 });
         assert_eq!(duplex.run_parallel(4).stats, duplex.run().stats);
+    }
+
+    #[test]
+    fn per_edge_activity_round_trips_alongside_the_legacy_string_form() {
+        // a codecs map mixing both value forms: edge 0 keeps the legacy
+        // string, edge 1 carries an activity override in the object form
+        let doc = r#"{"topology": {"kind": "chain", "chips": 3, "dim": 8},
+            "traffic": {"kind": "boundary", "neurons": 32, "dense": 0,
+                        "activity": 0.1, "ticks": 8, "seed": 9,
+                        "codecs": {"0": "rate",
+                                   "1": {"codec": "topk-delta", "activity": 0.6}}}}"#;
+        let sc = Scenario::from_json_str(doc).unwrap();
+        let TrafficSpec::Boundary { codecs, activities, .. } = &sc.traffic else {
+            panic!("boundary")
+        };
+        assert_eq!(codecs.get(&0), Some(&CodecId::Rate));
+        assert_eq!(codecs.get(&1), Some(&CodecId::TopKDelta));
+        assert_eq!(activities.get(&0), None, "string form carries no override");
+        assert_eq!(activities.get(&1), Some(&0.6));
+        // serialization keeps each entry in its original form and the
+        // document round-trips to an equal Scenario with an equal schedule
+        let text = sc.to_json().to_string_pretty();
+        assert!(text.contains("\"activity\": 0.6"), "object form serializes: {text}");
+        assert!(text.contains("\"0\": \"rate\""), "string form survives: {text}");
+        let back = Scenario::from_json_str(&text).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.schedule(), sc.schedule());
+        // the object form without an activity is also valid and equal to
+        // the plain string form
+        let plain = Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": {"codec": "rate"}}}}"#,
+        )
+        .unwrap();
+        let stringly = Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": "rate"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(plain, stringly);
+    }
+
+    #[test]
+    fn per_edge_activity_override_replays_like_the_scalar() {
+        // boundary 0 uses the scalar seed, so on a duplex an override
+        // {"0": {codec, activity: a}} must replay the scalar-activity
+        // scenario packet for packet — the same identity the codec map has
+        let scalar = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 64,
+            dense: 0,
+            activity: 0.7,
+            ticks: 8,
+            seed: 11,
+            codec: CodecId::Rate,
+            codecs: BTreeMap::from([(0usize, CodecId::Rate)]),
+            activities: BTreeMap::new(),
+        });
+        let overridden = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 64,
+            dense: 0,
+            activity: 0.1, // scalar differs; the override wins on edge 0
+            ticks: 8,
+            seed: 11,
+            codec: CodecId::Rate,
+            codecs: BTreeMap::from([(0usize, CodecId::Rate)]),
+            activities: BTreeMap::from([(0usize, 0.7)]),
+        });
+        assert_eq!(scalar.schedule(), overridden.schedule());
+        assert_eq!(scalar.run().stats, overridden.run().stats);
+        // and the override genuinely changes traffic vs not overriding
+        let plain = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 64,
+            dense: 0,
+            activity: 0.1,
+            ticks: 8,
+            seed: 11,
+            codec: CodecId::Rate,
+            codecs: BTreeMap::from([(0usize, CodecId::Rate)]),
+            activities: BTreeMap::new(),
+        });
+        assert!(
+            overridden.schedule().len() > plain.schedule().len(),
+            "a higher per-edge firing rate must emit more spikes"
+        );
+    }
+
+    #[test]
+    fn per_edge_activity_is_validated() {
+        // out-of-range override
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": {"codec": "rate", "activity": 1.5}}}}"#
+        )
+        .is_err(), "activity above 1 must be rejected");
+        // unknown key inside the object form (strict-key rule holds here too)
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": {"codec": "rate", "actviity": 0.5}}}}"#
+        )
+        .is_err(), "typo'd key in the object form must error");
+        // object form without a codec name
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": {"activity": 0.5}}}}"#
+        )
+        .is_err(), "object form needs a codec");
+        // non-string, non-object values are rejected
+        assert!(Scenario::from_json_str(
+            r#"{"topology": {"kind": "duplex", "dim": 8},
+                "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                            "activity": 0.1, "ticks": 8, "seed": 1,
+                            "codecs": {"0": 3}}}"#
+        )
+        .is_err(), "numeric codecs value must error");
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a codecs entry")]
+    fn builder_rejects_activity_override_without_codec_entry() {
+        let _ = Scenario::duplex(8).traffic(TrafficSpec::Boundary {
+            neurons: 8,
+            dense: 0,
+            activity: 0.1,
+            ticks: 8,
+            seed: 1,
+            codec: CodecId::Rate,
+            codecs: BTreeMap::new(),
+            activities: BTreeMap::from([(0usize, 0.5)]),
+        });
+    }
+
+    #[test]
+    fn canonical_form_collapses_semantically_identical_documents() {
+        // the serve-cache key property: an absent codecs map, an explicit
+        // empty one, and explicitly-defaulted optional fields all parse to
+        // the same Scenario and hash to the same canonical digest
+        let absent = r#"{"topology": {"kind": "duplex", "dim": 8},
+            "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                        "activity": 0.1, "ticks": 8, "seed": 1, "codec": "rate"}}"#;
+        let empty_map = r#"{"schema": "scenario/v1",
+            "topology": {"kind": "duplex", "dim": 8},
+            "traffic": {"kind": "boundary", "neurons": 8, "dense": 0,
+                        "activity": 0.1, "ticks": 8, "seed": 1, "codec": "rate",
+                        "codecs": {}},
+            "telemetry": false, "max_cycles": 100000000}"#;
+        let a = Scenario::from_json_str(absent).unwrap();
+        let b = Scenario::from_json_str(empty_map).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.canonical_json(), b.canonical_json());
+        assert_eq!(a.canonical_hash(), b.canonical_hash());
+        // canonicalization is a fixed point: parse(canonical) == canonical
+        let re = Scenario::from_json_str(&a.canonical_json()).unwrap();
+        assert_eq!(re.canonical_json(), a.canonical_json());
+        // and a semantic change moves the digest
+        let c = Scenario::from_json_str(&absent.replace("\"seed\": 1", "\"seed\": 2")).unwrap();
+        assert_ne!(a.canonical_hash(), c.canonical_hash());
+    }
+
+    #[test]
+    fn scenarios_and_built_engines_are_send() {
+        // the serve worker pool moves parsed scenarios and built engines
+        // across threads; lock that property in at compile time
+        fn assert_send<T: Send>(_: &T) {}
+        let sc = Scenario::chain(3, 4).traffic(TrafficSpec::Uniform { packets: 8, seed: 1 });
+        assert_send(&sc);
+        assert_send(&sc.build());
+        assert_send(&sc.build_reference());
+        assert_send(&sc.build_parallel(2));
+        // and an engine genuinely survives the move
+        let mut e = sc.build();
+        let stats = std::thread::spawn(move || {
+            let (stats, _) = run_schedule(&mut *e, &sc.schedule(), sc.max_cycles);
+            stats
+        })
+        .join()
+        .unwrap();
+        assert_eq!(stats.delivered, 8);
     }
 }

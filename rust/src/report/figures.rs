@@ -216,6 +216,7 @@ pub fn fig16_fault_degradation(bers: &[f64]) -> Table {
                 seed: 5,
                 codec,
                 codecs: Default::default(),
+                activities: Default::default(),
             });
             let (drop_res, retry_res) = if ber > 0.0 {
                 let drop_plan = FaultPlan {

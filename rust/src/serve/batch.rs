@@ -1,0 +1,230 @@
+//! Bounded MPMC work queue with compatibility-batched takes — the one
+//! dynamic-batching core in the crate. The `spikelink serve` engine pool
+//! drains it in batches of *compatible* jobs (same canonical scenario, so
+//! one engine run answers every request in the batch), and the PJRT
+//! serving example (`examples/serve.rs`) drains it in plain size-capped
+//! batches in front of the AOT `predict` executable.
+//!
+//! std-only by the offline-build policy: a `Mutex<VecDeque>` plus one
+//! `Condvar`. Producers never block — a full or closed queue hands the
+//! item straight back (`push` → `Err(item)`), which the HTTP layer turns
+//! into a 503 and a load generator into back-pressure. Consumers block in
+//! [`BatchQueue::take_batch_where`] until work or close.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer/multi-consumer queue with batched, predicate-
+/// filtered takes. See the module docs for the two consumers.
+pub struct BatchQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl<T> BatchQueue<T> {
+    /// A queue holding at most `cap` pending items.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "a zero-capacity queue can never accept work");
+        BatchQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Non-blocking bounded push. A full or closed queue returns the item
+    /// to the caller (the overload / shutdown signal) instead of blocking
+    /// the producer or growing without bound.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.cap {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until at least one item is queued (or the queue is closed and
+    /// drained — then `None`, the consumer's exit signal). Takes the head
+    /// plus up to `max - 1` further items compatible with it under
+    /// `compat(head, item)`, preserving arrival order both in the returned
+    /// batch and among the incompatible items left queued.
+    pub fn take_batch_where<F>(&self, max: usize, compat: F) -> Option<Vec<T>>
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        assert!(max >= 1, "a batch must have room for its head");
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(head) = g.items.pop_front() {
+                let mut batch = vec![head];
+                let mut rest = VecDeque::with_capacity(g.items.len());
+                while let Some(item) = g.items.pop_front() {
+                    if batch.len() < max && compat(&batch[0], &item) {
+                        batch.push(item);
+                    } else {
+                        rest.push_back(item);
+                    }
+                }
+                g.items = rest;
+                return Some(batch);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// [`BatchQueue::take_batch_where`] with every pair compatible: the
+    /// plain size-capped dynamic batch of the serving example.
+    pub fn take_batch(&self, max: usize) -> Option<Vec<T>> {
+        self.take_batch_where(max, |_, _| true)
+    }
+
+    /// Close the queue: pending items remain takeable (consumers drain
+    /// them), new pushes are rejected, and blocked consumers wake — once
+    /// the queue empties they observe `None` and exit.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.ready.notify_all();
+    }
+
+    /// Pending (not yet taken) items — the `/metrics` queue-depth gauge.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_bounded_rejection() {
+        let q = BatchQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(3), "full queue hands the item back");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.take_batch(10), Some(vec![1, 2]));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn compat_batches_take_only_matching_items_and_preserve_order() {
+        let q = BatchQueue::new(16);
+        for v in [10, 11, 20, 12, 21, 13] {
+            q.push(v).unwrap();
+        }
+        // compatibility = same decade; the head (10) collects 11, 12, 13
+        let tens = q.take_batch_where(10, |a, b| a / 10 == b / 10).unwrap();
+        assert_eq!(tens, vec![10, 11, 12, 13]);
+        // the incompatible items stayed queued, still in arrival order
+        assert_eq!(q.take_batch(10), Some(vec![20, 21]));
+    }
+
+    #[test]
+    fn batch_size_cap_is_honoured() {
+        let q = BatchQueue::new(16);
+        for v in 0..6 {
+            q.push(v).unwrap();
+        }
+        assert_eq!(q.take_batch(4), Some(vec![0, 1, 2, 3]));
+        assert_eq!(q.take_batch(4), Some(vec![4, 5]));
+    }
+
+    #[test]
+    fn close_rejects_pushes_drains_stragglers_then_signals_exit() {
+        let q = BatchQueue::new(8);
+        q.push(1).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push(2), Err(2), "closed queue rejects new work");
+        assert_eq!(q.take_batch(8), Some(vec![1]), "pending work still drains");
+        assert_eq!(q.take_batch(8), None, "drained + closed = exit signal");
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_consumer() {
+        let q = Arc::new(BatchQueue::<u32>::new(8));
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.take_batch(8))
+        };
+        // give the consumer a moment to block in the condvar wait
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_lose_nothing() {
+        const PRODUCERS: usize = 4;
+        const PER_PRODUCER: usize = 500;
+        let q = Arc::new(BatchQueue::<usize>::new(64));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = q.take_batch(7) {
+                        got.extend(batch);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        let mut item = p * PER_PRODUCER + i;
+                        // bounded queue: spin until accepted (test-side
+                        // back-pressure; the server responds 503 instead)
+                        loop {
+                            match q.push(item) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    item = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..PRODUCERS * PER_PRODUCER).collect();
+        assert_eq!(all, expect, "every produced item taken exactly once");
+    }
+}

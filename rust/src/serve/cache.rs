@@ -1,0 +1,221 @@
+//! Sharded LRU result cache keyed by canonical documents.
+//!
+//! The serve endpoints key their caches by *canonical text* —
+//! [`crate::noc::Scenario::canonical_json`] for `/simulate`, the
+//! normalized request document for `/assign` — so two semantically
+//! identical requests (e.g. an absent vs. an explicitly empty `codecs`
+//! map) land on the same entry. Sharding by the same FNV-1a digest the
+//! scenario hash uses ([`crate::noc::scenario`]) keeps lock contention
+//! off the request path; the full key string disambiguates collisions.
+//!
+//! Eviction is least-recently-used per shard via a monotonic clock stamp,
+//! with an O(shard-capacity) victim scan on insert. Shard capacities are
+//! small (hundreds), and an insert only happens after a cache miss just
+//! paid for a full engine run or annealing search, so the scan is noise —
+//! in exchange the implementation stays std-only (no intrusive lists).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::noc::scenario::fnv1a;
+use crate::util::json::Json;
+use crate::util::Counter;
+
+struct Entry<V> {
+    value: V,
+    last_used: u64,
+}
+
+struct Shard<V> {
+    map: HashMap<String, Entry<V>>,
+    clock: u64,
+}
+
+/// Sharded LRU map with lock-free hit/miss/eviction counters (the
+/// `/metrics` cache block).
+pub struct ShardedLru<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    cap_per_shard: usize,
+    /// Lookups answered from the cache.
+    pub hits: Counter,
+    /// Lookups that missed (the caller computes and [`ShardedLru::put`]s).
+    pub misses: Counter,
+    /// Entries displaced by LRU eviction.
+    pub evictions: Counter,
+}
+
+impl<V: Clone> ShardedLru<V> {
+    /// `shards` independent locks, each holding at most `cap_per_shard`
+    /// entries (total capacity = `shards * cap_per_shard`).
+    pub fn new(shards: usize, cap_per_shard: usize) -> Self {
+        assert!(shards >= 1 && cap_per_shard >= 1, "cache needs capacity");
+        ShardedLru {
+            shards: (0..shards)
+                .map(|_| Mutex::new(Shard { map: HashMap::new(), clock: 0 }))
+                .collect(),
+            cap_per_shard,
+            hits: Counter::default(),
+            misses: Counter::default(),
+            evictions: Counter::default(),
+        }
+    }
+
+    fn shard_of(&self, key: &str) -> &Mutex<Shard<V>> {
+        &self.shards[(fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize]
+    }
+
+    /// Look `key` up, refreshing its recency on a hit.
+    pub fn get(&self, key: &str) -> Option<V> {
+        let mut shard = self.shard_of(key).lock().unwrap();
+        shard.clock += 1;
+        let stamp = shard.clock;
+        match shard.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = stamp;
+                self.hits.inc();
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting the shard's least-recently-used
+    /// entry when it is full.
+    pub fn put(&self, key: String, value: V) {
+        let mut shard = self.shard_of(&key).lock().unwrap();
+        shard.clock += 1;
+        let stamp = shard.clock;
+        if !shard.map.contains_key(&key) && shard.map.len() >= self.cap_per_shard {
+            if let Some(victim) =
+                shard.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+            {
+                shard.map.remove(&victim);
+                self.evictions.inc();
+            }
+        }
+        shard.map.insert(key, Entry { value, last_used: stamp });
+    }
+
+    /// Entries currently cached, summed over the shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit fraction over all lookups so far (0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits.get(), self.misses.get());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// The `/metrics` cache block: entries, hits, misses, evictions,
+    /// hit_rate.
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("entries", Json::num(self.len() as f64)),
+            ("hits", Json::num(self.hits.get() as f64)),
+            ("misses", Json::num(self.misses.get() as f64)),
+            ("evictions", Json::num(self.evictions.get() as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_counters_and_round_trip() {
+        let c: ShardedLru<String> = ShardedLru::new(4, 8);
+        assert_eq!(c.get("a"), None);
+        c.put("a".into(), "va".into());
+        assert_eq!(c.get("a").as_deref(), Some("va"));
+        assert_eq!((c.hits.get(), c.misses.get()), (1, 1));
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(c.len(), 1);
+        let stats = c.stats_json();
+        assert_eq!(stats.get("hits").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(stats.get("entries").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn put_refreshes_an_existing_key_without_growing() {
+        let c: ShardedLru<u32> = ShardedLru::new(1, 4);
+        c.put("k".into(), 1);
+        c.put("k".into(), 2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get("k"), Some(2));
+        assert_eq!(c.evictions.get(), 0);
+    }
+
+    #[test]
+    fn evicts_the_least_recently_used_entry() {
+        // one shard so the eviction order is fully observable
+        let c: ShardedLru<u32> = ShardedLru::new(1, 3);
+        c.put("a".into(), 1);
+        c.put("b".into(), 2);
+        c.put("c".into(), 3);
+        // touch a and c; b becomes the LRU victim
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        c.put("d".into(), 4);
+        assert_eq!(c.evictions.get(), 1);
+        assert_eq!(c.get("b"), None, "LRU entry was evicted");
+        for k in ["a", "c", "d"] {
+            assert!(c.get(k).is_some(), "{k} must survive");
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_key_space_consistently() {
+        let c: ShardedLru<usize> = ShardedLru::new(8, 4);
+        for i in 0..32 {
+            c.put(format!("key-{i}"), i);
+        }
+        // every key still resolves through the same shard function
+        let mut live = 0;
+        for i in 0..32 {
+            if let Some(v) = c.get(&format!("key-{i}")) {
+                assert_eq!(v, i);
+                live += 1;
+            }
+        }
+        assert_eq!(live, c.len());
+        assert!(c.len() <= 8 * 4);
+        assert!(live > 0, "a 32-slot cache cannot be empty after 32 inserts");
+    }
+
+    #[test]
+    fn concurrent_access_is_safe_and_counts_add_up() {
+        let c = std::sync::Arc::new(ShardedLru::<u64>::new(4, 16));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let key = format!("k{}", i % 8);
+                        if c.get(&key).is_none() {
+                            c.put(key, t * 1000 + i);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.hits.get() + c.misses.get(), 4 * 200);
+        assert!(c.len() <= 8, "only 8 distinct keys were inserted");
+    }
+}

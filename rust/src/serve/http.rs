@@ -1,0 +1,256 @@
+//! Minimal HTTP/1.1 framing for `spikelink serve`.
+//!
+//! The offline-build policy rules out hyper/tokio, and the service only
+//! needs four routes over loopback-style deployments, so this is the
+//! smallest honest subset: one request per connection (`Connection:
+//! close`), a parsed request line, headers scanned for `Content-Length`,
+//! and a fully-buffered body capped at the configured limit. Everything a
+//! client can get wrong maps to a typed [`HttpError`] the service layer
+//! turns into a proper 400/413 response instead of a dropped socket.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use crate::util::json::Json;
+
+/// Longest accepted request-line/header line, bytes (including CRLF).
+const MAX_HEADER_LINE: u64 = 8 * 1024;
+/// Headers per request cap — enough for any real client, small enough to
+/// bound a hostile one.
+const MAX_HEADERS: usize = 100;
+
+/// One parsed request: method + path + raw body bytes.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Client-side request failures, mapped to status codes by the service.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Unparseable request line / headers / truncated body → 400.
+    Malformed(String),
+    /// Declared `Content-Length` above the service's body limit → 413.
+    TooLarge { declared: usize, limit: usize },
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::TooLarge { declared, limit } => {
+                write!(f, "body of {declared} bytes over the {limit}-byte limit")
+            }
+        }
+    }
+}
+
+/// Read one `\n`-terminated line, bounded at [`MAX_HEADER_LINE`] bytes, and
+/// strip the line ending. An unterminated over-long line is malformed (the
+/// bound is what keeps a hostile peer from growing the buffer without end).
+fn read_line_limited<R: BufRead>(r: &mut R) -> Result<String, HttpError> {
+    let mut buf = Vec::new();
+    r.take(MAX_HEADER_LINE + 1)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::Malformed(format!("read: {e}")))?;
+    if buf.len() as u64 > MAX_HEADER_LINE {
+        return Err(HttpError::Malformed(format!("header line over {MAX_HEADER_LINE} bytes")));
+    }
+    let line = String::from_utf8(buf)
+        .map_err(|_| HttpError::Malformed("non-UTF-8 header bytes".into()))?;
+    Ok(line.trim_end_matches(['\r', '\n']).to_string())
+}
+
+/// Read and parse one request from `stream`, buffering at most `max_body`
+/// body bytes.
+pub fn read_request(stream: &TcpStream, max_body: usize) -> Result<Request, HttpError> {
+    let mut reader = BufReader::new(stream);
+
+    let request_line = read_line_limited(reader.by_ref())?;
+    if request_line.is_empty() {
+        return Err(HttpError::Malformed("empty request line".into()));
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
+        return Err(HttpError::Malformed(format!(
+            "request line must be `METHOD /path HTTP/x.y`, got {request_line:?}"
+        )));
+    }
+
+    let mut content_length = 0usize;
+    for _ in 0..MAX_HEADERS {
+        let line = read_line_limited(reader.by_ref())?;
+        if line.is_empty() {
+            // end of headers
+            if content_length > max_body {
+                return Err(HttpError::TooLarge { declared: content_length, limit: max_body });
+            }
+            let mut body = vec![0u8; content_length];
+            reader
+                .read_exact(&mut body)
+                .map_err(|e| HttpError::Malformed(format!("truncated body: {e}")))?;
+            return Ok(Request { method, path, body });
+        }
+        let (key, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("header without ':': {line:?}")))?;
+        if key.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| HttpError::Malformed(format!("bad content-length {value:?}")))?;
+        }
+    }
+    Err(HttpError::Malformed(format!("more than {MAX_HEADERS} headers")))
+}
+
+/// Reason phrase for the statuses the service emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete `Connection: close` response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Write `json` (pretty, with a trailing newline) as an
+/// `application/json` response. Write failures are swallowed: the peer
+/// hanging up mid-response is its problem, not the server's.
+pub fn respond_json(stream: &mut TcpStream, status: u16, json: &Json) {
+    let mut body = json.to_string_pretty();
+    body.push('\n');
+    let _ = write_response(stream, status, "application/json", body.as_bytes());
+}
+
+/// Write the standard `{"error": message}` body for `status`.
+pub fn respond_error(stream: &mut TcpStream, status: u16, message: String) {
+    respond_json(stream, status, &Json::obj(vec![("error", Json::str(message))]));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Run `read_request` against raw client bytes over a real socket pair.
+    fn parse_raw(bytes: &[u8], max_body: usize) -> Result<Request, HttpError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let payload = bytes.to_vec();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&payload).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            s
+        });
+        let (server, _) = listener.accept().unwrap();
+        let out = read_request(&server, max_body);
+        client.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse_raw(
+            b"POST /simulate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+            1024,
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/simulate");
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_a_get_without_content_length() {
+        let req = parse_raw(b"GET /metrics HTTP/1.1\r\n\r\n", 1024).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_request_lines_are_rejected() {
+        for raw in [&b"NOT-HTTP\r\n\r\n"[..], b"\r\n\r\n", b"GET\r\n\r\n", b"GET / SMTP/1.0\r\n\r\n"]
+        {
+            assert!(
+                matches!(parse_raw(raw, 1024), Err(HttpError::Malformed(_))),
+                "{raw:?} must be malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_headers_are_rejected() {
+        let r = parse_raw(b"POST / HTTP/1.1\r\nno-colon-here\r\n\r\n", 1024);
+        assert!(matches!(r, Err(HttpError::Malformed(_))));
+        let r = parse_raw(b"POST / HTTP/1.1\r\nContent-Length: pony\r\n\r\n", 1024);
+        assert!(matches!(r, Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_too_large() {
+        let r = parse_raw(b"POST / HTTP/1.1\r\nContent-Length: 4096\r\n\r\n", 64);
+        match r {
+            Err(HttpError::TooLarge { declared, limit }) => {
+                assert_eq!((declared, limit), (4096, 64));
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_malformed() {
+        let r = parse_raw(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", 1024);
+        assert!(matches!(r, Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn response_wire_format_is_parseable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            text
+        });
+        let (server, _) = listener.accept().unwrap();
+        let mut server = server;
+        respond_error(&mut server, 404, "no such route".into());
+        drop(server);
+        let text = client.join().unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        let j = crate::util::json::parse(body).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "no such route");
+    }
+}

@@ -1,0 +1,158 @@
+//! Live service metrics for `spikelink serve` (`GET /metrics`).
+//!
+//! Counters are the crate's lock-free [`Counter`]; service latency is the
+//! same streaming [`LatencyHist`] the cycle engines' telemetry uses (one
+//! histogram implementation in the crate), behind a mutex because samples
+//! arrive from every connection worker. The JSON snapshot
+//! ([`ServeMetrics::to_json`]) combines this module's counters with the
+//! queue-depth gauge and the two caches' stat blocks, which live with
+//! their owners and are passed in.
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHist;
+use crate::util::Counter;
+
+/// Per-endpoint request counters, overload/reject counters, batching
+/// telemetry, and the service-latency histogram.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// `POST /simulate` requests accepted into routing.
+    pub simulate_requests: Counter,
+    /// `POST /assign` requests accepted into routing.
+    pub assign_requests: Counter,
+    /// `GET /metrics` requests.
+    pub metrics_requests: Counter,
+    /// `POST /shutdown` requests.
+    pub shutdown_requests: Counter,
+    /// Requests answered 4xx (malformed, oversized, unknown route/method,
+    /// invalid document).
+    pub rejected_4xx: Counter,
+    /// Requests answered 503 (connection or simulation queue full, engine
+    /// pool gone).
+    pub rejected_503: Counter,
+    /// Engine-pool batches executed.
+    pub batches: Counter,
+    /// Requests answered across those batches (`batched_requests /
+    /// batches` = mean dedup factor).
+    pub batched_requests: Counter,
+    latency: Mutex<LatencyHist>,
+}
+
+impl ServeMetrics {
+    /// Record one successful request's service latency (request parsed →
+    /// response body ready), nanoseconds.
+    pub fn record_latency(&self, ns: u64) {
+        self.latency.lock().unwrap().record(ns);
+    }
+
+    /// Clone the current latency histogram (tests; the JSON snapshot reads
+    /// it directly).
+    pub fn latency_snapshot(&self) -> LatencyHist {
+        self.latency.lock().unwrap().clone()
+    }
+
+    /// The `serve-metrics/v1` document: request counts per endpoint,
+    /// rejects, batching telemetry, the queue-depth gauge, the two cache
+    /// blocks ([`super::cache::ShardedLru::stats_json`]), and service
+    /// latency p50/p99/p999.
+    pub fn to_json(&self, queue_depth: usize, sim_cache: Json, assign_cache: Json) -> Json {
+        let hist = self.latency.lock().unwrap();
+        let batches = self.batches.get();
+        let batched = self.batched_requests.get();
+        Json::obj(vec![
+            ("schema", Json::str("serve-metrics/v1")),
+            (
+                "requests",
+                Json::obj(vec![
+                    ("simulate", Json::num(self.simulate_requests.get() as f64)),
+                    ("assign", Json::num(self.assign_requests.get() as f64)),
+                    ("metrics", Json::num(self.metrics_requests.get() as f64)),
+                    ("shutdown", Json::num(self.shutdown_requests.get() as f64)),
+                ]),
+            ),
+            (
+                "rejected",
+                Json::obj(vec![
+                    ("client_4xx", Json::num(self.rejected_4xx.get() as f64)),
+                    ("overload_503", Json::num(self.rejected_503.get() as f64)),
+                ]),
+            ),
+            (
+                "batch",
+                Json::obj(vec![
+                    ("batches", Json::num(batches as f64)),
+                    ("batched_requests", Json::num(batched as f64)),
+                    (
+                        "mean_batch",
+                        Json::num(if batches == 0 { 0.0 } else { batched as f64 / batches as f64 }),
+                    ),
+                ]),
+            ),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            (
+                "cache",
+                Json::obj(vec![("simulate", sim_cache), ("assign", assign_cache)]),
+            ),
+            (
+                "latency_ns",
+                Json::obj(vec![
+                    ("count", Json::num(hist.count() as f64)),
+                    ("mean", Json::num(hist.mean())),
+                    ("p50", Json::num(hist.p50() as f64)),
+                    ("p99", Json::num(hist.p99() as f64)),
+                    ("p999", Json::num(hist.p999() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::cache::ShardedLru;
+
+    #[test]
+    fn snapshot_carries_counters_gauge_caches_and_latency() {
+        let m = ServeMetrics::default();
+        m.simulate_requests.inc();
+        m.simulate_requests.inc();
+        m.assign_requests.inc();
+        m.rejected_4xx.inc();
+        m.batches.inc();
+        m.batched_requests.add(3);
+        for ns in [100u64, 200, 300] {
+            m.record_latency(ns);
+        }
+        let cache: ShardedLru<String> = ShardedLru::new(2, 4);
+        cache.put("k".into(), "v".into());
+        let _ = cache.get("k");
+        let j = m.to_json(7, cache.stats_json(), ShardedLru::<String>::new(1, 1).stats_json());
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "serve-metrics/v1");
+        let req = j.get("requests").unwrap();
+        assert_eq!(req.get("simulate").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(req.get("assign").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("queue_depth").unwrap().as_f64().unwrap(), 7.0);
+        let batch = j.get("batch").unwrap();
+        assert_eq!(batch.get("mean_batch").unwrap().as_f64().unwrap(), 3.0);
+        let sim = j.get("cache").unwrap().get("simulate").unwrap();
+        assert_eq!(sim.get("hits").unwrap().as_f64().unwrap(), 1.0);
+        let lat = j.get("latency_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64().unwrap(), 3.0);
+        assert!(lat.get("p99").unwrap().as_f64().unwrap() >= 200.0);
+        // histogram snapshot matches what to_json reported
+        assert_eq!(m.latency_snapshot().count(), 3);
+    }
+
+    #[test]
+    fn empty_metrics_serialize_cleanly() {
+        let m = ServeMetrics::default();
+        let empty = ShardedLru::<String>::new(1, 1);
+        let j = m.to_json(0, empty.stats_json(), empty.stats_json());
+        let batch = j.get("batch").unwrap();
+        assert_eq!(batch.get("mean_batch").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(j.get("latency_ns").unwrap().get("count").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! `spikelink serve` — the production scenario service (`POST /simulate`,
+//! `POST /assign`, `GET /metrics`, `POST /shutdown`).
+//!
+//! The ROADMAP's "Production serving" item, built std-only (the offline
+//! registry has no tokio): a blocking `TcpListener` acceptor, a fixed
+//! worker pool behind a bounded connection queue, and a small engine pool
+//! that batches *identical* queued scenarios onto one cycle-engine run —
+//! possible because every engine is `Send`
+//! ([`crate::noc::Scenario::build`]). Results live in sharded LRU caches
+//! keyed by canonical documents ([`crate::noc::Scenario::canonical_json`]
+//! for scenarios, the normalized request for assignments), so a repeat
+//! `/assign` skips the simulated-annealing search in
+//! [`crate::codec::assign`] entirely.
+//!
+//! Module map:
+//!
+//! * [`service`] — the server itself: routing, the thread pools, graceful
+//!   shutdown ([`Server`], [`ServeConfig`]);
+//! * [`http`]    — minimal HTTP/1.1 framing with typed 400/413 errors;
+//! * [`batch`]   — the bounded [`BatchQueue`] with compatibility-batched
+//!   takes, shared with the PJRT serving example (`examples/serve.rs`);
+//! * [`cache`]   — the sharded LRU ([`ShardedLru`]) with hit/miss/eviction
+//!   counters;
+//! * [`metrics`] — per-endpoint counters + the service-latency histogram
+//!   behind `GET /metrics` ([`ServeMetrics`]).
+//!
+//! Endpoint schemas, batching/cache semantics, and the load-test
+//! methodology (`examples/load_serve.rs`, the `serve/p99` bench record)
+//! are documented in EXPERIMENTS.md §Serve.
+
+pub mod batch;
+pub mod cache;
+pub mod http;
+pub mod metrics;
+pub mod service;
+
+pub use batch::BatchQueue;
+pub use cache::ShardedLru;
+pub use metrics::ServeMetrics;
+pub use service::{ServeConfig, Server};

@@ -1,0 +1,570 @@
+//! The `spikelink serve` production scenario service.
+//!
+//! Architecture (std-only; the offline registry has no tokio, so this is
+//! the fixed-thread-pool shape of the classic blocking server):
+//!
+//! ```text
+//!   acceptor ──► conns: BatchQueue<TcpStream> ──► W connection workers
+//!                                                   │ parse + route
+//!                      ┌────────────────────────────┤
+//!                      │ /simulate miss             │ /assign (inline)
+//!                      ▼                            ▼
+//!   sim_jobs: BatchQueue<SimJob> ──► E engine runners   codec::assign
+//!        (batched by canonical key)   run_parallel(..)  + assign cache
+//!                      │ fan result out over mpsc
+//!                      ▼
+//!            sim cache (ShardedLru, canonical scenario JSON)
+//! ```
+//!
+//! * `POST /simulate` — a `scenario/v1` document ([`Scenario::from_json`],
+//!   strict unknown-key rejection). The canonical serialization
+//!   ([`Scenario::canonical_json`]) is both the cache key and the batching
+//!   compatibility class: queued jobs with the same canonical text share
+//!   one engine run (chains on the multi-threaded `ParallelChain`, meshes
+//!   on `SoaMesh`, via [`Scenario::run_parallel`]) and the result fans out
+//!   to every waiter. Responses carry `NocStats`, tail percentiles, and a
+//!   `cached` flag.
+//! * `POST /assign` — a codec-assignment request; a cache hit on the
+//!   normalized request document skips the simulated-annealing search in
+//!   [`assign::assign`] entirely (the headline latency win).
+//! * `GET /metrics` — [`super::metrics::ServeMetrics::to_json`].
+//! * `POST /shutdown` — the SIGTERM-equivalent: sets the shutdown flag,
+//!   wakes the acceptor with a loopback connect, closes both queues, and
+//!   lets every thread drain and exit ([`Server::join`] then returns).
+//!
+//! Overload is explicit: a full connection or simulation queue answers
+//! 503, an oversized body 413, junk 400 — never a silently dropped
+//! socket. All of this exists because the engines became `Send`
+//! ([`Scenario::build`] returns `Box<dyn CycleEngine + Send>`): a built
+//! engine moves freely onto the runner threads.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::analytic::latency::TailLatency;
+use crate::arch::params::{ArchConfig, Variant};
+use crate::codec::assign::{self, AssignConfig};
+use crate::model::networks;
+use crate::noc::faults::check_keys;
+use crate::noc::{DrainOutcome, NocStats, Scenario};
+use crate::sparsity::SparsityProfile;
+use crate::util::json::{self, Json};
+
+use super::batch::BatchQueue;
+use super::cache::ShardedLru;
+use super::http::{self, respond_error, respond_json, HttpError, Request};
+use super::metrics::ServeMetrics;
+
+/// Server knobs; the CLI maps `spikelink serve --flags` onto this.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port on 127.0.0.1; 0 binds an ephemeral port (tests, CI smoke).
+    pub port: u16,
+    /// Connection workers (parse + route + respond).
+    pub workers: usize,
+    /// Engine runners draining the simulation queue.
+    pub engines: usize,
+    /// Threads per engine run ([`Scenario::run_parallel`]; 0 = hardware
+    /// parallelism).
+    pub engine_threads: usize,
+    /// Most requests one engine run may answer (dedup-batch cap).
+    pub batch_max: usize,
+    /// Bound on each queue (pending connections, pending sim jobs); beyond
+    /// it the service answers 503.
+    pub queue_cap: usize,
+    /// Request-body byte limit (413 above it).
+    pub max_body: usize,
+    /// Cache shards per cache.
+    pub cache_shards: usize,
+    /// LRU entries per shard.
+    pub cache_cap_per_shard: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 0,
+            workers: 4,
+            engines: 2,
+            engine_threads: 0,
+            batch_max: 16,
+            queue_cap: 256,
+            max_body: 1 << 20,
+            cache_shards: 8,
+            cache_cap_per_shard: 128,
+        }
+    }
+}
+
+/// One queued `/simulate` request: the parsed scenario, its canonical
+/// cache/batch key, and the channel its connection worker blocks on.
+struct SimJob {
+    scenario: Scenario,
+    key: String,
+    resp: mpsc::Sender<String>,
+}
+
+struct ServerState {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    conns: BatchQueue<TcpStream>,
+    sim_jobs: BatchQueue<SimJob>,
+    /// canonical scenario JSON → compact `serve-sim/v1` result core.
+    sim_cache: ShardedLru<String>,
+    /// normalized assign-request JSON → compact `assign/v1` result core.
+    assign_cache: ShardedLru<String>,
+    metrics: ServeMetrics,
+}
+
+impl ServerState {
+    /// Idempotent shutdown: flag, acceptor wake-up, queue closes. Threads
+    /// drain whatever is already queued and exit.
+    fn begin_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // the acceptor blocks in accept(); a loopback connect wakes it so
+        // it can observe the flag (the std listener has no deadline API)
+        let _ = TcpStream::connect(self.addr);
+        self.conns.close();
+        self.sim_jobs.close();
+    }
+}
+
+/// A running server: the acceptor, worker, and engine threads plus the
+/// shared state. Start with [`Server::start`], stop via `POST /shutdown`
+/// or [`Server::shutdown`], and [`Server::join`] to wait for a clean exit.
+pub struct Server {
+    state: Arc<ServerState>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `127.0.0.1:port` and launch the thread pools.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr().context("resolving the bound address")?;
+        let state = Arc::new(ServerState {
+            addr,
+            shutdown: AtomicBool::new(false),
+            conns: BatchQueue::new(cfg.queue_cap),
+            sim_jobs: BatchQueue::new(cfg.queue_cap),
+            sim_cache: ShardedLru::new(cfg.cache_shards, cfg.cache_cap_per_shard),
+            assign_cache: ShardedLru::new(cfg.cache_shards, cfg.cache_cap_per_shard),
+            metrics: ServeMetrics::default(),
+            cfg,
+        });
+        let mut threads = Vec::new();
+        {
+            let st = state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("serve-accept".into())
+                    .spawn(move || accept_loop(listener, &st))
+                    .context("spawning the acceptor")?,
+            );
+        }
+        for i in 0..state.cfg.workers.max(1) {
+            let st = state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || conn_worker(&st))
+                    .context("spawning a connection worker")?,
+            );
+        }
+        for i in 0..state.cfg.engines.max(1) {
+            let st = state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-engine-{i}"))
+                    .spawn(move || engine_worker(&st))
+                    .context("spawning an engine runner")?,
+            );
+        }
+        Ok(Server { state, threads })
+    }
+
+    /// The bound address (`127.0.0.1:port`).
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.state.addr.port()
+    }
+
+    /// Programmatic `POST /shutdown` equivalent.
+    pub fn shutdown(&self) {
+        self.state.begin_shutdown();
+    }
+
+    /// Block until the service has shut down (via `POST /shutdown` or
+    /// [`Server::shutdown`]) and every thread has drained and exited.
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, st: &ServerState) {
+    loop {
+        if st.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => continue, // transient accept error; the flag still exits us
+        };
+        if st.shutdown.load(Ordering::SeqCst) {
+            break; // the loopback wake-up (or a straggler) during shutdown
+        }
+        // a stuck client must not pin a worker forever
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        if let Err(stream) = st.conns.push(stream) {
+            st.metrics.rejected_503.inc();
+            let mut stream = stream;
+            respond_error(&mut stream, 503, "connection queue full".into());
+        }
+    }
+}
+
+fn conn_worker(st: &ServerState) {
+    while let Some(mut batch) = st.conns.take_batch(1) {
+        let stream = batch.pop().expect("take_batch(1) yields exactly one connection");
+        handle_connection(st, stream);
+    }
+}
+
+fn handle_connection(st: &ServerState, mut stream: TcpStream) {
+    let req = match http::read_request(&stream, st.cfg.max_body) {
+        Ok(req) => req,
+        Err(HttpError::TooLarge { declared, limit }) => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(
+                &mut stream,
+                413,
+                format!("body of {declared} bytes over the {limit}-byte limit"),
+            );
+            return;
+        }
+        Err(HttpError::Malformed(m)) => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(&mut stream, 400, format!("malformed request: {m}"));
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/simulate") => handle_simulate(st, &req, &mut stream, t0),
+        ("POST", "/assign") => handle_assign(st, &req, &mut stream, t0),
+        ("GET", "/metrics") => {
+            st.metrics.metrics_requests.inc();
+            let j = st.metrics.to_json(
+                st.sim_jobs.len(),
+                st.sim_cache.stats_json(),
+                st.assign_cache.stats_json(),
+            );
+            respond_json(&mut stream, 200, &j);
+        }
+        ("POST", "/shutdown") => {
+            st.metrics.shutdown_requests.inc();
+            respond_json(
+                &mut stream,
+                200,
+                &Json::obj(vec![("status", Json::str("shutting down"))]),
+            );
+            st.begin_shutdown();
+        }
+        (_, "/simulate" | "/assign" | "/shutdown" | "/metrics") => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(
+                &mut stream,
+                405,
+                format!("{} is not supported on {}", req.method, req.path),
+            );
+        }
+        (_, path) => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(&mut stream, 404, format!("no such route: {path}"));
+        }
+    }
+}
+
+/// `DrainOutcome` as response text.
+fn outcome_str(o: DrainOutcome) -> &'static str {
+    match o {
+        DrainOutcome::Drained => "drained",
+        DrainOutcome::TimedOut => "timed-out",
+    }
+}
+
+fn stats_json(s: &NocStats) -> Json {
+    Json::obj(vec![
+        ("injected", Json::num(s.injected as f64)),
+        ("delivered", Json::num(s.delivered as f64)),
+        ("total_hops", Json::num(s.total_hops as f64)),
+        ("total_latency", Json::num(s.total_latency as f64)),
+        ("cycles", Json::num(s.cycles as f64)),
+        ("avg_hops", Json::num(s.avg_hops())),
+        ("avg_latency", Json::num(s.avg_latency())),
+        ("throughput", Json::num(s.throughput())),
+        ("delivered_fraction", Json::num(s.delivered_fraction())),
+        (
+            "faults",
+            Json::obj(vec![
+                ("corrupted", Json::num(s.faults.corrupted as f64)),
+                ("retried", Json::num(s.faults.retried as f64)),
+                ("dropped", Json::num(s.faults.dropped as f64)),
+                ("link_down_cycles", Json::num(s.faults.link_down_cycles as f64)),
+                ("stall_cycles", Json::num(s.faults.stall_cycles as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn tail_json(t: &TailLatency) -> Json {
+    Json::obj(vec![
+        ("samples", Json::num(t.samples as f64)),
+        ("mean", Json::num(t.mean)),
+        ("p50", Json::num(t.p50 as f64)),
+        ("p99", Json::num(t.p99 as f64)),
+        ("p999", Json::num(t.p999 as f64)),
+    ])
+}
+
+/// The cacheable `/simulate` result core (everything response-worthy that
+/// does not depend on *this* request: the `cached` flag and service
+/// latency are spliced in per response by [`wrap_core`]).
+fn sim_core_json(sc: &Scenario, res: &crate::noc::ScenarioResult) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("serve-sim/v1")),
+        ("key", Json::str(format!("{:016x}", sc.canonical_hash()))),
+        ("label", Json::str(sc.label())),
+        ("stats", stats_json(&res.stats)),
+        ("tail", res.tail.as_ref().map(tail_json).unwrap_or(Json::Null)),
+        ("outcome", Json::str(outcome_str(res.outcome))),
+    ])
+}
+
+/// Splice the per-request fields into a cached result core.
+fn wrap_core(core: &str, cached: bool, service_ns: u64) -> Json {
+    let mut j = json::parse(core).expect("caches hold valid JSON the server wrote");
+    if let Json::Obj(map) = &mut j {
+        map.insert("cached".into(), Json::Bool(cached));
+        map.insert("service_ns".into(), Json::num(service_ns as f64));
+    }
+    j
+}
+
+fn handle_simulate(st: &ServerState, req: &Request, stream: &mut TcpStream, t0: Instant) {
+    st.metrics.simulate_requests.inc();
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(stream, 400, "body is not UTF-8".into());
+            return;
+        }
+    };
+    let sc = match Scenario::from_json_str(text) {
+        Ok(sc) => sc,
+        Err(e) => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(stream, 400, format!("invalid scenario: {e:#}"));
+            return;
+        }
+    };
+    let key = sc.canonical_json();
+    if let Some(core) = st.sim_cache.get(&key) {
+        let ns = t0.elapsed().as_nanos() as u64;
+        st.metrics.record_latency(ns);
+        respond_json(stream, 200, &wrap_core(&core, true, ns));
+        return;
+    }
+    let (tx, rx) = mpsc::channel();
+    if st.sim_jobs.push(SimJob { scenario: sc, key, resp: tx }).is_err() {
+        st.metrics.rejected_503.inc();
+        respond_error(stream, 503, "simulation queue full".into());
+        return;
+    }
+    match rx.recv() {
+        Ok(core) => {
+            let ns = t0.elapsed().as_nanos() as u64;
+            st.metrics.record_latency(ns);
+            respond_json(stream, 200, &wrap_core(&core, false, ns));
+        }
+        // the engine pool only disappears during shutdown
+        Err(_) => {
+            st.metrics.rejected_503.inc();
+            respond_error(stream, 503, "engine pool shut down before the job ran".into());
+        }
+    }
+}
+
+/// Engine runner: drain the simulation queue in batches of identical
+/// canonical scenarios, run each batch ONCE on the parallel engine family
+/// (chains → `ParallelChain`, meshes → `SoaMesh`), cache the result core,
+/// and fan it out to every waiting connection worker.
+fn engine_worker(st: &ServerState) {
+    while let Some(batch) =
+        st.sim_jobs.take_batch_where(st.cfg.batch_max.max(1), |a, b| a.key == b.key)
+    {
+        st.metrics.batches.inc();
+        st.metrics.batched_requests.add(batch.len() as u64);
+        let head = &batch[0];
+        let res = head.scenario.run_parallel(st.cfg.engine_threads);
+        let core = sim_core_json(&head.scenario, &res).to_string_compact();
+        st.sim_cache.put(head.key.clone(), core.clone());
+        for job in &batch {
+            // a waiter that gave up (shutdown race) is not an error
+            let _ = job.resp.send(core.clone());
+        }
+    }
+}
+
+/// Parsed + normalized `/assign` request.
+struct AssignRequest {
+    model: String,
+    variant: Variant,
+    activity: f64,
+    imbalanced: Option<u64>,
+    acfg: AssignConfig,
+}
+
+impl AssignRequest {
+    /// Strict parse with defaults (`variant` hnn, `activity` 0.1, optimizer
+    /// defaults from [`AssignConfig`]); every violation is a 400.
+    fn from_json(j: &Json) -> Result<AssignRequest> {
+        check_keys(
+            j,
+            &["schema", "model", "variant", "activity", "imbalanced", "seed", "sa_iters", "threshold"],
+            "assign request",
+        )?;
+        if let Some(schema) = j.get("schema") {
+            let s = schema.as_str().unwrap_or("");
+            if s != "assign-request/v1" {
+                anyhow::bail!("assign request: schema must be assign-request/v1, got {s:?}");
+            }
+        }
+        let model = j
+            .get("model")
+            .and_then(|m| m.as_str())
+            .ok_or_else(|| anyhow::anyhow!("assign request: missing model"))?
+            .to_string();
+        if networks::by_name(&model).is_none() {
+            anyhow::bail!("assign request: unknown model {model:?}");
+        }
+        let variant_name = j.get("variant").and_then(|v| v.as_str()).unwrap_or("hnn");
+        let variant = Variant::parse(variant_name)
+            .ok_or_else(|| anyhow::anyhow!("assign request: variant must be ann|snn|hnn"))?;
+        if variant == Variant::Ann {
+            anyhow::bail!("assign request: variant ann has no spiking boundary edges to assign");
+        }
+        let activity = j.get("activity").and_then(|a| a.as_f64()).unwrap_or(0.1);
+        if !(0.0..=1.0).contains(&activity) {
+            anyhow::bail!("assign request: activity must be in [0, 1], got {activity}");
+        }
+        let imbalanced = match j.get("imbalanced") {
+            None => None,
+            Some(v) => Some(
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("assign request: imbalanced must be a seed"))?
+                    as u64,
+            ),
+        };
+        let defaults = AssignConfig::default();
+        let acfg = AssignConfig {
+            seed: j.get("seed").and_then(|v| v.as_usize()).unwrap_or(defaults.seed as usize) as u64,
+            sa_iters: j.get("sa_iters").and_then(|v| v.as_usize()).unwrap_or(defaults.sa_iters),
+            dense_threshold: j
+                .get("threshold")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(defaults.dense_threshold),
+            ..defaults
+        };
+        if !(0.0..=1.0).contains(&acfg.dense_threshold) {
+            anyhow::bail!(
+                "assign request: threshold must be in [0, 1], got {}",
+                acfg.dense_threshold
+            );
+        }
+        Ok(AssignRequest { model, variant, activity, imbalanced, acfg })
+    }
+
+    /// The normalized request document — defaults applied, keys sorted
+    /// ([`Json::Obj`] is a `BTreeMap`) — compact-serialized as the
+    /// assignment-cache key. Two requests that differ only in spelling
+    /// (absent vs. explicit defaults, key order, number formatting) key
+    /// the same entry.
+    fn canonical_key(&self) -> String {
+        let mut fields = vec![
+            ("model", Json::str(self.model.clone())),
+            ("variant", Json::str(self.variant.as_str())),
+            ("activity", Json::num(self.activity)),
+            ("seed", Json::num(self.acfg.seed as f64)),
+            ("sa_iters", Json::num(self.acfg.sa_iters as f64)),
+            ("threshold", Json::num(self.acfg.dense_threshold)),
+        ];
+        if let Some(seed) = self.imbalanced {
+            fields.push(("imbalanced", Json::num(seed as f64)));
+        }
+        Json::obj(fields).to_string_compact()
+    }
+}
+
+fn handle_assign(st: &ServerState, req: &Request, stream: &mut TcpStream, t0: Instant) {
+    st.metrics.assign_requests.inc();
+    let parsed = std::str::from_utf8(&req.body)
+        .map_err(|_| anyhow::anyhow!("body is not UTF-8"))
+        .and_then(|text| {
+            json::parse(text).map_err(|e| anyhow::anyhow!("assign request JSON: {e}"))
+        })
+        .and_then(|j| AssignRequest::from_json(&j));
+    let ar = match parsed {
+        Ok(ar) => ar,
+        Err(e) => {
+            st.metrics.rejected_4xx.inc();
+            respond_error(stream, 400, format!("{e:#}"));
+            return;
+        }
+    };
+    let key = ar.canonical_key();
+    if let Some(core) = st.assign_cache.get(&key) {
+        // the whole point: a repeat request never re-runs the annealer
+        let ns = t0.elapsed().as_nanos() as u64;
+        st.metrics.record_latency(ns);
+        respond_json(stream, 200, &wrap_core(&core, true, ns));
+        return;
+    }
+    let net = networks::by_name(&ar.model).expect("validated in AssignRequest::from_json");
+    let mut cfg = ArchConfig::baseline(ar.variant);
+    cfg.input_activity = ar.activity;
+    let profile = match ar.imbalanced {
+        Some(seed) => {
+            SparsityProfile::synthetic_imbalanced(net.layers.len(), ar.activity, seed)
+        }
+        None => SparsityProfile::uniform(net.layers.len(), ar.activity),
+    };
+    let a = assign::assign(&net, &cfg, &profile, &ar.acfg);
+    let mut core = a.to_json();
+    if let Json::Obj(map) = &mut core {
+        map.insert("model".into(), Json::str(net.name.clone()));
+        map.insert("variant".into(), Json::str(ar.variant.as_str()));
+        map.insert("seed".into(), Json::num(ar.acfg.seed as f64));
+        map.insert("threshold".into(), Json::num(ar.acfg.dense_threshold));
+    }
+    let core = core.to_string_compact();
+    st.assign_cache.put(key, core.clone());
+    let ns = t0.elapsed().as_nanos() as u64;
+    st.metrics.record_latency(ns);
+    respond_json(stream, 200, &wrap_core(&core, false, ns));
+}

@@ -156,6 +156,7 @@ fn four_codec_boundary_runs_ordered_at_matched_activity() {
             seed: 3,
             codec,
             codecs: std::collections::BTreeMap::new(),
+            activities: std::collections::BTreeMap::new(),
         });
         let res = sc.run();
         assert!(res.stats.delivered > 0, "{codec}: no packets delivered");
@@ -210,6 +211,7 @@ fn empty_codecs_map_replays_the_uniform_scenario_bit_identically() {
         seed: 11,
         codec: CodecId::Rate,
         codecs: BTreeMap::new(),
+        activities: BTreeMap::new(),
     });
     let legacy_events = boundary_edge_traffic(128, 0, 0.2, 8, 8, 11);
     let sched = uniform.schedule();

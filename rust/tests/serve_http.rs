@@ -1,0 +1,246 @@
+//! Integration tests for the `spikelink serve` HTTP surface: framing
+//! errors, routing, the result/assignment caches, and — the load-bearing
+//! one — concurrent `/simulate` answering bit-identically to a serial
+//! [`Scenario::run`].
+//!
+//! Every test starts its own server on an ephemeral port (`port: 0`) so
+//! tests run concurrently without sharing caches or counters, and shuts
+//! it down at the end so the thread pools don't outlive the test.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use spikelink::noc::{Scenario, ScenarioResult};
+use spikelink::serve::{ServeConfig, Server};
+use spikelink::util::json::{self, Json};
+
+// -- helpers ----------------------------------------------------------------
+
+fn start_default() -> Server {
+    Server::start(ServeConfig { port: 0, ..ServeConfig::default() }).expect("server starts")
+}
+
+/// Write raw bytes on a fresh connection and return whatever comes back
+/// (the service answers one request per connection and closes).
+fn send_raw(addr: SocketAddr, bytes: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(bytes).expect("write");
+    s.shutdown(std::net::Shutdown::Write).ok();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read");
+    out
+}
+
+/// One framed request; returns (status, parsed JSON body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let raw = send_raw(
+        addr,
+        format!(
+            "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let j = json::parse(body).unwrap_or_else(|e| panic!("response body not JSON ({e}): {body:?}"));
+    (status, j)
+}
+
+/// Assert a `/simulate` response body matches a locally-computed
+/// [`ScenarioResult`] field by field. Counts are exact (small integers
+/// round-trip losslessly through the JSON layer); `mean` gets an epsilon.
+fn assert_matches(j: &Json, exp: &ScenarioResult) {
+    let stats = j.get("stats").expect("stats block");
+    let field = |name: &str| stats.get(name).unwrap().as_f64().unwrap();
+    assert_eq!(field("injected"), exp.stats.injected as f64);
+    assert_eq!(field("delivered"), exp.stats.delivered as f64);
+    assert_eq!(field("total_hops"), exp.stats.total_hops as f64);
+    assert_eq!(field("total_latency"), exp.stats.total_latency as f64);
+    assert_eq!(field("cycles"), exp.stats.cycles as f64);
+    match &exp.tail {
+        Some(t) => {
+            let tj = j.get("tail").expect("tail block");
+            assert_eq!(tj.get("samples").unwrap().as_f64().unwrap(), t.samples as f64);
+            assert_eq!(tj.get("p50").unwrap().as_f64().unwrap(), t.p50 as f64);
+            assert_eq!(tj.get("p99").unwrap().as_f64().unwrap(), t.p99 as f64);
+            assert_eq!(tj.get("p999").unwrap().as_f64().unwrap(), t.p999 as f64);
+            let mean = tj.get("mean").unwrap().as_f64().unwrap();
+            assert!((mean - t.mean).abs() < 1e-9 * t.mean.abs().max(1.0));
+        }
+        None => assert!(matches!(j.get("tail"), Some(Json::Null))),
+    }
+}
+
+const MESH: &str = r#"{"schema":"scenario/v1","topology":{"kind":"mesh","dim":4},
+    "traffic":{"kind":"uniform","packets":40,"seed":7},"telemetry":true}"#;
+const CHAIN: &str = r#"{"schema":"scenario/v1","topology":{"kind":"chain","chips":3,"dim":4},
+    "traffic":{"kind":"boundary","neurons":64,"dense":0,"activity":0.25,
+               "ticks":2,"seed":9,"codec":"rate"},"telemetry":true}"#;
+
+// -- framing + routing ------------------------------------------------------
+
+#[test]
+fn malformed_request_line_is_a_400() {
+    let server = start_default();
+    let raw = send_raw(server.addr(), b"BANANA\r\n\r\n");
+    assert!(raw.starts_with("HTTP/1.1 400 "), "got: {raw:?}");
+    assert!(raw.contains("malformed request"), "got: {raw:?}");
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn oversized_body_is_a_413() {
+    let server =
+        Server::start(ServeConfig { port: 0, max_body: 64, ..ServeConfig::default() }).unwrap();
+    let big = "x".repeat(200);
+    let (status, j) = http(server.addr(), "POST", "/simulate", &big);
+    assert_eq!(status, 413);
+    let err = j.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("200") && err.contains("64"), "got: {err:?}");
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn unknown_route_404_and_wrong_method_405() {
+    let server = start_default();
+    let (status, j) = http(server.addr(), "POST", "/nope", "{}");
+    assert_eq!(status, 404);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("/nope"));
+    let (status, j) = http(server.addr(), "GET", "/simulate", "");
+    assert_eq!(status, 405);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("GET"));
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn invalid_scenario_json_is_a_400_naming_the_bad_key() {
+    let server = start_default();
+    // not JSON at all
+    let (status, j) = http(server.addr(), "POST", "/simulate", "not json");
+    assert_eq!(status, 400);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("invalid scenario"));
+    // valid JSON, unknown top-level key: the strict parser must name it
+    let bogus = r#"{"schema":"scenario/v1","topology":{"kind":"mesh","dim":4},
+        "traffic":{"kind":"uniform","packets":4,"seed":1},"bogus_key":1}"#;
+    let (status, j) = http(server.addr(), "POST", "/simulate", bogus);
+    assert_eq!(status, 400);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("bogus_key"));
+    server.shutdown();
+    server.join();
+}
+
+// -- correctness under concurrency ------------------------------------------
+
+#[test]
+fn concurrent_simulate_matches_the_serial_engine() {
+    // the lock: N clients hammering the batched, cached, multi-threaded
+    // service get byte-for-byte the numbers a serial Scenario::run produces
+    let expected =
+        [Scenario::from_json_str(MESH).unwrap().run(), Scenario::from_json_str(CHAIN).unwrap().run()];
+    let server = start_default();
+    let addr = server.addr();
+    let clients: Vec<_> = (0..6)
+        .map(|t| {
+            std::thread::spawn(move || {
+                for i in 0..10 {
+                    let which = (t + i) % 2;
+                    let body = if which == 0 { MESH } else { CHAIN };
+                    let (status, j) = http(addr, "POST", "/simulate", body);
+                    assert_eq!(status, 200, "client {t} req {i}: {j:?}");
+                    assert_matches(&j, &expected[which]);
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    server.shutdown();
+    server.join();
+}
+
+// -- caching ----------------------------------------------------------------
+
+#[test]
+fn equivalent_spellings_share_one_cache_entry() {
+    // same scenario, spelled differently: explicit defaults + empty codecs
+    // map vs. everything absent — the canonical key must coincide
+    let a = r#"{"schema":"scenario/v1","topology":{"kind":"chain","chips":3,"dim":4},
+        "traffic":{"kind":"boundary","neurons":32,"dense":0,"activity":0.5,
+                   "ticks":2,"seed":11,"codec":"rate","codecs":{}},
+        "telemetry":false}"#;
+    let b = r#"{"topology":{"kind":"chain","dim":4,"chips":3},
+        "traffic":{"kind":"boundary","seed":11,"neurons":32,"dense":0,
+                   "activity":0.5,"ticks":2,"codec":"rate"}}"#;
+    let server = start_default();
+    let (s1, j1) = http(server.addr(), "POST", "/simulate", a);
+    let (s2, j2) = http(server.addr(), "POST", "/simulate", b);
+    assert_eq!((s1, s2), (200, 200));
+    assert_eq!(j1.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(j2.get("cached").unwrap().as_bool(), Some(true), "spelling B missed the cache");
+    assert_eq!(
+        j1.get("key").unwrap().as_str().unwrap(),
+        j2.get("key").unwrap().as_str().unwrap(),
+    );
+    let (sm, m) = http(server.addr(), "GET", "/metrics", "");
+    assert_eq!(sm, 200);
+    let sim = m.get("cache").unwrap().get("simulate").unwrap();
+    assert!(sim.get("hits").unwrap().as_f64().unwrap() >= 1.0);
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn repeated_assign_is_served_from_cache() {
+    // two spellings of the same request (defaults absent vs. explicit):
+    // the normalized key must coincide, and the repeat must not re-anneal
+    let a = r#"{"schema":"assign-request/v1","model":"rwkv","variant":"hnn","sa_iters":50}"#;
+    let b = r#"{"model":"rwkv","sa_iters":50}"#;
+    let server = start_default();
+    let (s1, j1) = http(server.addr(), "POST", "/assign", a);
+    let (s2, j2) = http(server.addr(), "POST", "/assign", b);
+    assert_eq!((s1, s2), (200, 200), "{j1:?} / {j2:?}");
+    assert_eq!(j1.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(j2.get("cached").unwrap().as_bool(), Some(true), "repeat re-ran the annealer");
+    assert_eq!(
+        j1.get("evaluations").unwrap().as_f64().unwrap(),
+        j2.get("evaluations").unwrap().as_f64().unwrap(),
+    );
+    assert_eq!(j1.get("schema").unwrap().as_str().unwrap(), "assign/v1");
+    // malformed: unknown model and unknown key are 400s, not 500s
+    let (s, j) = http(server.addr(), "POST", "/assign", r#"{"model":"nope"}"#);
+    assert_eq!(s, 400);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+    let (s, _) = http(server.addr(), "POST", "/assign", r#"{"model":"rwkv","walrus":1}"#);
+    assert_eq!(s, 400);
+    let (sm, m) = http(server.addr(), "GET", "/metrics", "");
+    assert_eq!(sm, 200);
+    let ac = m.get("cache").unwrap().get("assign").unwrap();
+    assert!(ac.get("hits").unwrap().as_f64().unwrap() >= 1.0);
+    server.shutdown();
+    server.join();
+}
+
+// -- lifecycle --------------------------------------------------------------
+
+#[test]
+fn post_shutdown_drains_cleanly() {
+    let server = start_default();
+    let addr = server.addr();
+    // answer something first so the pools are warm
+    let (s, _) = http(addr, "POST", "/simulate", MESH);
+    assert_eq!(s, 200);
+    let (s, j) = http(addr, "POST", "/shutdown", "");
+    assert_eq!(s, 200);
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "shutting down");
+    // every thread drains and exits; a hang here is the failure mode
+    server.join();
+}

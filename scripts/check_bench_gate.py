@@ -44,6 +44,14 @@ appended by the latest bench is floor-checked like any other case, but a
 degraded-fabric number can never vouch for the clean {8, 16, 32} dim
 coverage the gate was written around.
 
+`serve`-suffixed labels (`noc/mesh16/sparse/speedup/serve`,
+`mesh16-serve-batched` — scenarios replayed through the `spikelink serve`
+service, see EXPERIMENTS.md §Serve) are the fourth suffix family with the
+same rules: latest-run only, floor-checked, never a substitute for the
+default-lineage dim coverage. Note the load test's own `serve/p99` record
+uses unit "req/s", which keeps it out of every x-vs-ref gate entirely;
+this family only exists for serve-labelled *speedup* records.
+
 `parallel-vs-serial` records (`noc/chain8x8/1m-transfers/parallel-vs-serial`,
 unit "x-vs-serial" — the threaded chain stepper's throughput over the serial
 engine's on the identical load, see EXPERIMENTS.md §Perf "Parallel engine")
@@ -82,15 +90,20 @@ CODEC_RE = re.compile(
 # the segment anchor keeps "default" and friends from matching
 FAULT_RE = re.compile(r"(?:^|[/-])(fault[^/]*)")
 
+# a serve-suffixed label starts a segment with "serve" and runs to the next
+# `/` (serve, serve-batched, serve-cached) — scenarios replayed through the
+# `spikelink serve` service rather than a direct engine run
+SERVE_RE = re.compile(r"(?:^|[/-])(serve[^/]*)")
+
 
 def suffix_of(name):
-    """The codec or fault segment of a bench-record name, or None for the
-    default (unsuffixed) lineage."""
-    m = CODEC_RE.search(name)
-    if m:
-        return m.group(1)
-    m = FAULT_RE.search(name)
-    return m.group(1) if m else None
+    """The codec, fault, or serve segment of a bench-record name, or None
+    for the default (unsuffixed) lineage."""
+    for pattern in (CODEC_RE, FAULT_RE, SERVE_RE):
+        m = pattern.search(name)
+        if m:
+            return m.group(1)
+    return None
 
 
 def load(path):

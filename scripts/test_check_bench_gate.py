@@ -46,8 +46,17 @@ CASES = {
     "fault_below_floor.json": (False, "below the 5x acceptance floor"),
     # ...and never a substitute for the clean-run dim coverage
     "fault_only_speedups.json": (False, "bench did not complete"),
+    # serve-suffixed labels (scenarios replayed through `spikelink serve`,
+    # EXPERIMENTS.md §Serve) are the fourth suffix family: extra floor-checked
+    # cases next to an intact default lineage (the load test's own serve/p99
+    # record rides along with unit req/s, invisible to every x-vs-ref gate)...
+    "serve_labels_pass.json": (True, "suffixed cases"),
+    # ...held to the same 5x floor...
+    "serve_below_floor.json": (False, "below the 5x acceptance floor"),
+    # ...and never a substitute for the clean-run dim coverage
+    "serve_only_speedups.json": (False, "bench did not complete"),
     # parallel-vs-serial records (threaded chain stepper, unit x-vs-serial)
-    # are the fourth extra family: floor-checked next to an intact default
+    # are the fifth extra family: floor-checked next to an intact default
     # lineage...
     "parallel_labels_pass.json": (True, "parallel gate passed"),
     # ...held to the 0.5x floor (threading must never halve throughput)...
