@@ -104,7 +104,7 @@ USAGE: spikelink <command> [options]
 
 COMMANDS:
   report            regenerate paper tables/figures from the analytic engine
-                      --table 1|2|3|6|7  --figure 7|8|9|10|11|12|13|14|15|16  (default: all)
+                      --table 1|2|3|6|7|8  --figure 7|8|9|10|...|16|17  (default: all)
                       --out DIR       also write CSVs (default results/)
                       --runs DIR      run records for fig 9 (default results/runs)
   simulate          one (network, variant) analytic simulation
@@ -134,6 +134,22 @@ COMMANDS:
                       --threshold F   fidelity: activity above F forces dense
                         (default 0.5)
                       --save FILE     write the assignment JSON (assign/v1)
+  train-codecs      learn per-edge codec assignments AND boundary spike
+                    thresholds by surrogate-gradient descent on a proxy
+                    network (task loss + analytic energy x latency + the
+                    Eq. 10 rate hinge; see EXPERIMENTS.md §Learn)
+                      --model NAME    proxy target (default ms-resnet18)
+                      --seed N        init/data streams (default 42)
+                      --steps N       SGD steps (default 120)
+                      --batch N  --hidden N  --lr F  (optimizer knobs)
+                      --lam F  --budget F      Eq. 10 regularizer (0.5, 0.10)
+                      --threshold F   dense fallback activity (default 0.5)
+                      --edp-every N   EDP-coefficient refresh period (default 8)
+                      --save FILE     write the learned profile (profile/v1)
+                      --replay        replay learned vs uniform-dense through
+                        the cycle-level scenario layer and compare packets
+                      --neurons N  --ticks N   replay traffic shape (64, 8)
+                      --bench FILE    append a learn/pareto bench record
   train             run the AOT train-step loop (needs `make artifacts`)
                       --model hnn_lm|ann_lm|snn_lm|hnn_vision|...
                       --steps N (default 200)  --lam F  --budget F
@@ -161,8 +177,12 @@ COMMANDS:
                       --max-retries N      re-send budget per corrupted frame (default 3)
                       --drop-corrupted     discard corrupted frames instead of retrying
                       --link-down F:U[:E][,...]  outage window(s) [FROM, UNTIL) on edge E
+                      --jitter N           spike-timing jitter bound in cycles
                         (fault flags conflict with a --scenario file that
                          carries its own faults block)
+                      --profile FILE       replay a learned profile/v1 (from
+                        train-codecs --save) as a boundary chain scenario;
+                        conflicts with --scenario and --codec
                       --engine serial|parallel|reference  cycle engine (default serial)
                       --threads N          parallel-engine workers (0 = auto-detect;
                                            only valid with --engine parallel)

@@ -329,11 +329,41 @@ impl TopKDeltaCodec {
     /// traffic that cannot exist, contradicting the packet model any
     /// consumer (e.g. an assignment objective) would rank edges by.
     pub fn budget_k(neurons: u64, activity: f64) -> u64 {
-        let activity = validated_activity(activity);
+        Self::budget_k_with_threshold(neurons, activity, None)
+    }
+
+    /// [`TopKDeltaCodec::budget_k`] with the learned threshold actually in
+    /// the loop: `None` reproduces the default budget bit-for-bit (locked by
+    /// `codec_regression.rs`), while `Some(theta)` scales the firing activity
+    /// by the survival fraction `1 - theta` before the `k = ceil(a x N)`
+    /// closed form — the linear surrogate `learn` trains through
+    /// ([`crate::learn`]), so a profile's trained threshold and its reported
+    /// budget can never disagree. `theta` is clamped to `[0, 1]`; a full
+    /// threshold (`theta == 1`) silences the edge exactly like
+    /// `activity == 0`.
+    pub fn budget_k_with_threshold(neurons: u64, activity: f64, threshold: Option<f64>) -> u64 {
+        let activity = match threshold {
+            None => validated_activity(activity),
+            Some(theta) => Self::thresholded_activity(activity, theta),
+        };
         if neurons == 0 || activity <= 0.0 {
             return 0;
         }
         ((neurons as f64 * activity).ceil() as u64).max(1)
+    }
+
+    /// Firing activity surviving a learned boundary threshold `theta` in
+    /// `[0, 1]`: the straight-through surrogate treats the pre-threshold
+    /// magnitude distribution as uniform, so a fraction `1 - theta` of the
+    /// default activity crosses the pad. Out-of-range inputs are clamped
+    /// (activity through [`validated_activity`], `theta` into `[0, 1]`),
+    /// and `NaN` thresholds silence the edge.
+    pub fn thresholded_activity(activity: f64, theta: f64) -> f64 {
+        let activity = validated_activity(activity);
+        if theta.is_nan() {
+            return 0.0;
+        }
+        activity * (1.0 - theta.clamp(0.0, 1.0))
     }
 }
 
@@ -513,6 +543,37 @@ mod tests {
         assert_eq!(TopKDeltaCodec::budget_k(256, 0.0), 0);
         assert_eq!(TopKDeltaCodec.packets_per_edge(256, 0.0, 8, 8), 0);
         assert_eq!(TopKDeltaCodec::budget_k(1_000_000, 0.0), 0);
+    }
+
+    #[test]
+    fn threshold_hook_defaults_bit_identical_and_shrinks_monotonically() {
+        // `None` must reproduce the default budget exactly over a grid —
+        // the learnable hook cannot perturb the legacy path
+        for &n in &[0u64, 1, 64, 256, 4096] {
+            for &a in &[0.0, 1e-9, 0.1, 0.5, 0.9, 1.0] {
+                assert_eq!(
+                    TopKDeltaCodec::budget_k_with_threshold(n, a, None),
+                    TopKDeltaCodec::budget_k(n, a),
+                );
+            }
+        }
+        // a zero threshold is also the identity
+        assert_eq!(TopKDeltaCodec::budget_k_with_threshold(256, 0.1, Some(0.0)), 26);
+        // raising theta never raises k, and a full threshold silences the edge
+        let mut prev = u64::MAX;
+        for theta in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let k = TopKDeltaCodec::budget_k_with_threshold(256, 0.5, Some(theta));
+            assert!(k <= prev, "k must be monotone non-increasing in theta");
+            prev = k;
+        }
+        assert_eq!(TopKDeltaCodec::budget_k_with_threshold(256, 0.5, Some(1.0)), 0);
+        // clamping: out-of-range and NaN thresholds cannot resurrect traffic
+        assert_eq!(
+            TopKDeltaCodec::budget_k_with_threshold(256, 0.5, Some(-3.0)),
+            TopKDeltaCodec::budget_k(256, 0.5),
+        );
+        assert_eq!(TopKDeltaCodec::budget_k_with_threshold(256, 0.5, Some(9.0)), 0);
+        assert_eq!(TopKDeltaCodec::budget_k_with_threshold(256, 0.5, Some(f64::NAN)), 0);
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! `spikelink::learn` — surrogate-gradient training of boundary spike
+//! thresholds, closing the paper's "learnable" claim without XLA.
+//!
+//! The subsystem trains the small differentiable proxy of
+//! [`model`] whose spike gates stand in for the target network's die-to-die
+//! boundary edges, then exports the learned per-edge
+//! `{codec, activity, threshold}` triples as a versioned
+//! [`profile::LearnedProfile`] (`profile/v1`) that replays through the
+//! cycle-level scenario layer.
+//!
+//! Training co-optimizes three terms (see [`model::ProxyNet::loss_and_grads`]):
+//!
+//! 1. **Task loss** — MSE against a seeded teacher network's outputs.
+//! 2. **Energy x latency** — every [`LearnConfig::edp_every`] steps the
+//!    per-edge sensitivity of the analytic EDP objective
+//!    ([`crate::codec::assign::edp`]) to that edge's firing rate is
+//!    refreshed by central finite differences over
+//!    [`SparsityProfile::from_rates`] profiles of the *target* network, and
+//!    enters the loss as `lam * (dEDP/dr_e / EDP_0) * r_e`.
+//! 3. **Rate hinge** — the Eq. 10 penalty `lam * max(0, r_e - budget)^2`
+//!    from [`RegConfig`].
+//!
+//! After training, each edge's codec is chosen by minimizing the analytic
+//! packet count over [`allowed_codecs`] at the edge's measured hard rate.
+//! Dense is always admissible, so the learned mixed assignment can never
+//! ship more boundary packets than the uniform-dense baseline.
+//!
+//! [`pareto_sweep`] retrains across a lambda ladder with frozen weights, a
+//! per-edge threshold ratchet, and a packets guard, guaranteeing that
+//! boundary bandwidth is monotone non-increasing in lambda (the Fig. 17
+//! Pareto front).
+
+pub mod model;
+pub mod profile;
+
+pub use model::{Batch, Penalty, ProxyNet, Sgd, SURROGATE_TEMP};
+pub use profile::{EdgeProfile, LearnedProfile};
+
+use anyhow::{anyhow, Result};
+
+use crate::analytic::{simulate, SimReport};
+use crate::arch::params::{ArchConfig, Variant};
+use crate::codec::assign::{self, allowed_codecs, boundary_edges, edp, AssignConfig};
+use crate::codec::CodecId;
+use crate::model::layer::Network;
+use crate::model::networks;
+use crate::sparsity::SparsityProfile;
+use crate::train::RegConfig;
+use crate::util::rng::Rng;
+
+/// Proxy input width (per-sample feature count).
+pub const PROXY_IN: usize = 16;
+/// Proxy read-out width.
+pub const PROXY_OUT: usize = 8;
+/// Samples in the fixed probe batch used for hard-rate and hard-loss
+/// measurement.
+const PROBE_SAMPLES: usize = 64;
+/// Distinct training mini-batches cycled through the step loop.
+const TRAIN_BATCHES: usize = 4;
+/// Central-difference step for the per-edge EDP sensitivity.
+const EDP_FD_STEP: f64 = 0.02;
+
+/// Knobs for one `train-codecs` run. Defaults match the CLI.
+#[derive(Debug, Clone)]
+pub struct LearnConfig {
+    pub seed: u64,
+    /// Target network name ([`networks::by_name`]).
+    pub model: String,
+    /// SGD steps of the full (weights + thresholds) phase.
+    pub steps: usize,
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Hidden width of each proxy block.
+    pub hidden: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Eq. 10 regularizer: `lam` weights both the energy coupling and the
+    /// rate hinge; `rate_budget` is the hinge knee.
+    pub reg: RegConfig,
+    /// Payload-fidelity threshold forwarded to [`allowed_codecs`].
+    pub dense_threshold: f64,
+    /// Steps between analytic EDP-sensitivity refreshes.
+    pub edp_every: usize,
+    /// Initial spike threshold.
+    pub theta0: f32,
+}
+
+impl Default for LearnConfig {
+    fn default() -> Self {
+        LearnConfig {
+            seed: 42,
+            model: "ms-resnet18".into(),
+            steps: 120,
+            batch: 16,
+            hidden: 32,
+            lr: 0.05,
+            momentum: 0.9,
+            reg: RegConfig::default(),
+            dense_threshold: AssignConfig::default().dense_threshold,
+            edp_every: 8,
+            theta0: 0.05,
+        }
+    }
+}
+
+/// Everything a finished training run reports.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// The exportable `profile/v1` document.
+    pub profile: LearnedProfile,
+    /// Hard-gate task MSE after training.
+    pub task_loss: f64,
+    /// Hard-gate task MSE before training (untrained student).
+    pub initial_task_loss: f64,
+    /// Hard rates before training, one per boundary edge.
+    pub initial_rates: Vec<f64>,
+    /// EDP of the learned profile with its learned codec overrides.
+    pub edp: f64,
+    /// EDP of uniform dense at the *same* learned rates.
+    pub dense_edp: f64,
+    /// Boundary packets of the learned assignment.
+    pub boundary_packets: u64,
+    /// Boundary packets of uniform dense at the same rates.
+    pub dense_packets: u64,
+    /// EDP of the analytic `assign-codecs` optimizer at the initial rates
+    /// (the status-quo baseline; filled by [`train_codecs`]).
+    pub analytic_edp: f64,
+}
+
+/// One lambda point of the Pareto sweep (a Fig. 17 row).
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub lam: f32,
+    pub task_loss: f64,
+    pub mean_activity: f64,
+    pub boundary_packets: u64,
+    pub edp: f64,
+    /// `dense_edp / edp` at this point's rates (> 1 means learned wins).
+    pub edp_vs_dense: f64,
+}
+
+/// Full sweep result: the ladder of points plus the two fixed baselines.
+#[derive(Debug, Clone)]
+pub struct ParetoSweep {
+    /// Points in ascending-lambda order.
+    pub points: Vec<ParetoPoint>,
+    /// Per-point learned profiles (same order as `points`).
+    pub profiles: Vec<LearnedProfile>,
+    /// EDP of the analytic `assign-codecs` optimizer at the *initial*
+    /// (untrained) rates — the status-quo this sweep must beat.
+    pub analytic_edp: f64,
+}
+
+/// The analytic target the energy coupling differentiates.
+struct Target {
+    net: Network,
+    arch: ArchConfig,
+    boundary: Vec<usize>,
+}
+
+impl Target {
+    fn build(model: &str) -> Result<Target> {
+        let net = networks::by_name(model)
+            .ok_or_else(|| anyhow!("train-codecs: unknown model {model:?}"))?;
+        let arch = ArchConfig::baseline(Variant::Hnn);
+        let boundary = boundary_edges(&net, &arch);
+        if boundary.is_empty() {
+            return Err(anyhow!("train-codecs: model {model:?} has no die-boundary edges"));
+        }
+        Ok(Target { net, arch, boundary })
+    }
+
+    fn profile(&self, rates: &[f64]) -> SparsityProfile {
+        SparsityProfile::from_rates(
+            self.net.n_layers(),
+            rates,
+            &self.boundary,
+            self.arch.input_activity,
+        )
+    }
+
+    fn report(&self, cfg: &ArchConfig, rates: &[f64]) -> SimReport {
+        simulate(&self.net, cfg, &self.profile(rates))
+    }
+
+    fn edp_at(&self, rates: &[f64]) -> f64 {
+        edp(&self.report(&self.arch, rates))
+    }
+
+    /// Per-edge loss coefficients `lam * (dEDP/dr_e) / EDP_0` by central
+    /// finite differences of the analytic objective (one-sided at the rate
+    /// bounds, since rates are clamped to `[0, 1]`).
+    fn energy_coefs(&self, rates: &[f64], lam: f32) -> Vec<f32> {
+        let edp0 = self.edp_at(rates).max(f64::MIN_POSITIVE);
+        (0..rates.len())
+            .map(|e| {
+                let hi = (rates[e] + EDP_FD_STEP).min(1.0);
+                let lo = (rates[e] - EDP_FD_STEP).max(0.0);
+                if hi <= lo {
+                    return 0.0;
+                }
+                let mut up = rates.to_vec();
+                up[e] = hi;
+                let mut down = rates.to_vec();
+                down[e] = lo;
+                let slope = (self.edp_at(&up) - self.edp_at(&down)) / (hi - lo);
+                (lam as f64 * slope / edp0) as f32
+            })
+            .collect()
+    }
+}
+
+/// Run `steps` SGD updates; with `update_weights == false` only thresholds
+/// move (the frozen-weight Pareto continuation).
+fn run_training(
+    net: &mut ProxyNet,
+    batches: &[Batch],
+    probe: &Batch,
+    target: &Target,
+    cfg: &LearnConfig,
+    steps: usize,
+    update_weights: bool,
+) {
+    let mut opt = Sgd::new(net, cfg.lr, cfg.momentum);
+    let mut coefs = vec![0.0f32; net.n_edges()];
+    for s in 0..steps {
+        if s % cfg.edp_every.max(1) == 0 {
+            let rates = net.hard_rates(probe);
+            coefs = target.energy_coefs(&rates, cfg.reg.lam);
+        }
+        let pen = Penalty {
+            energy_coef: coefs.clone(),
+            lam: cfg.reg.lam,
+            rate_budget: cfg.reg.rate_budget,
+        };
+        let (_, grads) = net.loss_and_grads(&batches[s % batches.len()], &pen);
+        opt.step(net, &grads, update_weights);
+    }
+}
+
+/// Measure a trained net against the target and package the result:
+/// per-edge codec by packet-count argmin over the fidelity-admissible set,
+/// then full analytic evaluations of the learned and uniform-dense configs.
+fn finalize(net: &ProxyNet, probe: &Batch, target: &Target, cfg: &LearnConfig) -> TrainOutcome {
+    let rates = net.hard_rates(probe);
+    let base_rep = target.report(&target.arch, &rates);
+
+    let mut overrides = std::collections::BTreeMap::new();
+    let mut edges = Vec::with_capacity(rates.len());
+    for (i, (&layer, &rate)) in target.boundary.iter().zip(&rates).enumerate() {
+        let neurons = base_rep.works[layer].neurons;
+        let codec = *allowed_codecs(rate, cfg.dense_threshold)
+            .iter()
+            .min_by(|a, b| {
+                let (ticks, bits) = (target.arch.ticks, target.arch.bits);
+                let pa = a.codec().packets_per_edge(neurons, rate, ticks, bits);
+                let pb = b.codec().packets_per_edge(neurons, rate, ticks, bits);
+                pa.cmp(&pb)
+            })
+            .expect("allowed_codecs is never empty");
+        overrides.insert(layer, codec);
+        edges.push(EdgeProfile {
+            edge: i,
+            codec,
+            activity: rate,
+            threshold: net.thresholds[i] as f64,
+        });
+    }
+
+    let learned_cfg = target.arch.clone().with_codec_overrides(overrides);
+    let learned_rep = target.report(&learned_cfg, &rates);
+    let dense_cfg = target.arch.clone().with_boundary_codec(CodecId::Dense);
+    let dense_rep = target.report(&dense_cfg, &rates);
+
+    TrainOutcome {
+        profile: LearnedProfile {
+            seed: cfg.seed,
+            lam: cfg.reg.lam as f64,
+            rate_budget: cfg.reg.rate_budget as f64,
+            model: cfg.model.clone(),
+            edges,
+        },
+        task_loss: net.task_loss_hard(probe),
+        initial_task_loss: 0.0,
+        initial_rates: Vec::new(),
+        edp: edp(&learned_rep),
+        dense_edp: edp(&dense_rep),
+        boundary_packets: learned_rep.boundary_packets,
+        dense_packets: dense_rep.boundary_packets,
+        analytic_edp: 0.0,
+    }
+}
+
+/// Seeded construction of teacher, student, probe set and training batches.
+fn setup(cfg: &LearnConfig, n_edges: usize) -> (ProxyNet, Batch, Vec<Batch>) {
+    let rng = Rng::new(cfg.seed);
+    let teacher =
+        ProxyNet::new(&mut rng.fork(0x7EAC), PROXY_IN, cfg.hidden, PROXY_OUT, n_edges, 0.0);
+    let student =
+        ProxyNet::new(&mut rng.fork(0x57D0), PROXY_IN, cfg.hidden, PROXY_OUT, n_edges, cfg.theta0);
+    let mut data_rng = rng.fork(0xDA7A);
+    let probe = model::teacher_batch(&mut data_rng, &teacher, PROBE_SAMPLES, PROXY_IN);
+    let batches = (0..TRAIN_BATCHES)
+        .map(|_| model::teacher_batch(&mut data_rng, &teacher, cfg.batch.max(1), PROXY_IN))
+        .collect();
+    (student, probe, batches)
+}
+
+/// EDP of the analytic `assign-codecs` optimizer at the given rates — the
+/// baseline the learned profile is compared against.
+fn analytic_baseline(target: &Target, rates: &[f64], cfg: &LearnConfig) -> f64 {
+    let acfg = AssignConfig {
+        seed: cfg.seed,
+        sa_iters: 80,
+        dense_threshold: cfg.dense_threshold,
+        ..AssignConfig::default()
+    };
+    assign::assign(&target.net, &target.arch, &target.profile(rates), &acfg).edp
+}
+
+/// Train thresholds (and weights) once at `cfg.reg` and export the learned
+/// profile. Bit-reproducible for a fixed seed; pure CPU, no XLA.
+pub fn train_codecs(cfg: &LearnConfig) -> Result<TrainOutcome> {
+    let target = Target::build(&cfg.model)?;
+    let (mut net, probe, batches) = setup(cfg, target.boundary.len());
+    let initial_task_loss = net.task_loss_hard(&probe);
+    let initial_rates = net.hard_rates(&probe);
+    run_training(&mut net, &batches, &probe, &target, cfg, cfg.steps, true);
+    let mut out = finalize(&net, &probe, &target, cfg);
+    out.initial_task_loss = initial_task_loss;
+    out.analytic_edp = analytic_baseline(&target, &initial_rates, cfg);
+    out.initial_rates = initial_rates;
+    Ok(out)
+}
+
+/// Sweep ascending lambda values into a Pareto front.
+///
+/// The first (smallest) lambda gets the full weights+thresholds training;
+/// every later point continues *threshold-only* from the previous point's
+/// net (frozen weights), then applies two monotonicity safeguards:
+///
+/// 1. **Threshold ratchet** — `theta_e(lam_i) >= theta_e(lam_{i-1})`
+///    elementwise, so pressure only ever tightens.
+/// 2. **Packets guard** — if, despite the ratchet, cross-layer interaction
+///    leaves the new point shipping more boundary packets than its
+///    predecessor, the predecessor's profile is carried forward unchanged.
+///
+/// Together these make boundary bandwidth monotone non-increasing in
+/// lambda by construction, not by luck.
+pub fn pareto_sweep(cfg: &LearnConfig, lams: &[f32]) -> Result<ParetoSweep> {
+    if lams.is_empty() {
+        return Err(anyhow!("pareto sweep: need at least one lambda"));
+    }
+    let mut ladder: Vec<f32> = lams.to_vec();
+    ladder.sort_by(f32::total_cmp);
+
+    let target = Target::build(&cfg.model)?;
+    let (mut net, probe, batches) = setup(cfg, target.boundary.len());
+    let initial_rates = net.hard_rates(&probe);
+    let analytic_edp = analytic_baseline(&target, &initial_rates, cfg);
+
+    let mut points = Vec::with_capacity(ladder.len());
+    let mut profiles = Vec::with_capacity(ladder.len());
+    let mut prev: Option<TrainOutcome> = None;
+    for (i, &lam) in ladder.iter().enumerate() {
+        let mut step_cfg = cfg.clone();
+        step_cfg.reg = RegConfig { lam, ..cfg.reg };
+        if i == 0 {
+            run_training(&mut net, &batches, &probe, &target, &step_cfg, cfg.steps, true);
+        } else {
+            let steps = (cfg.steps / 2).max(1);
+            run_training(&mut net, &batches, &probe, &target, &step_cfg, steps, false);
+            let prev_profile = &prev.as_ref().expect("i > 0 implies a previous point").profile;
+            for (t, pe) in net.thresholds.iter_mut().zip(&prev_profile.edges) {
+                *t = t.max(pe.threshold as f32);
+            }
+        }
+        let mut out = finalize(&net, &probe, &target, &step_cfg);
+        if let Some(p) = &prev {
+            if out.boundary_packets > p.boundary_packets {
+                // Packets guard: keep the tighter predecessor, relabelled.
+                out = p.clone();
+                out.profile.lam = lam as f64;
+                for (t, pe) in net.thresholds.iter_mut().zip(&out.profile.edges) {
+                    *t = pe.threshold as f32;
+                }
+            }
+        }
+        points.push(ParetoPoint {
+            lam,
+            task_loss: out.task_loss,
+            mean_activity: out.profile.mean_activity(),
+            boundary_packets: out.boundary_packets,
+            edp: out.edp,
+            edp_vs_dense: out.dense_edp / out.edp.max(f64::MIN_POSITIVE),
+        });
+        profiles.push(out.profile.clone());
+        prev = Some(out);
+    }
+    Ok(ParetoSweep { points, profiles, analytic_edp })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> LearnConfig {
+        LearnConfig { steps: 24, batch: 8, hidden: 16, edp_every: 6, ..LearnConfig::default() }
+    }
+
+    #[test]
+    fn train_codecs_is_bit_reproducible() {
+        let cfg = quick_cfg();
+        let a = train_codecs(&cfg).unwrap();
+        let b = train_codecs(&cfg).unwrap();
+        assert_eq!(a.profile, b.profile, "same seed must yield the same profile");
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        assert_eq!(a.task_loss.to_bits(), b.task_loss.to_bits());
+        assert_eq!(a.boundary_packets, b.boundary_packets);
+        a.profile.validate().unwrap();
+        assert!(
+            a.boundary_packets <= a.dense_packets,
+            "learned packets {} exceed uniform dense {}",
+            a.boundary_packets,
+            a.dense_packets
+        );
+    }
+
+    #[test]
+    fn higher_lambda_never_increases_boundary_bandwidth() {
+        let sweep = pareto_sweep(&quick_cfg(), &[0.0, 0.5, 2.0, 8.0]).unwrap();
+        assert_eq!(sweep.points.len(), 4);
+        for pair in sweep.points.windows(2) {
+            assert!(
+                pair[1].boundary_packets <= pair[0].boundary_packets,
+                "lambda {} ships {} packets > lambda {}'s {}",
+                pair[1].lam,
+                pair[1].boundary_packets,
+                pair[0].lam,
+                pair[0].boundary_packets
+            );
+        }
+        for p in &sweep.profiles {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn some_lambda_point_beats_the_analytic_assignment_on_edp() {
+        let sweep = pareto_sweep(&quick_cfg(), &[0.0, 1.0, 4.0]).unwrap();
+        assert!(
+            sweep.points.iter().any(|p| p.edp <= sweep.analytic_edp),
+            "no lambda point matched the analytic EDP {} (got {:?})",
+            sweep.analytic_edp,
+            sweep.points.iter().map(|p| p.edp).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn learned_profile_replays_through_the_scenario_layer() {
+        let out = train_codecs(&quick_cfg()).unwrap();
+        let text = out.profile.to_json().to_string_pretty();
+        let back = LearnedProfile::from_json_str(&text).unwrap();
+        assert_eq!(back, out.profile);
+        let learned = back.to_scenario(32, 4, 11).run();
+        let dense = back.uniform_scenario(CodecId::Dense, 32, 4, 11).run();
+        assert_eq!(learned.stats.injected, learned.stats.delivered);
+        assert!(learned.stats.injected <= dense.stats.injected);
+    }
+}

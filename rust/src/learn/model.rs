@@ -1,0 +1,566 @@
+//! Differentiable proxy network with trainable spike-gate thresholds.
+//!
+//! The proxy is a small dense stack — `Linear -> ReLU -> spike gate` blocks
+//! followed by a linear head — over plain `Vec<f32>` tensors with a
+//! hand-written backward pass (no autodiff, no XLA). Each block's spike gate
+//! stands in for one die-to-die boundary edge: only activations the gate
+//! passes are "transmitted" across the boundary, and the fraction passed is
+//! the edge's firing rate.
+//!
+//! Two forward modes mirror the straight-through estimator split:
+//!
+//! * **Hard** ([`ProxyNet::forward_hard`]): the Heaviside gate
+//!   `s_i = 1[h_i > theta]` used for inference and for *measuring* the
+//!   boundary activity that the analytic energy model consumes.
+//! * **Soft** (inside [`ProxyNet::loss_and_grads`]): the sigmoid relaxation
+//!   `g_i = sigma((h_i - theta) / tau)` with temperature
+//!   [`SURROGATE_TEMP`]. Training runs entirely on the soft forward and its
+//!   *exact* gradient, so the surrogate derivative
+//!   `dg/dtheta = -g(1-g)/tau` is finite-difference checkable against the
+//!   same loss the backward pass differentiates.
+//!
+//! The scalar loss co-optimized here is
+//!
+//! ```text
+//! L = task MSE + sum_e coef_e * r_e + lam * sum_e max(0, r_e - budget)^2
+//! ```
+//!
+//! where `r_e` is the mean soft gate activation of edge `e`, `coef_e` is the
+//! (externally supplied) sensitivity of the analytic energy x latency
+//! objective to that edge's rate, and the last term is the Eq. 10 rate
+//! hinge. See [`crate::learn`] for how `coef_e` is refreshed from the
+//! analytic simulator during training.
+
+use crate::util::rng::Rng;
+
+/// Temperature `tau` of the sigmoid surrogate gate. Smaller values sharpen
+/// the relaxation toward the Heaviside step (and steepen its gradient).
+pub const SURROGATE_TEMP: f32 = 0.25;
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// A dense layer `y = W x + b` stored row-major (`w[o * in_f + i]`).
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub in_f: usize,
+    pub out_f: usize,
+}
+
+impl Linear {
+    fn new(rng: &mut Rng, in_f: usize, out_f: usize) -> Linear {
+        let scale = (2.0 / in_f as f64).sqrt();
+        let w = (0..in_f * out_f).map(|_| (rng.normal() * scale) as f32).collect();
+        Linear { w, b: vec![0.0; out_f], in_f, out_f }
+    }
+
+    fn forward(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.in_f);
+        self.b
+            .iter()
+            .enumerate()
+            .map(|(o, &b)| {
+                let row = &self.w[o * self.in_f..(o + 1) * self.in_f];
+                b + row.iter().zip(x).map(|(w, xi)| w * xi).sum::<f32>()
+            })
+            .collect()
+    }
+
+    /// Accumulate `dL/dw` and `dL/db` into `gw`/`gb`; return `dL/dx`.
+    fn backward(&self, x: &[f32], dy: &[f32], gw: &mut [f32], gb: &mut [f32]) -> Vec<f32> {
+        let mut dx = vec![0.0f32; self.in_f];
+        for (o, &d) in dy.iter().enumerate() {
+            gb[o] += d;
+            let row = &self.w[o * self.in_f..(o + 1) * self.in_f];
+            let grow = &mut gw[o * self.in_f..(o + 1) * self.in_f];
+            for i in 0..self.in_f {
+                grow[i] += d * x[i];
+                dx[i] += d * row[i];
+            }
+        }
+        dx
+    }
+}
+
+/// A labelled mini-batch: `x[k]` is one input sample, `y[k]` its target.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<Vec<f32>>,
+}
+
+/// Per-edge penalty configuration for one loss evaluation.
+///
+/// `energy_coef[e]` multiplies edge `e`'s soft rate in the loss (it already
+/// folds in lambda and any normalization); `lam` weights the Eq. 10 hinge
+/// `max(0, r_e - rate_budget)^2`.
+#[derive(Debug, Clone)]
+pub struct Penalty {
+    pub energy_coef: Vec<f32>,
+    pub lam: f32,
+    pub rate_budget: f32,
+}
+
+impl Penalty {
+    /// A no-op penalty (pure task loss) over `n_edges` edges.
+    pub fn none(n_edges: usize) -> Penalty {
+        Penalty { energy_coef: vec![0.0; n_edges], lam: 0.0, rate_budget: 1.0 }
+    }
+}
+
+/// Gradient (or momentum) buffers shaped like a [`ProxyNet`].
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub blocks_w: Vec<Vec<f32>>,
+    pub blocks_b: Vec<Vec<f32>>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    pub thresholds: Vec<f32>,
+}
+
+impl Grads {
+    fn zeros_like(net: &ProxyNet) -> Grads {
+        Grads {
+            blocks_w: net.blocks.iter().map(|l| vec![0.0; l.w.len()]).collect(),
+            blocks_b: net.blocks.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+            head_w: vec![0.0; net.head.w.len()],
+            head_b: vec![0.0; net.head.b.len()],
+            thresholds: vec![0.0; net.thresholds.len()],
+        }
+    }
+}
+
+/// Decomposed loss from one soft-forward evaluation.
+#[derive(Debug, Clone)]
+pub struct LossParts {
+    /// Mean-squared task error (soft gates).
+    pub task: f64,
+    /// `sum_e energy_coef[e] * r_e`.
+    pub energy: f64,
+    /// `lam * sum_e max(0, r_e - budget)^2`.
+    pub hinge: f64,
+    /// `task + energy + hinge` — the scalar the backward pass differentiates.
+    pub total: f64,
+    /// Mean soft gate activation per edge.
+    pub soft_rates: Vec<f64>,
+}
+
+/// Per-sample caches from one soft forward pass, consumed by backward.
+struct SoftTrace {
+    /// Block inputs (`xs[0]` is the sample itself, `xs[l]` feeds block `l`).
+    xs: Vec<Vec<f32>>,
+    /// Pre-ReLU activations per block.
+    zs: Vec<Vec<f32>>,
+    /// Post-ReLU activations per block.
+    hs: Vec<Vec<f32>>,
+    /// Soft gate values per block.
+    gs: Vec<Vec<f32>>,
+    /// Head output.
+    out: Vec<f32>,
+}
+
+/// The proxy network: `blocks.len()` spiking boundary edges, one trainable
+/// threshold per edge, and a linear read-out head.
+#[derive(Debug, Clone)]
+pub struct ProxyNet {
+    pub blocks: Vec<Linear>,
+    pub head: Linear,
+    /// Per-edge spike thresholds, clamped to `[0, 1]` by the optimizer.
+    pub thresholds: Vec<f32>,
+}
+
+impl ProxyNet {
+    /// Seeded He-style initialization. `n_edges` spiking blocks of width
+    /// `hidden` sit between an `in_f`-wide input and an `out_f`-wide head;
+    /// all thresholds start at `theta0`.
+    pub fn new(
+        rng: &mut Rng,
+        in_f: usize,
+        hidden: usize,
+        out_f: usize,
+        n_edges: usize,
+        theta0: f32,
+    ) -> ProxyNet {
+        assert!(n_edges > 0, "proxy net needs at least one boundary edge");
+        let mut blocks = Vec::with_capacity(n_edges);
+        let mut prev = in_f;
+        for _ in 0..n_edges {
+            blocks.push(Linear::new(rng, prev, hidden));
+            prev = hidden;
+        }
+        ProxyNet { blocks, head: Linear::new(rng, prev, out_f), thresholds: vec![theta0; n_edges] }
+    }
+
+    /// Number of spiking boundary edges.
+    pub fn n_edges(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Hard (Heaviside-gated) forward pass. Returns the head output and the
+    /// fraction of neurons that fired at each edge for this sample.
+    pub fn forward_hard(&self, x: &[f32]) -> (Vec<f32>, Vec<f64>) {
+        let mut cur = x.to_vec();
+        let mut rates = Vec::with_capacity(self.blocks.len());
+        for (blk, &theta) in self.blocks.iter().zip(&self.thresholds) {
+            let h: Vec<f32> = blk.forward(&cur).into_iter().map(|z| z.max(0.0)).collect();
+            let mut fired = 0usize;
+            cur = h
+                .iter()
+                .map(|&hi| {
+                    if hi > theta {
+                        fired += 1;
+                        hi
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            rates.push(fired as f64 / h.len() as f64);
+        }
+        (self.head.forward(&cur), rates)
+    }
+
+    /// Mean hard firing rate per edge over a batch — the boundary activity
+    /// the analytic energy model sees.
+    pub fn hard_rates(&self, batch: &Batch) -> Vec<f64> {
+        let mut acc = vec![0.0f64; self.n_edges()];
+        for x in &batch.x {
+            let (_, rates) = self.forward_hard(x);
+            for (a, r) in acc.iter_mut().zip(rates) {
+                *a += r;
+            }
+        }
+        let n = batch.x.len().max(1) as f64;
+        acc.iter().map(|a| a / n).collect()
+    }
+
+    /// Mean-squared task error with hard gates (the deployed behaviour).
+    pub fn task_loss_hard(&self, batch: &Batch) -> f64 {
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for (x, y) in batch.x.iter().zip(&batch.y) {
+            let (out, _) = self.forward_hard(x);
+            for (o, t) in out.iter().zip(y) {
+                let d = (o - t) as f64;
+                sum += d * d;
+            }
+            count += y.len();
+        }
+        0.5 * sum / count.max(1) as f64
+    }
+
+    fn soft_forward_one(&self, x: &[f32]) -> SoftTrace {
+        let n = self.blocks.len();
+        let mut xs = Vec::with_capacity(n + 1);
+        let mut zs = Vec::with_capacity(n);
+        let mut hs = Vec::with_capacity(n);
+        let mut gs = Vec::with_capacity(n);
+        xs.push(x.to_vec());
+        for (blk, &theta) in self.blocks.iter().zip(&self.thresholds) {
+            let z = blk.forward(xs.last().unwrap());
+            let h: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
+            let g: Vec<f32> = h.iter().map(|&hi| sigmoid((hi - theta) / SURROGATE_TEMP)).collect();
+            let t: Vec<f32> = h.iter().zip(&g).map(|(&hi, &gi)| hi * gi).collect();
+            zs.push(z);
+            hs.push(h);
+            gs.push(g);
+            xs.push(t);
+        }
+        let out = self.head.forward(xs.last().unwrap());
+        SoftTrace { xs, zs, hs, gs, out }
+    }
+
+    /// Forward-only soft loss — the exact scalar [`ProxyNet::loss_and_grads`]
+    /// differentiates. Kept separate so tests can finite-difference it.
+    pub fn soft_loss(&self, batch: &Batch, pen: &Penalty) -> f64 {
+        self.soft_loss_parts(batch, pen).total
+    }
+
+    fn soft_loss_parts_from(
+        &self,
+        traces: &[SoftTrace],
+        batch: &Batch,
+        pen: &Penalty,
+    ) -> LossParts {
+        let n_edges = self.n_edges();
+        let batch_n = batch.x.len().max(1);
+        let out_dim = self.head.out_f.max(1);
+
+        let mut task = 0.0f64;
+        for (tr, y) in traces.iter().zip(&batch.y) {
+            for (o, t) in tr.out.iter().zip(y) {
+                let d = (o - t) as f64;
+                task += d * d;
+            }
+        }
+        task *= 0.5 / (batch_n * out_dim) as f64;
+
+        let mut soft_rates = vec![0.0f64; n_edges];
+        for tr in traces {
+            for (e, g) in tr.gs.iter().enumerate() {
+                soft_rates[e] += g.iter().map(|&v| v as f64).sum::<f64>() / g.len() as f64;
+            }
+        }
+        for r in &mut soft_rates {
+            *r /= batch_n as f64;
+        }
+
+        let mut energy = 0.0f64;
+        let mut hinge = 0.0f64;
+        for (e, &r) in soft_rates.iter().enumerate() {
+            energy += pen.energy_coef[e] as f64 * r;
+            let over = (r - pen.rate_budget as f64).max(0.0);
+            hinge += over * over;
+        }
+        hinge *= pen.lam as f64;
+
+        LossParts { task, energy, hinge, total: task + energy + hinge, soft_rates }
+    }
+
+    fn soft_loss_parts(&self, batch: &Batch, pen: &Penalty) -> LossParts {
+        let traces: Vec<SoftTrace> = batch.x.iter().map(|x| self.soft_forward_one(x)).collect();
+        self.soft_loss_parts_from(&traces, batch, pen)
+    }
+
+    /// Soft forward + exact hand-written backward over the full loss
+    /// (task MSE + energy coupling + Eq. 10 rate hinge). The threshold
+    /// gradient flows through the surrogate derivative `g(1-g)/tau` of
+    /// every gate — both via the task path (gated activations feed later
+    /// layers) and via the rate path (each gate contributes to its edge's
+    /// mean rate).
+    pub fn loss_and_grads(&self, batch: &Batch, pen: &Penalty) -> (LossParts, Grads) {
+        assert_eq!(pen.energy_coef.len(), self.n_edges(), "one energy coefficient per edge");
+        let traces: Vec<SoftTrace> = batch.x.iter().map(|x| self.soft_forward_one(x)).collect();
+        let parts = self.soft_loss_parts_from(&traces, batch, pen);
+
+        let batch_n = batch.x.len().max(1);
+        let out_dim = self.head.out_f.max(1);
+        let mut grads = Grads::zeros_like(self);
+
+        // dL/dg_i picks up a per-edge constant from the rate terms:
+        // d(energy + hinge)/dr_e = coef_e + 2 lam max(0, r_e - budget),
+        // and dr_e/dg_i = 1 / (batch * width).
+        let rate_push: Vec<f32> = parts
+            .soft_rates
+            .iter()
+            .enumerate()
+            .map(|(e, &r)| {
+                let dr = pen.energy_coef[e] as f64
+                    + 2.0 * pen.lam as f64 * (r - pen.rate_budget as f64).max(0.0);
+                (dr / batch_n as f64) as f32
+            })
+            .collect();
+
+        for (tr, y) in traces.iter().zip(&batch.y) {
+            let dout: Vec<f32> = tr
+                .out
+                .iter()
+                .zip(y)
+                .map(|(o, t)| (o - t) / (batch_n * out_dim) as f32)
+                .collect();
+            let mut dt = self.head.backward(
+                tr.xs.last().unwrap(),
+                &dout,
+                &mut grads.head_w,
+                &mut grads.head_b,
+            );
+            for e in (0..self.blocks.len()).rev() {
+                let h = &tr.hs[e];
+                let g = &tr.gs[e];
+                let z = &tr.zs[e];
+                let width = h.len() as f32;
+                let mut dz = vec![0.0f32; h.len()];
+                for i in 0..h.len() {
+                    // t_i = h_i * g_i; g_i = sigma((h_i - theta_e) / tau).
+                    let gprime = g[i] * (1.0 - g[i]) / SURROGATE_TEMP;
+                    let dg = dt[i] * h[i] + rate_push[e] / width;
+                    let dh = dt[i] * g[i] + dg * gprime;
+                    grads.thresholds[e] -= dg * gprime;
+                    dz[i] = if z[i] > 0.0 { dh } else { 0.0 };
+                }
+                dt = self.blocks[e].backward(
+                    &tr.xs[e],
+                    &dz,
+                    &mut grads.blocks_w[e],
+                    &mut grads.blocks_b[e],
+                );
+            }
+        }
+        (parts, grads)
+    }
+}
+
+/// Hand-rolled SGD with classical momentum; thresholds are clamped to
+/// `[0, 1]` after every step so they stay valid `profile/v1` values.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    vel: Grads,
+}
+
+impl Sgd {
+    pub fn new(net: &ProxyNet, lr: f32, momentum: f32) -> Sgd {
+        Sgd { lr, momentum, vel: Grads::zeros_like(net) }
+    }
+
+    /// Apply one update. With `update_weights == false` only the thresholds
+    /// move — the frozen-weight mode the lambda Pareto sweep relies on for
+    /// its monotonicity guarantee.
+    pub fn step(&mut self, net: &mut ProxyNet, g: &Grads, update_weights: bool) {
+        fn axpy(lr: f32, m: f32, p: &mut [f32], v: &mut [f32], g: &[f32]) {
+            for ((pi, vi), gi) in p.iter_mut().zip(v.iter_mut()).zip(g) {
+                *vi = m * *vi + gi;
+                *pi -= lr * *vi;
+            }
+        }
+        if update_weights {
+            for (e, blk) in net.blocks.iter_mut().enumerate() {
+                axpy(self.lr, self.momentum, &mut blk.w, &mut self.vel.blocks_w[e], &g.blocks_w[e]);
+                axpy(self.lr, self.momentum, &mut blk.b, &mut self.vel.blocks_b[e], &g.blocks_b[e]);
+            }
+            axpy(self.lr, self.momentum, &mut net.head.w, &mut self.vel.head_w, &g.head_w);
+            axpy(self.lr, self.momentum, &mut net.head.b, &mut self.vel.head_b, &g.head_b);
+        }
+        axpy(self.lr, self.momentum, &mut net.thresholds, &mut self.vel.thresholds, &g.thresholds);
+        for t in &mut net.thresholds {
+            *t = t.clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Deterministic synthetic regression data from a seeded teacher network.
+///
+/// The teacher is a fresh [`ProxyNet`] with all thresholds at zero, so its
+/// hard forward reduces to a plain ReLU MLP; the student must learn to match
+/// it while its own gates throttle boundary traffic.
+pub fn teacher_batch(rng: &mut Rng, teacher: &ProxyNet, n_samples: usize, in_f: usize) -> Batch {
+    let mut x = Vec::with_capacity(n_samples);
+    let mut y = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let xi: Vec<f32> = (0..in_f).map(|_| rng.normal() as f32).collect();
+        let (yi, _) = teacher.forward_hard(&xi);
+        x.push(xi);
+        y.push(yi);
+    }
+    Batch { x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_setup(seed: u64) -> (ProxyNet, Batch, Penalty) {
+        let mut rng = Rng::new(seed);
+        let teacher = ProxyNet::new(&mut rng.fork(1), 6, 10, 4, 3, 0.0);
+        let net = ProxyNet::new(&mut rng.fork(2), 6, 10, 4, 3, 0.1);
+        let batch = teacher_batch(&mut rng.fork(3), &teacher, 8, 6);
+        let pen = Penalty { energy_coef: vec![0.3, 0.15, 0.45], lam: 0.8, rate_budget: 0.05 };
+        (net, batch, pen)
+    }
+
+    /// The hand-written backward pass must match central finite differences
+    /// of the *same* soft loss — thresholds (the surrogate path) and a
+    /// sample of weights/biases, on a pinned seed.
+    #[test]
+    fn surrogate_gradients_match_finite_differences() {
+        let (net, batch, pen) = tiny_setup(17);
+        let (_, grads) = net.loss_and_grads(&batch, &pen);
+        let eps = 5e-3f32;
+        let mut checked = 0usize;
+
+        let mut check = |name: &str, analytic: f32, plus: f64, minus: f64| {
+            let fd = (plus - minus) / (2.0 * eps as f64);
+            let diff = (analytic as f64 - fd).abs();
+            let tol = 5e-3 + 0.05 * fd.abs().max(analytic.abs() as f64);
+            assert!(diff <= tol, "{name}: analytic {analytic} vs fd {fd} (|diff| {diff} > {tol})");
+            checked += 1;
+        };
+
+        for e in 0..net.n_edges() {
+            let mut p = net.clone();
+            p.thresholds[e] += eps;
+            let mut m = net.clone();
+            m.thresholds[e] -= eps;
+            check(
+                &format!("theta[{e}]"),
+                grads.thresholds[e],
+                p.soft_loss(&batch, &pen),
+                m.soft_loss(&batch, &pen),
+            );
+        }
+        for e in 0..net.n_edges() {
+            for &i in &[0usize, 7, 23] {
+                let mut p = net.clone();
+                p.blocks[e].w[i] += eps;
+                let mut m = net.clone();
+                m.blocks[e].w[i] -= eps;
+                check(
+                    &format!("w[{e}][{i}]"),
+                    grads.blocks_w[e][i],
+                    p.soft_loss(&batch, &pen),
+                    m.soft_loss(&batch, &pen),
+                );
+            }
+            let mut p = net.clone();
+            p.blocks[e].b[2] += eps;
+            let mut m = net.clone();
+            m.blocks[e].b[2] -= eps;
+            check(
+                &format!("b[{e}][2]"),
+                grads.blocks_b[e][2],
+                p.soft_loss(&batch, &pen),
+                m.soft_loss(&batch, &pen),
+            );
+        }
+        let mut p = net.clone();
+        p.head.w[5] += eps;
+        let mut m = net.clone();
+        m.head.w[5] -= eps;
+        check("head.w[5]", grads.head_w[5], p.soft_loss(&batch, &pen), m.soft_loss(&batch, &pen));
+        assert!(checked >= 14, "gradient check exercised too few parameters: {checked}");
+    }
+
+    #[test]
+    fn raising_a_threshold_never_raises_its_hard_rate() {
+        let (net, batch, _) = tiny_setup(5);
+        let base = net.hard_rates(&batch);
+        for e in 0..net.n_edges() {
+            let mut prev = base[e];
+            for step in 1..=5 {
+                let mut raised = net.clone();
+                raised.thresholds[e] = step as f32 * 0.2;
+                let r = raised.hard_rates(&batch)[e];
+                assert!(
+                    r <= prev + 1e-12,
+                    "edge {e}: rate rose from {prev} to {r} at theta {}",
+                    raised.thresholds[e]
+                );
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn training_is_bit_deterministic_for_a_fixed_seed() {
+        let run = || {
+            let (mut net, batch, pen) = tiny_setup(11);
+            let mut opt = Sgd::new(&net, 0.05, 0.9);
+            let mut losses = Vec::new();
+            for _ in 0..20 {
+                let (parts, grads) = net.loss_and_grads(&batch, &pen);
+                opt.step(&mut net, &grads, true);
+                losses.push(parts.total);
+            }
+            (losses, net.thresholds.clone())
+        };
+        let (l1, t1) = run();
+        let (l2, t2) = run();
+        assert_eq!(l1, l2, "loss trajectory must be bit-reproducible");
+        assert_eq!(t1, t2, "learned thresholds must be bit-reproducible");
+        assert!(l1.last().unwrap() < l1.first().unwrap(), "training should reduce the loss");
+    }
+}

@@ -1,0 +1,343 @@
+//! `profile/v1` — the versioned on-disk form of a learned codec profile.
+//!
+//! A profile records, per die-to-die boundary edge, the codec the training
+//! run selected, the hard-gate firing rate it measured (`activity`), and the
+//! learned spike threshold that produced that rate. The document is strict:
+//! unknown keys anywhere (top level or per edge) are rejected rather than
+//! ignored, and every numeric field is range-checked — a typo'd profile must
+//! error, not silently replay a different configuration.
+//!
+//! ```text
+//! {
+//!   "schema": "profile/v1",
+//!   "seed": 42,
+//!   "lam": 0.5,
+//!   "rate_budget": 0.1,
+//!   "model": "ms-resnet18",
+//!   "edges": [
+//!     { "edge": 0, "codec": "topk-delta", "activity": 0.08, "threshold": 0.42 }
+//!   ]
+//! }
+//! ```
+//!
+//! [`LearnedProfile::to_scenario`] replays a profile through the scenario
+//! layer as a chain with one chip per learned edge plus one, using the
+//! per-edge `codecs`/`activities` object form of `Boundary` traffic —
+//! exactly the mixed-codec path the cycle-level engines already validate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::codec::CodecId;
+use crate::noc::faults::check_keys;
+use crate::noc::scenario::{Scenario, TrafficSpec};
+use crate::util::json::{self, Json};
+
+/// One boundary edge of a learned profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeProfile {
+    /// Boundary index, contiguous from zero in document order.
+    pub edge: usize,
+    /// Codec the training run selected for this edge.
+    pub codec: CodecId,
+    /// Measured hard-gate firing rate in `[0, 1]`.
+    pub activity: f64,
+    /// Learned spike threshold in `[0, 1]`.
+    pub threshold: f64,
+}
+
+/// A complete learned profile — see the module docs for the JSON schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearnedProfile {
+    pub seed: u64,
+    pub lam: f64,
+    pub rate_budget: f64,
+    /// Name of the target network the profile was trained against.
+    pub model: String,
+    pub edges: Vec<EdgeProfile>,
+}
+
+impl LearnedProfile {
+    /// Range- and shape-check the profile (same rules `from_json` enforces,
+    /// so a constructed profile can be vetted before saving).
+    pub fn validate(&self) -> Result<()> {
+        if self.edges.is_empty() {
+            return Err(anyhow!("profile/v1: needs at least one edge"));
+        }
+        if !(self.lam.is_finite() && self.lam >= 0.0) {
+            return Err(anyhow!("profile/v1: lam must be finite and >= 0, got {}", self.lam));
+        }
+        if !(0.0..=1.0).contains(&self.rate_budget) {
+            return Err(anyhow!(
+                "profile/v1: rate_budget must be in [0, 1], got {}",
+                self.rate_budget
+            ));
+        }
+        if self.model.is_empty() {
+            return Err(anyhow!("profile/v1: model name must be non-empty"));
+        }
+        for (i, e) in self.edges.iter().enumerate() {
+            if e.edge != i {
+                return Err(anyhow!(
+                    "profile/v1: edges must be contiguous from 0 (position {i} has edge {})",
+                    e.edge
+                ));
+            }
+            if !(0.0..=1.0).contains(&e.activity) {
+                return Err(anyhow!(
+                    "profile/v1: edge {i} activity must be in [0, 1], got {}",
+                    e.activity
+                ));
+            }
+            if !(0.0..=1.0).contains(&e.threshold) {
+                return Err(anyhow!(
+                    "profile/v1: edge {i} threshold must be in [0, 1], got {}",
+                    e.threshold
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize as a `profile/v1` document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("profile/v1")),
+            ("seed", Json::num(self.seed as f64)),
+            ("lam", Json::num(self.lam)),
+            ("rate_budget", Json::num(self.rate_budget)),
+            ("model", Json::str(self.model.clone())),
+            (
+                "edges",
+                Json::arr(self.edges.iter().map(|e| {
+                    Json::obj(vec![
+                        ("edge", Json::num(e.edge as f64)),
+                        ("codec", Json::str(e.codec.as_str())),
+                        ("activity", Json::num(e.activity)),
+                        ("threshold", Json::num(e.threshold)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse and validate a `profile/v1` document. Unknown keys at the top
+    /// level or inside an edge entry are hard errors.
+    pub fn from_json(j: &Json) -> Result<LearnedProfile> {
+        check_keys(
+            j,
+            &["schema", "seed", "lam", "rate_budget", "model", "edges"],
+            "profile",
+        )?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some("profile/v1") => {}
+            other => return Err(anyhow!("profile: schema must be \"profile/v1\", got {other:?}")),
+        }
+        let seed = match j.get("seed").and_then(Json::as_f64) {
+            Some(v) if v >= 0.0 && v.fract() == 0.0 => v as u64,
+            other => {
+                return Err(anyhow!("profile.seed: non-negative integer required, got {other:?}"))
+            }
+        };
+        let num = |field: &str| -> Result<f64> {
+            j.get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("profile.{field}: number required"))
+        };
+        let lam = num("lam")?;
+        let rate_budget = num("rate_budget")?;
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("profile.model: string required"))?
+            .to_string();
+        let items = j
+            .get("edges")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("profile.edges: array required"))?;
+        let mut edges = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            check_keys(item, &["edge", "codec", "activity", "threshold"], "profile.edges[]")?;
+            let edge = match item.get("edge").and_then(Json::as_f64) {
+                Some(v) if v >= 0.0 && v.fract() == 0.0 => v as usize,
+                other => {
+                    return Err(anyhow!(
+                        "profile.edges[{i}].edge: non-negative integer required, got {other:?}"
+                    ))
+                }
+            };
+            let codec_name = item
+                .get("codec")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("profile.edges[{i}].codec: string required"))?;
+            let codec = CodecId::parse(codec_name)
+                .ok_or_else(|| anyhow!("profile.edges[{i}].codec: unknown codec {codec_name:?}"))?;
+            let field = |name: &str| -> Result<f64> {
+                item.get(name)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("profile.edges[{i}].{name}: number required"))
+            };
+            edges.push(EdgeProfile {
+                edge,
+                codec,
+                activity: field("activity")?,
+                threshold: field("threshold")?,
+            });
+        }
+        let profile = LearnedProfile { seed, lam, rate_budget, model, edges };
+        profile.validate()?;
+        Ok(profile)
+    }
+
+    /// Parse from raw text.
+    pub fn from_json_str(text: &str) -> Result<LearnedProfile> {
+        let j = json::parse(text).map_err(|e| anyhow!("profile JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Mean learned activity across edges.
+    pub fn mean_activity(&self) -> f64 {
+        self.edges.iter().map(|e| e.activity).sum::<f64>() / self.edges.len().max(1) as f64
+    }
+
+    /// Replay scenario: a chain with one chip per learned edge plus one,
+    /// carrying `Boundary` traffic whose per-edge `codecs`/`activities`
+    /// maps come straight from the profile.
+    pub fn to_scenario(&self, neurons: usize, ticks: u32, traffic_seed: u64) -> Scenario {
+        self.scenario_with(neurons, ticks, traffic_seed, None)
+    }
+
+    /// Same chain and activities, but every edge forced to the given codec —
+    /// the uniform baseline the replay is compared against.
+    pub fn uniform_scenario(
+        &self,
+        codec: CodecId,
+        neurons: usize,
+        ticks: u32,
+        traffic_seed: u64,
+    ) -> Scenario {
+        self.scenario_with(neurons, ticks, traffic_seed, Some(codec))
+    }
+
+    fn scenario_with(
+        &self,
+        neurons: usize,
+        ticks: u32,
+        traffic_seed: u64,
+        force: Option<CodecId>,
+    ) -> Scenario {
+        let codecs: BTreeMap<usize, CodecId> =
+            self.edges.iter().map(|e| (e.edge, force.unwrap_or(e.codec))).collect();
+        let activities: BTreeMap<usize, f64> =
+            self.edges.iter().map(|e| (e.edge, e.activity)).collect();
+        Scenario::chain(self.edges.len() + 1, 8).traffic(TrafficSpec::Boundary {
+            neurons,
+            dense: 1,
+            activity: self.mean_activity().clamp(0.0, 1.0),
+            ticks,
+            seed: traffic_seed,
+            codec: CodecId::Dense,
+            codecs,
+            activities,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LearnedProfile {
+        LearnedProfile {
+            seed: 42,
+            lam: 0.5,
+            rate_budget: 0.10,
+            model: "ms-resnet18".into(),
+            edges: vec![
+                EdgeProfile { edge: 0, codec: CodecId::TopKDelta, activity: 0.08, threshold: 0.42 },
+                EdgeProfile { edge: 1, codec: CodecId::Rate, activity: 0.12, threshold: 0.11 },
+                EdgeProfile { edge: 2, codec: CodecId::Dense, activity: 0.60, threshold: 0.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn profile_round_trips_bit_identically() {
+        let p = sample();
+        p.validate().unwrap();
+        let text = p.to_json().to_string_pretty();
+        let back = LearnedProfile::from_json_str(&text).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_at_both_levels() {
+        // Top-level stray key.
+        let text = sample().to_json().to_string_pretty().replacen(
+            "\"schema\"",
+            "\"fidelity\": 1, \"schema\"",
+            1,
+        );
+        let err = LearnedProfile::from_json_str(&text).unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "got: {err}");
+        // Edge-level stray key.
+        let text = sample().to_json().to_string_pretty().replacen(
+            "\"edge\"",
+            "\"thresh\": 0.1, \"edge\"",
+            1,
+        );
+        let err = LearnedProfile::from_json_str(&text).unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_profiles_are_rejected() {
+        let reject = |mutate: fn(&mut LearnedProfile), needle: &str| {
+            let mut p = sample();
+            mutate(&mut p);
+            let err = match LearnedProfile::from_json_str(&p.to_json().to_string_pretty()) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("expected rejection for {needle}"),
+            };
+            assert!(err.contains(needle), "wanted {needle:?} in: {err}");
+        };
+        reject(|p| p.edges[1].edge = 5, "contiguous");
+        reject(|p| p.edges[0].activity = 1.5, "activity");
+        reject(|p| p.edges[0].threshold = -0.2, "threshold");
+        reject(|p| p.rate_budget = 2.0, "rate_budget");
+        reject(|p| p.edges.clear(), "at least one edge");
+
+        let bad_schema =
+            sample().to_json().to_string_pretty().replacen("profile/v1", "profile/v9", 1);
+        let err = LearnedProfile::from_json_str(&bad_schema).unwrap_err().to_string();
+        assert!(err.contains("schema"), "got: {err}");
+
+        let bad_codec = sample().to_json().to_string_pretty().replacen("topk-delta", "morse", 1);
+        let err = LearnedProfile::from_json_str(&bad_codec).unwrap_err().to_string();
+        assert!(err.contains("unknown codec"), "got: {err}");
+    }
+
+    #[test]
+    fn replay_scenario_carries_the_profile_and_undercuts_uniform_dense() {
+        let p = sample();
+        let learned = p.to_scenario(32, 4, 7);
+        let dense = p.uniform_scenario(CodecId::Dense, 32, 4, 7);
+        let learned_res = learned.run();
+        let dense_res = dense.run();
+        assert!(learned_res.stats.injected > 0, "replay must inject traffic");
+        assert_eq!(learned_res.stats.injected, learned_res.stats.delivered);
+        assert!(
+            learned_res.stats.injected <= dense_res.stats.injected,
+            "learned profile ({} packets) must not exceed uniform dense ({} packets)",
+            learned_res.stats.injected,
+            dense_res.stats.injected
+        );
+        // The JSON form replays to identical traffic.
+        let round = Scenario::from_json_str(&learned.to_json().to_string_pretty()).unwrap();
+        let round_res = round.run();
+        assert_eq!(round_res.stats.injected, learned_res.stats.injected);
+        assert_eq!(round_res.stats.delivered, learned_res.stats.delivered);
+    }
+}

@@ -44,10 +44,17 @@
 //! codec-assignment requests (`POST /assign`, cached so a repeat skips
 //! the annealing search), with live metrics at `GET /metrics` — see
 //! EXPERIMENTS.md §Serve.
+//!
+//! [`learn`] closes the paper's *learnable* claim in pure Rust: a
+//! surrogate-gradient proxy trains per-edge spike thresholds against the
+//! task loss, the analytic energy x latency objective, and the Eq. 10 rate
+//! hinge, exporting a `profile/v1` document that `spikelink train-codecs`
+//! saves and `noc-sim --profile` replays (see EXPERIMENTS.md §Learn).
 
 pub mod analytic;
 pub mod arch;
 pub mod codec;
+pub mod learn;
 pub mod model;
 pub mod noc;
 pub mod report;

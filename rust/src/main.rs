@@ -43,6 +43,7 @@ fn run(args: &cli::Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "sweep" => cmd_sweep(args),
         "assign-codecs" => cmd_assign_codecs(args),
+        "train-codecs" => cmd_train_codecs(args),
         "train" => cmd_train(args),
         "eval" => cmd_eval(args),
         "table4" => cmd_table4(args),
@@ -157,7 +158,20 @@ fn cmd_report(args: &cli::Args) -> Result<()> {
         )?;
     }
     if all || figure == Some(16) {
-        emit("fig16_fault_degradation", &figures::fig16_fault_degradation(FAULT_SWEEP_BERS))?;
+        emit(
+            "fig16_fault_degradation",
+            &figures::fig16_fault_degradation(FAULT_SWEEP_BERS, FAULT_SWEEP_JITTERS),
+        )?;
+    }
+    if all || figure == Some(17) {
+        emit("fig17_learned_pareto", &figures::fig17_learned_pareto(42, FIG17_LAMBDAS))?;
+    }
+    if all || table == Some(8) {
+        let out = spikelink::learn::train_codecs(&spikelink::learn::LearnConfig {
+            steps: 60,
+            ..Default::default()
+        })?;
+        emit("table8_learned_comparison", &tables::table8_learned_comparison(&out))?;
     }
     if all {
         let (speed, eff, _) = figures::headline_claims();
@@ -268,6 +282,13 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
 /// `report --figure 16`): the fault-free baseline plus three decades.
 const FAULT_SWEEP_BERS: &[f64] = &[0.0, 0.001, 0.01, 0.05];
 
+/// Spike-timing jitter bounds (cycles) of the same sweep: TTFS decode
+/// error under timing noise, next to the loss rows.
+const FAULT_SWEEP_JITTERS: &[u64] = &[4, 16];
+
+/// Lambda ladder of the learned Pareto sweep (`report --figure 17`).
+const FIG17_LAMBDAS: &[f32] = &[0.0, 0.5, 2.0, 8.0];
+
 fn cmd_sweep(args: &cli::Args) -> Result<()> {
     let model = args.str_or("model", "ms-resnet18");
     let net = networks::by_name(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
@@ -275,7 +296,10 @@ fn cmd_sweep(args: &cli::Args) -> Result<()> {
     // the fault axis is a cycle-level sweep (codec degradation under seeded
     // link faults), not an analytic speedup table — handle it on its own
     if axis == "fault" {
-        println!("{}", figures::fig16_fault_degradation(FAULT_SWEEP_BERS).render());
+        println!(
+            "{}",
+            figures::fig16_fault_degradation(FAULT_SWEEP_BERS, FAULT_SWEEP_JITTERS).render()
+        );
         return Ok(());
     }
     // --codec pins the boundary encoding for every swept point (the codec
@@ -459,6 +483,111 @@ fn cmd_assign_codecs(args: &cli::Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// train-codecs
+// ---------------------------------------------------------------------------
+
+/// Surrogate-gradient training of boundary spike thresholds (pure Rust, no
+/// XLA): co-optimizes the proxy task loss, the analytic energy x latency
+/// objective, and the Eq. 10 rate hinge; picks per-edge codecs; prints the
+/// Table 8 comparison; and optionally saves the `profile/v1` document,
+/// replays it through the cycle engine, and appends a learn bench record.
+fn cmd_train_codecs(args: &cli::Args) -> Result<()> {
+    use spikelink::learn::{self, LearnConfig};
+    use spikelink::util::bench;
+
+    let defaults = LearnConfig::default();
+    let cfg = LearnConfig {
+        seed: args.usize_or("seed", defaults.seed as usize)? as u64,
+        model: args.str_or("model", &defaults.model),
+        steps: args.usize_or("steps", defaults.steps)?,
+        batch: args.usize_or("batch", defaults.batch)?,
+        hidden: args.usize_or("hidden", defaults.hidden)?,
+        lr: args.f64_or("lr", defaults.lr as f64)? as f32,
+        reg: RegConfig {
+            lam: args.f64_or("lam", defaults.reg.lam as f64)? as f32,
+            rate_budget: args.f64_or("budget", defaults.reg.rate_budget as f64)? as f32,
+        },
+        dense_threshold: args.f64_or("threshold", defaults.dense_threshold)?,
+        edp_every: args.usize_or("edp-every", defaults.edp_every)?,
+        ..defaults
+    };
+    if cfg.steps == 0 {
+        return Err(anyhow!("--steps must be >= 1"));
+    }
+    let out = learn::train_codecs(&cfg)?;
+
+    println!("{}", tables::table8_learned_comparison(&out).render());
+    println!("learned edges ({}):", out.profile.edges.len());
+    for (e, r0) in out.profile.edges.iter().zip(&out.initial_rates) {
+        println!(
+            "  edge {}: codec {:<10} activity {:.3} (untrained {:.3})  threshold {:.3}",
+            e.edge, e.codec, e.activity, r0, e.threshold
+        );
+    }
+    println!(
+        "task mse {:.4} (untrained {:.4}); EDP learned {:.4e} vs dense {:.4e} ({:.2}x) \
+         vs analytic {:.4e} ({:.2}x)",
+        out.task_loss,
+        out.initial_task_loss,
+        out.edp,
+        out.dense_edp,
+        out.dense_edp / out.edp.max(f64::MIN_POSITIVE),
+        out.analytic_edp,
+        out.analytic_edp / out.edp.max(f64::MIN_POSITIVE),
+    );
+    println!(
+        "boundary packets: learned {} vs uniform dense {}",
+        out.boundary_packets, out.dense_packets
+    );
+
+    if let Some(path) = args.get("save") {
+        out.profile.validate()?;
+        if let Some(parent) = Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, out.profile.to_json().to_string_pretty())?;
+        println!("profile/v1 written to {path}");
+    }
+
+    if args.has_flag("replay") || args.get("bench").is_some() {
+        let neurons = args.usize_or("neurons", 64)?;
+        let ticks = args.u32_or("ticks", 8)?;
+        let learned_sc = out.profile.to_scenario(neurons, ticks, cfg.seed);
+        let dense_sc = out.profile.uniform_scenario(CodecId::Dense, neurons, ticks, cfg.seed);
+        let learned_res = learned_sc.run();
+        let dense_res = dense_sc.run();
+        println!(
+            "replay ({}): learned {} packets, uniform dense {} packets",
+            learned_sc.label(),
+            learned_res.stats.injected,
+            dense_res.stats.injected
+        );
+        if learned_res.stats.injected > dense_res.stats.injected {
+            return Err(anyhow!(
+                "replay shipped more packets than uniform dense ({} > {})",
+                learned_res.stats.injected,
+                dense_res.stats.injected
+            ));
+        }
+        if let Some(bench_path) = args.get("bench") {
+            let m = bench::bench_auto("learn/pareto", 50.0, || {
+                bench::black_box(learned_sc.run());
+            });
+            let rec = bench::BenchRecord::new(
+                m,
+                out.dense_edp / out.edp.max(f64::MIN_POSITIVE),
+                "edp-vs-dense",
+            );
+            bench::append_json(Path::new(bench_path), &[rec])?;
+            println!("bench record appended to {bench_path}");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // train / eval / table4
 // ---------------------------------------------------------------------------
 
@@ -576,7 +705,34 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
     use spikelink::noc::scenario::DEFAULT_MAX_CYCLES;
     use spikelink::noc::{DrainOutcome, FaultPlan, Scenario, TrafficSpec};
 
-    let mut sc = if let Some(path) = args.get("scenario") {
+    let mut sc = if let Some(path) = args.get("profile") {
+        if args.get("scenario").is_some() || args.get("codec").is_some() {
+            return Err(anyhow!(
+                "--profile builds its own boundary scenario; drop --scenario/--codec"
+            ));
+        }
+        let text = std::fs::read_to_string(path)?;
+        let profile = spikelink::learn::LearnedProfile::from_json_str(&text)
+            .map_err(|e| anyhow!("{path}: {e}"))?;
+        println!(
+            "replaying learned profile {path}: model={} edges={} lam={} mean activity={:.4}",
+            profile.model,
+            profile.edges.len(),
+            profile.lam,
+            profile.mean_activity()
+        );
+        let mut sc = profile
+            .to_scenario(
+                args.usize_or("neurons", 64)?,
+                args.u32_or("ticks", 8)?,
+                args.usize_or("seed", 3)? as u64,
+            )
+            .with_max_cycles(args.usize_or("max-cycles", DEFAULT_MAX_CYCLES as usize)? as u64);
+        if !args.has_flag("no-telemetry") {
+            sc = sc.with_telemetry();
+        }
+        sc
+    } else if let Some(path) = args.get("scenario") {
         if args.get("codec").is_some() {
             return Err(anyhow!(
                 "--codec cannot override a --scenario file; set the codec in its traffic object"
@@ -660,6 +816,7 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
     // own faults block conflicts — edit the file instead)
     let fault_flags = args.get("faults").is_some()
         || args.get("ber").is_some()
+        || args.get("jitter").is_some()
         || args.get("fault-seed").is_some()
         || args.get("max-retries").is_some()
         || args.has_flag("drop-corrupted")
@@ -679,6 +836,7 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
             FaultPlan::default()
         };
         plan.ber = args.f64_or("ber", plan.ber)?;
+        plan.jitter = args.usize_or("jitter", plan.jitter as usize)? as u64;
         plan.seed = args.usize_or("fault-seed", plan.seed as usize)? as u64;
         plan.max_retries = args.u32_or("max-retries", plan.max_retries)?;
         if args.has_flag("drop-corrupted") {
@@ -747,9 +905,10 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
     }
     if let Some(plan) = &sc.faults {
         println!(
-            "fault plan      : seed {} ber {} max_retries {} ({} mode){}{}{}",
+            "fault plan      : seed {} ber {} jitter {} max_retries {} ({} mode){}{}{}",
             plan.seed,
             plan.ber,
+            plan.jitter,
             plan.max_retries,
             if plan.drop_corrupted { "drop" } else { "retry" },
             if plan.link_down.is_empty() {
@@ -787,8 +946,8 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         println!("delivered frac  : {:.4}", s.delivered_fraction());
         println!(
             "faults          : corrupted {}  retried {}  dropped {}  link-down cycles {}  \
-             stall cycles {}",
-            f.corrupted, f.retried, f.dropped, f.link_down_cycles, f.stall_cycles
+             stall cycles {}  jittered {}",
+            f.corrupted, f.retried, f.dropped, f.link_down_cycles, f.stall_cycles, f.jittered
         );
     }
     if res.outcome == DrainOutcome::TimedOut {

@@ -279,6 +279,10 @@ impl<S: TelemetrySink> CycleEngine for Chain<S> {
                 assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
                 self.links[edge].add_outage(edge, from, until);
             }
+            FaultOp::Jitter { edge, max } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].set_jitter(edge, max);
+            }
             FaultOp::Stall { chip, router, from, until } => {
                 assert!(chip < self.chips.len(), "chain engine: chip {chip} out of range");
                 self.chips[chip].add_stall(router, from, until);

@@ -204,6 +204,10 @@ impl<S: TelemetrySink> CycleEngine for Duplex<S> {
                 assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
                 self.link.add_outage(0, from, until);
             }
+            FaultOp::Jitter { edge, max } => {
+                assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
+                self.link.set_jitter(0, max);
+            }
             FaultOp::Stall { chip, router, from, until } => {
                 let m = match chip {
                     0 => &mut self.a,

@@ -116,6 +116,15 @@ impl EmioLink {
         self.faults_mut(edge).set_ber(rate);
     }
 
+    /// Set the spike-timing jitter bound of this link: clean frames exit
+    /// the deserializer displaced by a seeded draw in `[-max, +max]`
+    /// cycles. The in-flight pipeline drains in FIFO order, so jitter is
+    /// order-preserving per link — a displaced frame delays, never
+    /// overtakes.
+    pub fn set_jitter(&mut self, edge: usize, max: u64) {
+        self.faults_mut(edge).set_jitter(max);
+    }
+
     /// Add a `[from, until)` outage window to this link.
     pub fn add_outage(&mut self, edge: usize, from: u64, until: u64) {
         self.faults_mut(edge).add_outage(from, until);
@@ -173,7 +182,10 @@ impl EmioLink {
             Some(lf) => {
                 if let Some(mut f) = self.merge.pop_front() {
                     match lf.pad_crossing(now, f.id, f.retries) {
-                        PadVerdict::Clean => self.in_flight.push_back((f, now + DES_CYCLES)),
+                        PadVerdict::Clean => {
+                            let exit = lf.jittered_exit(now, now + DES_CYCLES);
+                            self.in_flight.push_back((f, exit));
+                        }
                         PadVerdict::Retry => {
                             f.retries += 1;
                             self.merge.push_back(f);
@@ -355,5 +367,65 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(clean.delivered, zeroed.delivered);
         assert!(zeroed.fault_stats().is_zero());
+    }
+
+    #[test]
+    fn zero_jitter_state_is_behavior_neutral() {
+        // a configured-but-zero jitter bound must not change delivery
+        // timing or consume a single draw (mirror of the zero-ber test)
+        let mut clean = EmioLink::new();
+        let mut zeroed = EmioLink::new();
+        zeroed.fault_policy(0, 42, 3, false);
+        zeroed.set_jitter(0, 0);
+        for i in 0..20 {
+            let p = Packet::spike(1, 0, (i % 8) as u8, 0);
+            clean.inject(i as usize % 8, &p, i, 0);
+            zeroed.inject(i as usize % 8, &p, i, 0);
+        }
+        let a = run_until_empty(&mut clean, 0);
+        let b = run_until_empty(&mut zeroed, 0);
+        assert_eq!(a, b);
+        assert_eq!(clean.delivered, zeroed.delivered);
+        assert!(zeroed.fault_stats().is_zero());
+    }
+
+    #[test]
+    fn jitter_displaces_timing_but_never_loses_or_reorders_frames() {
+        let mut clean = EmioLink::new();
+        let mut jittered = EmioLink::new();
+        jittered.fault_policy(0, 7, 3, false);
+        jittered.set_jitter(0, 6);
+        for i in 0..40 {
+            let p = Packet::spike(1, 0, (i % 8) as u8, 0);
+            clean.inject(i as usize % 8, &p, i, 0);
+            jittered.inject(i as usize % 8, &p, i, 0);
+        }
+        run_until_empty(&mut clean, 0);
+        run_until_empty(&mut jittered, 0);
+        // jitter costs timing, never packets, and the pipeline stays FIFO
+        assert_eq!(jittered.delivered.len(), clean.delivered.len());
+        let ids: Vec<u64> = jittered.delivered.iter().map(|(f, _)| f.id).collect();
+        let clean_ids: Vec<u64> = clean.delivered.iter().map(|(f, _)| f.id).collect();
+        assert_eq!(ids, clean_ids, "jitter must be order-preserving per link");
+        let fs = jittered.fault_stats();
+        assert!(fs.jittered > 0, "a +/-6 bound over 40 frames displaces some");
+        assert_eq!((fs.corrupted, fs.dropped), (0, 0));
+        // at least one frame actually moved relative to the clean run
+        let moved = clean
+            .delivered
+            .iter()
+            .zip(&jittered.delivered)
+            .any(|((_, a), (_, b))| a != b);
+        assert!(moved, "the displaced draws must be visible in delivery cycles");
+        // and the same seed replays bit-identically
+        let mut replay = EmioLink::new();
+        replay.fault_policy(0, 7, 3, false);
+        replay.set_jitter(0, 6);
+        for i in 0..40 {
+            let p = Packet::spike(1, 0, (i % 8) as u8, 0);
+            replay.inject(i as usize % 8, &p, i, 0);
+        }
+        run_until_empty(&mut replay, 0);
+        assert_eq!(replay.delivered, jittered.delivered);
     }
 }

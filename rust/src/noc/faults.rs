@@ -1,9 +1,9 @@
 //! Seeded, deterministic fault injection across the die-to-die fabric.
 //!
 //! A [`FaultPlan`] describes every fault a run suffers — link-down windows
-//! on EMIO edges, per-edge flit bit-error rates, router stall windows, and
-//! hot-spot traffic bursts — from one seed, so a faulted run is exactly as
-//! replayable as a clean one. The plan expands to [`FaultOp`]s
+//! on EMIO edges, per-edge flit bit-error rates, per-edge spike-timing
+//! jitter, router stall windows, and hot-spot traffic bursts — from one
+//! seed, so a faulted run is exactly as replayable as a clean one. The plan expands to [`FaultOp`]s
 //! ([`FaultPlan::ops`]) that [`super::engine::CycleEngine::inject_fault`]
 //! routes into the engines; the per-edge fault state itself lives inside
 //! [`super::emio::EmioLink`] ([`LinkFaults`]), which both engine families
@@ -41,10 +41,25 @@ pub const CREDIT_RECOVERY_CYCLES: u64 = 4;
 /// Default bounded re-send budget per corrupted frame.
 pub const DEFAULT_MAX_RETRIES: u32 = 3;
 
+/// Largest accepted spike-timing jitter bound — a displacement wider than
+/// this is a broken plan, not timing noise.
+pub const MAX_JITTER_CYCLES: u64 = 1_000_000;
+
 /// Derive the per-edge corruption RNG seed from a plan seed. Both engine
 /// families call this same helper, so their draw streams are identical.
 pub fn link_rng_seed(seed: u64, edge: usize) -> u64 {
     seed ^ (edge as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Salt separating the jitter draw stream from the corruption stream, so
+/// enabling jitter on a link never perturbs which frames a given `ber`
+/// corrupts (and vice versa).
+const JITTER_SEED_SALT: u64 = 0xA5B3_57D1_9E02_C64F;
+
+/// Derive the per-edge spike-timing-jitter RNG seed from a plan seed.
+/// Shared by both engine families, like [`link_rng_seed`].
+pub fn jitter_rng_seed(seed: u64, edge: usize) -> u64 {
+    link_rng_seed(seed, edge) ^ JITTER_SEED_SALT
 }
 
 // ---------------------------------------------------------------------------
@@ -67,6 +82,10 @@ pub struct FaultStats {
     pub link_down_cycles: u64,
     /// Router-cycles lost to stall windows (backlogged routers only).
     pub stall_cycles: u64,
+    /// Frames whose deserializer-exit cycle timing jitter displaced
+    /// (non-zero draws only — a TTFS decode error, a latency wobble for
+    /// value-coded codecs).
+    pub jittered: u64,
 }
 
 impl FaultStats {
@@ -77,6 +96,7 @@ impl FaultStats {
         self.dropped += o.dropped;
         self.link_down_cycles += o.link_down_cycles;
         self.stall_cycles += o.stall_cycles;
+        self.jittered += o.jittered;
     }
 
     /// True when no fault was ever observed.
@@ -140,6 +160,11 @@ pub enum FaultOp {
     /// The pad of `edge` transmits nothing in `[from, until)` (plus
     /// [`CREDIT_RECOVERY_CYCLES`] of credit recovery afterwards).
     LinkDown { edge: usize, from: u64, until: u64 },
+    /// Seeded spike-timing jitter on one EMIO edge: every clean frame's
+    /// deserializer exit is displaced by a uniform draw in `[-max, +max]`
+    /// cycles (clamped so a frame never exits before the cycle after it
+    /// crossed the pad).
+    Jitter { edge: usize, max: u64 },
     /// Routers on `chip` (all of them, or just `router` as a row-major
     /// index) skip arbitration while the clock is in `[from, until)`.
     Stall { chip: usize, router: Option<usize>, from: u64, until: u64 },
@@ -172,6 +197,11 @@ pub struct LinkFaults {
     edge: usize,
     /// `[from, until)` outage windows (absolute cycles).
     outages: Vec<(u64, u64)>,
+    /// Spike-timing jitter bound (cycles); zero disables the draw stream.
+    jitter_max: u64,
+    /// Separate draw stream for jitter ([`jitter_rng_seed`]) so jitter and
+    /// corruption never perturb each other's replay.
+    jitter_rng: Rng,
     pub stats: FaultStats,
     pub events: Vec<FaultEvent>,
 }
@@ -186,15 +216,18 @@ impl LinkFaults {
             drop_corrupted: false,
             edge,
             outages: Vec::new(),
+            jitter_max: 0,
+            jitter_rng: Rng::new(jitter_rng_seed(seed, edge)),
             stats: FaultStats::default(),
             events: Vec::new(),
         }
     }
 
-    /// Re-seed the corruption RNG and set the retry policy (the
+    /// Re-seed the corruption + jitter RNGs and set the retry policy (the
     /// [`FaultOp::Policy`] handler).
     pub fn set_policy(&mut self, seed: u64, max_retries: u32, drop_corrupted: bool) {
         self.rng = Rng::new(link_rng_seed(seed, self.edge));
+        self.jitter_rng = Rng::new(jitter_rng_seed(seed, self.edge));
         self.max_retries = max_retries;
         self.drop_corrupted = drop_corrupted;
     }
@@ -202,6 +235,11 @@ impl LinkFaults {
     /// Set the per-frame corruption probability.
     pub fn set_ber(&mut self, rate: f64) {
         self.ber = rate;
+    }
+
+    /// Set the spike-timing jitter bound (the [`FaultOp::Jitter`] handler).
+    pub fn set_jitter(&mut self, max: u64) {
+        self.jitter_max = max;
     }
 
     /// Add an outage window `[from, until)`.
@@ -239,6 +277,25 @@ impl LinkFaults {
             self.events.push(FaultEvent { cycle: now, edge: self.edge, id, kind: FaultKind::Retried });
             PadVerdict::Retry
         }
+    }
+
+    /// Deserializer-exit cycle of a clean frame that crossed the pad at
+    /// `now` with nominal exit `base` (`now + DES_CYCLES`): displaced by a
+    /// uniform draw in `[-jitter_max, +jitter_max]`, clamped so the frame
+    /// never exits before `now + 1`. The jitter RNG is only consulted when
+    /// the bound is non-zero, so a jitter-free plan consumes no draws
+    /// (bit-identity with clean runs), and only non-zero displacements
+    /// count as `jittered` — the TTFS decode-error numerator.
+    pub fn jittered_exit(&mut self, now: u64, base: u64) -> u64 {
+        if self.jitter_max == 0 {
+            return base;
+        }
+        let draw = self.jitter_rng.below(2 * self.jitter_max + 1);
+        if draw != self.jitter_max {
+            self.stats.jittered += 1;
+        }
+        // base + (draw - jitter_max), computed without underflow
+        (base + draw).saturating_sub(self.jitter_max).max(now + 1)
     }
 }
 
@@ -292,6 +349,11 @@ pub struct FaultPlan {
     pub ber: f64,
     /// Per-edge overrides of `ber` (edge index -> rate).
     pub bers: BTreeMap<usize, f64>,
+    /// Uniform spike-timing jitter bound (cycles) across all edges; zero
+    /// disables jitter.
+    pub jitter: u64,
+    /// Per-edge overrides of `jitter` (edge index -> bound).
+    pub jitters: BTreeMap<usize, u64>,
     pub link_down: Vec<LinkDown>,
     pub stalls: Vec<StallSpec>,
     pub hotspots: Vec<HotSpot>,
@@ -305,6 +367,8 @@ impl Default for FaultPlan {
             drop_corrupted: false,
             ber: 0.0,
             bers: BTreeMap::new(),
+            jitter: 0,
+            jitters: BTreeMap::new(),
             link_down: Vec::new(),
             stalls: Vec::new(),
             hotspots: Vec::new(),
@@ -322,13 +386,19 @@ impl FaultPlan {
     pub fn is_zero(&self) -> bool {
         self.ber == 0.0
             && self.bers.values().all(|&r| r == 0.0)
+            && self.jitter == 0
+            && self.jitters.values().all(|&m| m == 0)
             && self.link_down.is_empty()
             && self.stalls.is_empty()
             && self.hotspots.is_empty()
     }
 
     fn any_link_faults(&self) -> bool {
-        self.ber > 0.0 || self.bers.values().any(|&r| r > 0.0) || !self.link_down.is_empty()
+        self.ber > 0.0
+            || self.bers.values().any(|&r| r > 0.0)
+            || self.jitter > 0
+            || self.jitters.values().any(|&m| m > 0)
+            || !self.link_down.is_empty()
     }
 
     /// Expand into engine ops for a topology with `n_edges` die
@@ -347,6 +417,12 @@ impl FaultPlan {
             let rate = self.bers.get(&e).copied().unwrap_or(self.ber);
             if rate > 0.0 {
                 out.push(FaultOp::BitError { edge: e, rate });
+            }
+        }
+        for e in 0..n_edges {
+            let max = self.jitters.get(&e).copied().unwrap_or(self.jitter);
+            if max > 0 {
+                out.push(FaultOp::Jitter { edge: e, max });
             }
         }
         for d in &self.link_down {
@@ -378,6 +454,25 @@ impl FaultPlan {
             }
             if !rate_ok(r) {
                 return Err(anyhow!("faults: bers[{e}] must be in [0, 1], got {r}"));
+            }
+        }
+        if self.jitter > MAX_JITTER_CYCLES {
+            return Err(anyhow!(
+                "faults: jitter bound {} above the {MAX_JITTER_CYCLES}-cycle cap",
+                self.jitter
+            ));
+        }
+        for (&e, &m) in &self.jitters {
+            if e >= n_edges {
+                return Err(anyhow!(
+                    "faults: jitters edge {e} out of range — the topology has {n_edges} die \
+                     boundaries"
+                ));
+            }
+            if m > MAX_JITTER_CYCLES {
+                return Err(anyhow!(
+                    "faults: jitters[{e}] bound {m} above the {MAX_JITTER_CYCLES}-cycle cap"
+                ));
             }
         }
         for d in &self.link_down {
@@ -453,6 +548,20 @@ impl FaultPlan {
                 Json::Obj(self.bers.iter().map(|(e, r)| (e.to_string(), Json::num(*r))).collect()),
             ));
         }
+        if self.jitter != 0 {
+            fields.push(("jitter", Json::num(self.jitter as f64)));
+        }
+        if !self.jitters.is_empty() {
+            fields.push((
+                "jitters",
+                Json::Obj(
+                    self.jitters
+                        .iter()
+                        .map(|(e, m)| (e.to_string(), Json::num(*m as f64)))
+                        .collect(),
+                ),
+            ));
+        }
         if !self.link_down.is_empty() {
             fields.push((
                 "link_down",
@@ -502,7 +611,18 @@ impl FaultPlan {
     pub fn from_json(j: &Json) -> Result<FaultPlan> {
         check_keys(
             j,
-            &["seed", "max_retries", "drop_corrupted", "ber", "bers", "link_down", "stalls", "hotspots"],
+            &[
+                "seed",
+                "max_retries",
+                "drop_corrupted",
+                "ber",
+                "bers",
+                "jitter",
+                "jitters",
+                "link_down",
+                "stalls",
+                "hotspots",
+            ],
             "faults",
         )?;
         let mut plan = FaultPlan {
@@ -512,6 +632,7 @@ impl FaultPlan {
                 .unwrap_or(DEFAULT_MAX_RETRIES),
             drop_corrupted: j.get("drop_corrupted").and_then(Json::as_bool).unwrap_or(false),
             ber: j.get("ber").and_then(Json::as_f64).unwrap_or(0.0),
+            jitter: opt_u64(j, "faults.jitter")?.unwrap_or(0),
             ..FaultPlan::default()
         };
         if let Some(map) = j.get("bers") {
@@ -526,6 +647,26 @@ impl FaultPlan {
                     .as_f64()
                     .ok_or_else(|| anyhow!("faults: bers[{key}] must be a number"))?;
                 plan.bers.insert(e, r);
+            }
+        }
+        if let Some(map) = j.get("jitters") {
+            let obj = map
+                .as_obj()
+                .ok_or_else(|| anyhow!("faults: jitters must be an object of edge -> cycles"))?;
+            for (key, val) in obj {
+                let e: usize = key
+                    .parse()
+                    .map_err(|_| anyhow!("faults: jitters key {key:?} is not an edge index"))?;
+                let m = match val.as_f64() {
+                    Some(n) if n >= 0.0 && n.fract() == 0.0 => n as u64,
+                    Some(n) => {
+                        return Err(anyhow!(
+                            "faults: jitters[{key}] must be a non-negative integer, got {n}"
+                        ))
+                    }
+                    None => return Err(anyhow!("faults: jitters[{key}] must be a number")),
+                };
+                plan.jitters.insert(e, m);
             }
         }
         if let Some(arr) = j.get("link_down") {
@@ -754,5 +895,84 @@ mod tests {
     fn per_edge_rng_streams_differ_but_replay() {
         assert_ne!(link_rng_seed(5, 0), link_rng_seed(5, 1));
         assert_eq!(link_rng_seed(5, 3), link_rng_seed(5, 3));
+        // the jitter stream is salted away from the corruption stream
+        assert_ne!(jitter_rng_seed(5, 0), link_rng_seed(5, 0));
+        assert_eq!(jitter_rng_seed(5, 2), jitter_rng_seed(5, 2));
+    }
+
+    #[test]
+    fn jitter_plan_expands_validates_and_round_trips() {
+        let mut plan = FaultPlan { seed: 11, jitter: 6, ..FaultPlan::default() };
+        plan.jitters.insert(1, 0); // per-edge zero override: edge 1 emits nothing
+        assert!(!plan.is_zero());
+        let ops = plan.ops(3);
+        assert!(matches!(ops[0], FaultOp::Policy { seed: 11, .. }), "jitter alone needs a policy");
+        let jittered: Vec<usize> = ops
+            .iter()
+            .filter_map(|op| match op {
+                FaultOp::Jitter { edge, max: 6 } => Some(*edge),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(jittered, vec![0, 2]);
+        assert!(plan.validate(3, 8).is_ok());
+        assert!(plan.validate(1, 8).is_err(), "mesh has no EMIO edges to jitter");
+        let back = FaultPlan::from_json(&plan.to_json()).expect("round trip parses");
+        assert_eq!(back, plan);
+        // zero-jitter plans keep the legacy serialized form (no new keys)
+        let text = FaultPlan::with_ber(1, 0.1).to_json().to_string_pretty();
+        assert!(!text.contains("jitter"), "zero jitter must not serialize: {text}");
+    }
+
+    #[test]
+    fn jitter_json_rejects_malformed_fields() {
+        let parse = |s: &str| FaultPlan::from_json(&crate::util::json::parse(s).unwrap());
+        assert!(parse(r#"{"jitter": -2}"#).is_err(), "negative bound");
+        assert!(parse(r#"{"jitter": 1.5}"#).is_err(), "fractional bound");
+        assert!(parse(r#"{"jitters": {"one": 4}}"#).is_err(), "non-integer edge key");
+        assert!(parse(r#"{"jitters": {"0": 2.5}}"#).is_err(), "fractional per-edge bound");
+        assert_eq!(parse(r#"{"jitter": 4}"#).unwrap().jitter, 4);
+        let capped = FaultPlan { jitter: MAX_JITTER_CYCLES + 1, ..FaultPlan::default() };
+        assert!(capped.validate(2, 8).is_err(), "bound above the cycle cap");
+    }
+
+    #[test]
+    fn zero_jitter_consumes_no_rng_draws() {
+        // mirror of zero_ber_consumes_no_rng_draws for the jitter stream
+        let mut a = LinkFaults::new(0, 9);
+        for i in 0..100 {
+            assert_eq!(a.jittered_exit(i, i + 38), i + 38, "zero bound must be the identity");
+        }
+        a.set_jitter(5);
+        let mut b = LinkFaults::new(0, 9);
+        b.set_jitter(5);
+        for i in 0..100 {
+            assert_eq!(a.jittered_exit(i, i + 38), b.jittered_exit(i, i + 38));
+        }
+    }
+
+    #[test]
+    fn jittered_exit_stays_bounded_and_causal() {
+        let mut lf = LinkFaults::new(0, 3);
+        lf.set_jitter(4);
+        let mut displaced = 0u64;
+        for now in 0..500u64 {
+            let base = now + 38;
+            let t = lf.jittered_exit(now, base);
+            assert!(t >= base - 4 && t <= base + 4, "|delta| <= max");
+            assert!(t > now, "a frame never exits before the cycle after the pad");
+            if t != base {
+                displaced += 1;
+            }
+        }
+        assert_eq!(lf.stats.jittered, displaced, "only non-zero displacements count");
+        assert!(displaced > 0, "a +/-4 bound on 500 frames displaces some");
+        // a bound wider than the pipeline depth clamps to causality
+        let mut wide = LinkFaults::new(0, 1);
+        wide.set_jitter(100);
+        for now in 0..200u64 {
+            let t = wide.jittered_exit(now, now + 38);
+            assert!(t > now);
+        }
     }
 }

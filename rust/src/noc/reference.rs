@@ -299,7 +299,7 @@ impl<S: TelemetrySink> CycleEngine for RefMesh<S> {
                 assert_eq!(chip, 0, "mesh engine: single-chip stall only");
                 self.add_stall(router, from, until);
             }
-            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } => {
+            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } | FaultOp::Jitter { .. } => {
                 panic!("mesh engine has no EMIO edges for link faults");
             }
         }
@@ -472,6 +472,10 @@ impl<S: TelemetrySink> CycleEngine for RefDuplex<S> {
             FaultOp::LinkDown { edge, from, until } => {
                 assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
                 self.link.add_outage(0, from, until);
+            }
+            FaultOp::Jitter { edge, max } => {
+                assert_eq!(edge, 0, "duplex engine has exactly one EMIO edge");
+                self.link.set_jitter(0, max);
             }
             FaultOp::Stall { chip, router, from, until } => {
                 let m = match chip {
@@ -685,6 +689,10 @@ impl<S: TelemetrySink> CycleEngine for RefChain<S> {
             FaultOp::LinkDown { edge, from, until } => {
                 assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
                 self.links[edge].add_outage(edge, from, until);
+            }
+            FaultOp::Jitter { edge, max } => {
+                assert!(edge < self.links.len(), "chain engine: edge {edge} out of range");
+                self.links[edge].set_jitter(edge, max);
             }
             FaultOp::Stall { chip, router, from, until } => {
                 assert!(chip < self.chips.len(), "chain engine: chip {chip} out of range");

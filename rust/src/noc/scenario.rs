@@ -1440,6 +1440,39 @@ mod tests {
     }
 
     #[test]
+    fn jittered_scenario_is_lockstep_identical_across_engine_families() {
+        // spike-timing jitter (ISSUE 9 satellite): a seeded jitter plan on
+        // a temporal-codec chain must replay bit-identically on the
+        // optimized, reference, and parallel engines — both families share
+        // the EmioLink jitter stream by construction
+        let plan = FaultPlan { seed: 9, jitter: 6, ..FaultPlan::default() };
+        let sc = Scenario::chain(3, 4)
+            .with_telemetry()
+            .traffic(TrafficSpec::Boundary {
+                neurons: 32,
+                dense: 0,
+                activity: 0.3,
+                ticks: 4,
+                seed: 2,
+                codec: CodecId::Temporal,
+                codecs: BTreeMap::new(),
+                activities: BTreeMap::new(),
+            })
+            .with_faults(plan);
+        let a = sc.run();
+        let r = sc.run_reference();
+        let p = sc.run_parallel(2);
+        assert_eq!(a.stats, r.stats);
+        assert_eq!(a.tail, r.tail);
+        assert_eq!(a.stats, p.stats);
+        assert!(a.stats.faults.jittered > 0, "a +/-6 bound must displace some frames");
+        assert_eq!(a.stats.injected, a.stats.delivered, "jitter costs timing, not packets");
+        // the round-tripped document replays the same run
+        let back = Scenario::from_json_str(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.run().stats, a.stats);
+    }
+
+    #[test]
     fn combined_feature_scenario_round_trips_as_one_document() {
         use super::super::faults::{HotSpot, LinkDown, StallSpec};
         // every scenario/v1 axis in ONE document: chain topology, boundary

@@ -344,7 +344,7 @@ impl<S: TelemetrySink> CycleEngine for SoaMesh<S> {
                 assert_eq!(chip, 0, "mesh engine: single-chip stall only");
                 self.add_stall(router, from, until);
             }
-            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } => {
+            FaultOp::BitError { .. } | FaultOp::LinkDown { .. } | FaultOp::Jitter { .. } => {
                 panic!("mesh engine has no EMIO edges for link faults");
             }
         }

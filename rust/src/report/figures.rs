@@ -8,6 +8,7 @@ use crate::analytic::{efficiency_gain, simulate, simulate_variants, speedup, Sim
 use crate::arch::params::{ArchConfig, Variant};
 use crate::codec::assign::{self, AssignConfig, Assignment};
 use crate::codec::CodecId;
+use crate::learn::{self, LearnConfig};
 use crate::model::networks;
 use crate::noc::{FaultPlan, Scenario, TrafficSpec};
 use crate::sparsity::SparsityProfile;
@@ -196,28 +197,34 @@ pub fn fig15_mixed_frontier(net_name: &str, sparsities: &[f64]) -> Table {
 /// interpretation — the delivered fraction reports the loss) and in
 /// *retry* mode (bounded re-send — faults cost latency, visible in the
 /// tail quantiles, not packets). The zero-rate row is the fault-free
-/// baseline, bit-identical to a plan-free run.
-pub fn fig16_fault_degradation(bers: &[f64]) -> Table {
+/// baseline, bit-identical to a plan-free run. Per codec, `jitters` adds
+/// spike-timing-noise rows (seeded `FaultPlan::jitter`): every frame
+/// arrives, but displaced deserializer exits mis-decode TTFS — the
+/// `ttfs err %` column is the fraction of delivered frames jitter moved,
+/// reported for the temporal codec only (value codecs decode from payload,
+/// not timing, and pay only the tail-latency wobble).
+pub fn fig16_fault_degradation(bers: &[f64], jitters: &[u64]) -> Table {
     let mut t = Table::new(
         "Fig 16: codec degradation under link faults — duplex8 boundary traffic \
-         (drop mode: delivered; retry mode: tail latency)",
+         (drop mode: delivered; retry mode: tail latency; jitter rows: \
+         spike-timing noise, TTFS decode error)",
         &[
             "codec", "ber", "injected", "delivered %", "dropped", "retry p50", "retry p99",
-            "retried",
+            "retried", "jitter", "jittered", "ttfs err %",
         ],
     );
     for codec in CodecId::ALL {
+        let base = Scenario::duplex(8).with_telemetry().traffic(TrafficSpec::Boundary {
+            neurons: 256,
+            dense: if codec == CodecId::Dense { 1 } else { 0 },
+            activity: 0.1,
+            ticks: 8,
+            seed: 5,
+            codec,
+            codecs: Default::default(),
+            activities: Default::default(),
+        });
         for &ber in bers {
-            let base = Scenario::duplex(8).with_telemetry().traffic(TrafficSpec::Boundary {
-                neurons: 256,
-                dense: if codec == CodecId::Dense { 1 } else { 0 },
-                activity: 0.1,
-                ticks: 8,
-                seed: 5,
-                codec,
-                codecs: Default::default(),
-                activities: Default::default(),
-            });
             let (drop_res, retry_res) = if ber > 0.0 {
                 let drop_plan = FaultPlan {
                     drop_corrupted: true,
@@ -229,7 +236,7 @@ pub fn fig16_fault_degradation(bers: &[f64]) -> Table {
                     base.clone().with_faults(FaultPlan::with_ber(17, ber)).run(),
                 )
             } else {
-                let clean = base.run();
+                let clean = base.clone().run();
                 (clean, clean)
             };
             let tail = retry_res.tail;
@@ -242,8 +249,80 @@ pub fn fig16_fault_degradation(bers: &[f64]) -> Table {
                 tail.map(|x| x.p50.to_string()).unwrap_or_else(|| "-".into()),
                 tail.map(|x| x.p99.to_string()).unwrap_or_else(|| "-".into()),
                 format!("{}", retry_res.stats.faults.retried),
+                "0".into(),
+                "0".into(),
+                "-".into(),
             ]);
         }
+        // jitter rows: timing noise displaces deserializer exits without
+        // losing frames. TTFS decodes *from* arrival time, so every
+        // displaced frame is a decode error; value-coded codecs only pay
+        // tail latency.
+        for &jit in jitters {
+            let plan = FaultPlan { seed: 17, jitter: jit, ..FaultPlan::default() };
+            let res = base.clone().with_faults(plan).run();
+            let tail = res.tail;
+            let ttfs_err = if codec == CodecId::Temporal && res.stats.delivered > 0 {
+                let frac = res.stats.faults.jittered as f64 / res.stats.delivered as f64;
+                format!("{:.1}", 100.0 * frac)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                codec.to_string(),
+                "0".into(),
+                format!("{}", res.stats.injected),
+                format!("{:.1}", 100.0 * res.stats.delivered_fraction()),
+                format!("{}", res.stats.faults.dropped),
+                tail.map(|x| x.p50.to_string()).unwrap_or_else(|| "-".into()),
+                tail.map(|x| x.p99.to_string()).unwrap_or_else(|| "-".into()),
+                format!("{}", res.stats.faults.retried),
+                format!("{jit}"),
+                format!("{}", res.stats.faults.jittered),
+                ttfs_err,
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 17 (repo-added): the learned sparsification Pareto front. One
+/// surrogate-gradient training per lambda — ascending, with frozen-weight
+/// threshold-only continuation, the per-edge threshold ratchet, and the
+/// packets guard of [`learn::pareto_sweep`] — reports task MSE, mean
+/// boundary activity, boundary packets, and EDP. The analytic
+/// `assign-codecs` EDP at the *untrained* rates is the fixed status-quo
+/// baseline behind the last column; boundary packets are monotone
+/// non-increasing down the table by construction.
+pub fn fig17_learned_pareto(seed: u64, lams: &[f32]) -> Table {
+    let cfg = LearnConfig { seed, steps: 60, ..LearnConfig::default() };
+    let sweep = learn::pareto_sweep(&cfg, lams).expect("default learn model is known");
+    let mut t = Table::new(
+        format!(
+            "Fig 17: learned codec-threshold Pareto front — {} (seed {seed}, \
+             analytic assign EDP {:.4e})",
+            cfg.model, sweep.analytic_edp
+        ),
+        &[
+            "lambda",
+            "task mse",
+            "mean activity",
+            "boundary packets",
+            "edp",
+            "edp vs dense (x)",
+            "edp vs analytic (x)",
+        ],
+    );
+    for p in &sweep.points {
+        t.row(vec![
+            format!("{}", p.lam),
+            format!("{:.4}", p.task_loss),
+            format!("{:.3}", p.mean_activity),
+            format!("{}", p.boundary_packets),
+            format!("{:.4e}", p.edp),
+            format!("{:.2}", p.edp_vs_dense),
+            format!("{:.2}", sweep.analytic_edp / p.edp.max(f64::MIN_POSITIVE)),
+        ]);
     }
     t
 }
@@ -503,19 +582,41 @@ mod tests {
 
     #[test]
     fn fig16_degradation_monotone_in_ber() {
-        let t = fig16_fault_degradation(&[0.0, 0.05, 0.5]);
-        assert_eq!(t.rows.len(), CodecId::ALL.len() * 3);
-        for chunk in t.rows.chunks(3) {
+        let t = fig16_fault_degradation(&[0.0, 0.05, 0.5], &[6]);
+        assert_eq!(t.rows.len(), CodecId::ALL.len() * 4);
+        for chunk in t.rows.chunks(4) {
             // drop-mode delivered fraction (col 3) never improves with ber:
             // in drop mode every frame crosses the pad exactly once in a
             // fault-independent order, so the corrupted set only grows
-            let fracs: Vec<f64> = chunk.iter().map(|r| r[3].parse().unwrap()).collect();
+            let fracs: Vec<f64> = chunk[..3].iter().map(|r| r[3].parse().unwrap()).collect();
             assert!(fracs[0] >= fracs[1] && fracs[1] >= fracs[2], "{fracs:?}");
             // the zero-rate row is fault-free...
             assert_eq!(chunk[0][4], "0", "{:?}", chunk[0]);
             assert_eq!(chunk[0][7], "0", "{:?}", chunk[0]);
             // ...and a 50% BER certainly retries something in retry mode
             assert!(chunk[2][7].parse::<u64>().unwrap() > 0, "{:?}", chunk[2]);
+            // the jitter row loses nothing, displaces something, and only
+            // the temporal codec reports a TTFS decode error
+            let jit = &chunk[3];
+            assert_eq!(jit[3], "100.0", "jitter must not lose frames: {jit:?}");
+            assert!(jit[9].parse::<u64>().unwrap() > 0, "no frame displaced: {jit:?}");
+            if jit[0] == CodecId::Temporal.to_string() {
+                assert!(jit[10].parse::<f64>().unwrap() > 0.0, "{jit:?}");
+            } else {
+                assert_eq!(jit[10], "-", "{jit:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig17_pareto_rows_tighten_with_lambda() {
+        let t = fig17_learned_pareto(42, &[0.0, 2.0]);
+        assert_eq!(t.rows.len(), 2);
+        let packets: Vec<u64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(packets[1] <= packets[0], "boundary packets rose with lambda: {packets:?}");
+        for r in &t.rows {
+            assert!(r[4].parse::<f64>().unwrap() > 0.0, "EDP must be positive: {r:?}");
+            assert!(r[5].parse::<f64>().unwrap() > 0.0, "dense ratio must parse: {r:?}");
         }
     }
 

@@ -8,6 +8,7 @@ use crate::arch::packet;
 use crate::arch::params::{ArchConfig, Variant};
 use crate::codec::assign::Assignment;
 use crate::codec::CodecId;
+use crate::learn::TrainOutcome;
 use crate::util::table::Table;
 
 /// Table 1: Architectural Parameters.
@@ -262,6 +263,47 @@ pub fn table5_tail_latency(rows: &[TailRow]) -> Table {
             if ok { "yes".into() } else { "NO".into() },
         ]);
     }
+    t
+}
+
+/// Table 8 (repo-added): learned-vs-analytic-vs-uniform comparison for one
+/// `train-codecs` run. The uniform-dense row is evaluated at the *learned*
+/// rates (the apples-to-apples bandwidth baseline); the analytic row is the
+/// `assign-codecs` optimizer at the untrained rates (the status quo the
+/// learned profile must match or beat); task MSE only exists for the
+/// trained proxy, so baseline rows show `-`.
+pub fn table8_learned_comparison(out: &TrainOutcome) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Table 8: learned vs analytic vs uniform — {} (seed {}, lambda {}, budget {})",
+            out.profile.model, out.profile.seed, out.profile.lam, out.profile.rate_budget
+        ),
+        &["config", "task mse", "mean activity", "boundary pkts", "edp", "vs dense (x)"],
+    );
+    t.row(vec![
+        "uniform dense @ learned rates".into(),
+        "-".into(),
+        format!("{:.3}", out.profile.mean_activity()),
+        format!("{}", out.dense_packets),
+        format!("{:.4e}", out.dense_edp),
+        "1.00".into(),
+    ]);
+    t.row(vec![
+        "analytic assign @ initial rates".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.4e}", out.analytic_edp),
+        format!("{:.2}", out.dense_edp / out.analytic_edp.max(f64::MIN_POSITIVE)),
+    ]);
+    t.row(vec![
+        "learned (train-codecs)".into(),
+        format!("{:.4}", out.task_loss),
+        format!("{:.3}", out.profile.mean_activity()),
+        format!("{}", out.boundary_packets),
+        format!("{:.4e}", out.edp),
+        format!("{:.2}", out.dense_edp / out.edp.max(f64::MIN_POSITIVE)),
+    ]);
     t
 }
 

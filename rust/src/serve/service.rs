@@ -326,6 +326,7 @@ fn stats_json(s: &NocStats) -> Json {
                 ("dropped", Json::num(s.faults.dropped as f64)),
                 ("link_down_cycles", Json::num(s.faults.link_down_cycles as f64)),
                 ("stall_cycles", Json::num(s.faults.stall_cycles as f64)),
+                ("jittered", Json::num(s.faults.jittered as f64)),
             ]),
         ),
     ])

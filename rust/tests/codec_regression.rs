@@ -250,3 +250,24 @@ fn mixed_assignment_acceptance_on_reference_networks() {
         assert!((assign::edp(&rep) - a.edp).abs() <= a.edp * 1e-12, "{name}");
     }
 }
+
+#[test]
+fn threshold_hook_leaves_default_topk_budgets_bit_identical() {
+    // the learnable-threshold hook (ISSUE 9 satellite): `None` must be the
+    // exact legacy closed form over the whole grid the other locks use, so
+    // nothing downstream of `budget_k` can drift when learn/ lands
+    use spikelink::codec::TopKDeltaCodec;
+    assert_eq!(TopKDeltaCodec::budget_k(256, 0.1), 26);
+    assert_eq!(TopKDeltaCodec::budget_k(0, 0.5), 0);
+    assert_eq!(TopKDeltaCodec::budget_k(256, 1e-9), 1);
+    assert_eq!(TopKDeltaCodec::budget_k(256, 0.0), 0);
+    for &n in &[0u64, 1, 16, 256, 65_536] {
+        for &a in &[0.0, 1e-9, 0.05, 0.1, 0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(
+                TopKDeltaCodec::budget_k_with_threshold(n, a, None),
+                TopKDeltaCodec::budget_k(n, a),
+                "None threshold must be bit-identical at n={n} a={a}"
+            );
+        }
+    }
+}

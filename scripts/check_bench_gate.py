@@ -52,6 +52,14 @@ default-lineage dim coverage. Note the load test's own `serve/p99` record
 uses unit "req/s", which keeps it out of every x-vs-ref gate entirely;
 this family only exists for serve-labelled *speedup* records.
 
+`learn`-suffixed labels (`noc/mesh16/sparse/speedup/learn`,
+`mesh16-learned` — scenarios replayed from a trained profile/v1 document,
+see EXPERIMENTS.md §Learn) are the fifth suffix family with the same
+rules: latest-run only, floor-checked, never a substitute for the
+default-lineage dim coverage. The training CLI's own `learn/pareto`
+record uses unit "edp-vs-dense", which keeps it out of every x-vs-ref
+gate; this family only exists for learn-labelled *speedup* records.
+
 `parallel-vs-serial` records (`noc/chain8x8/1m-transfers/parallel-vs-serial`,
 unit "x-vs-serial" — the threaded chain stepper's throughput over the serial
 engine's on the identical load, see EXPERIMENTS.md §Perf "Parallel engine")
@@ -95,11 +103,16 @@ FAULT_RE = re.compile(r"(?:^|[/-])(fault[^/]*)")
 # `spikelink serve` service rather than a direct engine run
 SERVE_RE = re.compile(r"(?:^|[/-])(serve[^/]*)")
 
+# a learn-suffixed label starts a segment with "learn" and runs to the next
+# `/` (learn, learned, learn-lam2) — scenarios replayed from a trained
+# profile/v1 document rather than a hand-written traffic spec
+LEARN_RE = re.compile(r"(?:^|[/-])(learn[^/]*)")
+
 
 def suffix_of(name):
-    """The codec, fault, or serve segment of a bench-record name, or None
-    for the default (unsuffixed) lineage."""
-    for pattern in (CODEC_RE, FAULT_RE, SERVE_RE):
+    """The codec, fault, serve, or learn segment of a bench-record name,
+    or None for the default (unsuffixed) lineage."""
+    for pattern in (CODEC_RE, FAULT_RE, SERVE_RE, LEARN_RE):
         m = pattern.search(name)
         if m:
             return m.group(1)

@@ -55,6 +55,16 @@ CASES = {
     "serve_below_floor.json": (False, "below the 5x acceptance floor"),
     # ...and never a substitute for the clean-run dim coverage
     "serve_only_speedups.json": (False, "bench did not complete"),
+    # learn-suffixed labels (scenarios replayed from a trained profile/v1,
+    # EXPERIMENTS.md §Learn) follow the same suffix rules: extra floor-checked
+    # cases next to an intact default lineage (the training CLI's own
+    # learn/pareto record rides along with unit edp-vs-dense, invisible to
+    # every x-vs-ref gate)...
+    "learn_labels_pass.json": (True, "suffixed cases"),
+    # ...held to the same 5x floor...
+    "learn_below_floor.json": (False, "below the 5x acceptance floor"),
+    # ...and never a substitute for the clean-run dim coverage
+    "learn_only_speedups.json": (False, "bench did not complete"),
     # parallel-vs-serial records (threaded chain stepper, unit x-vs-serial)
     # are the fifth extra family: floor-checked next to an intact default
     # lineage...
