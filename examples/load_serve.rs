@@ -3,11 +3,12 @@
 //! a small pool of distinct scenarios (so the first touch of each runs a
 //! cycle engine and everything after is answered from the keyed result
 //! cache, with identical concurrent misses dedup-batched onto one run),
-//! exercise the `/assign` cache, and persist a `serve/p99` record to
-//! `BENCH_noc_cycle.json`.
+//! exercise the `/assign` cache, and persist `serve/p99` and
+//! `check/precheck` records to `BENCH_noc_cycle.json`.
 //!
-//! The record's unit is `req/s` — deliberately not `x-vs-ref`, so the
-//! bench gate's speedup-floor checks ignore it (see EXPERIMENTS.md §Serve).
+//! The records' units are `req/s` and `us/req` — deliberately not
+//! `x-vs-ref`, so the bench gate's speedup-floor checks ignore them (see
+//! EXPERIMENTS.md §Serve and §Check).
 //!
 //! Run: `cargo run --release --example load_serve -- [threads] [requests_per_thread]`
 
@@ -115,6 +116,26 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(cached, "repeated /assign was not served from cache: {a2}");
     println!("assign: repeat served from cache (no annealing search)");
 
+    // the static precheck every /simulate pays before touching an engine
+    // slot: measure it standalone over the same scenario pool, so the
+    // appended record puts a number on the "precheck overhead is noise"
+    // claim (see EXPERIMENTS.md §Check)
+    let precheck_iters = 2000usize;
+    let pool: Vec<_> = SCENARIOS
+        .iter()
+        .map(|s| spikelink::noc::Scenario::from_json_str(s).expect("pool scenario parses"))
+        .collect();
+    let mut pre_ns: Vec<f64> = Vec::with_capacity(precheck_iters);
+    for i in 0..precheck_iters {
+        let sc = &pool[i % pool.len()];
+        let t0 = Instant::now();
+        let report = spikelink::check::check_scenario(sc);
+        pre_ns.push(t0.elapsed().as_nanos() as f64);
+        anyhow::ensure!(report.is_clean(), "load-test pool scenario failed its precheck");
+    }
+    let pre_us = stats::median(&pre_ns) / 1e3;
+    println!("precheck: median {pre_us:.1}us per scenario over {precheck_iters} passes");
+
     let (sm, metrics) = http(addr, "GET", "/metrics", "")?;
     anyhow::ensure!(sm == 200, "metrics failed: HTTP {sm}");
     println!("metrics:\n{metrics}");
@@ -137,10 +158,21 @@ fn main() -> anyhow::Result<()> {
         hist.p99(),
         hist.p999(),
     );
-    if let Err(e) = append_json(Path::new("BENCH_noc_cycle.json"), &[rec]) {
+    // unit "us/req" keeps this record out of every x-vs-ref gate, like
+    // serve/p99's "req/s" — it is an overhead trace, not a speedup case
+    let pm = Measurement {
+        name: "check/precheck".to_string(),
+        iters: precheck_iters,
+        median_ns: stats::median(&pre_ns),
+        mean_ns: stats::mean(&pre_ns),
+        p10_ns: stats::percentile(&pre_ns, 10.0),
+        p90_ns: stats::percentile(&pre_ns, 90.0),
+    };
+    let pre_rec = BenchRecord::new(pm, pre_us, "us/req");
+    if let Err(e) = append_json(Path::new("BENCH_noc_cycle.json"), &[rec, pre_rec]) {
         eprintln!("error: writing BENCH_noc_cycle.json: {e}");
         std::process::exit(1);
     }
-    println!("appended serve/p99 record to BENCH_noc_cycle.json");
+    println!("appended serve/p99 + check/precheck records to BENCH_noc_cycle.json");
     Ok(())
 }

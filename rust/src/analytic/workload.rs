@@ -13,6 +13,10 @@
 //! * **routed packets** — Eq. 5: local packets x AverageHops (Eq. 4);
 //! * **boundary packets** — the subset of egress that crosses die(s).
 
+// closed-form packet/cycle counts narrow deliberately; operands are
+// bounded by the model shape
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::params::ArchConfig;
 use crate::codec::CodecId;
 use crate::model::layer::Network;

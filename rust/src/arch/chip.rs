@@ -1,6 +1,10 @@
 //! Chip geometry: the N x N tile grid, boundary/interior classification,
 //! and the multi-chip array (§3.1-§3.2, Fig. 2).
 
+// coordinate/id packing narrows deliberately; dims are validated at
+// construction
+#![allow(clippy::cast_possible_truncation)]
+
 use super::core::CoreKind;
 use super::params::{ArchConfig, Variant};
 

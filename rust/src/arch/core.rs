@@ -2,6 +2,9 @@
 //! principles (entry widths x entry counts) so the numbers are *computed*,
 //! not transcribed.
 
+// core-id and slot arithmetic narrows deliberately within validated dims
+#![allow(clippy::cast_possible_truncation)]
+
 use super::params::ArchConfig;
 
 /// The two core types of §3.3.

@@ -8,6 +8,10 @@
 //! exhaustive-ish round-trip tests (every field at its extremes + random
 //! sweeps from the crate PRNG).
 
+// bit-packing is this module's whole job — narrowing casts carry the
+// field layout
+#![allow(clippy::cast_possible_truncation)]
+
 /// Payload interpretation — the 1-bit `type` field of Table 3.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PacketType {

@@ -1,0 +1,375 @@
+//! Drain-feasibility analysis over the channel-dependency graph.
+//!
+//! The communication graph of every topology reduces, for die-to-die
+//! purposes, to its ordered boundary edges: a mesh has none, a duplex one,
+//! a `chips`-chip chain `chips - 1`. Every transfer in the injection
+//! schedule crosses the contiguous edge range `[src_chip, dest_chip)`
+//! (chain traffic is eastward by construction), so the per-edge load is
+//! computable without running an engine.
+//!
+//! Two facts about the EMIO model (see [`crate::noc::emio`]) give a sound
+//! *lower* bound on drain cycles — the Eq. 8 serialization bound:
+//!
+//! * a lane serializes one 38-bit frame per [`SER_CYCLES`]; `p` frames
+//!   spread over the [`LANES`] lanes cannot all finish serializing before
+//!   `ceil(p / LANES) * SER_CYCLES` cycles after the first injection, and
+//!   the last frame still pays the [`DES_CYCLES`] pipeline;
+//! * the pad transmits at most one frame per cycle and transmits nothing
+//!   during a link-down window (plus [`CREDIT_RECOVERY_CYCLES`]), so
+//!   blocked windows push the last transmission out by their overlap.
+//!
+//! Retry inflation: with a bit-error rate `b` and a retry budget `R`, each
+//! frame is expected to be re-sent `b + b^2 + … + b^R` times, and every
+//! retry re-pays full serialization. The floor charges the *expected*
+//! inflation (documented in EXPERIMENTS.md §Check); the suggested bound
+//! charges the worst case (`R` retries for every frame) plus worst-case
+//! lane skew, so a run at the suggestion drains.
+//!
+//! A window that blocks the pad through the whole drain horizon
+//! (`t_last + max_cycles`) while more frames must cross than fit before it
+//! is a **dead edge**: the run is guaranteed [`TimedOut`] no matter what
+//! the engine does — exactly the case the service should reject without
+//! burning an engine slot.
+//!
+//! [`TimedOut`]: crate::noc::DrainOutcome::TimedOut
+
+use crate::codec::CodecId;
+use crate::noc::emio::{DES_CYCLES, LANES, SER_CYCLES};
+use crate::noc::faults::{FaultPlan, CREDIT_RECOVERY_CYCLES};
+use crate::noc::scenario::{Scenario, TrafficSpec};
+
+/// Traffic attributed to one boundary edge by the static schedule walk.
+#[derive(Debug, Clone)]
+pub struct EdgeLoad {
+    /// Boundary index (link between chip `edge` and chip `edge + 1`).
+    pub edge: usize,
+    /// Frames that must cross this edge (one frame per crossing packet).
+    pub packets: u64,
+    /// Earliest injection cycle among the crossing transfers.
+    pub first_inject: u64,
+}
+
+/// A statically-proven permanent outage: this edge's run is guaranteed to
+/// time out.
+#[derive(Debug, Clone)]
+pub struct DeadEdge {
+    pub edge: usize,
+    /// Crossing frames stranded behind the window.
+    pub packets: u64,
+    /// The blocking window, as written in the fault plan.
+    pub from: u64,
+    pub until: u64,
+}
+
+/// Result of the static drain-feasibility pass.
+#[derive(Debug, Clone, Default)]
+pub struct DrainAnalysis {
+    /// Last injection cycle in the schedule (drain starts after it).
+    pub t_last: u64,
+    /// Per-edge loads, trafficked edges only, ascending by edge.
+    pub loads: Vec<EdgeLoad>,
+    /// Edges proven permanently blocked under their traffic.
+    pub dead: Vec<DeadEdge>,
+    /// Eq. 8 lower bound on post-injection drain cycles (0 when no edge
+    /// carries traffic). Meaningless when `dead` is non-empty.
+    pub floor: u64,
+    /// A sound `max_cycles` suggestion: worst-case serialization, retries,
+    /// blocked windows, jitter, and generous mesh slack.
+    pub suggested: u64,
+}
+
+/// Expected extra transmissions for `packets` frames at bit-error rate
+/// `ber` under a budget of `max_retries` re-sends per frame.
+fn expected_retry_extra(packets: u64, ber: f64, max_retries: u32) -> u64 {
+    if !(ber > 0.0) || packets == 0 {
+        return 0;
+    }
+    let b = ber.min(1.0);
+    let mut geom = 0.0;
+    let mut term = 1.0;
+    for _ in 0..max_retries {
+        term *= b;
+        geom += term;
+    }
+    saturating_cycles(packets_f64(packets) * geom)
+}
+
+/// `u64 -> f64` for cycle arithmetic; counts this large have no exact
+/// representation anyway and only feed bounds.
+#[allow(clippy::cast_precision_loss)]
+fn packets_f64(n: u64) -> f64 {
+    n as f64
+}
+
+/// `f64 -> u64` cycle count, clamped at zero and saturated at the top —
+/// the only place the analysis leaves integer arithmetic.
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+fn saturating_cycles(x: f64) -> u64 {
+    if x <= 0.0 {
+        0
+    } else if x >= packets_f64(u64::MAX) {
+        u64::MAX
+    } else {
+        x.floor() as u64
+    }
+}
+
+/// End of a link-down window as the pad sees it: the outage plus credit
+/// recovery, saturating (a `u64::MAX` window stays permanent).
+fn window_end(until: u64) -> u64 {
+    until.saturating_add(CREDIT_RECOVERY_CYCLES)
+}
+
+/// Absolute cycle of the last pad transmission, as a lower bound: the pad
+/// sends one frame per non-blocked cycle starting at `start`, skipping the
+/// `(from, end)` windows (pre-sorted by `from`).
+fn pad_finish(start: u64, frames: u64, windows: &[(u64, u64)]) -> u64 {
+    debug_assert!(frames > 0);
+    let mut t = start;
+    let mut left = frames;
+    for &(from, end) in windows {
+        if end <= t {
+            continue;
+        }
+        let avail = from.saturating_sub(t);
+        if avail >= left {
+            return t + (left - 1);
+        }
+        left -= avail;
+        t = end;
+    }
+    t + (left - 1)
+}
+
+/// The codec carried by boundary edge `e`, when the traffic is
+/// codec-shaped (needed for the temporal decode-latency overhead).
+fn edge_codec(traffic: &TrafficSpec, e: usize) -> Option<(CodecId, u32)> {
+    match traffic {
+        TrafficSpec::Boundary { ticks, codec, codecs, .. } => {
+            Some((codecs.get(&e).copied().unwrap_or(*codec), *ticks))
+        }
+        _ => None,
+    }
+}
+
+/// Run the full static drain-feasibility pass for `sc`.
+pub fn analyze(sc: &Scenario) -> DrainAnalysis {
+    let sched = sc.schedule();
+    let n_edges = sc.topology.chips().saturating_sub(1);
+    let mut out = DrainAnalysis::default();
+    if sched.is_empty() {
+        return out;
+    }
+    out.t_last = sched.iter().map(|&(c, _)| c).max().unwrap_or(0);
+    let total_transfers = sched.len() as u64;
+
+    // Attribute every transfer to the contiguous edge range it crosses.
+    let mut packets = vec![0u64; n_edges];
+    let mut first = vec![u64::MAX; n_edges];
+    for &(cycle, ref t) in &sched {
+        for e in t.src_chip..t.dest_chip.min(n_edges) {
+            packets[e] += 1;
+            first[e] = first[e].min(cycle);
+        }
+    }
+    out.loads = (0..n_edges)
+        .filter(|&e| packets[e] > 0)
+        .map(|e| EdgeLoad { edge: e, packets: packets[e], first_inject: first[e] })
+        .collect();
+
+    let lanes = LANES as u64;
+    let horizon = out.t_last.saturating_add(sc.max_cycles);
+    let mut floor_abs = 0u64;
+    // Suggested drain budget, accumulated per edge then padded with slack
+    // for intra-chip mesh routing + ejection.
+    let mut suggest = 0u64;
+
+    for load in &out.loads {
+        let e = load.edge;
+        let p = load.packets;
+        let plan = sc.faults.as_ref();
+        let (ber, jitter, retries) = plan
+            .map(|f| {
+                (
+                    f.bers.get(&e).copied().unwrap_or(f.ber),
+                    f.jitters.get(&e).copied().unwrap_or(f.jitter),
+                    f.max_retries,
+                )
+            })
+            .unwrap_or((0.0, 0, 0));
+        let mut windows: Vec<(u64, u64)> = plan
+            .map(|f| {
+                f.link_down
+                    .iter()
+                    .filter(|w| w.edge == e)
+                    .map(|w| (w.from, window_end(w.until)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        windows.sort_unstable();
+
+        // Permanent outage: blocked through the whole drain horizon with
+        // more frames to cross than fit before the window opens.
+        if let Some(w) = plan.into_iter().flat_map(|f| &f.link_down).find(|w| {
+            w.edge == e && window_end(w.until) >= horizon && p > w.from.saturating_sub(SER_CYCLES)
+        }) {
+            out.dead.push(DeadEdge { edge: e, packets: p, from: w.from, until: w.until });
+            continue;
+        }
+
+        let eff = p + expected_retry_extra(p, ber, retries);
+        let overhead = edge_codec(&sc.traffic, e)
+            .map(|(c, ticks)| c.codec().latency_overhead_cycles(ticks))
+            .unwrap_or(0);
+        let ser_complete = load
+            .first_inject
+            .saturating_add(eff.div_ceil(lanes).saturating_mul(SER_CYCLES))
+            .saturating_add(DES_CYCLES);
+        let pad_complete = pad_finish(load.first_inject.saturating_add(SER_CYCLES), eff, &windows)
+            .saturating_add(DES_CYCLES);
+        floor_abs = floor_abs.max(ser_complete.max(pad_complete).saturating_add(overhead));
+
+        // Worst case for the suggestion: every frame re-sent the full
+        // retry budget, all frames on one lane, every blocked cycle paid.
+        let worst = if ber > 0.0 { p.saturating_mul(1 + u64::from(retries)) } else { p };
+        let blocked: u64 = windows
+            .iter()
+            .map(|&(from, end)| end.saturating_sub(from).min(1 << 32))
+            .sum();
+        suggest = suggest
+            .saturating_add(worst.saturating_mul(SER_CYCLES + DES_CYCLES + 2))
+            .saturating_add(blocked)
+            .saturating_add(p.saturating_mul(jitter))
+            .saturating_add(overhead);
+    }
+
+    out.floor = floor_abs.saturating_sub(out.t_last);
+    // Slack for chip-local routing, stall windows, and ejection: generous
+    // by design — the suggestion must let the engine drain.
+    let stall_slack: u64 = sc
+        .faults
+        .as_ref()
+        .map(|f| {
+            f.stalls
+                .iter()
+                .map(|s| window_end(s.until).saturating_sub(s.from).min(1 << 32))
+                .sum()
+        })
+        .unwrap_or(0);
+    let dim = sc.topology.dim() as u64;
+    let chips = sc.topology.chips() as u64;
+    out.suggested = suggest
+        .saturating_add(total_transfers)
+        .saturating_add(stall_slack)
+        .saturating_add(8 * dim * chips)
+        .saturating_add(1024);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::faults::LinkDown;
+    use crate::noc::{DrainOutcome, FaultPlan, Scenario, TrafficSpec};
+
+    fn chain_dense(chips: usize, neurons: usize, dense: usize, max_cycles: u64) -> Scenario {
+        Scenario::chain(chips, 8)
+            .traffic(TrafficSpec::Boundary {
+                neurons,
+                dense,
+                activity: 0.5,
+                ticks: 2,
+                seed: 5,
+                codec: CodecId::Dense,
+                codecs: Default::default(),
+                activities: Default::default(),
+            })
+            .with_max_cycles(max_cycles)
+    }
+
+    #[test]
+    fn per_edge_loads_count_crossing_transfers() {
+        // 64 neurons x 2 packets each, spanning both edges of a 3-chip chain
+        let a = analyze(&chain_dense(3, 64, 2, 10_000));
+        assert_eq!(a.loads.len(), 2);
+        assert!(a.loads.iter().all(|l| l.packets == 128 && l.first_inject == 0));
+        assert!(a.dead.is_empty());
+        // Eq. 8: ceil(128/8)*38 + 38 = 646
+        assert_eq!(a.floor, 16 * SER_CYCLES + DES_CYCLES);
+    }
+
+    #[test]
+    fn floor_is_a_true_lower_bound_and_suggestion_drains() {
+        let sc = chain_dense(3, 64, 2, 10_000);
+        let a = analyze(&sc);
+        let res = sc.run();
+        assert_eq!(res.outcome, DrainOutcome::Drained);
+        assert!(res.stats.cycles >= a.floor, "{} < {}", res.stats.cycles, a.floor);
+        // a run capped at the suggestion must drain
+        let res = sc.clone().with_max_cycles(a.suggested).run();
+        assert_eq!(res.outcome, DrainOutcome::Drained);
+    }
+
+    #[test]
+    fn permanent_window_on_a_trafficked_edge_is_dead() {
+        let mut plan = FaultPlan { seed: 1, ..FaultPlan::default() };
+        plan.link_down.push(LinkDown { edge: 0, from: 0, until: u64::MAX });
+        let sc = chain_dense(2, 32, 1, 5_000).with_faults(plan);
+        let a = analyze(&sc);
+        assert_eq!(a.dead.len(), 1);
+        assert_eq!(a.dead[0].edge, 0);
+        assert_eq!(a.dead[0].packets, 32);
+        // and the engine agrees
+        assert_eq!(sc.run().outcome, DrainOutcome::TimedOut);
+    }
+
+    #[test]
+    fn finite_window_is_not_dead_but_raises_the_floor() {
+        let clean = analyze(&chain_dense(2, 32, 1, 100_000));
+        let mut plan = FaultPlan { seed: 1, ..FaultPlan::default() };
+        plan.link_down.push(LinkDown { edge: 0, from: 0, until: 2_000 });
+        let sc = chain_dense(2, 32, 1, 100_000).with_faults(plan);
+        let a = analyze(&sc);
+        assert!(a.dead.is_empty());
+        assert!(a.floor > clean.floor, "{} <= {}", a.floor, clean.floor);
+        assert_eq!(sc.run().outcome, DrainOutcome::Drained);
+    }
+
+    #[test]
+    fn retry_inflation_raises_the_floor() {
+        let clean = analyze(&chain_dense(2, 64, 2, 100_000));
+        let sc = chain_dense(2, 64, 2, 100_000).with_faults(FaultPlan::with_ber(3, 0.5));
+        let a = analyze(&sc);
+        assert!(a.floor > clean.floor, "{} <= {}", a.floor, clean.floor);
+    }
+
+    #[test]
+    fn expected_retry_extra_is_the_truncated_geometric_series() {
+        assert_eq!(expected_retry_extra(1000, 0.0, 3), 0);
+        assert_eq!(expected_retry_extra(0, 0.5, 3), 0);
+        // 1000 * (0.5 + 0.25 + 0.125) = 875
+        assert_eq!(expected_retry_extra(1000, 0.5, 3), 875);
+        // ber 1.0 with R retries: R extra transmissions per frame
+        assert_eq!(expected_retry_extra(10, 1.0, 3), 30);
+    }
+
+    #[test]
+    fn pad_finish_skips_blocked_windows() {
+        // no windows: frames at start..start+4
+        assert_eq!(pad_finish(100, 5, &[]), 104);
+        // window covering the start pushes everything past it
+        assert_eq!(pad_finish(100, 5, &[(50, 200)]), 204);
+        // split: 2 frames fit before the window, 3 after
+        assert_eq!(pad_finish(100, 5, &[(102, 200)]), 202);
+        // already-passed window is ignored
+        assert_eq!(pad_finish(100, 5, &[(10, 20)]), 104);
+    }
+
+    #[test]
+    fn mesh_scenarios_have_no_edges_and_a_zero_floor() {
+        let sc = Scenario::mesh(8).traffic(TrafficSpec::Uniform { packets: 64, seed: 1 });
+        let a = analyze(&sc);
+        assert!(a.loads.is_empty() && a.dead.is_empty());
+        assert_eq!(a.floor, 0);
+    }
+}

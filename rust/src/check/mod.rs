@@ -1,0 +1,734 @@
+//! `spikelink check` — static analysis of scenario/profile documents.
+//!
+//! The repo's document dialects (`scenario/v1`, `profile/v1`, fault
+//! plans) flow into three consumers — `noc-sim`, `serve`, and the learn
+//! replay path — and before this module the only way to learn that a
+//! document was *doomed* (a permanent link-down on a trafficked edge, a
+//! `max_cycles` under the Eq. 8 serialization floor) was to run the cycle
+//! engine and watch it time out. This pass proves those properties
+//! ahead of time, over the parsed document and the derived
+//! channel-dependency graph, and reports them as structured diagnostics
+//! with stable codes (`diag/v1`) instead of ad-hoc error strings.
+//!
+//! ## Diagnostic codes
+//!
+//! | code  | severity | meaning |
+//! |-------|----------|---------|
+//! | CK001 | error    | body is not JSON |
+//! | CK002 | error    | unrecognized document schema |
+//! | CK010 | error    | document fails strict parsing (message names the field) |
+//! | CK020 | error    | explicit dense codec with `dense: 0` (statically empty edge) |
+//! | CK021 | error    | activity / threshold outside `[0, 1]` |
+//! | CK030 | error    | permanent outage on a trafficked edge — guaranteed `TimedOut` |
+//! | CK031 | warning  | `max_cycles` below the Eq. 8 drain floor (suggests a sound bound) |
+//! | CK032 | warning  | fault window overlaps a hotspot burst on the same edge |
+//! | CK040 | error    | learned profile edge ships more packets than uniform dense |
+//! | CK041 | warning  | scenario codec edge ships more packets than uniform dense |
+//!
+//! Errors mean the engine run is provably wasted (or the document is
+//! unreadable); warnings mean the run is legal but suspect. The CLI verb
+//! exits nonzero only on errors; `serve` rejects error-bearing scenarios
+//! with a 400 carrying the [`Report::to_json`] body; `noc-sim` prints the
+//! report and still runs, so the engine can confirm the prediction.
+//!
+//! Entry points: [`check_document`] for raw text (schema-dispatched),
+//! [`check_scenario`] / [`check_profile`] for parsed documents (what the
+//! serve precheck and `noc-sim` use — no re-parse on the hot path).
+
+mod drain;
+
+pub use drain::{DeadEdge, DrainAnalysis, EdgeLoad};
+
+use crate::codec::CodecId;
+use crate::learn::LearnedProfile;
+use crate::noc::emio::{DES_CYCLES, LANES, SER_CYCLES};
+use crate::noc::faults::{FaultPlan, CREDIT_RECOVERY_CYCLES};
+use crate::noc::scenario::{Scenario, Topology, TrafficSpec};
+use crate::util::json::{self, Json};
+
+/// Neurons-per-edge shape used when statically replaying a `profile/v1`
+/// document — must match `noc-sim --profile`'s default.
+pub const REPLAY_NEURONS: u64 = 64;
+/// Spike-window ticks used for static profile replay — must match
+/// `noc-sim --profile`'s default.
+pub const REPLAY_TICKS: u32 = 8;
+
+/// Stable diagnostic codes — the `diag/v1` contract. Codes are append-only:
+/// a released code never changes meaning or severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Code {
+    /// CK001: the document body is not JSON at all.
+    NotJson,
+    /// CK002: the document declares (or implies) no known schema.
+    UnknownSchema,
+    /// CK010: strict parsing rejected the document.
+    InvalidDocument,
+    /// CK020: explicit dense codec with `dense: 0` — a statically empty edge.
+    DenseZero,
+    /// CK021: an activity/threshold field outside `[0, 1]`.
+    ActivityRange,
+    /// CK030: permanent outage on a trafficked edge — guaranteed timeout.
+    DeadEdge,
+    /// CK031: `max_cycles` below the Eq. 8 drain floor.
+    DrainBound,
+    /// CK032: a fault window overlaps a hotspot burst on the same edge.
+    FaultHotspotOverlap,
+    /// CK040: a learned profile edge ships more packets than uniform dense.
+    ProfileOverBudget,
+    /// CK041: a scenario codec edge ships more packets than uniform dense.
+    EdgeOverDense,
+}
+
+impl Code {
+    /// The stable wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::NotJson => "CK001",
+            Code::UnknownSchema => "CK002",
+            Code::InvalidDocument => "CK010",
+            Code::DenseZero => "CK020",
+            Code::ActivityRange => "CK021",
+            Code::DeadEdge => "CK030",
+            Code::DrainBound => "CK031",
+            Code::FaultHotspotOverlap => "CK032",
+            Code::ProfileOverBudget => "CK040",
+            Code::EdgeOverDense => "CK041",
+        }
+    }
+
+    /// Fixed severity per code — severity is part of the contract.
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::DrainBound | Code::FaultHotspotOverlap | Code::EdgeOverDense => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// Diagnostic severity: errors make `spikelink check` exit nonzero and
+/// `serve` reject the document; warnings don't.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding. `edge` is set when the finding is attributable to a
+/// specific die boundary; `suggested_max_cycles` only on [`Code::DrainBound`].
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub message: String,
+    pub edge: Option<usize>,
+    pub suggested_max_cycles: Option<u64>,
+}
+
+impl Diagnostic {
+    fn new(code: Code, message: String) -> Self {
+        Diagnostic { code, message, edge: None, suggested_max_cycles: None }
+    }
+
+    fn on_edge(code: Code, edge: usize, message: String) -> Self {
+        Diagnostic { code, message, edge: Some(edge), suggested_max_cycles: None }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+}
+
+/// Which dialect the checked document turned out to be.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DocKind {
+    Scenario,
+    Profile,
+    Unknown,
+}
+
+impl DocKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DocKind::Scenario => "scenario",
+            DocKind::Profile => "profile",
+            DocKind::Unknown => "unknown",
+        }
+    }
+}
+
+/// The result of one check pass: every diagnostic, in emission order
+/// (graph findings after document findings).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub kind: DocKind,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    fn new(kind: DocKind) -> Self {
+        Report { kind, diagnostics: Vec::new() }
+    }
+
+    /// True when the document produced no diagnostics at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity() == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// True when any diagnostic is an error — the reject/exit-nonzero bit.
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// Boundary edges proven permanently dead ([`Code::DeadEdge`]),
+    /// ascending — what `noc-sim` names in its stranded-packet warning.
+    pub fn dead_edges(&self) -> Vec<usize> {
+        let mut edges: Vec<usize> = self
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == Code::DeadEdge)
+            .filter_map(|d| d.edge)
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    /// The `diag/v1` JSON body (what `serve` returns with a 400).
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("code", Json::str(d.code.as_str())),
+                    ("severity", Json::str(d.severity().as_str())),
+                    ("message", Json::str(d.message.clone())),
+                    ("edge", d.edge.map_or(Json::Null, |e| Json::num(e as f64))),
+                    (
+                        "suggested_max_cycles",
+                        d.suggested_max_cycles.map_or(Json::Null, |c| Json::num(cycles_f64(c))),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("diag/v1")),
+            ("document", Json::str(self.kind.as_str())),
+            ("errors", Json::num(self.error_count() as f64)),
+            ("warnings", Json::num(self.warning_count() as f64)),
+            ("diagnostics", Json::Arr(diags)),
+        ])
+    }
+
+    /// Human rendering, one line per diagnostic plus a verdict line, every
+    /// line prefixed with `source` (a path or label).
+    pub fn render(&self, source: &str) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!(
+                "{source}: {}[{}]: {}\n",
+                d.severity().as_str(),
+                d.code.as_str(),
+                d.message
+            ));
+        }
+        if self.is_clean() {
+            out.push_str(&format!("{source}: ok — no diagnostics ({})\n", self.kind.as_str()));
+        } else {
+            out.push_str(&format!(
+                "{source}: {} error(s), {} warning(s)\n",
+                self.error_count(),
+                self.warning_count()
+            ));
+        }
+        out
+    }
+}
+
+/// `u64 -> f64` for the JSON layer; suggested bounds far beyond 2^53 don't
+/// survive JSON anyway and only lose precision, not magnitude.
+#[allow(clippy::cast_precision_loss)]
+fn cycles_f64(c: u64) -> f64 {
+    c as f64
+}
+
+// -- document entry point ---------------------------------------------------
+
+/// Check a raw document: parse as JSON, dispatch on schema, run the
+/// dialect's probes + strict parse + semantic pass. Never fails — every
+/// problem becomes a diagnostic.
+pub fn check_document(text: &str) -> Report {
+    let j = match json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            let mut r = Report::new(DocKind::Unknown);
+            r.diagnostics
+                .push(Diagnostic::new(Code::NotJson, format!("document is not JSON: {e}")));
+            return r;
+        }
+    };
+    let schema = j.get("schema").and_then(Json::as_str);
+    match schema {
+        Some("scenario/v1") => check_scenario_text(text, &j),
+        Some("profile/v1") => check_profile_text(text, &j),
+        Some(other) => {
+            let mut r = Report::new(DocKind::Unknown);
+            r.diagnostics.push(Diagnostic::new(
+                Code::UnknownSchema,
+                format!("unknown document schema {other:?} (expected scenario/v1 or profile/v1)"),
+            ));
+            r
+        }
+        // scenario/v1 allows an absent schema key; infer the dialect from
+        // its required top-level shape
+        None if j.get("topology").is_some() => check_scenario_text(text, &j),
+        None if j.get("edges").is_some() && j.get("model").is_some() => {
+            check_profile_text(text, &j)
+        }
+        None => {
+            let mut r = Report::new(DocKind::Unknown);
+            r.diagnostics.push(Diagnostic::new(
+                Code::UnknownSchema,
+                "document has no schema key and matches no known dialect".to_string(),
+            ));
+            r
+        }
+    }
+}
+
+fn check_scenario_text(text: &str, j: &Json) -> Report {
+    let mut r = Report::new(DocKind::Scenario);
+    r.diagnostics.extend(scenario_probes(j));
+    match Scenario::from_json_str(text) {
+        Ok(sc) => r.diagnostics.extend(check_scenario(&sc).diagnostics),
+        Err(e) => {
+            // the targeted probes explain the rejection better than the
+            // parser string; fall back to CK010 only when none fired
+            if r.diagnostics.is_empty() {
+                let msg = format!("invalid scenario: {e:#}");
+                r.diagnostics.push(Diagnostic::new(Code::InvalidDocument, msg));
+            }
+        }
+    }
+    r
+}
+
+fn check_profile_text(text: &str, j: &Json) -> Report {
+    let mut r = Report::new(DocKind::Profile);
+    r.diagnostics.extend(profile_probes(j));
+    match LearnedProfile::from_json_str(text) {
+        Ok(p) => r.diagnostics.extend(check_profile(&p, REPLAY_NEURONS, REPLAY_TICKS).diagnostics),
+        Err(e) => {
+            if r.diagnostics.is_empty() {
+                let msg = format!("invalid profile: {e:#}");
+                r.diagnostics.push(Diagnostic::new(Code::InvalidDocument, msg));
+            }
+        }
+    }
+    r
+}
+
+// -- JSON-level probes (stable codes for parse-fatal document classes) ------
+
+fn range_ok(a: f64) -> bool {
+    (0.0..=1.0).contains(&a)
+}
+
+/// Probe the raw scenario JSON for the known-bad codec shapes that the
+/// strict parser rejects with ad-hoc strings: an explicit dense codec on a
+/// zero-width edge (CK020) and out-of-range activities (CK021).
+fn scenario_probes(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(tr) = j.get("traffic") else { return out };
+    if tr.get("kind").and_then(Json::as_str) != Some("boundary") {
+        return out;
+    }
+    let dense_zero = tr.get("dense").and_then(Json::as_f64) == Some(0.0);
+    if dense_zero && tr.get("codec").and_then(Json::as_str) == Some("dense") {
+        out.push(Diagnostic::new(
+            Code::DenseZero,
+            "explicit dense codec with dense: 0 — a zero-width dense edge is empty, the \
+             document describes traffic that cannot exist"
+                .to_string(),
+        ));
+    }
+    if let Some(a) = tr.get("activity").and_then(Json::as_f64) {
+        if !range_ok(a) {
+            out.push(Diagnostic::new(
+                Code::ActivityRange,
+                format!("traffic.activity must be in [0, 1], got {a}"),
+            ));
+        }
+    }
+    if let Some(Json::Obj(map)) = tr.get("codecs") {
+        for (key, val) in map {
+            let edge = key.parse::<usize>().ok();
+            let name = val.as_str().or_else(|| val.get("codec").and_then(Json::as_str));
+            if dense_zero && name == Some("dense") {
+                let mut d = Diagnostic::new(
+                    Code::DenseZero,
+                    format!("codecs[{key}] selects the dense codec while dense: 0 — a \
+                             zero-width dense edge is empty"),
+                );
+                d.edge = edge;
+                out.push(d);
+            }
+            if let Some(a) = val.get("activity").and_then(Json::as_f64) {
+                if !range_ok(a) {
+                    let mut d = Diagnostic::new(
+                        Code::ActivityRange,
+                        format!("codecs[{key}].activity must be in [0, 1], got {a}"),
+                    );
+                    d.edge = edge;
+                    out.push(d);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Probe the raw profile JSON for out-of-range rates (CK021).
+fn profile_probes(j: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if let Some(b) = j.get("rate_budget").and_then(Json::as_f64) {
+        if !range_ok(b) {
+            out.push(Diagnostic::new(
+                Code::ActivityRange,
+                format!("rate_budget must be in [0, 1], got {b}"),
+            ));
+        }
+    }
+    let Some(Json::Arr(edges)) = j.get("edges") else { return out };
+    for (i, e) in edges.iter().enumerate() {
+        let edge = e.get("edge").and_then(Json::as_usize).or(Some(i));
+        for field in ["activity", "threshold"] {
+            if let Some(a) = e.get(field).and_then(Json::as_f64) {
+                if !range_ok(a) {
+                    let mut d = Diagnostic::new(
+                        Code::ActivityRange,
+                        format!("edges[{i}].{field} must be in [0, 1], got {a}"),
+                    );
+                    d.edge = edge;
+                    out.push(d);
+                }
+            }
+        }
+    }
+    out
+}
+
+// -- semantic pass over parsed documents ------------------------------------
+
+/// Static analysis of a parsed scenario: dead edges, the Eq. 8 drain
+/// floor, fault/hotspot overlaps, and codec admissibility. This is the
+/// precheck `serve` and `noc-sim` run — it never builds an engine.
+pub fn check_scenario(sc: &Scenario) -> Report {
+    let mut r = Report::new(DocKind::Scenario);
+    let analysis = drain::analyze(sc);
+
+    for d in &analysis.dead {
+        let until = if d.until == u64::MAX { "forever".to_string() } else { d.until.to_string() };
+        r.diagnostics.push(Diagnostic::on_edge(
+            Code::DeadEdge,
+            d.edge,
+            format!(
+                "edge {}: permanent link-down window [{}, {}] blocks all {} crossing packet(s) \
+                 within the drain horizon — the run is guaranteed to time out",
+                d.edge, d.from, until, d.packets
+            ),
+        ));
+    }
+
+    if analysis.dead.is_empty() && !analysis.loads.is_empty() && sc.max_cycles < analysis.floor {
+        let mut d = Diagnostic::new(
+            Code::DrainBound,
+            format!(
+                "max_cycles {} is below the Eq. 8 drain floor of {} cycles (serialization + \
+                 retry inflation over {} trafficked edge(s)); suggest --max-cycles {}",
+                sc.max_cycles,
+                analysis.floor,
+                analysis.loads.len(),
+                analysis.suggested
+            ),
+        );
+        d.suggested_max_cycles = Some(analysis.suggested);
+        r.diagnostics.push(d);
+    }
+
+    if let Some(plan) = &sc.faults {
+        hotspot_overlap_probes(sc, plan, &analysis, &mut r.diagnostics);
+    }
+
+    codec_admissibility_probes(sc, &mut r.diagnostics);
+    r
+}
+
+/// CK032: a link-down window and a hotspot burst touching the same edge at
+/// overlapping times — the burst's frames pile up behind the blocked pad.
+fn hotspot_overlap_probes(
+    sc: &Scenario,
+    plan: &FaultPlan,
+    analysis: &DrainAnalysis,
+    out: &mut Vec<Diagnostic>,
+) {
+    let dead: Vec<usize> = analysis.dead.iter().map(|d| d.edge).collect();
+    for h in &plan.hotspots {
+        // a burst converging on chip `c` can cross every edge west of it
+        let edges_end = match sc.topology {
+            Topology::Mesh { .. } => 0,
+            Topology::Duplex { .. } | Topology::Chain { .. } => h.chip,
+        };
+        let frames = h.packets as u64;
+        let burst_end = h
+            .at
+            .saturating_add(frames.div_ceil(LANES as u64).saturating_mul(SER_CYCLES))
+            .saturating_add(DES_CYCLES);
+        for w in &plan.link_down {
+            let blocked_end = w.until.saturating_add(CREDIT_RECOVERY_CYCLES);
+            if w.edge < edges_end
+                && !dead.contains(&w.edge)
+                && w.from <= burst_end
+                && h.at < blocked_end
+            {
+                out.push(Diagnostic::on_edge(
+                    Code::FaultHotspotOverlap,
+                    w.edge,
+                    format!(
+                        "link-down window [{}, {}] on edge {} overlaps the {}-packet hotspot \
+                         burst at cycle {} targeting chip {} — the burst serializes into a \
+                         blocked pad",
+                        w.from, w.until, w.edge, h.packets, h.at, h.chip
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// CK041: a codec-shaped boundary edge that statically ships more packets
+/// than the uniform-dense encoding of the same edge — legal, but it
+/// defeats the sparsification the codec exists for.
+fn codec_admissibility_probes(sc: &Scenario, out: &mut Vec<Diagnostic>) {
+    let TrafficSpec::Boundary { neurons, dense, activity, ticks, codec, codecs, activities, .. } =
+        &sc.traffic
+    else {
+        return;
+    };
+    let n = *neurons as u64;
+    let bits = u32::try_from(*dense).unwrap_or(u32::MAX).saturating_mul(8);
+    // the dense budget: `dense` packets per neuron, at least one (the
+    // profile replay baseline uses dense: 1)
+    let budget = n.saturating_mul((*dense as u64).max(1));
+    let n_edges = sc.topology.chips().saturating_sub(1);
+    if codecs.is_empty() {
+        let packets = codec.codec().packets_per_edge(n, *activity, *ticks, bits);
+        if packets > budget {
+            out.push(Diagnostic::new(
+                Code::EdgeOverDense,
+                format!(
+                    "{} codec at activity {} ships {} packets per edge — more than the {} of \
+                     uniform dense",
+                    codec.as_str(),
+                    activity,
+                    packets,
+                    budget
+                ),
+            ));
+        }
+        return;
+    }
+    for e in 0..n_edges {
+        let c = codecs.get(&e).copied().unwrap_or(*codec);
+        let a = activities.get(&e).copied().unwrap_or(*activity);
+        let packets = c.codec().packets_per_edge(n, a, *ticks, bits);
+        if packets > budget {
+            out.push(Diagnostic::on_edge(
+                Code::EdgeOverDense,
+                e,
+                format!(
+                    "edge {e}: {} codec at activity {a} ships {packets} packets — more than \
+                     the {budget} of uniform dense",
+                    c.as_str()
+                ),
+            ));
+        }
+    }
+}
+
+/// Static admissibility of a learned profile at the replay shape
+/// (`neurons` per edge, `ticks` spike window — `noc-sim --profile`'s
+/// defaults unless overridden): every edge must ship at most the
+/// uniform-dense packet count, the invariant the replay path errors on.
+pub fn check_profile(p: &LearnedProfile, neurons: u64, ticks: u32) -> Report {
+    let mut r = Report::new(DocKind::Profile);
+    // replay baseline: dense: 1 → 8-bit payloads, `neurons` packets/edge
+    let budget = neurons;
+    for ep in &p.edges {
+        let packets = ep.codec.codec().packets_per_edge(neurons, ep.activity, ticks, 8);
+        if packets > budget {
+            r.diagnostics.push(Diagnostic::on_edge(
+                Code::ProfileOverBudget,
+                ep.edge,
+                format!(
+                    "edge {}: learned {} codec at activity {} ships {} packets at the replay \
+                     shape (neurons {neurons}, ticks {ticks}) — exceeds the uniform-dense \
+                     budget of {budget}",
+                    ep.edge,
+                    ep.codec.as_str(),
+                    ep.activity,
+                    packets
+                ),
+            ));
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VALID_CHAIN: &str = r#"{"schema":"scenario/v1",
+        "topology":{"kind":"chain","chips":3,"dim":4},
+        "traffic":{"kind":"boundary","neurons":64,"dense":0,"activity":0.25,
+                   "ticks":2,"seed":9,"codec":"rate"},"telemetry":true}"#;
+
+    fn codes(r: &Report) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn valid_documents_are_clean() {
+        let r = check_document(VALID_CHAIN);
+        assert!(r.is_clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.kind, DocKind::Scenario);
+        let profile = r#"{"schema":"profile/v1","seed":7,"lam":0.5,"rate_budget":0.1,
+            "model":"ms-resnet18",
+            "edges":[{"edge":0,"codec":"topk-delta","activity":0.08,"threshold":0.42}]}"#;
+        let r = check_document(profile);
+        assert!(r.is_clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.kind, DocKind::Profile);
+    }
+
+    #[test]
+    fn non_json_and_unknown_schema_get_their_codes() {
+        assert_eq!(codes(&check_document("{nope")), ["CK001"]);
+        assert_eq!(codes(&check_document(r#"{"schema":"walrus/v9"}"#)), ["CK002"]);
+        assert_eq!(codes(&check_document(r#"{"surprise":1}"#)), ["CK002"]);
+    }
+
+    #[test]
+    fn parse_failures_fall_back_to_ck010() {
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"mesh","dim":4},
+            "traffic":{"kind":"uniform","packets":4,"seed":1},"bogus_key":1}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK010"]);
+        assert!(r.diagnostics[0].message.contains("bogus_key"));
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn dense_zero_probe_beats_the_parser_string() {
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"duplex","dim":4},
+            "traffic":{"kind":"boundary","neurons":64,"dense":0,"activity":0.3,
+                       "ticks":2,"seed":1,"codec":"dense"}}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK020"]);
+        // per-edge spelling, object form
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"chain","chips":3,"dim":4},
+            "traffic":{"kind":"boundary","neurons":64,"dense":0,"activity":0.3,"ticks":2,
+                       "seed":1,"codec":"rate","codecs":{"1":"dense"}}}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK020"]);
+        assert_eq!(r.diagnostics[0].edge, Some(1));
+    }
+
+    #[test]
+    fn activity_range_probe_covers_scenarios_and_profiles() {
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"duplex","dim":4},
+            "traffic":{"kind":"boundary","neurons":64,"dense":0,"activity":1.7,
+                       "ticks":2,"seed":1,"codec":"rate"}}"#;
+        assert_eq!(codes(&check_document(doc)), ["CK021"]);
+        let doc = r#"{"schema":"profile/v1","seed":7,"lam":0.5,"rate_budget":0.1,
+            "model":"m","edges":[{"edge":0,"codec":"rate","activity":-0.5,"threshold":0.4}]}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK021"]);
+        assert_eq!(r.diagnostics[0].edge, Some(0));
+    }
+
+    #[test]
+    fn dead_edge_is_an_error_and_names_the_edge() {
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"duplex","dim":4},
+            "traffic":{"kind":"full-span","packets":32,"seed":7},"max_cycles":5000,
+            "faults":{"seed":1,"link_down":[{"edge":0,"from":0,"until":999999999999}]}}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK030"]);
+        assert!(r.has_errors());
+        assert_eq!(r.dead_edges(), [0]);
+    }
+
+    #[test]
+    fn low_max_cycles_is_a_warning_with_a_suggestion() {
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"chain","chips":3,"dim":8},
+            "traffic":{"kind":"boundary","neurons":256,"dense":2,"activity":0.5,
+                       "ticks":2,"seed":5,"codec":"dense"},"max_cycles":200}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK031"]);
+        assert!(!r.has_errors(), "a drain-bound warning must not fail the check");
+        let s = r.diagnostics[0].suggested_max_cycles.expect("suggestion");
+        assert!(s > 200);
+    }
+
+    #[test]
+    fn profile_over_budget_is_an_error_at_the_replay_shape() {
+        let doc = r#"{"schema":"profile/v1","seed":7,"lam":0.5,"rate_budget":0.1,
+            "model":"m","edges":[{"edge":0,"codec":"rate","activity":0.9,"threshold":0.1}]}"#;
+        let r = check_document(doc);
+        assert_eq!(codes(&r), ["CK040"]);
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn diag_v1_json_shape_is_stable() {
+        let doc = r#"{"schema":"scenario/v1","topology":{"kind":"duplex","dim":4},
+            "traffic":{"kind":"full-span","packets":32,"seed":7},"max_cycles":5000,
+            "faults":{"seed":1,"link_down":[{"edge":0,"from":0,"until":999999999999}]}}"#;
+        let j = check_document(doc).to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("diag/v1"));
+        assert_eq!(j.get("document").unwrap().as_str(), Some("scenario"));
+        assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("warnings").unwrap().as_f64(), Some(0.0));
+        let arr = j.get("diagnostics").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].get("code").unwrap().as_str(), Some("CK030"));
+        assert_eq!(arr[0].get("severity").unwrap().as_str(), Some("error"));
+        assert_eq!(arr[0].get("edge").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn human_rendering_names_the_source_and_verdict() {
+        let r = check_document(VALID_CHAIN);
+        let text = r.render("fixture.json");
+        assert!(text.contains("fixture.json: ok — no diagnostics (scenario)"));
+        let r = check_document("{nope");
+        let text = r.render("bad.json");
+        assert!(text.contains("bad.json: error[CK001]"));
+        assert!(text.contains("bad.json: 1 error(s), 0 warning(s)"));
+    }
+}

@@ -189,6 +189,15 @@ COMMANDS:
                       --reference          alias for --engine reference
                       --no-telemetry       skip per-packet records (no tail quantiles)
                       --save FILE          write the scenario JSON for reproduction
+  check             statically analyze scenario/profile documents — no engine
+                    runs: permanent-outage (dead) edges, Eq. 8 drain-cycle
+                    floor vs max_cycles (with a sound suggested bound),
+                    fault/hotspot overlaps, codec admissibility. Stable
+                    diag/v1 codes; exit 1 iff any error-severity finding.
+                    See EXPERIMENTS.md §Check.
+                      FILE...         documents to check (schema-dispatched)
+                      --scenario FILE / --profile FILE   explicit spellings
+                      --json          emit the diag/v1 JSON report per file
   serve             run the scenario service on 127.0.0.1 (HTTP/1.1, std-only):
                     POST /simulate (scenario/v1; identical queued scenarios are
                     batched onto one engine run and results cached by canonical

@@ -41,6 +41,10 @@
 //! `a x T <= ceil(bits/8)` (always true at the paper's matched operating
 //! point, a = 0.10, T = 8, 8-bit).
 
+// payload widths and spike counts narrow into the wire format; all
+// operands are bounded by the codec contracts
+#![allow(clippy::cast_possible_truncation)]
+
 pub mod assign;
 
 use std::fmt;

@@ -25,6 +25,10 @@
 //! per-edge `codecs`/`activities` object form of `Boundary` traffic —
 //! exactly the mixed-codec path the cycle-level engines already validate.
 
+// edge ids and seeds arrive as JSON f64 and narrow after explicit
+// range checks
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};

@@ -50,9 +50,29 @@
 //! task loss, the analytic energy x latency objective, and the Eq. 10 rate
 //! hinge, exporting a `profile/v1` document that `spikelink train-codecs`
 //! saves and `noc-sim --profile` replays (see EXPERIMENTS.md §Learn).
+//!
+//! [`check`] proves document feasibility *before* any engine runs:
+//! `spikelink check` (and the precheck inside `noc-sim` and `serve`'s
+//! `POST /simulate`) statically detects permanently dead edges, drain caps
+//! below the Eq. 8 serialization floor, and inadmissible codec/profile
+//! shapes, reporting stable `diag/v1` diagnostic codes — see
+//! EXPERIMENTS.md §Check.
+
+// The whole crate is safe Rust: every engine is plain owned state and the
+// parallel chain stepper synchronizes through std mutexes/condvars, so
+// there is nothing for `unsafe` to buy. The nightly ThreadSanitizer CI
+// job (see .github/workflows/ci.yml) keeps the parallel engine honest at
+// the data-race level; this keeps it honest at the language level.
+#![forbid(unsafe_code)]
+// Curated clippy-pedantic subset (CI runs clippy with `-D warnings`, so
+// these are effectively deny). `cast_possible_truncation` is allowed
+// per-module where narrowing is the point (bit-packing, RNG mixing,
+// histogram binning) — each allow carries its justification.
+#![warn(clippy::needless_pass_by_value, clippy::cast_possible_truncation, clippy::redundant_clone)]
 
 pub mod analytic;
 pub mod arch;
+pub mod check;
 pub mod codec;
 pub mod learn;
 pub mod model;

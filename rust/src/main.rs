@@ -49,6 +49,7 @@ fn run(args: &cli::Args) -> Result<()> {
         "table4" => cmd_table4(args),
         "noc-validate" => cmd_noc_validate(),
         "noc-sim" => cmd_noc_sim(args),
+        "check" => cmd_check(args),
         "serve" => cmd_serve(args),
         "" | "help" => {
             print!("{}", cli::HELP);
@@ -873,6 +874,15 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         println!("scenario written to {out}");
     }
 
+    // Static precheck (same pass as `spikelink check`): print every
+    // diagnostic up front and remember the statically-proven dead edges,
+    // but still run — here the engine is the oracle that confirms them.
+    let precheck = spikelink::check::check_scenario(&sc);
+    if !precheck.is_clean() {
+        print!("{}", precheck.render("precheck"));
+    }
+    let dead_edges = precheck.dead_edges();
+
     let engine = if args.has_flag("reference") {
         if args.get("engine").is_some() {
             return Err(anyhow!("--reference is an alias for --engine reference; pass only one"));
@@ -951,11 +961,59 @@ fn cmd_noc_sim(args: &cli::Args) -> Result<()> {
         );
     }
     if res.outcome == DrainOutcome::TimedOut {
+        // Name the statically-identified dead edges, not just the count:
+        // the check pass proved which boundaries can never drain.
+        let culprit = if dead_edges.is_empty() {
+            String::new()
+        } else {
+            let list: Vec<String> = dead_edges.iter().map(ToString::to_string).collect();
+            format!(
+                " behind permanently-dead edge(s) [{}] (CK030 — see `spikelink check`)",
+                list.join(", ")
+            )
+        };
         println!(
-            "WARNING         : drain timed out at the {}-cycle cap with {} packet(s) stranded",
+            "WARNING         : drain timed out at the {}-cycle cap with {} packet(s) \
+             stranded{culprit}",
             sc.max_cycles,
             s.injected - s.delivered - s.faults.dropped
         );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// check
+// ---------------------------------------------------------------------------
+
+/// Statically analyze scenario/profile documents (no engine runs): stable
+/// `diag/v1` diagnostics, nonzero exit iff any error-severity finding.
+fn cmd_check(args: &cli::Args) -> Result<()> {
+    let mut paths: Vec<String> = args.positional.clone();
+    for key in ["scenario", "profile"] {
+        if let Some(p) = args.get(key) {
+            paths.push(p.to_string());
+        }
+    }
+    if paths.is_empty() {
+        return Err(anyhow!("usage: spikelink check FILE... [--json]"));
+    }
+    let json_out = args.has_flag("json");
+    let mut failed = Vec::new();
+    for path in &paths {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("{path}: {e}"))?;
+        let report = spikelink::check::check_document(&text);
+        if json_out {
+            println!("{}", report.to_json().to_string_pretty());
+        } else {
+            print!("{}", report.render(path));
+        }
+        if report.has_errors() {
+            failed.push(path.as_str());
+        }
+    }
+    if !failed.is_empty() {
+        return Err(anyhow!("check failed with error diagnostics: {}", failed.join(", ")));
     }
     Ok(())
 }

@@ -6,6 +6,10 @@
 //! * A layer's "neurons" are its output activations (pixels x channels for
 //!   conv, features for dense) — the unit that maps onto core lanes.
 
+// layer dimensions narrow into the kernel launch shapes; bounded by
+// the model definition
+#![allow(clippy::cast_possible_truncation)]
+
 /// Layer taxonomy covering all three benchmark networks (conv, depthwise
 /// conv, pooling, dense — per §4.2 — plus embedding/eltwise bookkeeping).
 #[derive(Debug, Clone, PartialEq)]

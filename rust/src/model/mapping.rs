@@ -6,6 +6,9 @@
 //! distance between the two layers' *middle cores* plus the final local
 //! hop:  `AverageHops = |M_{L-1} - M_L| + 1`  (Eq. 4).
 
+// tile/core indices narrow within validated chip dims
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::params::ArchConfig;
 use crate::model::layer::Network;
 

@@ -16,6 +16,9 @@
 //! (per-chip mesh-local id remaps), which were both slower and ambiguous —
 //! a re-injected chain id could collide with a chip's mesh-local id.
 
+// cycle and tile bookkeeping narrows deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
 use crate::util::stats::LatencyHist;

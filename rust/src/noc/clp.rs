@@ -11,6 +11,9 @@
 //!   scheduler for up to `max_delay` ticks, then scale into an activation
 //!   via the inverse mapping (Eq. 3).
 
+// spike-window and rate arithmetic narrows deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 /// Eq. 2 schedule: how many leading ticks fire for activation `a`.
 pub fn spike_count(a: u32, ticks: u32, bits: u32) -> u32 {
     let amax = (1u64 << bits) - 1;

@@ -17,6 +17,9 @@
 //! The simulator cross-validates Eq. 6/7: for a fully-utilized core the
 //! measured busy cycles approach `ops / lanes`.
 
+// cycle and queue bookkeeping narrows deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::core::CoreKind;
 
 /// One incoming packet for the core.

@@ -4,6 +4,9 @@
 //! hops), and measures boundary-traffic throughput under dense vs spiking
 //! loads (the core HNN mechanism).
 
+// cycle and tile bookkeeping narrows deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
 use crate::util::stats::LatencyHist;

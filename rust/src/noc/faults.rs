@@ -27,6 +27,9 @@
 //! Schema (`faults` block of scenario/v1) and the degradation-sweep
 //! methodology are documented in EXPERIMENTS.md §Faults.
 
+// seed mixing and fault-window arithmetic narrow deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};

@@ -9,6 +9,9 @@
 //! naive full-scan engine retained in [`super::reference`]; the golden
 //! tests in `rust/tests/golden_noc.rs` prove it on seeded loads.
 
+// cycle and tile bookkeeping narrows deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
 use crate::util::stats::LatencyHist;

@@ -8,6 +8,9 @@
 //! same sampled count (both models see identical traffic, so the ratio is
 //! meaningful at any sample size).
 
+// cycle and layer bookkeeping narrows deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::analytic::latency;
 use crate::arch::chip::Coord;
 use crate::arch::params::ArchConfig;

@@ -39,6 +39,9 @@
 //! single-cycle [`CycleEngine::step`] calls run the serial path, which is
 //! the same code a 1-thread drain runs.
 
+// worker/phase indices and cycle bookkeeping narrow deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
 

@@ -20,6 +20,9 @@
 //! (`inject_with_id`), because the seed's per-chip id remap tables could
 //! alias a re-injected chain id with a chip-local id.
 
+// cycle and tile bookkeeping narrows deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::{HashMap, VecDeque};
 
 use crate::arch::chip::Coord;

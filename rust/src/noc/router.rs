@@ -10,6 +10,9 @@
 //! O(1) queued-flit counter, so the mesh's worklist scheduler never scans
 //! queues to discover work (see EXPERIMENTS.md §Perf).
 
+// port/credit bookkeeping narrows deliberately within router bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::chip::Coord;
 
 use super::fifo::FlitFifo;

@@ -22,6 +22,10 @@
 //! Seeds are stored as JSON numbers; keep them below 2^53 so the round trip
 //! is exact.
 
+// seeds and counts arrive as JSON f64 and narrow after the explicit
+// non-negative-integer checks
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};

@@ -20,6 +20,9 @@
 //! `rust/tests/fuzz_noc.rs` hold that line; [`super::parallel`] builds its
 //! per-chip workers on this mesh.
 
+// SoA lane indices and cycle bookkeeping narrow deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::arch::chip::Coord;
 use crate::arch::packet::Packet;
 use crate::util::stats::LatencyHist;

@@ -7,6 +7,9 @@
 //! rising edges). This module keeps the legacy two-mode entry point and the
 //! analytic convergence check.
 
+// neuron indices and tick counters narrow deliberately within edge bounds
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::codec::{BoundaryCodec, CodecId, DenseCodec, RateCodec};
 
 use super::duplex::CrossTraffic;

@@ -8,6 +8,9 @@
 //! `east_egress` identical to the naive row-major scan — a requirement for
 //! bit-for-bit golden equivalence with the reference engine.
 
+// worklist slot indices narrow deliberately within engine bounds
+#![allow(clippy::cast_possible_truncation)]
+
 /// A fixed-universe bitset with ascending-order iteration.
 #[derive(Debug, Clone, Default)]
 pub struct DirtySet {

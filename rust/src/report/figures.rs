@@ -4,6 +4,10 @@
 //! latency-*distribution* figure ([`fig_tail_latency`]) that drives the
 //! telemetry-enabled cycle engine for the p50/p99/p999 claims of §4.3.
 
+// table cells and axis ticks narrow for display; values are bounded
+// by the experiments
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::analytic::{efficiency_gain, simulate, simulate_variants, speedup, SimReport};
 use crate::arch::params::{ArchConfig, Variant};
 use crate::codec::assign::{self, AssignConfig, Assignment};

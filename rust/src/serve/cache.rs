@@ -14,6 +14,9 @@
 //! paid for a full engine run or annealing search, so the scan is noise —
 //! in exchange the implementation stays std-only (no intrusive lists).
 
+// shard indices derive from 64-bit digests by deliberate truncation
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::HashMap;
 use std::sync::Mutex;
 

@@ -38,6 +38,9 @@
 //! ([`Scenario::build`] returns `Box<dyn CycleEngine + Send>`): a built
 //! engine moves freely onto the runner threads.
 
+// counters and sizes narrow deliberately within protocol limits
+#![allow(clippy::cast_possible_truncation)]
+
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -384,6 +387,16 @@ fn handle_simulate(st: &ServerState, req: &Request, stream: &mut TcpStream, t0: 
             return;
         }
     };
+    // Static precheck (`spikelink check`): a scenario proven to time out —
+    // e.g. a permanent link-down on a trafficked edge — is rejected with
+    // the diag/v1 report instead of burning an engine slot on a run whose
+    // outcome is already known. Warnings don't reject.
+    let precheck = crate::check::check_scenario(&sc);
+    if precheck.has_errors() {
+        st.metrics.rejected_4xx.inc();
+        respond_json(stream, 400, &precheck.to_json());
+        return;
+    }
     let key = sc.canonical_json();
     if let Some(core) = st.sim_cache.get(&key) {
         let ns = t0.elapsed().as_nanos() as u64;

@@ -1,5 +1,8 @@
 //! Per-layer firing-activity profiles (Fig. 7 sweep axis, Fig. 8 heatmap).
 
+// histogram binning truncates deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::util::rng::Rng;
 use crate::util::stats;
 

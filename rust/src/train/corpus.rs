@@ -4,6 +4,9 @@
 //! giving the LM a real signal to learn; the code path — char-level batches,
 //! CE loss, perplexity metric — is identical to training on Enwik8).
 
+// byte-level dataset decoding narrows deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::util::rng::Rng;
 
 /// Vocabulary size must match `ModelConfig.vocab` in python/compile/model.py.

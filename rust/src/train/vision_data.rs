@@ -4,6 +4,9 @@
 //! meaningful learned quantity (a linear model cannot saturate it, a small
 //! trained net clearly beats chance).
 
+// byte-level dataset decoding narrows deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::util::rng::Rng;
 
 pub const HW: usize = 32;

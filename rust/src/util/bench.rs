@@ -6,6 +6,10 @@
 //! `BENCH_noc_cycle.json`) so successive PRs can be compared — schema in
 //! EXPERIMENTS.md §Perf.
 
+// nanosecond timings narrow into record fields; magnitudes are bounded
+// by run length
+#![allow(clippy::cast_possible_truncation)]
+
 use std::path::Path;
 use std::time::Instant;
 

@@ -4,6 +4,10 @@
 //!
 //! Used for `artifacts/manifest.json` (read) and run/result records (write).
 
+// JSON numbers are f64 by definition; narrowing happens behind the
+// typed accessors
+#![allow(clippy::cast_possible_truncation)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -4,6 +4,10 @@
 //! images, property tests, traffic jitter) draws from this generator so runs
 //! are reproducible from a single seed.
 
+// truncation is the algorithm: the mixer folds 64-bit state into
+// smaller draws
+#![allow(clippy::cast_possible_truncation)]
+
 /// xoshiro256** seeded via SplitMix64 — fast, high-quality, `Copy`-cheap.
 #[derive(Debug, Clone)]
 pub struct Rng {

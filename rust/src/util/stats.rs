@@ -1,5 +1,8 @@
 //! Small statistics helpers shared by the simulators, benches and reports.
 
+// histogram binning and percentile indexing truncate deliberately
+#![allow(clippy::cast_possible_truncation)]
+
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

@@ -1,0 +1,114 @@
+//! Golden diagnostics for `spikelink check` (see EXPERIMENTS.md §Check).
+//!
+//! Every fixture under `scripts/fixtures/check/` maps to an exact, stable
+//! list of `diag/v1` (code, severity) pairs — the fixtures are the
+//! contract the CLI, the serve precheck, and CI's fixture sweep all rely
+//! on. Two fixtures additionally get their static verdicts *confirmed by
+//! the cycle engine*: the statically-dead edge really times out, and the
+//! under-provisioned drain cap really times out while the suggested bound
+//! really drains.
+
+use std::fs;
+use std::path::PathBuf;
+
+use spikelink::check::{check_document, check_scenario, Code, DocKind};
+use spikelink::noc::{DrainOutcome, Scenario};
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scripts/fixtures/check").join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// (code, severity) pairs in emission order.
+fn codes(name: &str) -> Vec<(String, String)> {
+    check_document(&fixture(name))
+        .diagnostics
+        .iter()
+        .map(|d| (d.code.as_str().to_string(), d.severity().as_str().to_string()))
+        .collect()
+}
+
+/// One row per fixture: the exact diagnostics it must produce. Adding a
+/// fixture without registering it here fails `the_fixture_set_is_fully_enumerated`.
+const GOLDEN: &[(&str, &[(&str, &str)])] = &[
+    ("bad_activity.json", &[("CK021", "error")]),
+    ("dead_edge.json", &[("CK030", "error")]),
+    ("dense_zero.json", &[("CK020", "error")]),
+    ("hotspot_overlap.json", &[("CK032", "warning")]),
+    ("low_max_cycles.json", &[("CK031", "warning")]),
+    ("not_json.json", &[("CK001", "error")]),
+    ("profile_overbudget.json", &[("CK040", "error")]),
+    ("unknown_key.json", &[("CK010", "error")]),
+    ("valid_chain.json", &[]),
+    ("valid_faults.json", &[]),
+    ("valid_mesh.json", &[]),
+    ("valid_profile.json", &[]),
+];
+
+#[test]
+fn every_fixture_produces_its_exact_diagnostics() {
+    for (name, want) in GOLDEN {
+        let got = codes(name);
+        let want: Vec<(String, String)> =
+            want.iter().map(|(c, s)| ((*c).to_string(), (*s).to_string())).collect();
+        assert_eq!(got, want, "{name}: diagnostics diverged from the golden table");
+    }
+}
+
+#[test]
+fn the_fixture_set_is_fully_enumerated() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scripts/fixtures/check");
+    let mut on_disk: Vec<String> = fs::read_dir(&dir)
+        .expect("fixture dir")
+        .map(|e| e.expect("entry").file_name().to_string_lossy().into_owned())
+        .collect();
+    on_disk.sort();
+    let mut registered: Vec<String> = GOLDEN.iter().map(|(n, _)| (*n).to_string()).collect();
+    registered.sort();
+    assert_eq!(on_disk, registered, "every fixture needs a GOLDEN row (and vice versa)");
+}
+
+#[test]
+fn document_kinds_are_inferred() {
+    assert_eq!(check_document(&fixture("valid_chain.json")).kind, DocKind::Scenario);
+    assert_eq!(check_document(&fixture("valid_profile.json")).kind, DocKind::Profile);
+    assert_eq!(check_document(&fixture("not_json.json")).kind, DocKind::Unknown);
+}
+
+#[test]
+fn statically_dead_edge_is_confirmed_by_the_engine() {
+    let sc = Scenario::from_json_str(&fixture("dead_edge.json")).expect("fixture parses");
+    let report = check_scenario(&sc);
+    assert!(report.has_errors());
+    assert_eq!(report.dead_edges(), [0]);
+    // the engine agrees with the static proof: the run times out
+    assert_eq!(sc.run().outcome, DrainOutcome::TimedOut);
+}
+
+#[test]
+fn drain_bound_warning_is_confirmed_and_the_suggestion_is_sound() {
+    let sc = Scenario::from_json_str(&fixture("low_max_cycles.json")).expect("fixture parses");
+    let report = check_scenario(&sc);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.code == Code::DrainBound)
+        .expect("CK031 on the under-provisioned cap");
+    let suggested = d.suggested_max_cycles.expect("CK031 carries a suggestion");
+    assert!(suggested > sc.max_cycles);
+    // the engine confirms both directions of the prediction
+    assert_eq!(sc.run().outcome, DrainOutcome::TimedOut, "200 cycles cannot drain 512 packets");
+    let fixed = sc.clone().with_max_cycles(suggested);
+    assert_eq!(fixed.run().outcome, DrainOutcome::Drained, "the suggested bound is sound");
+}
+
+#[test]
+fn diag_v1_bodies_round_trip_through_the_json_layer() {
+    for (name, _) in GOLDEN {
+        let j = check_document(&fixture(name)).to_json();
+        assert_eq!(j.get("schema").and_then(spikelink::util::json::Json::as_str), Some("diag/v1"));
+        let text = j.to_string_pretty();
+        let back = spikelink::util::json::parse(&text).expect("diag/v1 re-parses");
+        assert_eq!(back.to_string_pretty(), text, "{name}: canonical form is stable");
+    }
+}

@@ -137,6 +137,34 @@ fn invalid_scenario_json_is_a_400_naming_the_bad_key() {
     server.join();
 }
 
+#[test]
+fn statically_doomed_scenario_is_rejected_with_a_diag_body() {
+    let server = start_default();
+    // a permanent link-down on the only trafficked edge: the precheck
+    // proves the run times out, so it never reaches an engine slot and
+    // the 400 carries the structured diag/v1 report, not an error string
+    let doomed = r#"{"schema":"scenario/v1","topology":{"kind":"duplex","dim":8},
+        "traffic":{"kind":"full-span","packets":32,"seed":7},"max_cycles":5000,
+        "faults":{"seed":7,"link_down":[{"edge":0,"from":0,"until":999999999999}]}}"#;
+    let (status, j) = http(server.addr(), "POST", "/simulate", doomed);
+    assert_eq!(status, 400);
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("diag/v1"));
+    assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
+    let diags = j.get("diagnostics").unwrap().as_arr().unwrap();
+    assert_eq!(diags[0].get("code").unwrap().as_str(), Some("CK030"));
+    assert_eq!(diags[0].get("severity").unwrap().as_str(), Some("error"));
+    // a warning-only scenario (drain cap under the Eq. 8 floor) still
+    // simulates: warnings never reject
+    let warned = r#"{"schema":"scenario/v1","topology":{"kind":"chain","chips":3,"dim":8},
+        "traffic":{"kind":"boundary","neurons":256,"dense":2,"activity":0.0,
+                   "ticks":0,"seed":11,"codec":"dense"},"max_cycles":200}"#;
+    let (status, j) = http(server.addr(), "POST", "/simulate", warned);
+    assert_eq!(status, 200, "warnings must not reject: {j:?}");
+    assert!(j.get("stats").is_some());
+    server.shutdown();
+    server.join();
+}
+
 // -- correctness under concurrency ------------------------------------------
 
 #[test]

@@ -60,6 +60,15 @@ default-lineage dim coverage. The training CLI's own `learn/pareto`
 record uses unit "edp-vs-dense", which keeps it out of every x-vs-ref
 gate; this family only exists for learn-labelled *speedup* records.
 
+`check`-suffixed labels (`noc/mesh16/sparse/speedup/check`,
+`mesh16-check` — runs whose scenarios passed through the `spikelink check`
+static precheck first, see EXPERIMENTS.md §Check) are the sixth suffix
+family with the same rules: latest-run only, floor-checked, never a
+substitute for the default-lineage dim coverage. The serve load test's
+own `check/precheck` overhead record uses unit "us/req", which keeps it
+out of every x-vs-ref gate entirely; this family only exists for
+check-labelled *speedup* records.
+
 `parallel-vs-serial` records (`noc/chain8x8/1m-transfers/parallel-vs-serial`,
 unit "x-vs-serial" — the threaded chain stepper's throughput over the serial
 engine's on the identical load, see EXPERIMENTS.md §Perf "Parallel engine")
@@ -108,11 +117,16 @@ SERVE_RE = re.compile(r"(?:^|[/-])(serve[^/]*)")
 # profile/v1 document rather than a hand-written traffic spec
 LEARN_RE = re.compile(r"(?:^|[/-])(learn[^/]*)")
 
+# a check-suffixed label starts a segment with "check" and runs to the next
+# `/` (check, check-precheck) — scenarios that went through the `spikelink
+# check` static precheck before the engine run
+CHECK_RE = re.compile(r"(?:^|[/-])(check[^/]*)")
+
 
 def suffix_of(name):
-    """The codec, fault, serve, or learn segment of a bench-record name,
-    or None for the default (unsuffixed) lineage."""
-    for pattern in (CODEC_RE, FAULT_RE, SERVE_RE, LEARN_RE):
+    """The codec, fault, serve, learn, or check segment of a bench-record
+    name, or None for the default (unsuffixed) lineage."""
+    for pattern in (CODEC_RE, FAULT_RE, SERVE_RE, LEARN_RE, CHECK_RE):
         m = pattern.search(name)
         if m:
             return m.group(1)

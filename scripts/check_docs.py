@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Documentation + fixture sweep for `spikelink check` (EXPERIMENTS.md §Check).
+
+Two jobs, both run in CI after the release build:
+
+  1. every ```json block in EXPERIMENTS.md that declares a checkable
+     schema (`scenario/v1` or `profile/v1`) must come back *clean* from
+     `spikelink check` — the docs may never show a document the analyzer
+     would flag;
+  2. every fixture under scripts/fixtures/check/ must behave per its name:
+     `valid_*` fixtures are clean, everything else produces at least one
+     diagnostic — and across the whole sweep the exit code must agree
+     with the diag/v1 body (nonzero iff `errors > 0`).
+
+The golden (code, severity) assertions live in rust/tests/check_diag.rs;
+this script only proves the CLI surface and the published examples agree
+with them. Point SPIKELINK_BIN at the binary if it is not at the default
+target/release/spikelink.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BIN = os.environ.get("SPIKELINK_BIN", os.path.join(ROOT, "target", "release", "spikelink"))
+EXPERIMENTS = os.path.join(ROOT, "EXPERIMENTS.md")
+FIXTURES = os.path.join(ROOT, "scripts", "fixtures", "check")
+
+BLOCK_RE = re.compile(r"```json\n(.*?)```", re.S)
+CHECKABLE = {"scenario/v1", "profile/v1"}
+
+
+def run_check(path):
+    """Run `spikelink check --json PATH`; return (exit_code, diag/v1 body)."""
+    p = subprocess.run([BIN, "check", "--json", path], capture_output=True, text=True)
+    try:
+        body = json.loads(p.stdout)
+    except json.JSONDecodeError:
+        sys.exit(
+            f"{path}: `spikelink check --json` did not print a JSON body\n"
+            f"stdout: {p.stdout!r}\nstderr: {p.stderr!r}"
+        )
+    if body.get("schema") != "diag/v1":
+        sys.exit(f"{path}: expected a diag/v1 body, got {body.get('schema')!r}")
+    # the CLI contract: nonzero exit iff the report carries errors
+    # (warnings alone never fail the check)
+    if (p.returncode != 0) != (body.get("errors", 0) > 0):
+        sys.exit(
+            f"{path}: exit code {p.returncode} disagrees with the diag/v1 body "
+            f"({body.get('errors')} error(s))"
+        )
+    return p.returncode, body
+
+
+def sweep_experiments():
+    """Every checkable ```json example in EXPERIMENTS.md must be clean."""
+    with open(EXPERIMENTS) as f:
+        text = f.read()
+    checked = 0
+    for block in BLOCK_RE.findall(text):
+        try:
+            doc = json.loads(block)
+        except json.JSONDecodeError:
+            continue  # illustrative fragments (e.g. elided bench records)
+        if not isinstance(doc, dict) or doc.get("schema") not in CHECKABLE:
+            continue
+        with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as tmp:
+            tmp.write(block)
+            path = tmp.name
+        try:
+            code, body = run_check(path)
+            if body["diagnostics"]:
+                sys.exit(
+                    f"EXPERIMENTS.md: published {doc['schema']} example is not clean:\n"
+                    + json.dumps(body, indent=2)
+                )
+            checked += 1
+        finally:
+            os.unlink(path)
+    if checked == 0:
+        sys.exit("EXPERIMENTS.md: found no checkable json examples — did the docs move?")
+    print(f"EXPERIMENTS.md: {checked} published example(s) check clean")
+
+
+def sweep_fixtures():
+    """valid_* fixtures are clean; every other fixture diagnoses something."""
+    names = sorted(os.listdir(FIXTURES))
+    if not names:
+        sys.exit(f"{FIXTURES}: no fixtures found")
+    for name in names:
+        path = os.path.join(FIXTURES, name)
+        code, body = run_check(path)
+        n = len(body["diagnostics"])
+        if name.startswith("valid_"):
+            if code != 0 or n != 0:
+                sys.exit(f"{name}: expected a clean report, got {n} diagnostic(s)")
+        elif n == 0:
+            sys.exit(f"{name}: expected at least one diagnostic, got a clean report")
+    print(f"fixtures: {len(names)} document(s) behaved per their names")
+
+
+def main():
+    if not os.path.exists(BIN):
+        sys.exit(f"{BIN}: spikelink binary not found (build first, or set SPIKELINK_BIN)")
+    sweep_experiments()
+    sweep_fixtures()
+
+
+if __name__ == "__main__":
+    main()

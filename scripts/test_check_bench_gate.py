@@ -65,6 +65,16 @@ CASES = {
     "learn_below_floor.json": (False, "below the 5x acceptance floor"),
     # ...and never a substitute for the clean-run dim coverage
     "learn_only_speedups.json": (False, "bench did not complete"),
+    # check-suffixed labels (scenarios run behind the `spikelink check`
+    # static precheck, EXPERIMENTS.md §Check) are the sixth suffix family:
+    # extra floor-checked cases next to an intact default lineage (the load
+    # test's own check/precheck overhead record rides along with unit
+    # us/req, invisible to every x-vs-ref gate)...
+    "check_labels_pass.json": (True, "suffixed cases"),
+    # ...held to the same 5x floor...
+    "check_below_floor.json": (False, "below the 5x acceptance floor"),
+    # ...and never a substitute for the clean-run dim coverage
+    "check_only_speedups.json": (False, "bench did not complete"),
     # parallel-vs-serial records (threaded chain stepper, unit x-vs-serial)
     # are the fifth extra family: floor-checked next to an intact default
     # lineage...
